@@ -1,0 +1,108 @@
+//! NPU design-space exploration: sweep PE count and weight-buffer capacity
+//! on a fixed MCMA routing trace and report speedup / energy / weight-switch
+//! behaviour — the hardware-design companion to paper §III.D.
+//!
+//!     cargo run --release --example npu_design_space [bench]
+//!
+//! The routing trace is computed once (native engine: this example explores
+//! the NPU model, not PJRT), then re-simulated under each configuration.
+
+use mcma::bench_harness::Table;
+use mcma::config::{ExecMode, Method, NpuConfig, RunConfig};
+use mcma::coordinator::BufferCase;
+use mcma::eval::{self, Context};
+use mcma::npu::NpuSim;
+
+fn main() -> mcma::Result<()> {
+    let bench_name = std::env::args().nth(1).unwrap_or_else(|| "jpeg".to_string());
+    let cfg = RunConfig { exec: ExecMode::Native, ..Default::default() };
+    let ctx = Context::load(cfg)?;
+    let bench = ctx.man.bench(&bench_name)?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench, &[method])?;
+    let e = eval::eval_one(&ctx, &bench, &bank, method)?;
+    let routes = &e.out.plan.routes;
+    let benchfn = mcma::benchmarks::by_name(&bench_name)?;
+    println!(
+        "bench {}, {} samples, invocation {:.1}%",
+        bench_name,
+        routes.len(),
+        100.0 * e.out.metrics.invocation()
+    );
+
+    // --- Sweep 1: PEs per tile ---
+    let mut t = Table::new(
+        "PE sweep (weight buffer 2048 words/PE)",
+        &["PEs/tile", "approx cycles/sample", "speedup vs cpu", "energy red."],
+    );
+    for pes in [2usize, 4, 8, 16, 32] {
+        let npu = NpuConfig { pes_per_tile: pes, ..Default::default() };
+        let sim = mk_sim(npu, &bench, bank.n_approx(method), benchfn.cpu_cycles());
+        let r = sim.simulate(routes, None);
+        t.row(vec![
+            pes.to_string(),
+            format!("{:.1}", r.cycles_approx / (e.out.metrics.invoked.max(1)) as f64),
+            format!("{:.2}x", r.speedup_vs_cpu()),
+            format!("{:.2}x", r.energy_reduction_vs_cpu()),
+        ]);
+    }
+    t.print();
+
+    // --- Sweep 2: weight buffer capacity (drives §III.D cases) ---
+    let mut t2 = Table::new(
+        "Weight-buffer sweep (8 PEs/tile)",
+        &["words/PE", "case", "switches", "switch cycles", "speedup vs cpu"],
+    );
+    for words in [8usize, 64, 256, 1024, 4096] {
+        let npu = NpuConfig { weight_buffer_words: words, ..Default::default() };
+        let sim = mk_sim(npu, &bench, bank.n_approx(method), benchfn.cpu_cycles());
+        let r = sim.simulate(routes, None);
+        let case = mcma::coordinator::WeightCache::new(
+            &npu,
+            (0..bank.n_approx(method))
+                .map(|k| bank.host_mlp(method, mcma::runtime::Role::Approx, k).unwrap().n_params())
+                .collect(),
+        )
+        .case();
+        t2.row(vec![
+            words.to_string(),
+            format!("{case:?}"),
+            r.weight_switches.to_string(),
+            format!("{:.0}", r.cycles_weight_switch),
+            format!("{:.2}x", r.speedup_vs_cpu()),
+        ]);
+    }
+    t2.print();
+
+    // --- Sweep 3: forced buffer cases on the default config ---
+    let mut t3 = Table::new(
+        "Forced §III.D cases (default NPU)",
+        &["case", "cycles", "speedup vs cpu", "energy red."],
+    );
+    for (name, case) in [
+        ("1: all resident", BufferCase::AllResident),
+        ("2: stream always", BufferCase::StreamAlways),
+        ("3: one resident", BufferCase::OneResident),
+    ] {
+        let sim = mk_sim(NpuConfig::default(), &bench, bank.n_approx(method), benchfn.cpu_cycles());
+        let r = sim.simulate(routes, Some(case));
+        t3.row(vec![
+            name.to_string(),
+            format!("{:.0}", r.cycles),
+            format!("{:.2}x", r.speedup_vs_cpu()),
+            format!("{:.2}x", r.energy_reduction_vs_cpu()),
+        ]);
+    }
+    t3.print();
+    Ok(())
+}
+
+fn mk_sim(
+    npu: NpuConfig,
+    bench: &mcma::formats::BenchManifest,
+    n_approx: usize,
+    cpu_cycles: u64,
+) -> NpuSim {
+    let approx: Vec<Vec<usize>> = (0..n_approx).map(|_| bench.approx_topology.clone()).collect();
+    NpuSim::new(npu, &bench.clfn_topology, &approx, cpu_cycles)
+}

@@ -1,0 +1,132 @@
+//! End-to-end serving driver (the DESIGN.md "end-to-end validation" run):
+//! spin up the threaded pipeline (batcher thread + dispatch worker), push an
+//! open-loop stream of Black-Scholes pricing requests through it, and report
+//! throughput, latency percentiles and routing statistics.
+//!
+//!     cargo run --release --example serve_pipeline [n_requests]
+//!
+//! All inference on the request path is the AOT-lowered Pallas/JAX HLO
+//! running under PJRT inside the dispatch worker; rejected samples fall
+//! back to the precise Rust implementation of Black-Scholes.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mcma::benchmarks;
+use mcma::config::{BatchPolicy, ExecMode, Method};
+use mcma::coordinator::{Server, ServerConfig};
+use mcma::formats::Manifest;
+use mcma::util::rng::Rng;
+
+fn main() -> mcma::Result<()> {
+    let n_requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20_000);
+
+    let man = Arc::new(Manifest::load(&mcma::artifacts_dir())?);
+    let bench = Arc::new(man.bench("blackscholes")?.clone());
+    let benchfn = benchmarks::by_name("blackscholes")?;
+
+    let cfg = ServerConfig {
+        policy: BatchPolicy { max_batch: 256, max_wait_us: 2_000 },
+        method: Method::McmaCompetitive,
+        exec: ExecMode::Pjrt,
+        workers: 2,
+    };
+    println!(
+        "serving {} blackscholes requests, batch<= {}, wait<= {} µs, method {}",
+        n_requests, cfg.policy.max_batch, cfg.policy.max_wait_us, cfg.method.label()
+    );
+
+    let server = Server::spawn(Arc::clone(&man), Arc::clone(&bench), cfg)?;
+
+    // Warmup handshake: the dispatch worker compiles the HLO lazily inside
+    // its thread; wait for one round trip so queueing measurements below
+    // exclude compilation.
+    let mut rng = Rng::new(7);
+    let mut x = vec![0.0f32; bench.n_in];
+    benchfn.gen_into(&mut rng, &mut x);
+    server.submit(u64::MAX, x.clone())?;
+    let warmup = server
+        .recv_timeout(Duration::from_secs(30))
+        .ok_or_else(|| anyhow::anyhow!("warmup request timed out"))?;
+    println!("warmup round trip: {:.1} ms (includes PJRT compile)", warmup.latency_us / 1e3);
+
+    // Phase 1 — saturation: open-loop burst with small gaps; reported
+    // latency is dominated by queueing, the interesting number is
+    // throughput.
+    let mut collected = vec![warmup];
+    let t0 = Instant::now();
+    for id in 0..n_requests as u64 {
+        benchfn.gen_into(&mut rng, &mut x);
+        server.submit(id, x.clone())?;
+        if id % 1024 == 1023 {
+            std::thread::sleep(Duration::from_micros(300));
+        }
+    }
+    let submit_wall = t0.elapsed();
+
+    // Drain phase 1 completely so paced measurements don't queue behind
+    // the saturation backlog.
+    while collected.len() < n_requests + 1 {
+        match server.recv_timeout(Duration::from_secs(10)) {
+            Some(r) => collected.push(r),
+            None => anyhow::bail!("saturation phase stalled"),
+        }
+    }
+
+    // Phase 2 — paced: arrival rate well under capacity; latency now
+    // reflects batching wait + service time, not queue depth.
+    let mut paced = Vec::new();
+    for id in 0..512u64 {
+        benchfn.gen_into(&mut rng, &mut x);
+        server.submit(u64::MAX - 1 - id, x.clone())?;
+        while let Some(r) = server.recv_timeout(Duration::from_micros(50)) {
+            collected.push(r);
+        }
+        std::thread::sleep(Duration::from_micros(40));
+    }
+    std::thread::sleep(Duration::from_millis(20));
+    while let Some(r) = server.recv_timeout(Duration::from_millis(5)) {
+        collected.push(r);
+    }
+    for r in &collected {
+        if r.id > u64::MAX - 600 && r.id != u64::MAX {
+            paced.push(r.latency_us);
+        }
+    }
+
+    let report = server.shutdown(collected)?;
+    println!("\n--- serve_pipeline report ---");
+    println!("served            : {}", report.served);
+    println!("submit wall       : {:.1} ms", submit_wall.as_secs_f64() * 1e3);
+    println!("total wall        : {:.1} ms", report.wall.as_secs_f64() * 1e3);
+    println!("throughput        : {:.0} req/s", report.throughput_rps());
+    println!("invocation        : {:.1}%", 100.0 * report.invocation());
+    println!(
+        "batches           : {} (full {}, timeout {})",
+        report.batches, report.flushes_full, report.flushes_timeout
+    );
+    println!(
+        "latency (saturation, queue-dominated) p50/p95/p99: {:.0} / {:.0} / {:.0} µs",
+        report.latency.p50(),
+        report.latency.p95(),
+        report.latency.p99()
+    );
+    if !paced.is_empty() {
+        println!(
+            "latency (paced, service+batch wait)  p50/p95/p99: {:.0} / {:.0} / {:.0} µs",
+            mcma::util::stats::percentile(&paced, 50.0),
+            mcma::util::stats::percentile(&paced, 95.0),
+            mcma::util::stats::percentile(&paced, 99.0),
+        );
+    }
+    assert_eq!(
+        report.served as usize,
+        n_requests + 1 + 512,
+        "no request may be dropped"
+    );
+    println!("\nOK — all {} requests served.", n_requests);
+    Ok(())
+}

@@ -1,0 +1,226 @@
+"""AOT build entrypoint: train everything, lower the forwards to HLO text,
+emit the artifact tree consumed by the Rust runtime.
+
+    cd python && python -m compile.aot --out ../artifacts [--full|--smoke]
+
+Per benchmark:
+    artifacts/<bench>/weights.bin          all five methods' trained nets
+    artifacts/<bench>/test.bin             held-out test set (X_raw, Y_norm)
+    artifacts/<bench>/approx_b{1,256}.hlo.txt   batched approximator forward
+    artifacts/<bench>/clf2_b{1,256}.hlo.txt     binary-classifier forward
+    artifacts/<bench>/clfN_b{1,256}.hlo.txt     multiclass-classifier forward
+Global:
+    artifacts/manifest.json                topologies, norm bounds, bounds
+    artifacts/train_stats.json             per-iteration trajectories (Fig 9)
+    artifacts/golden.json                  cross-language golden vectors
+
+HLO is exported as TEXT, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (the version the
+Rust `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The exported modules take the MLP **weights as runtime parameters**
+(f(x, W1, b1, ...) -> y), so ONE compiled executable per topology serves all
+n approximators — the XLA-level analogue of the paper's NPU weight-buffer
+swap (§III.D): switching approximators ships new weights, not new programs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import formats
+from . import model as M
+from . import train as T
+from .benchmarks import BENCH_ORDER, BENCHMARKS, Benchmark, make_dataset
+from .kernels import mlp as kmlp
+
+BATCH_SIZES = (1, 256)
+N_GOLDEN = 16
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_forward_hlo(topology: Sequence[int], batch: int) -> str:
+    """Lower the Pallas-kernel MLP forward with weights as parameters."""
+
+    n_layers = len(topology) - 1
+
+    def f(x, *flat):
+        params = [(flat[2 * i], flat[2 * i + 1]) for i in range(n_layers)]
+        return (kmlp.mlp_forward(x, params),)
+
+    specs = [jax.ShapeDtypeStruct((batch, topology[0]), jnp.float32)]
+    for fan_in, fan_out in zip(topology[:-1], topology[1:]):
+        specs.append(jax.ShapeDtypeStruct((fan_in, fan_out), jnp.float32))
+        specs.append(jax.ShapeDtypeStruct((fan_out,), jnp.float32))
+    lowered = jax.jit(f).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def build_bench(bench: Benchmark, out_dir: str, cfg: T.TrainConfig,
+                methods: Sequence[str]) -> Dict:
+    bdir = os.path.join(out_dir, bench.name)
+    os.makedirs(bdir, exist_ok=True)
+    t0 = time.time()
+
+    X_raw = bench.gen(bench.train_n, seed=1000 + hash(bench.name) % 1000)
+    Xt_raw = bench.gen(bench.test_n, seed=2000 + hash(bench.name) % 1000)
+    X = bench.normalize_x(X_raw).astype(np.float32)
+    Y = bench.normalize_y(bench.fn(X_raw)).astype(np.float32)
+    Xt = bench.normalize_x(Xt_raw).astype(np.float32)
+    Yt = bench.normalize_y(bench.fn(Xt_raw)).astype(np.float32)
+
+    results = T.train_all(bench, X, Y, Xt, Yt, cfg, methods)
+    formats.write_weights(os.path.join(bdir, "weights.bin"), list(results.values()))
+    formats.write_dataset(os.path.join(bdir, "test.bin"),
+                          Xt_raw.astype(np.float32), Yt)
+
+    for b in BATCH_SIZES:
+        for role, topo in (
+            ("approx", bench.approx_topology),
+            ("clf2", bench.clf_topology(2)),
+            ("clfN", bench.clf_topology(cfg.n_approx + 1)),
+        ):
+            path = os.path.join(bdir, f"{role}_b{b}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(export_forward_hlo(topo, b))
+
+    stats = {name: [dataclasses.asdict(s) for s in r.history]
+             for name, r in results.items()}
+
+    # Fig. 7c: blackscholes is re-trained at scaled error bounds (the
+    # classifier's labels depend on the bound, so a runtime-only sweep
+    # would be meaningless).
+    bound_scales = []
+    if bench.name == "blackscholes":
+        bound_scales = [0.5, 0.75, 1.5, 2.0]  # 1.0 == the default weights.bin
+        for scale in bound_scales:
+            bb = dataclasses.replace(bench, error_bound=bench.error_bound * scale)
+            res_b = T.train_all(bb, X, Y, Xt, Yt, cfg, methods)
+            tag = f"{scale:g}".replace(".", "p")
+            formats.write_weights(os.path.join(bdir, f"weights_bound_{tag}.bin"),
+                                  list(res_b.values()))
+
+    # Golden vectors: target-function agreement + MLP forward agreement.
+    any_approx = results[methods[0]].approximators[0]
+    fwd = np.asarray(M.forward(jnp.asarray(Xt[:8]), any_approx, pallas=True))
+    golden = {
+        "x_raw": Xt_raw[:N_GOLDEN].astype(np.float64).tolist(),
+        "y_norm": Yt[:N_GOLDEN].astype(np.float64).tolist(),
+        "mlp_method": results[methods[0]].method,
+        "mlp_forward_in": Xt[:8].astype(np.float64).tolist(),
+        "mlp_forward_out": fwd.astype(np.float64).tolist(),
+    }
+
+    manifest_entry = {
+        "domain": bench.domain,
+        "n_in": bench.n_in,
+        "n_out": bench.n_out,
+        "approx_topology": bench.approx_topology,
+        "clf2_topology": bench.clf_topology(2),
+        "clfN_topology": bench.clf_topology(cfg.n_approx + 1),
+        "x_lo": bench.x_lo.tolist(),
+        "x_hi": bench.x_hi.tolist(),
+        "y_lo": bench.y_lo.tolist(),
+        "y_hi": bench.y_hi.tolist(),
+        "error_bound": bench.error_bound,
+        "train_n": int(X.shape[0]),
+        "test_n": int(Xt.shape[0]),
+        "methods": list(results.keys()),
+        "mcca_pairs": len(results["mcca"].approximators) if "mcca" in results else 0,
+        "bound_scales": bound_scales,
+    }
+    print(f"  {bench.name}: {time.time() - t0:.1f}s "
+          f"(train {X.shape[0]}, test {Xt.shape[0]})")
+    return {"manifest": manifest_entry, "stats": stats, "golden": golden}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--benches", default="all",
+                    help="comma-separated subset of benchmarks")
+    ap.add_argument("--methods", default="all")
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 70K samples, 1500 epochs, 5 iterations")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny profile for CI: 1.5K samples, 30 epochs")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--n-approx", type=int, default=3)
+    args = ap.parse_args()
+
+    cfg = T.TrainConfig(seed=args.seed, n_approx=args.n_approx)
+    scale = 1.0
+    if args.full:
+        cfg.epochs = cfg.clf_epochs = 1500
+        cfg.iterations = 5
+        scale = 70_000 / 12_000
+    elif args.smoke:
+        cfg.epochs = cfg.clf_epochs = 30
+        cfg.iterations = 2
+        scale = 1_500 / 12_000
+
+    benches = BENCH_ORDER if args.benches == "all" else args.benches.split(",")
+    methods = (list(T.METHODS) if args.methods == "all"
+               else args.methods.split(","))
+
+    os.makedirs(args.out, exist_ok=True)
+    # Merge-on-rebuild: a subset run (--benches x,y) must not clobber the
+    # other benchmarks' entries in the global JSON files.
+    def _load_existing(name):
+        path = os.path.join(args.out, name)
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+        return None
+
+    manifest = _load_existing("manifest.json") or {
+        "version": 1,
+        "n_approx": cfg.n_approx,
+        "batch_sizes": list(BATCH_SIZES),
+        "train_config": dataclasses.asdict(cfg),
+        "benchmarks": {},
+    }
+    all_stats: Dict[str, Dict] = _load_existing("train_stats.json") or {}
+    all_golden: Dict[str, Dict] = _load_existing("golden.json") or {}
+
+    t0 = time.time()
+    for name in benches:
+        bench = dataclasses.replace(
+            BENCHMARKS[name],
+            train_n=max(256, int(BENCHMARKS[name].train_n * scale)),
+            test_n=max(128, int(BENCHMARKS[name].test_n * scale)),
+        )
+        out = build_bench(bench, args.out, cfg, methods)
+        manifest["benchmarks"][name] = out["manifest"]
+        all_stats[name] = out["stats"]
+        all_golden[name] = out["golden"]
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(os.path.join(args.out, "train_stats.json"), "w") as f:
+        json.dump(all_stats, f, indent=1)
+    with open(os.path.join(args.out, "golden.json"), "w") as f:
+        json.dump(all_golden, f, indent=1)
+    print(f"artifacts written to {args.out} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

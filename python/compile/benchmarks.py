@@ -1,0 +1,407 @@
+"""Benchmark suite (paper Fig. 6): eight target functions + workload generators.
+
+Each benchmark defines
+  * ``gen(n, seed)``   — raw input samples drawn from the paper's domain
+  * ``fn(X)``          — the PRECISE target function (the "CPU" path)
+  * ``norm_x/norm_y``  — fixed (not data-dependent) min/max normalisation
+                         bounds, so the Rust side can agree *statically*
+  * topologies for the approximator and classifiers (paper Fig. 6)
+
+IMPORTANT cross-language contract: every ``fn`` here is re-implemented
+verbatim in ``rust/src/benchmarks/``; the two must agree to ~1e-5 on the
+golden vectors exported by aot.py.  For functions whose "true" value needs a
+special function (erf, Bessel J_nu) both sides implement the *same*
+deterministic approximation (Abramowitz–Stegun erf, fixed-node Simpson
+quadrature) — that approximation IS the target function being approximated,
+so there is no cross-library drift.
+
+The paper's corpora (512x512 images, 70K option batches from AxBench) are
+proprietary-ish inputs we do not have; the generators below synthesise the
+same dimensionality and distribution family (see DESIGN.md "Substitutions").
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Shared deterministic special functions (mirrored in rust/src/benchmarks/).
+# ---------------------------------------------------------------------------
+
+_ERF_A = (0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429)
+_ERF_P = 0.3275911
+
+
+def erf_as(x: np.ndarray) -> np.ndarray:
+    """Abramowitz–Stegun 7.1.26 rational erf approximation (|err| < 1.5e-7).
+
+    Used instead of math.erf so the Rust precise path computes the *identical*
+    function.
+    """
+    x = np.asarray(x, dtype=np.float64)
+    sign = np.sign(x)
+    ax = np.abs(x)
+    t = 1.0 / (1.0 + _ERF_P * ax)
+    poly = t * (_ERF_A[0] + t * (_ERF_A[1] + t * (_ERF_A[2] + t * (_ERF_A[3] + t * _ERF_A[4]))))
+    return sign * (1.0 - poly * np.exp(-ax * ax))
+
+
+def norm_cdf(x: np.ndarray) -> np.ndarray:
+    return 0.5 * (1.0 + erf_as(x / math.sqrt(2.0)))
+
+
+# Fixed-node Simpson quadrature for J_nu(x), nu in [0,4], x in [0.5, 15].
+# J_nu(x) = (1/pi) \int_0^pi cos(nu*t - x*sin t) dt
+#           - sin(nu*pi)/pi \int_0^INF exp(-x*sinh s - nu*s) ds
+# Second integral truncated at s=6 (x >= 0.5 -> e^{-x sinh 6} < e^{-100}).
+_BESSEL_N1 = 96   # Simpson intervals on [0, pi]
+_BESSEL_N2 = 120  # Simpson intervals on [0, 6]
+_BESSEL_S_MAX = 6.0
+
+
+def bessel_j(nu: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Deterministic J_nu(x) via Simpson quadrature (the shared target fn)."""
+    nu = np.asarray(nu, dtype=np.float64)[..., None]
+    x = np.asarray(x, dtype=np.float64)[..., None]
+
+    t = np.linspace(0.0, math.pi, _BESSEL_N1 + 1)
+    f1 = np.cos(nu * t - x * np.sin(t))
+    w1 = _simpson_weights(_BESSEL_N1, math.pi / _BESSEL_N1)
+    term1 = (f1 * w1).sum(-1) / math.pi
+
+    s = np.linspace(0.0, _BESSEL_S_MAX, _BESSEL_N2 + 1)
+    f2 = np.exp(-x * np.sinh(s) - nu * s)
+    w2 = _simpson_weights(_BESSEL_N2, _BESSEL_S_MAX / _BESSEL_N2)
+    term2 = np.sin(nu[..., 0] * math.pi) / math.pi * (f2 * w2).sum(-1)
+
+    return term1 - term2
+
+
+def _simpson_weights(n_intervals: int, h: float) -> np.ndarray:
+    w = np.ones(n_intervals + 1)
+    w[1:-1:2] = 4.0
+    w[2:-1:2] = 2.0
+    return w * (h / 3.0)
+
+
+# ---------------------------------------------------------------------------
+# 8x8 DCT machinery for the jpeg benchmark (mirrored in Rust).
+# ---------------------------------------------------------------------------
+
+# Standard JPEG luminance quantisation table (quality 50), row-major.
+JPEG_QTABLE = np.array(
+    [
+        16, 11, 10, 16, 24, 40, 51, 61,
+        12, 12, 14, 19, 26, 58, 60, 55,
+        14, 13, 16, 24, 40, 57, 69, 56,
+        14, 17, 22, 29, 51, 87, 80, 62,
+        18, 22, 37, 56, 68, 109, 103, 77,
+        24, 35, 55, 64, 81, 104, 113, 92,
+        49, 64, 78, 87, 103, 121, 120, 101,
+        72, 92, 95, 98, 112, 100, 103, 99,
+    ],
+    dtype=np.float64,
+).reshape(8, 8)
+
+
+def _dct8_matrix() -> np.ndarray:
+    """Orthonormal DCT-II basis matrix C (8x8): X = C @ x @ C.T."""
+    c = np.zeros((8, 8))
+    for k in range(8):
+        alpha = math.sqrt(1.0 / 8.0) if k == 0 else math.sqrt(2.0 / 8.0)
+        for n in range(8):
+            c[k, n] = alpha * math.cos(math.pi * (2 * n + 1) * k / 16.0)
+    return c
+
+
+DCT8 = _dct8_matrix()
+
+
+def jpeg_roundtrip(blocks: np.ndarray) -> np.ndarray:
+    """Encode+decode 8x8 blocks: DCT -> quantise -> dequantise -> IDCT.
+
+    blocks: (n, 64) pixels in [0, 1].  Returns reconstructed pixels in [0,1].
+    """
+    n = blocks.shape[0]
+    b = blocks.reshape(n, 8, 8) * 255.0 - 128.0
+    coef = np.einsum("ij,njk,lk->nil", DCT8, b, DCT8)
+    q = np.round(coef / JPEG_QTABLE) * JPEG_QTABLE
+    rec = np.einsum("ji,njk,kl->nil", DCT8, q, DCT8)
+    rec = np.clip((rec + 128.0) / 255.0, 0.0, 1.0)
+    return rec.reshape(n, 64)
+
+
+# ---------------------------------------------------------------------------
+# Triangle-triangle intersection (jmeint), separating-axis test.
+# ---------------------------------------------------------------------------
+
+def _tri_tri_overlap_one(p: np.ndarray, q: np.ndarray) -> bool:
+    """SAT 3-D triangle intersection. p, q: (3,3) vertex rows (float64)."""
+    axes: List[np.ndarray] = []
+    e_p = [p[1] - p[0], p[2] - p[1], p[0] - p[2]]
+    e_q = [q[1] - q[0], q[2] - q[1], q[0] - q[2]]
+    n_p = np.cross(e_p[0], e_p[1])
+    n_q = np.cross(e_q[0], e_q[1])
+    axes.append(n_p)
+    axes.append(n_q)
+    for a in e_p:
+        for b in e_q:
+            axes.append(np.cross(a, b))
+    for ax in axes:
+        norm2 = float(ax @ ax)
+        if norm2 < 1e-12:
+            continue
+        dp = p @ ax
+        dq = q @ ax
+        if dp.max() < dq.min() - 1e-12 or dq.max() < dp.min() - 1e-12:
+            return False
+    return True
+
+
+def tri_tri_intersect(X: np.ndarray) -> np.ndarray:
+    """X: (n, 18) = two triangles' 9+9 coords. Returns (n, 2) one-hot."""
+    n = X.shape[0]
+    out = np.zeros((n, 2))
+    for i in range(n):
+        p = X[i, :9].reshape(3, 3)
+        q = X[i, 9:].reshape(3, 3)
+        hit = _tri_tri_overlap_one(p, q)
+        out[i, 0] = 1.0 if hit else 0.0
+        out[i, 1] = 0.0 if hit else 1.0
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Benchmark definitions.
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Benchmark:
+    name: str
+    domain: str
+    n_in: int
+    n_out: int
+    approx_topology: List[int]
+    clf_hidden: List[int]          # hidden layers of the classifier
+    gen: Callable[[int, int], np.ndarray]
+    fn: Callable[[np.ndarray], np.ndarray]
+    x_lo: np.ndarray
+    x_hi: np.ndarray
+    y_lo: np.ndarray
+    y_hi: np.ndarray
+    error_bound: float             # default bound on normalised per-sample RMSE
+    train_n: int = 12_000
+    test_n: int = 4_000
+    epochs_mult: float = 1.0       # hard targets (oscillatory Bessel) need more
+
+    def normalize_x(self, X: np.ndarray) -> np.ndarray:
+        return (X - self.x_lo) / (self.x_hi - self.x_lo)
+
+    def normalize_y(self, Y: np.ndarray) -> np.ndarray:
+        return (Y - self.y_lo) / (self.y_hi - self.y_lo)
+
+    def clf_topology(self, n_classes: int) -> List[int]:
+        return [self.n_in] + list(self.clf_hidden) + [n_classes]
+
+
+def _gen_blackscholes(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    s = r.lognormal(mean=math.log(50.0), sigma=0.35, size=n).clip(10.0, 150.0)
+    k = s * r.uniform(0.6, 1.4, size=n)
+    rate = r.uniform(0.01, 0.08, size=n)
+    vol = r.uniform(0.05, 0.65, size=n)
+    t = r.uniform(0.1, 2.0, size=n)
+    otype = r.randint(0, 2, size=n).astype(np.float64)
+    return np.stack([s, k, rate, vol, t, otype], axis=1)
+
+
+def _fn_blackscholes(X: np.ndarray) -> np.ndarray:
+    s, k, r, v, t, otype = (X[:, i] for i in range(6))
+    sqrt_t = np.sqrt(t)
+    d1 = (np.log(s / k) + (r + 0.5 * v * v) * t) / (v * sqrt_t)
+    d2 = d1 - v * sqrt_t
+    disc = k * np.exp(-r * t)
+    call = s * norm_cdf(d1) - disc * norm_cdf(d2)
+    put = call - s + disc  # put-call parity
+    price = np.where(otype < 0.5, call, put)
+    return price[:, None]
+
+
+def _gen_fft(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    return r.uniform(0.0, 2.0 * math.pi, size=(n, 1))
+
+
+def _fn_fft(X: np.ndarray) -> np.ndarray:
+    x = X[:, 0]
+    return np.stack([np.cos(x), np.sin(x)], axis=1)
+
+
+_IK_L1, _IK_L2 = 0.5, 0.5
+
+
+def _gen_inversek2j(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    th1 = r.uniform(0.05, math.pi / 2 - 0.05, size=n)
+    th2 = r.uniform(0.05, math.pi / 2 - 0.05, size=n)
+    x = _IK_L1 * np.cos(th1) + _IK_L2 * np.cos(th1 + th2)
+    y = _IK_L1 * np.sin(th1) + _IK_L2 * np.sin(th1 + th2)
+    return np.stack([x, y], axis=1)
+
+
+def _fn_inversek2j(X: np.ndarray) -> np.ndarray:
+    x, y = X[:, 0], X[:, 1]
+    d2 = x * x + y * y
+    c2 = ((d2 - _IK_L1**2 - _IK_L2**2) / (2.0 * _IK_L1 * _IK_L2)).clip(-1.0, 1.0)
+    th2 = np.arccos(c2)
+    th1 = np.arctan2(y, x) - np.arctan2(_IK_L2 * np.sin(th2), _IK_L1 + _IK_L2 * np.cos(th2))
+    return np.stack([th1, th2], axis=1)
+
+
+def _gen_jmeint(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    # Two triangles: random center offset keeps ~50/50 hit rate.
+    base = r.uniform(0.0, 1.0, size=(n, 18))
+    offset = r.uniform(-0.4, 0.4, size=(n, 3))
+    base[:, 9:] = (base[:, 9:].reshape(n, 3, 3) * 0.8 + offset[:, None, :]).reshape(n, 9)
+    return base
+
+
+def _gen_jpeg(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    yy, xx = np.meshgrid(np.arange(8.0), np.arange(8.0), indexing="ij")
+    blocks = np.zeros((n, 8, 8))
+    g = r.uniform(-1.0, 1.0, size=(n, 2))
+    phase = r.uniform(0.0, 2 * math.pi, size=(n, 2))
+    freq = r.uniform(0.2, 1.4, size=(n, 2))
+    amp = r.uniform(0.0, 0.4, size=(n, 1, 1))
+    level = r.uniform(0.2, 0.8, size=(n, 1, 1))
+    blocks = (
+        level
+        + g[:, 0, None, None] * (xx - 3.5) / 14.0
+        + g[:, 1, None, None] * (yy - 3.5) / 14.0
+        + amp * np.sin(freq[:, 0, None, None] * xx + phase[:, 0, None, None])
+        * np.sin(freq[:, 1, None, None] * yy + phase[:, 1, None, None])
+    )
+    blocks += r.normal(0.0, 0.02, size=(n, 8, 8))
+    return blocks.clip(0.0, 1.0).reshape(n, 64)
+
+
+def _gen_kmeans(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    px = r.uniform(0.0, 1.0, size=(n, 3))
+    centers = r.uniform(0.0, 1.0, size=(8, 3))
+    cidx = r.randint(0, 8, size=n)
+    c = centers[cidx] + r.normal(0.0, 0.05, size=(n, 3))
+    return np.concatenate([px, c.clip(0.0, 1.0)], axis=1)
+
+
+def _fn_kmeans(X: np.ndarray) -> np.ndarray:
+    d = np.sqrt(((X[:, :3] - X[:, 3:]) ** 2).sum(axis=1))
+    return d[:, None]
+
+
+_SOBEL_GX = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=np.float64)
+_SOBEL_GY = _SOBEL_GX.T
+
+
+def _gen_sobel(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    # 3x3 luminance windows sampled from gradient+edge synthetic patches.
+    yy, xx = np.meshgrid(np.arange(3.0), np.arange(3.0), indexing="ij")
+    g = r.uniform(-0.5, 0.5, size=(n, 2))
+    level = r.uniform(0.1, 0.9, size=(n, 1, 1))
+    edge_pos = r.uniform(-0.5, 2.5, size=(n, 1, 1))
+    edge_amp = r.uniform(-0.6, 0.6, size=(n, 1, 1))
+    w = (
+        level
+        + g[:, 0, None, None] * (xx - 1.0) / 4.0
+        + g[:, 1, None, None] * (yy - 1.0) / 4.0
+        + edge_amp * (xx > edge_pos)
+    )
+    w += r.normal(0.0, 0.02, size=(n, 3, 3))
+    return w.clip(0.0, 1.0).reshape(n, 9)
+
+
+def _fn_sobel(X: np.ndarray) -> np.ndarray:
+    w = X.reshape(-1, 3, 3)
+    gx = (w * _SOBEL_GX).sum(axis=(1, 2))
+    gy = (w * _SOBEL_GY).sum(axis=(1, 2))
+    mag = np.sqrt(gx * gx + gy * gy) / (4.0 * math.sqrt(2.0))
+    return mag.clip(0.0, 1.0)[:, None]
+
+
+def _gen_bessel(n: int, seed: int) -> np.ndarray:
+    r = np.random.RandomState(seed)
+    nu = r.uniform(0.0, 4.0, size=n)
+    x = r.uniform(0.5, 15.0, size=n)
+    return np.stack([nu, x], axis=1)
+
+
+def _fn_bessel(X: np.ndarray) -> np.ndarray:
+    return bessel_j(X[:, 0], X[:, 1])[:, None]
+
+
+def _bm(name, domain, topo, clf_hidden, gen, fn, x_lo, x_hi, y_lo, y_hi, bound, **kw):
+    x_lo = np.asarray(x_lo, dtype=np.float64)
+    x_hi = np.asarray(x_hi, dtype=np.float64)
+    y_lo = np.asarray(y_lo, dtype=np.float64)
+    y_hi = np.asarray(y_hi, dtype=np.float64)
+    return Benchmark(
+        name=name, domain=domain, n_in=topo[0], n_out=topo[-1],
+        approx_topology=list(topo), clf_hidden=list(clf_hidden),
+        gen=gen, fn=fn, x_lo=x_lo, x_hi=x_hi, y_lo=y_lo, y_hi=y_hi,
+        error_bound=bound, **kw,
+    )
+
+
+BENCHMARKS: Dict[str, Benchmark] = {
+    b.name: b
+    for b in [
+        _bm("blackscholes", "Financial Analysis", [6, 8, 1], [8],
+            _gen_blackscholes, _fn_blackscholes,
+            [10.0, 6.0, 0.01, 0.05, 0.1, 0.0], [150.0, 210.0, 0.08, 0.65, 2.0, 1.0],
+            [0.0], [120.0], 0.035),
+        _bm("fft", "Signal Processing", [1, 2, 2, 2], [2],
+            _gen_fft, _fn_fft,
+            [0.0], [2.0 * math.pi], [-1.0, -1.0], [1.0, 1.0], 0.05,
+            train_n=8_000, test_n=3_000, epochs_mult=3.0),
+        _bm("inversek2j", "Robotics", [2, 8, 2], [8],
+            _gen_inversek2j, _fn_inversek2j,
+            [-0.55, 0.0], [1.0, 1.0], [-0.8, 0.0], [1.65, 1.65], 0.035,
+            epochs_mult=4.0),
+        _bm("jmeint", "3D Gaming", [18, 32, 16, 2], [16],
+            _gen_jmeint, tri_tri_intersect,
+            [-0.5] * 18, [1.5] * 18, [0.0, 0.0], [1.0, 1.0], 0.30),
+        _bm("jpeg", "Compression", [64, 16, 64], [16],
+            _gen_jpeg, jpeg_roundtrip,
+            [0.0] * 64, [1.0] * 64, [0.0] * 64, [1.0] * 64, 0.06,
+            train_n=8_000, test_n=3_000),
+        _bm("kmeans", "Machine Learning", [6, 8, 4, 1], [8, 4],
+            _gen_kmeans, _fn_kmeans,
+            [0.0] * 6, [1.0] * 6, [0.0], [math.sqrt(3.0)], 0.025,
+            epochs_mult=4.0),
+        _bm("sobel", "Image Processing", [9, 8, 1], [8],
+            _gen_sobel, _fn_sobel,
+            [0.0] * 9, [1.0] * 9, [0.0], [1.0], 0.035),
+        _bm("bessel", "Scientific Computing", [2, 4, 4, 1], [4],
+            _gen_bessel, _fn_bessel,
+            [0.0, 0.5], [4.0, 15.0], [-0.45, ], [1.1], 0.04, epochs_mult=6.0),
+    ]
+}
+
+BENCH_ORDER = ["blackscholes", "fft", "inversek2j", "jmeint", "jpeg", "kmeans", "sobel", "bessel"]
+
+
+def make_dataset(bench: Benchmark, n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (X_norm, Y_norm) float32 in [0,1]-ish normalised space."""
+    X_raw = bench.gen(n, seed)
+    Y_raw = bench.fn(X_raw)
+    X = bench.normalize_x(X_raw).astype(np.float32)
+    Y = bench.normalize_y(Y_raw).astype(np.float32)
+    return X, Y

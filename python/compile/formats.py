@@ -1,0 +1,144 @@
+"""Binary artifact writers (little-endian), mirrored by rust/src/formats/.
+
+weights.bin  (magic MCMW, v1)
+  u32 n_methods
+  per method:
+    str   name                     (u32 byte-len + utf8)
+    u8    cascade flag
+    u32   clf_classes              (2 for binary, n+1 for multiclass)
+    u32   n_classifiers            (1; MCCA: one per cascade pair)
+    mlp[] classifiers
+    u32   n_approximators
+    mlp[] approximators
+  mlp:
+    u32 n_layers
+    per layer: u32 rows, u32 cols, f32[rows*cols] W (row-major),
+               u32 blen, f32[blen] b
+
+dataset.bin  (magic MCMD, v1)
+  u32 n, u32 d_in, u32 d_out
+  f32[n*d_in]  X_raw   (row-major, un-normalised inputs)
+  f32[n*d_out] Y_norm  (row-major, normalised precise outputs)
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .train import MethodResult
+
+MAGIC_WEIGHTS = b"MCMW"
+MAGIC_DATASET = b"MCMD"
+VERSION = 1
+
+
+def _w_u32(f, v: int) -> None:
+    f.write(struct.pack("<I", v))
+
+
+def _w_str(f, s: str) -> None:
+    b = s.encode("utf-8")
+    _w_u32(f, len(b))
+    f.write(b)
+
+
+def _w_f32s(f, a: np.ndarray) -> None:
+    f.write(np.ascontiguousarray(a, dtype="<f4").tobytes())
+
+
+def _w_mlp(f, params: Sequence[Tuple[np.ndarray, np.ndarray]]) -> None:
+    _w_u32(f, len(params))
+    for w, b in params:
+        w = np.asarray(w, np.float32)
+        b = np.asarray(b, np.float32)
+        assert w.ndim == 2 and b.ndim == 1 and b.shape[0] == w.shape[1]
+        _w_u32(f, w.shape[0])
+        _w_u32(f, w.shape[1])
+        _w_f32s(f, w)
+        _w_u32(f, b.shape[0])
+        _w_f32s(f, b)
+
+
+def write_weights(path: str, methods: List[MethodResult]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC_WEIGHTS)
+        _w_u32(f, VERSION)
+        _w_u32(f, len(methods))
+        for m in methods:
+            _w_str(f, m.method)
+            f.write(struct.pack("<B", 1 if m.cascade else 0))
+            _w_u32(f, m.clf_classes)
+            clfs = m.cascade_classifiers if m.cascade else [m.classifier]
+            _w_u32(f, len(clfs))
+            for c in clfs:
+                _w_mlp(f, _np(c))
+            _w_u32(f, len(m.approximators))
+            for a in m.approximators:
+                _w_mlp(f, _np(a))
+
+
+def _np(params):
+    return [(np.asarray(w, np.float32), np.asarray(b, np.float32)) for w, b in params]
+
+
+def write_dataset(path: str, X_raw: np.ndarray, Y_norm: np.ndarray) -> None:
+    n, d_in = X_raw.shape
+    n2, d_out = Y_norm.shape
+    assert n == n2
+    with open(path, "wb") as f:
+        f.write(MAGIC_DATASET)
+        _w_u32(f, VERSION)
+        _w_u32(f, n)
+        _w_u32(f, d_in)
+        _w_u32(f, d_out)
+        _w_f32s(f, X_raw)
+        _w_f32s(f, Y_norm)
+
+
+# Readers (used by the pytest round-trip tests only; Rust has its own).
+
+def read_weights(path: str):
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC_WEIGHTS
+        (ver,) = struct.unpack("<I", f.read(4))
+        assert ver == VERSION
+        (nm,) = struct.unpack("<I", f.read(4))
+        out = {}
+        for _ in range(nm):
+            (ln,) = struct.unpack("<I", f.read(4))
+            name = f.read(ln).decode()
+            (casc,) = struct.unpack("<B", f.read(1))
+            (ncls,) = struct.unpack("<I", f.read(4))
+            (nclf,) = struct.unpack("<I", f.read(4))
+            clfs = [_r_mlp(f) for _ in range(nclf)]
+            (na,) = struct.unpack("<I", f.read(4))
+            apps = [_r_mlp(f) for _ in range(na)]
+            out[name] = dict(cascade=bool(casc), clf_classes=ncls,
+                             classifiers=clfs, approximators=apps)
+        return out
+
+
+def _r_mlp(f):
+    (nl,) = struct.unpack("<I", f.read(4))
+    layers = []
+    for _ in range(nl):
+        r, c = struct.unpack("<II", f.read(8))
+        w = np.frombuffer(f.read(4 * r * c), dtype="<f4").reshape(r, c)
+        (bl,) = struct.unpack("<I", f.read(4))
+        b = np.frombuffer(f.read(4 * bl), dtype="<f4")
+        layers.append((w, b))
+    return layers
+
+
+def read_dataset(path: str):
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC_DATASET
+        (ver,) = struct.unpack("<I", f.read(4))
+        assert ver == VERSION
+        n, d_in, d_out = struct.unpack("<III", f.read(12))
+        X = np.frombuffer(f.read(4 * n * d_in), dtype="<f4").reshape(n, d_in)
+        Y = np.frombuffer(f.read(4 * n * d_out), dtype="<f4").reshape(n, d_out)
+        return X, Y

@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: fused dense layer (matmul + bias + activation).
+
+This is the compute hot-spot of the whole system: every classifier and every
+approximator inference is a chain of these layers.  On the paper's NPU each
+PE runs a multiply-add-accumulate loop over one neuron's fan-in and then the
+activation unit; the TPU analogue is one MXU-shaped tile of this kernel with
+the weight block stationary in VMEM (see DESIGN.md §Hardware-Adaptation).
+
+Block schedule
+  grid  = (ceil(B / bm),)                     — batch-parallel grid
+  x     : (bm, K)  block, index (i) -> (i, 0) — streamed HBM->VMEM per step
+  w     : (K, N)   block, index (i) -> (0, 0) — stationary (the paper's
+                                                 "weights in the buffer near
+                                                 the MAC")
+  b     : (N,)     block, stationary
+  out   : (bm, N)  block, index (i) -> (i, 0)
+
+All eight topologies have K, N <= 64, so one (K, N) weight block always fits
+VMEM; batch is the only tiled dimension.  ``interpret=True`` everywhere —
+the CPU PJRT plugin cannot execute Mosaic custom-calls; real-TPU numbers are
+estimated from the block schedule in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+# Batch tile: multiple of the float32 sublane tile (8) and big enough to
+# amortise grid-step overhead; 128 matches the MXU systolic edge.
+DEFAULT_BM = 128
+
+
+def _dense_act_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    o_ref[...] = y
+
+
+def dense_act(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str,
+              bm: int = DEFAULT_BM) -> jnp.ndarray:
+    """Fused ``act(x @ w + b)`` as a Pallas kernel.
+
+    x: (B, K) float32; w: (K, N); b: (N,).  B is padded up to a multiple of
+    the batch tile and sliced back, so any B works (hypothesis sweeps this).
+    """
+    if act not in ("sigmoid", "linear"):
+        raise ValueError(f"unknown activation {act!r}")
+    B, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (K, K2)
+    assert b.shape == (N,), b.shape
+
+    bm_eff = min(bm, max(B, 1))
+    pad = (-B) % bm_eff
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, K), x.dtype)], axis=0)
+    bp = x.shape[0]
+    grid = (bp // bm_eff,)
+
+    out = pl.pallas_call(
+        functools.partial(_dense_act_kernel, act=act),
+        out_shape=jax.ShapeDtypeStruct((bp, N), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_eff, K), lambda i: (i, 0)),
+            pl.BlockSpec((K, N), lambda i: (0, 0)),
+            pl.BlockSpec((N,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm_eff, N), lambda i: (i, 0)),
+        interpret=True,
+    )(x, w, b)
+    return out[:B] if pad else out
+
+
+def mlp_forward(x: jnp.ndarray, params: Params, bm: int = DEFAULT_BM) -> jnp.ndarray:
+    """Full MLP inference through the Pallas kernel chain.
+
+    Sigmoid on hidden layers, linear output — matching the NPU PE's
+    activation unit and the paper's MLP topologies (Fig. 6).
+    """
+    h = x
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        h = dense_act(h, w, b, "sigmoid" if i < n - 1 else "linear", bm=bm)
+    return h
+
+
+def vmem_footprint_bytes(topology: Sequence[int], bm: int = DEFAULT_BM) -> int:
+    """Estimated peak VMEM bytes for one grid step of the deepest layer.
+
+    Used by DESIGN.md §Perf and the L1 structure checks: x block + w block +
+    b block + out block, float32.
+    """
+    worst = 0
+    for k, n in zip(topology[:-1], topology[1:]):
+        step = 4 * (bm * k + k * n + n + bm * n)
+        worst = max(worst, step)
+    return worst

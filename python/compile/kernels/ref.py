@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+This is the numerical ground truth: ``mlp.dense_act`` and
+``mlp.mlp_forward`` must match these to float32 tolerance (pytest +
+hypothesis sweeps in python/tests/test_kernels.py).  Training also runs
+through this path (it is faster under CPU interpret mode); the AOT export
+runs through the Pallas path so the lowered HLO contains the kernel.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def dense_act_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, act: str) -> jnp.ndarray:
+    """y = act(x @ w + b); act in {"sigmoid", "linear"}."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    if act == "sigmoid":
+        y = jax.nn.sigmoid(y)
+    elif act != "linear":
+        raise ValueError(f"unknown activation {act!r}")
+    return y
+
+
+def mlp_forward_ref(x: jnp.ndarray, params: Params) -> jnp.ndarray:
+    """Sigmoid hidden layers, linear output — the NPU PE activation scheme."""
+    h = x
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        h = dense_act_ref(h, w, b, "sigmoid" if i < n - 1 else "linear")
+    return h

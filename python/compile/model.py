@@ -1,0 +1,190 @@
+"""Layer-2 JAX model: MLP init / forward / losses / RMSprop training.
+
+Matches the paper's setup (§IV.A): multilayer perceptrons trained with
+backpropagation and the RMSprop optimizer.  The forward pass has two
+numerically-identical implementations: the Pallas kernel chain
+(``kernels.mlp``) used for the AOT export, and the pure-jnp oracle
+(``kernels.ref``) used inside the jitted training loop (interpret-mode
+Pallas is orders of magnitude slower on CPU; pytest asserts the two agree).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Callable, List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import mlp as kmlp
+from .kernels import ref as kref
+
+Params = List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_mlp(topology: Sequence[int], key: jax.Array) -> Params:
+    """Xavier/Glorot-uniform init, zero bias."""
+    params: Params = []
+    keys = jax.random.split(key, len(topology) - 1)
+    for k, (fan_in, fan_out) in zip(keys, zip(topology[:-1], topology[1:])):
+        lim = math.sqrt(6.0 / (fan_in + fan_out))
+        w = jax.random.uniform(k, (fan_in, fan_out), jnp.float32, -lim, lim)
+        b = jnp.zeros((fan_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(x: jnp.ndarray, params: Params, *, pallas: bool = False) -> jnp.ndarray:
+    return kmlp.mlp_forward(x, params) if pallas else kref.mlp_forward_ref(x, params)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def mse_loss(params: Params, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    pred = kref.mlp_forward_ref(x, params)
+    return jnp.mean((pred - y) ** 2)
+
+
+def softmax_xent_loss(params: Params, x: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """labels: int32 class ids."""
+    logits = kref.mlp_forward_ref(x, params)
+    logz = jax.nn.logsumexp(logits, axis=1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0] - logz
+    return -jnp.mean(ll)
+
+
+def make_weighted_xent(class_weights: jnp.ndarray):
+    """Class-balanced cross-entropy: rare classes are not drowned out by a
+    dominant safe/unsafe majority (stabilises the one-pass classifier on
+    imbalanced label sets)."""
+
+    def loss(params: Params, x: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+        logits = kref.mlp_forward_ref(x, params)
+        logz = jax.nn.logsumexp(logits, axis=1)
+        ll = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0] - logz
+        w = class_weights[labels]
+        return -jnp.sum(w * ll) / jnp.sum(w)
+
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# RMSprop (hand-rolled; optax is not in the image)
+# ---------------------------------------------------------------------------
+
+class RmsState(NamedTuple):
+    sq: List[Tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def rms_init(params: Params) -> RmsState:
+    return RmsState(sq=[(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params])
+
+
+def rms_update(params: Params, grads: Params, state: RmsState,
+               lr: float, rho: float = 0.9, eps: float = 1e-8):
+    new_params: Params = []
+    new_sq = []
+    for (w, b), (gw, gb), (sw, sb) in zip(params, grads, state.sq):
+        sw = rho * sw + (1.0 - rho) * gw * gw
+        sb = rho * sb + (1.0 - rho) * gb * gb
+        new_params.append((w - lr * gw / jnp.sqrt(sw + eps),
+                           b - lr * gb / jnp.sqrt(sb + eps)))
+        new_sq.append((sw, sb))
+    return new_params, RmsState(sq=new_sq)
+
+
+# ---------------------------------------------------------------------------
+# Training loops (jitted, minibatched)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("loss_name",), donate_argnums=(0, 1))
+def _train_scan(params, state, Xd, Yd, idx, lr, cw, loss_name: str):
+    """Whole training run as one lax.scan over minibatch index rows.
+
+    §Perf L2: a per-step Python dispatch loop costs ~0.2 ms/step in overhead
+    alone; scanning the full run inside a single jit is ~20x faster end to
+    end and compiles once per (topology, loss) because the minibatch indices
+    address the FULL dataset (territory subsets only change `idx` values,
+    never shapes).  `cw` is the per-class weight vector for xent (ones for
+    the unweighted case; ignored for mse).
+    """
+    loss_fn = mse_loss if loss_name == "mse" else make_weighted_xent(cw)
+
+    def step(carry, ib):
+        params, state = carry
+        loss, grads = jax.value_and_grad(loss_fn)(params, Xd[ib], Yd[ib])
+        params, state = rms_update(params, grads, state, lr)
+        return (params, state), loss
+
+    (params, state), losses = jax.lax.scan(step, (params, state), idx)
+    return params, state, losses
+
+
+def train_mlp(topology: Sequence[int], X: np.ndarray, Y: np.ndarray, *,
+              loss: str, epochs: int, seed: int, lr: float = 1e-3,
+              batch_size: int = 512,
+              rows: Optional[np.ndarray] = None,
+              total_steps: Optional[int] = None,
+              init: Optional[Params] = None,
+              class_weights: Optional[np.ndarray] = None) -> Params:
+    """Train an MLP; Y is float targets for mse, int32 labels for xent.
+
+    ``rows`` restricts training to a subset (an approximator's territory)
+    without changing any array shape — minibatches are sampled (with
+    replacement) from those row indices of the full X/Y.  ``init`` warm-
+    starts from existing params (territory refinement in the MCMA loop);
+    ``class_weights`` enables balanced xent.
+    """
+    n = X.shape[0]
+    if rows is None:
+        rows = np.arange(n)
+    if rows.size == 0:
+        # Degenerate territory (an approximator can end up with no samples
+        # mid-iteration); return a fresh init so downstream code stays total.
+        return init if init is not None else init_mlp(topology, jax.random.PRNGKey(seed))
+    # NB: _train_scan donates its params argument; copy warm-start weights
+    # so the caller's arrays stay alive (it may keep them on collapse).
+    params = ([(jnp.array(w, copy=True), jnp.array(b, copy=True)) for w, b in init]
+              if init is not None else init_mlp(topology, jax.random.PRNGKey(seed)))
+    state = rms_init(params)
+    bs = min(batch_size, n)
+    if total_steps is None:
+        total_steps = epochs * max(1, n // bs)
+    rng = np.random.RandomState(seed)
+    idx = rng.choice(rows, size=(total_steps, bs), replace=True).astype(np.int32)
+    Xd = jnp.asarray(X, jnp.float32)
+    Yd = jnp.asarray(Y, jnp.int32 if loss == "xent" else jnp.float32)
+    n_classes = topology[-1]
+    cw = (jnp.asarray(class_weights, jnp.float32) if class_weights is not None
+          else jnp.ones((n_classes,), jnp.float32))
+    params, _, _ = _train_scan(params, state, Xd, Yd, jnp.asarray(idx),
+                               jnp.float32(lr), cw, loss)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Evaluation helpers shared by the training schemes
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def per_sample_error(params, X, Y) -> jnp.ndarray:
+    """Per-sample RMSE across output dims, in normalised output space."""
+    pred = kref.mlp_forward_ref(X, params)
+    return jnp.sqrt(jnp.mean((pred - Y) ** 2, axis=1))
+
+
+@jax.jit
+def predict_class(params, X) -> jnp.ndarray:
+    return jnp.argmax(kref.mlp_forward_ref(X, params), axis=1)
+
+
+def params_to_numpy(params: Params) -> List[Tuple[np.ndarray, np.ndarray]]:
+    return [(np.asarray(w, np.float32), np.asarray(b, np.float32)) for w, b in params]

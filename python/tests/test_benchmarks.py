@@ -1,0 +1,177 @@
+"""Benchmark target functions: determinism, domains, normalisation, and the
+mathematical identities the Rust re-implementations rely on."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import benchmarks as B
+
+
+@pytest.mark.parametrize("name", B.BENCH_ORDER)
+def test_generator_deterministic_and_in_domain(name):
+    b = B.BENCHMARKS[name]
+    X1 = b.gen(200, seed=5)
+    X2 = b.gen(200, seed=5)
+    X3 = b.gen(200, seed=6)
+    np.testing.assert_array_equal(X1, X2)
+    assert not np.array_equal(X1, X3)
+    assert X1.shape == (200, b.n_in)
+    Xn = b.normalize_x(X1)
+    assert Xn.min() >= -1e-9 and Xn.max() <= 1.0 + 1e-9
+
+
+@pytest.mark.parametrize("name", B.BENCH_ORDER)
+def test_fn_shape_and_normalised_range(name):
+    b = B.BENCHMARKS[name]
+    X = b.gen(500, seed=7)
+    Y = b.fn(X)
+    assert Y.shape == (500, b.n_out)
+    Yn = b.normalize_y(Y)
+    # Fixed normalisation bounds must actually cover the output range.
+    assert Yn.min() >= -0.05, f"{name}: y_lo too high ({Yn.min()})"
+    assert Yn.max() <= 1.05, f"{name}: y_hi too low ({Yn.max()})"
+
+
+def test_erf_as_known_values():
+    # vs table values of erf
+    np.testing.assert_allclose(B.erf_as(np.array([0.0])), [0.0], atol=1e-7)
+    np.testing.assert_allclose(B.erf_as(np.array([1.0])), [0.8427007], atol=1e-5)
+    np.testing.assert_allclose(B.erf_as(np.array([-1.0])), [-0.8427007], atol=1e-5)
+    np.testing.assert_allclose(B.erf_as(np.array([3.0])), [0.99997791], atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(-5, 5))
+def test_erf_as_odd_and_bounded(x):
+    v = float(B.erf_as(np.array([x]))[0])
+    mv = float(B.erf_as(np.array([-x]))[0])
+    assert abs(v + mv) < 1e-12
+    assert -1.0 <= v <= 1.0
+
+
+def test_blackscholes_put_call_parity():
+    X = B.BENCHMARKS["blackscholes"].gen(100, seed=1)
+    Xc, Xp = X.copy(), X.copy()
+    Xc[:, 5] = 0.0
+    Xp[:, 5] = 1.0
+    call = B._fn_blackscholes(Xc)[:, 0]
+    put = B._fn_blackscholes(Xp)[:, 0]
+    s, k, r, t = X[:, 0], X[:, 1], X[:, 2], X[:, 4]
+    np.testing.assert_allclose(call - put, s - k * np.exp(-r * t), rtol=1e-8)
+
+
+def test_blackscholes_intrinsic_value_bound():
+    X = B.BENCHMARKS["blackscholes"].gen(500, seed=2)
+    X[:, 5] = 0.0
+    c = B._fn_blackscholes(X)[:, 0]
+    s, k, r, t = X[:, 0], X[:, 1], X[:, 2], X[:, 4]
+    assert np.all(c >= s - k * np.exp(-r * t) - 1e-6)
+    assert np.all(c <= s + 1e-9)
+
+
+def test_inversek2j_roundtrip():
+    """fn is the exact inverse of the arm's forward kinematics."""
+    b = B.BENCHMARKS["inversek2j"]
+    X = b.gen(300, seed=3)
+    TH = b.fn(X)
+    th1, th2 = TH[:, 0], TH[:, 1]
+    x = B._IK_L1 * np.cos(th1) + B._IK_L2 * np.cos(th1 + th2)
+    y = B._IK_L1 * np.sin(th1) + B._IK_L2 * np.sin(th1 + th2)
+    np.testing.assert_allclose(np.stack([x, y], 1), X, atol=1e-8)
+
+
+def test_fft_twiddle_unit_circle():
+    b = B.BENCHMARKS["fft"]
+    X = b.gen(100, seed=4)
+    Y = b.fn(X)
+    np.testing.assert_allclose((Y**2).sum(1), 1.0, atol=1e-12)
+
+
+def test_kmeans_distance():
+    X = np.array([[0, 0, 0, 1, 1, 1], [0.5, 0.5, 0.5, 0.5, 0.5, 0.5]])
+    d = B._fn_kmeans(X)[:, 0]
+    np.testing.assert_allclose(d, [math.sqrt(3), 0.0], atol=1e-12)
+
+
+def test_sobel_flat_window_zero():
+    X = np.full((1, 9), 0.7)
+    assert abs(B._fn_sobel(X)[0, 0]) < 1e-12
+
+
+def test_sobel_vertical_edge():
+    w = np.array([[0, 0, 1], [0, 0, 1], [0, 0, 1]], float).reshape(1, 9)
+    v = B._fn_sobel(w)[0, 0]
+    assert v > 0.5  # strong edge
+
+
+def test_jpeg_roundtrip_identity_on_dc_block():
+    """A flat block quantises exactly (DC quant step divides the level)."""
+    level = 128.0 / 255.0  # DC coefficient = 0 after centering
+    X = np.full((1, 64), level)
+    Y = B.jpeg_roundtrip(X)
+    np.testing.assert_allclose(Y, X, atol=1e-6)
+
+
+def test_jpeg_dct_matrix_orthonormal():
+    np.testing.assert_allclose(B.DCT8 @ B.DCT8.T, np.eye(8), atol=1e-12)
+
+
+def test_jpeg_roundtrip_bounded_error():
+    b = B.BENCHMARKS["jpeg"]
+    X = b.gen(64, seed=8)
+    Y = B.jpeg_roundtrip(X)
+    assert np.all(Y >= 0.0) and np.all(Y <= 1.0)
+    # Quantisation error is bounded: q-table max 121 over 255 scale, but
+    # typical blocks reconstruct closely.
+    assert float(np.sqrt(((X - Y) ** 2).mean())) < 0.2
+
+
+def test_bessel_integer_orders_match_series():
+    """J_n for integer n from our quadrature vs numpy's polynomial series
+    evaluation via trig identities at sampled points (loose but real)."""
+    # J_0(2.404825557695773) ~ 0 (first zero)
+    v = B.bessel_j(np.array([0.0]), np.array([2.404825557695773]))[0]
+    assert abs(v) < 1e-6
+    # J_0(1) = 0.7651976866, J_1(1) = 0.4400505857
+    np.testing.assert_allclose(
+        B.bessel_j(np.array([0.0, 1.0]), np.array([1.0, 1.0])),
+        [0.7651976866, 0.4400505857], atol=1e-7)
+    # J_2(5) = 0.04656511628
+    np.testing.assert_allclose(
+        B.bessel_j(np.array([2.0]), np.array([5.0])), [0.04656511628], atol=1e-7)
+
+
+def test_tri_tri_intersect_known_cases():
+    # Identical triangles intersect.
+    t = np.array([0, 0, 0, 1, 0, 0, 0, 1, 0], float)
+    X = np.concatenate([t, t])[None, :]
+    np.testing.assert_array_equal(B.tri_tri_intersect(X)[0], [1.0, 0.0])
+    # Far-apart triangles do not.
+    t2 = t + np.tile([10.0, 10.0, 10.0], 3)
+    X2 = np.concatenate([t, t2])[None, :]
+    np.testing.assert_array_equal(B.tri_tri_intersect(X2)[0], [0.0, 1.0])
+    # Piercing triangle (crosses the plane through the middle).
+    p = np.array([0.25, 0.25, -1, 0.25, 0.25, 1, 1, 1, 1], float)
+    X3 = np.concatenate([t, p])[None, :]
+    np.testing.assert_array_equal(B.tri_tri_intersect(X3)[0], [1.0, 0.0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_tri_tri_symmetry(seed):
+    """intersect(P, Q) == intersect(Q, P)."""
+    r = np.random.RandomState(seed)
+    x = r.rand(18)
+    a = B.tri_tri_intersect(x[None, :])[0]
+    b = B.tri_tri_intersect(np.concatenate([x[9:], x[:9]])[None, :])[0]
+    np.testing.assert_array_equal(a, b)
+
+
+def test_make_dataset_float32_and_shapes():
+    b = B.BENCHMARKS["sobel"]
+    X, Y = B.make_dataset(b, 128, seed=9)
+    assert X.dtype == np.float32 and Y.dtype == np.float32
+    assert X.shape == (128, 9) and Y.shape == (128, 1)

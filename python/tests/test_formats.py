@@ -1,0 +1,85 @@
+"""Artifact formats: binary round-trips and HLO export sanity."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import formats as F
+from compile import model as M
+from compile.aot import export_forward_hlo
+from compile.train import MethodResult
+
+
+def _mk_mlp(topo, seed):
+    return M.params_to_numpy(M.init_mlp(topo, jax.random.PRNGKey(seed)))
+
+
+def test_weights_roundtrip(tmp_path):
+    m1 = MethodResult("one_pass", [_mk_mlp([6, 8, 1], 0)], _mk_mlp([6, 8, 2], 1), 2)
+    m2 = MethodResult("mcma_competitive",
+                      [_mk_mlp([6, 8, 1], i) for i in range(3)],
+                      _mk_mlp([6, 8, 4], 9), 4)
+    m3 = MethodResult("mcca", [_mk_mlp([6, 8, 1], 5)], [], 2, cascade=True,
+                      cascade_classifiers=[_mk_mlp([6, 8, 2], 6),
+                                           _mk_mlp([6, 8, 2], 7)])
+    path = str(tmp_path / "w.bin")
+    F.write_weights(path, [m1, m2, m3])
+    got = F.read_weights(path)
+    assert set(got) == {"one_pass", "mcma_competitive", "mcca"}
+    assert got["mcma_competitive"]["clf_classes"] == 4
+    assert len(got["mcma_competitive"]["approximators"]) == 3
+    assert got["mcca"]["cascade"] is True
+    assert len(got["mcca"]["classifiers"]) == 2
+    for (w, b), (w0, b0) in zip(got["one_pass"]["approximators"][0],
+                                m1.approximators[0]):
+        np.testing.assert_array_equal(w, np.asarray(w0, np.float32))
+        np.testing.assert_array_equal(b, np.asarray(b0, np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 200), d_in=st.integers(1, 32), d_out=st.integers(1, 8),
+       seed=st.integers(0, 1 << 30))
+def test_dataset_roundtrip(tmp_path_factory, n, d_in, d_out, seed):
+    r = np.random.RandomState(seed)
+    X = r.rand(n, d_in).astype(np.float32)
+    Y = r.rand(n, d_out).astype(np.float32)
+    path = str(tmp_path_factory.mktemp("ds") / "d.bin")
+    F.write_dataset(path, X, Y)
+    X2, Y2 = F.read_dataset(path)
+    np.testing.assert_array_equal(X, X2)
+    np.testing.assert_array_equal(Y, Y2)
+
+
+def test_weights_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.bin")
+    with open(path, "wb") as f:
+        f.write(b"NOPE" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        F.read_weights(path)
+
+
+# ---------------------------------------------------------------------------
+# HLO export
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo,batch", [([2, 4, 1], 1), ([6, 8, 2], 256),
+                                        ([2, 4, 4, 1], 16)])
+def test_export_forward_hlo_structure(topo, batch):
+    text = export_forward_hlo(topo, batch)
+    assert text.startswith("HloModule")
+    # Entry layout mentions the input batch and every weight/bias parameter.
+    assert f"f32[{batch},{topo[0]}]" in text
+    for fi, fo in zip(topo[:-1], topo[1:]):
+        assert f"f32[{fi},{fo}]" in text
+    # Output is a 1-tuple of the batched output (return_tuple=True).
+    assert f"f32[{batch},{topo[-1]}]" in text
+
+
+def test_export_contains_no_custom_calls():
+    """interpret=True must lower to plain HLO the CPU PJRT client can run —
+    a Mosaic custom-call here would break the Rust runtime."""
+    text = export_forward_hlo([2, 4, 1], 8)
+    assert "custom-call" not in text.lower()

@@ -1,0 +1,134 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot path — hypothesis
+sweeps shapes, batch sizes (including ones that do not divide the batch
+tile), activations and value ranges, and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mlp as kmlp
+from compile.kernels import ref as kref
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed, lo=-3.0, hi=3.0):
+    r = np.random.RandomState(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense_act
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 300),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    act=st.sampled_from(["sigmoid", "linear"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_act_matches_ref(b, k, n, act, seed):
+    x = _rand((b, k), seed)
+    w = _rand((k, n), seed + 1)
+    bias = _rand((n,), seed + 2)
+    got = kmlp.dense_act(x, w, bias, act)
+    want = kref.dense_act_ref(x, w, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128, 256]),
+    b=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_act_any_batch_tile(bm, b, seed):
+    """Batch tile never changes the numbers, only the schedule."""
+    x = _rand((b, 6), seed)
+    w = _rand((6, 8), seed + 1)
+    bias = _rand((8,), seed + 2)
+    base = kmlp.dense_act(x, w, bias, "sigmoid", bm=kmlp.DEFAULT_BM)
+    got = kmlp.dense_act(x, w, bias, "sigmoid", bm=bm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_dense_act_rejects_bad_activation():
+    x = _rand((4, 3), 0)
+    w = _rand((3, 2), 1)
+    b = _rand((2,), 2)
+    with pytest.raises(ValueError):
+        kmlp.dense_act(x, w, b, "relu")
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.sampled_from([1e-3, 1.0, 10.0, 100.0]),
+       seed=st.integers(0, 2**31 - 1))
+def test_dense_act_value_ranges(scale, seed):
+    """Numerics hold across magnitudes (sigmoid saturation included)."""
+    x = _rand((17, 9), seed, -scale, scale)
+    w = _rand((9, 8), seed + 1, -scale, scale)
+    b = _rand((8,), seed + 2, -scale, scale)
+    for act in ("sigmoid", "linear"):
+        got = kmlp.dense_act(x, w, b, act)
+        want = kref.dense_act_ref(x, w, b, act)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Full MLP forward — every paper topology
+# ---------------------------------------------------------------------------
+
+PAPER_TOPOLOGIES = [
+    [6, 8, 1], [1, 2, 2, 2], [2, 8, 2], [18, 32, 16, 2],
+    [64, 16, 64], [6, 8, 4, 1], [9, 8, 1], [2, 4, 4, 1],
+    # classifier variants
+    [6, 8, 2], [6, 8, 4], [18, 16, 2], [18, 16, 4], [2, 4, 2], [2, 4, 4],
+]
+
+
+@pytest.mark.parametrize("topo", PAPER_TOPOLOGIES, ids=lambda t: "-".join(map(str, t)))
+def test_mlp_forward_topologies(topo):
+    params = M.init_mlp(topo, jax.random.PRNGKey(42))
+    x = _rand((53, topo[0]), 7, 0.0, 1.0)
+    got = kmlp.mlp_forward(x, params)
+    want = kref.mlp_forward_ref(x, params)
+    assert got.shape == (53, topo[-1])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    depth=st.integers(1, 4),
+    widths=st.lists(st.integers(1, 48), min_size=5, max_size=5),
+    b=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_forward_random_topologies(depth, widths, b, seed):
+    topo = widths[: depth + 1]
+    params = M.init_mlp(topo, jax.random.PRNGKey(seed))
+    x = _rand((b, topo[0]), seed)
+    got = kmlp.mlp_forward(x, params)
+    want = kref.mlp_forward_ref(x, params)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_footprint_monotone_in_bm():
+    small = kmlp.vmem_footprint_bytes([64, 16, 64], bm=8)
+    big = kmlp.vmem_footprint_bytes([64, 16, 64], bm=256)
+    assert small < big
+    # All paper topologies fit comfortably in 16 MiB VMEM at the default tile.
+    for topo in PAPER_TOPOLOGIES:
+        assert kmlp.vmem_footprint_bytes(topo) < 16 * 2**20

@@ -1,0 +1,123 @@
+"""L2 model: init, losses, RMSprop, training convergence, eval helpers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_init_shapes():
+    topo = [6, 8, 4, 2]
+    p = M.init_mlp(topo, jax.random.PRNGKey(0))
+    assert len(p) == 3
+    for (w, b), (fi, fo) in zip(p, zip(topo[:-1], topo[1:])):
+        assert w.shape == (fi, fo)
+        assert b.shape == (fo,)
+        assert np.all(np.asarray(b) == 0.0)
+
+
+def test_init_is_deterministic_per_seed():
+    a = M.init_mlp([4, 4, 1], jax.random.PRNGKey(7))
+    b = M.init_mlp([4, 4, 1], jax.random.PRNGKey(7))
+    c = M.init_mlp([4, 4, 1], jax.random.PRNGKey(8))
+    assert all(np.array_equal(x[0], y[0]) for x, y in zip(a, b))
+    assert not all(np.array_equal(x[0], y[0]) for x, y in zip(a, c))
+
+
+def test_mse_loss_zero_on_perfect_fit():
+    p = [(jnp.eye(2, dtype=jnp.float32), jnp.zeros(2, jnp.float32))]
+    x = jnp.asarray(np.random.RandomState(0).rand(10, 2), jnp.float32)
+    assert float(M.mse_loss(p, x, x)) < 1e-12
+
+
+def test_softmax_xent_decreases_with_correct_logits():
+    x = jnp.asarray(np.random.RandomState(0).rand(32, 3), jnp.float32)
+    labels = jnp.zeros(32, jnp.int32)
+    good = [(jnp.asarray([[5.0, -5.0], [5.0, -5.0], [5.0, -5.0]], jnp.float32),
+             jnp.zeros(2, jnp.float32))]
+    bad = [(jnp.asarray([[-5.0, 5.0], [-5.0, 5.0], [-5.0, 5.0]], jnp.float32),
+            jnp.zeros(2, jnp.float32))]
+    assert float(M.softmax_xent_loss(good, x, labels)) < \
+        float(M.softmax_xent_loss(bad, x, labels))
+
+
+def test_rmsprop_step_moves_against_gradient():
+    p = [(jnp.ones((1, 1), jnp.float32), jnp.zeros(1, jnp.float32))]
+    g = [(jnp.ones((1, 1), jnp.float32), jnp.ones(1, jnp.float32))]
+    s = M.rms_init(p)
+    p2, s2 = M.rms_update(p, g, s, lr=0.1)
+    assert float(p2[0][0][0, 0]) < 1.0
+    assert float(p2[0][1][0]) < 0.0
+    assert float(s2.sq[0][0][0, 0]) > 0.0
+
+
+def test_train_regression_converges():
+    """y = mean(x) is easily fit; loss must drop well below init."""
+    r = np.random.RandomState(0)
+    X = r.rand(2000, 4).astype(np.float32)
+    Y = X.mean(axis=1, keepdims=True).astype(np.float32)
+    p = M.train_mlp([4, 8, 1], X, Y, loss="mse", epochs=80, seed=0, lr=3e-3)
+    err = np.asarray(M.per_sample_error(p, jnp.asarray(X), jnp.asarray(Y)))
+    assert float(np.median(err)) < 0.02
+
+
+def test_train_classifier_converges():
+    """Linearly separable labels reach high accuracy."""
+    r = np.random.RandomState(1)
+    X = r.rand(2000, 2).astype(np.float32)
+    labels = (X[:, 0] + X[:, 1] > 1.0).astype(np.int32)
+    p = M.train_mlp([2, 8, 2], X, labels, loss="xent", epochs=200, seed=0, lr=3e-3)
+    pred = np.asarray(M.predict_class(p, jnp.asarray(X)))
+    assert (pred == labels).mean() > 0.95
+
+
+def test_train_rows_subset_ignores_other_rows():
+    """Territory training must not look outside its rows: poison the rest."""
+    r = np.random.RandomState(2)
+    X = r.rand(1000, 3).astype(np.float32)
+    Y = X.sum(axis=1, keepdims=True).astype(np.float32) / 3.0
+    Ypoison = Y.copy()
+    rows = np.arange(500)
+    Ypoison[500:] = 1e3  # absurd targets outside the territory
+    p_clean = M.train_mlp([3, 8, 1], X[:500], Y[:500], loss="mse",
+                          epochs=60, seed=3, lr=3e-3)
+    p_rows = M.train_mlp([3, 8, 1], X, Ypoison, loss="mse", epochs=60,
+                         seed=3, lr=3e-3, rows=rows)
+    e_clean = np.asarray(M.per_sample_error(p_clean, jnp.asarray(X[:500]),
+                                            jnp.asarray(Y[:500])))
+    e_rows = np.asarray(M.per_sample_error(p_rows, jnp.asarray(X[:500]),
+                                           jnp.asarray(Y[:500])))
+    # Poisoned rows never sampled => comparable quality on the territory.
+    assert float(np.median(e_rows)) < max(0.05, 3.0 * float(np.median(e_clean)))
+
+
+def test_train_empty_rows_returns_fresh_init():
+    X = np.zeros((10, 2), np.float32)
+    Y = np.zeros((10, 1), np.float32)
+    p = M.train_mlp([2, 4, 1], X, Y, loss="mse", epochs=5, seed=11,
+                    rows=np.array([], dtype=np.int64))
+    q = M.init_mlp([2, 4, 1], jax.random.PRNGKey(11))
+    assert all(np.array_equal(a[0], b[0]) for a, b in zip(p, q))
+
+
+def test_per_sample_error_is_rmse_over_outputs():
+    p = [(jnp.zeros((2, 2), jnp.float32), jnp.zeros(2, jnp.float32))]
+    x = jnp.ones((3, 2), jnp.float32)
+    y = jnp.asarray([[0.0, 0.0], [1.0, 1.0], [3.0, 4.0]], jnp.float32)
+    err = np.asarray(M.per_sample_error(p, x, y))
+    np.testing.assert_allclose(err, [0.0, 1.0, np.sqrt(12.5)], rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_predict_class_matches_argmax(seed):
+    p = M.init_mlp([3, 4], jax.random.PRNGKey(seed))
+    x = jnp.asarray(np.random.RandomState(seed).rand(20, 3), jnp.float32)
+    pred = np.asarray(M.predict_class(p, x))
+    logits = np.asarray(M.forward(x, p))
+    np.testing.assert_array_equal(pred, logits.argmax(axis=1))

@@ -1,0 +1,164 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. number of approximators n (MCMA uses all / first k of its nets)
+//! 2. §III.D weight-buffer cases forced 1/2/3
+//! 3. batch size sweep on the PJRT dispatch unit
+//!
+//! These go beyond the paper's figures: they quantify WHY the defaults
+//! (n = 3, Case 1-sized buffers, B = 256) were chosen.
+
+use std::time::Duration;
+
+use mcma::bench_harness::{bench, pct, Table};
+use mcma::config::{ExecMode, Method, NpuConfig, RunConfig};
+use mcma::coordinator::{BufferCase, Dispatcher, Route};
+use mcma::eval::Context;
+use mcma::npu::NpuSim;
+
+fn main() -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig::default())?;
+
+    ablation_n_approx(&ctx)?;
+    ablation_buffer_cases(&ctx)?;
+    ablation_batch_size(&ctx)?;
+    ablation_router_policy(&ctx)?;
+    Ok(())
+}
+
+/// 4. Routing-policy extension: confidence-threshold sweep + the oracle
+/// upper bound.  Quantifies remaining classifier headroom (oracle - argmax)
+/// and the invocation/quality trade of a runtime confidence knob.
+fn ablation_router_policy(ctx: &Context) -> mcma::Result<()> {
+    use mcma::coordinator::RouterPolicy;
+    let bench_man = ctx.man.bench("bessel")?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench_man, &[method])?;
+    let ds = ctx.dataset("bessel")?;
+    let mut t = Table::new(
+        "Ablation: routing policy (bessel, MCMA-compet)",
+        &["policy", "invocation", "true invocation", "rmse/bound"],
+    );
+    let policies = [
+        ("argmax (paper)".to_string(), RouterPolicy::Argmax),
+        ("confidence 0.50".to_string(), RouterPolicy::Confidence(0.5)),
+        ("confidence 0.80".to_string(), RouterPolicy::Confidence(0.8)),
+        ("confidence 0.95".to_string(), RouterPolicy::Confidence(0.95)),
+        ("oracle (upper bound)".to_string(), RouterPolicy::Oracle),
+    ];
+    for (name, policy) in policies {
+        let d = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?
+            .with_policy(policy);
+        let out = d.run_dataset(&ds)?;
+        t.row(vec![
+            name,
+            pct(out.metrics.invocation()),
+            pct(out.metrics.true_invocation()),
+            format!("{:.2}", out.metrics.rmse_over_bound),
+        ]);
+    }
+    t.print();
+    println!("  headroom = oracle true-invocation - argmax true-invocation");
+    Ok(())
+}
+
+/// 1. How much does each extra approximator buy?  Evaluate MCMA-competitive
+/// on bessel but only allow the first k approximators (classifier classes
+/// >= k are treated as nC).
+fn ablation_n_approx(ctx: &Context) -> mcma::Result<()> {
+    let bench_man = ctx.man.bench("bessel")?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench_man, &[method])?;
+    let d = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
+    let ds = ctx.dataset("bessel")?;
+    let out = d.run_dataset(&ds)?;
+    let n_total = d.n_approx();
+
+    let mut t = Table::new(
+        "Ablation: approximators allowed (bessel, MCMA-compet)",
+        &["k", "invocation", "true invocation"],
+    );
+    for k in 1..=n_total {
+        // Truncate routing: classes >= k fall back to CPU.
+        let mut invoked = 0usize;
+        let mut true_inv = 0usize;
+        for (i, r) in out.plan.routes.iter().enumerate() {
+            if let Route::Approx(a) = r {
+                if *a < k {
+                    invoked += 1;
+                    if out.err[i] <= bench_man.error_bound {
+                        true_inv += 1;
+                    }
+                }
+            }
+        }
+        t.row(vec![
+            k.to_string(),
+            pct(invoked as f64 / ds.n as f64),
+            pct(true_inv as f64 / ds.n as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// 2. Forced weight-buffer cases on the jpeg trace (largest weights).
+fn ablation_buffer_cases(ctx: &Context) -> mcma::Result<()> {
+    let bench_man = ctx.man.bench("jpeg")?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench_man, &[method])?;
+    let d = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
+    let ds = ctx.dataset("jpeg")?;
+    let out = d.run_dataset(&ds)?;
+    let benchfn = mcma::benchmarks::by_name("jpeg")?;
+    let approx: Vec<Vec<usize>> =
+        (0..d.n_approx()).map(|_| bench_man.approx_topology.clone()).collect();
+    let sim = NpuSim::new(NpuConfig::default(), &bench_man.clfn_topology, &approx,
+                          benchfn.cpu_cycles());
+
+    let mut t = Table::new(
+        "Ablation: forced §III.D buffer cases (jpeg, MCMA-compet)",
+        &["case", "switches", "switch cycles", "speedup vs cpu", "energy red."],
+    );
+    for (name, case) in [
+        ("1 all-resident", BufferCase::AllResident),
+        ("2 stream-always", BufferCase::StreamAlways),
+        ("3 one-resident", BufferCase::OneResident),
+    ] {
+        let r = sim.simulate(&out.plan.routes, Some(case));
+        t.row(vec![
+            name.to_string(),
+            r.weight_switches.to_string(),
+            format!("{:.0}", r.cycles_weight_switch),
+            format!("{:.3}x", r.speedup_vs_cpu()),
+            format!("{:.3}x", r.energy_reduction_vs_cpu()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+/// 3. PJRT dispatch-unit latency vs batch size (B=1 vs B=256 compiled).
+fn ablation_batch_size(ctx: &Context) -> mcma::Result<()> {
+    let bench_man = ctx.man.bench("blackscholes")?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench_man, &[method])?;
+    let d = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
+    let ds = ctx.dataset("blackscholes")?;
+    let x_norm = d.normalize(&ds.x_raw, ds.n);
+
+    println!("\nAblation: per-sample cost vs batch size (blackscholes, PJRT)");
+    for n in [1usize, 16, 64, 256, 1024] {
+        let chunk = &x_norm[..n * bench_man.n_in];
+        let timing = bench(
+            &format!("approx forward n={n}"),
+            Duration::from_millis(300),
+            || {
+                std::hint::black_box(
+                    d.forward(mcma::runtime::Role::Approx, 0, chunk, n).unwrap(),
+                );
+            },
+        );
+        println!("    -> {:.2} µs/sample", timing.mean_ns / 1e3 / n as f64);
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Regenerates paper Fig. 10: per-approximator territories and error
+//! fields over the Bessel (nu, x) input plane under MCMA.
+
+use mcma::config::{Method, RunConfig};
+use mcma::eval::{fig10, Context};
+
+fn main() -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig::default())?;
+    let f = fig10::run(&ctx, Method::McmaCompetitive)?;
+    f.stats_table().print();
+    println!("\n{}", f.territory_map());
+    let bound = ctx.man.bench(fig10::BENCH)?.error_bound;
+    for k in 0..f.grids.len() {
+        println!("{}", f.error_map(k, bound));
+    }
+    println!(
+        "each approximator specialises on a cluster of the input space; together \
+         they cover what a single approximator cannot (paper Fig. 10)"
+    );
+    Ok(())
+}

@@ -1,0 +1,33 @@
+//! Regenerates paper Fig. 7(a) (invocation) and Fig. 7(b) (normalised
+//! approximation error) across the full benchmark suite and all five
+//! methods, on the real PJRT path.  Run via `cargo bench`.
+
+use mcma::config::RunConfig;
+use mcma::eval::{fig7, fig8, Context};
+
+fn main() -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let f7 = fig7::run(&ctx)?;
+    f7.table_a(&ctx).print();
+    f7.table_b(&ctx).print();
+
+    let (inv_gain, err_red) = f7.mcma_gain_over_one_pass(&ctx);
+    println!(
+        "\nheadline: best-MCMA invocation {:+.0}% vs one-pass (paper: +27%), \
+         error {:+.0}% (paper: -10%)",
+        100.0 * inv_gain,
+        -100.0 * err_red
+    );
+
+    // Also print the Fig. 8 views from the same traces so the bench is the
+    // one-stop regeneration for the main result table.
+    let f8 = fig8::run(&ctx, &f7)?;
+    f8.table_a(&ctx).print();
+    f8.table_b(&ctx).print();
+    println!(
+        "\nregenerated Fig 7(a,b) + Fig 8(a,b) in {:.1} s",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

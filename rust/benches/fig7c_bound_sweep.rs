@@ -1,0 +1,16 @@
+//! Regenerates paper Fig. 7(c): invocation vs error bound on Black-Scholes
+//! (per-bound retrained weights from the Python build).
+
+use mcma::config::RunConfig;
+use mcma::eval::{fig7c, Context};
+
+fn main() -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig::default())?;
+    let f = fig7c::run(&ctx)?;
+    f.table().print();
+    println!("\ninvocation drop (2.0x -> 0.5x bound), smaller is better:");
+    for (m, d) in f.drop_per_method() {
+        println!("  {:<12} {:+.1} pp", m.label(), 100.0 * d);
+    }
+    Ok(())
+}

@@ -1,0 +1,21 @@
+//! Regenerates paper Fig. 8: (a) speedup and (b) energy reduction
+//! normalised to the one-pass method, via the cycle-level NPU simulator
+//! over real routing traces.
+
+use mcma::config::RunConfig;
+use mcma::eval::{fig7, fig8, Context};
+
+fn main() -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig::default())?;
+    let f7 = fig7::run(&ctx)?;
+    let f8 = fig8::run(&ctx, &f7)?;
+    f8.table_a(&ctx).print();
+    f8.table_b(&ctx).print();
+    let (s, e) = f8.mcma_mean_gains(&ctx);
+    println!(
+        "\nheadline: best-MCMA mean speedup {:.2}x (paper ~1.23x), \
+         energy reduction {:.2}x (paper ~1.15x) vs one-pass",
+        s, e
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! L3 hot-path microbenchmarks (§Perf): where does a request's time go?
+//!
+//! * native MLP forward (single / batched) — the floor for L3 logic
+//! * PJRT executable run at B=1 and B=256 — dispatch + execute cost
+//! * classify -> route -> execute for one full batch (the serving unit)
+//! * batcher push/flush overhead
+//!
+//! Criterion is unavailable offline; `mcma::bench_harness` provides
+//! warm-up, calibration and percentile reporting.
+
+use std::time::Duration;
+
+use mcma::bench_harness::bench;
+use mcma::config::{BatchPolicy, ExecMode, Method, RunConfig};
+use mcma::coordinator::{Batcher, Dispatcher};
+use mcma::eval::Context;
+use mcma::runtime::Role;
+use mcma::util::rng::Rng;
+
+fn main() -> mcma::Result<()> {
+    let budget = Duration::from_millis(400);
+    let ctx = Context::load(RunConfig::default())?;
+    let bench_man = ctx.man.bench("blackscholes")?.clone();
+    let method = Method::McmaCompetitive;
+    let bank = ctx.bank(&bench_man, &[method])?;
+    let ds = ctx.dataset("blackscholes")?;
+    let d_pjrt = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
+    let d_native = Dispatcher::new(&bench_man, &bank, method, ExecMode::Native)?;
+
+    let x_norm = d_pjrt.normalize(&ds.x_raw, ds.n);
+    let one = &x_norm[..bench_man.n_in];
+    let batch256 = &x_norm[..256 * bench_man.n_in];
+
+    println!("--- L3 hot path (blackscholes, {}) ---", method.label());
+
+    // Native engine floor.
+    let mlp = bank.host_mlp(method, Role::Approx, 0)?;
+    bench("native mlp forward x1", budget, || {
+        std::hint::black_box(mlp.forward1(one));
+    });
+    bench("native mlp forward x256", budget, || {
+        std::hint::black_box(mlp.forward_batch(batch256, 256));
+    });
+
+    // PJRT execute cost at both compiled batch sizes.
+    bench("pjrt approx run B=1", budget, || {
+        std::hint::black_box(d_pjrt.forward(Role::Approx, 0, one, 1).unwrap());
+    });
+    bench("pjrt approx run B=256", budget, || {
+        std::hint::black_box(d_pjrt.forward(Role::Approx, 0, batch256, 256).unwrap());
+    });
+    bench("pjrt clfN run B=256", budget, || {
+        std::hint::black_box(d_pjrt.forward(Role::ClfN, 0, batch256, 256).unwrap());
+    });
+
+    // The serving unit: classify + route + execute one 256-batch.
+    let raw256 = &ds.x_raw[..256 * bench_man.n_in];
+    bench("dispatch unit (classify+route+exec) pjrt B=256", budget, || {
+        let plan = d_pjrt.plan(batch256, 256).unwrap();
+        std::hint::black_box(d_pjrt.execute_plan(&plan, batch256, raw256, 256).unwrap());
+    });
+    bench("dispatch unit native B=256", budget, || {
+        let plan = d_native.plan(batch256, 256).unwrap();
+        std::hint::black_box(d_native.execute_plan(&plan, batch256, raw256, 256).unwrap());
+    });
+
+    // Batcher overhead per request.
+    let mut rng = Rng::new(3);
+    let reqs: Vec<Vec<f32>> =
+        (0..256).map(|_| (0..6).map(|_| rng.uniform(0.0, 1.0) as f32).collect()).collect();
+    bench("batcher push+flush 256 reqs", budget, || {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 256, max_wait_us: 10_000 }, 6);
+        for (i, r) in reqs.iter().enumerate() {
+            std::hint::black_box(b.push(i as u64, r.clone()));
+        }
+    });
+
+    // Precise CPU path cost (the thing approximation avoids).
+    let benchfn = mcma::benchmarks::by_name("blackscholes")?;
+    let mut out = vec![0.0f64; 1];
+    bench("precise cpu eval x1", budget, || {
+        benchfn.eval(&ds.x_raw[..6], &mut out);
+        std::hint::black_box(out[0]);
+    });
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Timing harness for `cargo bench` (criterion substitute).
+//!
+//! Warm-up, calibrated iteration counts, and mean/p50/p95/std reporting.
+//! Figure benches also use `Table` to print paper-style rows.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub std_ns: f64,
+}
+
+impl Timing {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  ±{:>10}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.std_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, auto-calibrating the iteration count to fill ~`budget`.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target = budget.as_nanos() as f64;
+    let iters = ((target / once).clamp(3.0, 10_000.0)) as u64;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    let timing = Timing {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p95_ns: stats::percentile(&samples, 95.0),
+        std_ns: stats::std_dev(&samples),
+    };
+    timing.print();
+    timing
+}
+
+/// Fixed-column text table for the figure benches.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n=== {} ===", self.title);
+        let line = |cells: &[String]| {
+            let s: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", s.join("  "));
+        };
+        line(&self.header);
+        println!(
+            "  {}",
+            widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Percent formatting helper used across figure tables.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let t = bench("noop-spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t.iters >= 3);
+        assert!(t.mean_ns > 0.0);
+        assert!(t.p95_ns >= t.p50_ns);
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["only-one".into()]);
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).ends_with("µs"));
+        assert!(fmt_ns(5_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

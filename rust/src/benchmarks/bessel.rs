@@ -1,0 +1,66 @@
+//! Bessel function of the first kind J_nu(x) (Scientific Computing, 2 -> 1)
+//! for real order nu in [0, 4], x in [0.5, 15] — the GSL-derived benchmark
+//! the paper visualises in Figs. 9-11.  Computed by the same fixed-node
+//! Simpson quadrature as the Python side (`special::bessel_j`), so both
+//! languages define the identical target function.
+
+use super::special::bessel_j;
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct Bessel;
+
+impl BenchFn for Bessel {
+    fn name(&self) -> &'static str {
+        "bessel"
+    }
+
+    fn n_in(&self) -> usize {
+        2
+    }
+
+    fn n_out(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        out[0] = bessel_j(x[0] as f64, x[1] as f64);
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        out[0] = rng.uniform(0.0, 4.0) as f32;
+        out[1] = rng.uniform(0.5, 15.0) as f32;
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // 97 + 121 quadrature nodes, each with sin/cos/sinh/exp (~40 cyc).
+        9000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_special_fn() {
+        let b = Bessel;
+        let mut y = [0.0f64];
+        b.eval(&[1.0, 1.0], &mut y);
+        assert!((y[0] - 0.4400505857).abs() < 1e-7);
+    }
+
+    #[test]
+    fn bounded_amplitude_on_domain() {
+        // |J_nu(x)| <= 1 for nu >= 0.
+        let b = Bessel;
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            let mut x = [0.0f32; 2];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64];
+            b.eval(&x, &mut y);
+            assert!(y[0].abs() <= 1.0 + 1e-9, "J_{}({}) = {}", x[0], x[1], y[0]);
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Black–Scholes European option pricing (Financial Analysis, 6 -> 1).
+//! Inputs: spot, strike, rate, volatility, time-to-expiry, type (0=call).
+
+use super::special::norm_cdf;
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct BlackScholes;
+
+impl BenchFn for BlackScholes {
+    fn name(&self) -> &'static str {
+        "blackscholes"
+    }
+
+    fn n_in(&self) -> usize {
+        6
+    }
+
+    fn n_out(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let (s, k, r, v, t, otype) = (
+            x[0] as f64, x[1] as f64, x[2] as f64, x[3] as f64, x[4] as f64, x[5] as f64,
+        );
+        let sqrt_t = t.sqrt();
+        let d1 = ((s / k).ln() + (r + 0.5 * v * v) * t) / (v * sqrt_t);
+        let d2 = d1 - v * sqrt_t;
+        let disc = k * (-r * t).exp();
+        let call = s * norm_cdf(d1) - disc * norm_cdf(d2);
+        out[0] = if otype < 0.5 { call } else { call - s + disc };
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        let s = rng.lognormal(50.0f64.ln(), 0.35).clamp(10.0, 150.0);
+        let k = s * rng.uniform(0.6, 1.4);
+        out[0] = s as f32;
+        out[1] = k as f32;
+        out[2] = rng.uniform(0.01, 0.08) as f32;
+        out[3] = rng.uniform(0.05, 0.65) as f32;
+        out[4] = rng.uniform(0.1, 2.0) as f32;
+        out[5] = if rng.bool(0.5) { 1.0 } else { 0.0 };
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // ln + exp + sqrt + 2x norm_cdf (exp + poly) + ~15 mul/add; scalar
+        // libm transcendentals ~20-50 cycles each on a modern OoO core.
+        240
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_call_parity() {
+        let b = BlackScholes;
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            let mut x = [0.0f32; 6];
+            b.gen_into(&mut rng, &mut x);
+            let mut call = [0.0f64];
+            let mut put = [0.0f64];
+            x[5] = 0.0;
+            b.eval(&x, &mut call);
+            x[5] = 1.0;
+            b.eval(&x, &mut put);
+            let (s, k, r, t) = (x[0] as f64, x[1] as f64, x[2] as f64, x[4] as f64);
+            let parity = s - k * (-r * t).exp();
+            assert!((call[0] - put[0] - parity).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn call_bounded_by_spot() {
+        let b = BlackScholes;
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let mut x = [0.0f32; 6];
+            b.gen_into(&mut rng, &mut x);
+            x[5] = 0.0;
+            let mut y = [0.0f64];
+            b.eval(&x, &mut y);
+            assert!(y[0] >= -1e-9 && y[0] <= x[0] as f64 + 1e-9);
+        }
+    }
+}

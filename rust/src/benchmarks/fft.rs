@@ -1,0 +1,55 @@
+//! FFT twiddle factor (Signal Processing, 1 -> 2): x -> (cos x, sin x).
+//! The paper treats this benchmark as "not suitable for approximation";
+//! it exists to show all methods degrade to zero invocation gracefully.
+
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct Fft;
+
+impl BenchFn for Fft {
+    fn name(&self) -> &'static str {
+        "fft"
+    }
+
+    fn n_in(&self) -> usize {
+        1
+    }
+
+    fn n_out(&self) -> usize {
+        2
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let a = x[0] as f64;
+        out[0] = a.cos();
+        out[1] = a.sin();
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        out[0] = rng.uniform(0.0, 2.0 * std::f64::consts::PI) as f32;
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // sincos pair; cheap.
+        60
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_unit_circle() {
+        let b = Fft;
+        let mut rng = Rng::new(5);
+        for _ in 0..100 {
+            let mut x = [0.0f32; 1];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64; 2];
+            b.eval(&x, &mut y);
+            assert!((y[0] * y[0] + y[1] * y[1] - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! 2-joint inverse kinematics (Robotics, 2 -> 2): end-effector (x, y) ->
+//! joint angles (theta1, theta2) for link lengths l1 = l2 = 0.5.
+
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub const L1: f64 = 0.5;
+pub const L2: f64 = 0.5;
+
+pub struct InverseK2j;
+
+impl BenchFn for InverseK2j {
+    fn name(&self) -> &'static str {
+        "inversek2j"
+    }
+
+    fn n_in(&self) -> usize {
+        2
+    }
+
+    fn n_out(&self) -> usize {
+        2
+    }
+
+    fn eval(&self, xin: &[f32], out: &mut [f64]) {
+        let (x, y) = (xin[0] as f64, xin[1] as f64);
+        let d2 = x * x + y * y;
+        let c2 = ((d2 - L1 * L1 - L2 * L2) / (2.0 * L1 * L2)).clamp(-1.0, 1.0);
+        let th2 = c2.acos();
+        let th1 = y.atan2(x) - (L2 * th2.sin()).atan2(L1 + L2 * th2.cos());
+        out[0] = th1;
+        out[1] = th2;
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        // Sample reachable poses exactly like the Python generator: draw
+        // joint angles, run forward kinematics.
+        let th1 = rng.uniform(0.05, std::f64::consts::FRAC_PI_2 - 0.05);
+        let th2 = rng.uniform(0.05, std::f64::consts::FRAC_PI_2 - 0.05);
+        out[0] = (L1 * th1.cos() + L2 * (th1 + th2).cos()) as f32;
+        out[1] = (L1 * th1.sin() + L2 * (th1 + th2).sin()) as f32;
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // acos + 2x atan2 + sin/cos + ~10 ops.
+        180
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inverse_of_forward_kinematics() {
+        let b = InverseK2j;
+        let mut rng = Rng::new(6);
+        for _ in 0..300 {
+            let mut p = [0.0f32; 2];
+            b.gen_into(&mut rng, &mut p);
+            let mut th = [0.0f64; 2];
+            b.eval(&p, &mut th);
+            let x = L1 * th[0].cos() + L2 * (th[0] + th[1]).cos();
+            let y = L1 * th[0].sin() + L2 * (th[0] + th[1]).sin();
+            assert!((x - p[0] as f64).abs() < 1e-6, "{x} vs {}", p[0]);
+            assert!((y - p[1] as f64).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Triangle-triangle intersection (3D gaming, 18 -> 2): two triangles'
+//! vertices -> one-hot (intersects, disjoint).  Mirrors the Python SAT.
+
+use super::special::tri_tri_overlap;
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct Jmeint;
+
+impl BenchFn for Jmeint {
+    fn name(&self) -> &'static str {
+        "jmeint"
+    }
+
+    fn n_in(&self) -> usize {
+        18
+    }
+
+    fn n_out(&self) -> usize {
+        2
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let mut p = [[0.0f64; 3]; 3];
+        let mut q = [[0.0f64; 3]; 3];
+        for i in 0..3 {
+            for j in 0..3 {
+                p[i][j] = x[i * 3 + j] as f64;
+                q[i][j] = x[9 + i * 3 + j] as f64;
+            }
+        }
+        let hit = tri_tri_overlap(&p, &q);
+        out[0] = if hit { 1.0 } else { 0.0 };
+        out[1] = if hit { 0.0 } else { 1.0 };
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        // First triangle uniform in the unit cube; second shrunk 0.8x and
+        // offset so ~half the pairs intersect (mirrors the Python gen).
+        for v in out.iter_mut().take(9) {
+            *v = rng.uniform(0.0, 1.0) as f32;
+        }
+        let off = [rng.uniform(-0.4, 0.4), rng.uniform(-0.4, 0.4), rng.uniform(-0.4, 0.4)];
+        for i in 0..3 {
+            for j in 0..3 {
+                out[9 + i * 3 + j] = (rng.uniform(0.0, 1.0) * 0.8 + off[j]) as f32;
+            }
+        }
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // 11 axes x (cross product + 6 dots + compares) ~ 70 ops each.
+        800
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_is_one_hot() {
+        let b = Jmeint;
+        let mut rng = Rng::new(7);
+        let mut hits = 0;
+        for _ in 0..300 {
+            let mut x = [0.0f32; 18];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64; 2];
+            b.eval(&x, &mut y);
+            assert_eq!(y[0] + y[1], 1.0);
+            if y[0] == 1.0 {
+                hits += 1;
+            }
+        }
+        // Generator keeps both classes populated (random triangle pairs
+        // intersect ~10% of the time under this placement).
+        assert!(hits > 10 && hits < 290, "hit rate degenerate: {hits}/300");
+    }
+
+    #[test]
+    fn symmetric_in_triangle_order() {
+        let b = Jmeint;
+        let mut rng = Rng::new(8);
+        for _ in 0..100 {
+            let mut x = [0.0f32; 18];
+            b.gen_into(&mut rng, &mut x);
+            let mut swapped = [0.0f32; 18];
+            swapped[..9].copy_from_slice(&x[9..]);
+            swapped[9..].copy_from_slice(&x[..9]);
+            let mut a = [0.0f64; 2];
+            let mut c = [0.0f64; 2];
+            b.eval(&x, &mut a);
+            b.eval(&swapped, &mut c);
+            assert_eq!(a, c);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! JPEG encode/decode round-trip of one 8x8 block (Compression, 64 -> 64):
+//! DCT -> quantise (luminance Q50) -> dequantise -> IDCT.
+
+use super::special::jpeg_roundtrip_block;
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct Jpeg;
+
+impl BenchFn for Jpeg {
+    fn name(&self) -> &'static str {
+        "jpeg"
+    }
+
+    fn n_in(&self) -> usize {
+        64
+    }
+
+    fn n_out(&self) -> usize {
+        64
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let mut block = [0.0f32; 64];
+        block.copy_from_slice(x);
+        out.copy_from_slice(&jpeg_roundtrip_block(&block));
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        // Synthetic blocks: level + linear gradient + 2-D sinusoid + noise,
+        // the same family as the Python generator.
+        let gx = rng.uniform(-1.0, 1.0);
+        let gy = rng.uniform(-1.0, 1.0);
+        let phx = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let phy = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+        let fx = rng.uniform(0.2, 1.4);
+        let fy = rng.uniform(0.2, 1.4);
+        let amp = rng.uniform(0.0, 0.4);
+        let level = rng.uniform(0.2, 0.8);
+        for r in 0..8 {
+            for c in 0..8 {
+                let v = level
+                    + gx * (c as f64 - 3.5) / 14.0
+                    + gy * (r as f64 - 3.5) / 14.0
+                    + amp * (fx * c as f64 + phx).sin() * (fy * r as f64 + phy).sin()
+                    + rng.normal_ms(0.0, 0.02);
+                out[r * 8 + c] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // 4x 8x8x8 matmuls (2048 MACs) + 64 round/div + clamps.
+        2600
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_in_unit_range() {
+        let b = Jpeg;
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let mut x = [0.0f32; 64];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64; 64];
+            b.eval(&x, &mut y);
+            assert!(y.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn reconstruction_close_to_input() {
+        let b = Jpeg;
+        let mut rng = Rng::new(10);
+        let mut worst = 0.0f64;
+        for _ in 0..50 {
+            let mut x = [0.0f32; 64];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64; 64];
+            b.eval(&x, &mut y);
+            let rmse = (x
+                .iter()
+                .zip(&y)
+                .map(|(&a, &b)| (a as f64 - b) * (a as f64 - b))
+                .sum::<f64>()
+                / 64.0)
+                .sqrt();
+            worst = worst.max(rmse);
+        }
+        assert!(worst < 0.2, "jpeg roundtrip rmse too big: {worst}");
+    }
+}

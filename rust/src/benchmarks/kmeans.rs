@@ -1,0 +1,75 @@
+//! K-means distance kernel (Machine Learning, 6 -> 1): Euclidean distance
+//! between an (r,g,b) pixel and a cluster centroid.
+
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+pub struct Kmeans;
+
+impl BenchFn for Kmeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn n_in(&self) -> usize {
+        6
+    }
+
+    fn n_out(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let mut s = 0.0f64;
+        for i in 0..3 {
+            let d = x[i] as f64 - x[i + 3] as f64;
+            s += d * d;
+        }
+        out[0] = s.sqrt();
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        // Pixel uniform; centroid near one of 8 synthetic cluster centers
+        // (same family as the Python generator, fresh centers per stream).
+        for v in out.iter_mut().take(3) {
+            *v = rng.uniform(0.0, 1.0) as f32;
+        }
+        for i in 0..3 {
+            let center = (rng.below(8) as f64 + 0.5) / 8.0;
+            out[3 + i] = (center + rng.normal_ms(0.0, 0.05)).clamp(0.0, 1.0) as f32;
+        }
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // 3 sub/mul/add + sqrt.
+        40
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_hand_checked() {
+        let b = Kmeans;
+        let mut y = [0.0f64];
+        b.eval(&[0.0, 0.0, 0.0, 1.0, 1.0, 1.0], &mut y);
+        assert!((y[0] - 3.0f64.sqrt()).abs() < 1e-9);
+        b.eval(&[0.5, 0.5, 0.5, 0.5, 0.5, 0.5], &mut y);
+        assert_eq!(y[0], 0.0);
+    }
+
+    #[test]
+    fn distance_nonnegative_and_bounded() {
+        let b = Kmeans;
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let mut x = [0.0f32; 6];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64];
+            b.eval(&x, &mut y);
+            assert!(y[0] >= 0.0 && y[0] <= 3.0f64.sqrt() + 1e-9);
+        }
+    }
+}

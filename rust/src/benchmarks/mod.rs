@@ -1,0 +1,128 @@
+//! The eight PRECISE target functions (paper Fig. 6) — the "CPU" path the
+//! coordinator falls back to when the classifier rejects a sample, plus
+//! workload generators for serving-style traffic.
+//!
+//! Every function mirrors `python/compile/benchmarks.py` number-for-number
+//! (same erf approximation, same quadrature nodes, same DCT/quant tables);
+//! `tests/golden.rs` pins the agreement against `artifacts/golden.json`.
+
+pub mod special;
+
+mod bessel;
+mod blackscholes;
+mod fft;
+mod inversek2j;
+mod jmeint;
+mod jpeg;
+mod kmeans;
+mod sobel;
+
+pub use bessel::Bessel;
+pub use blackscholes::BlackScholes;
+pub use fft::Fft;
+pub use inversek2j::InverseK2j;
+pub use jmeint::Jmeint;
+pub use jpeg::Jpeg;
+pub use kmeans::Kmeans;
+pub use sobel::Sobel;
+
+use crate::util::rng::Rng;
+
+/// A precise target function plus its input generator.
+pub trait BenchFn: Send + Sync {
+    /// Benchmark name (matches the manifest key).
+    fn name(&self) -> &'static str;
+
+    /// Raw input dimensionality.
+    fn n_in(&self) -> usize;
+
+    /// Raw output dimensionality.
+    fn n_out(&self) -> usize;
+
+    /// The precise computation on ONE raw input row (f64 internally —
+    /// this is the ground truth everything is scored against).
+    fn eval(&self, x_raw: &[f32], out: &mut [f64]);
+
+    /// Draw one raw input row from the benchmark's input distribution
+    /// (used by the serving examples; offline eval reads `test.bin`).
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]);
+
+    /// Estimated CPU cost of one precise evaluation, in cycles, for the
+    /// NPU simulator's speedup/energy model (DESIGN.md lists the op-count
+    /// derivations; see also `npu::cpu_model`).
+    fn cpu_cycles(&self) -> u64;
+}
+
+/// Registry of all benchmarks.
+pub fn all() -> Vec<Box<dyn BenchFn>> {
+    vec![
+        Box::new(BlackScholes),
+        Box::new(Fft),
+        Box::new(InverseK2j),
+        Box::new(Jmeint),
+        Box::new(Jpeg),
+        Box::new(Kmeans),
+        Box::new(Sobel),
+        Box::new(Bessel),
+    ]
+}
+
+/// Look a benchmark up by name.
+pub fn by_name(name: &str) -> crate::Result<Box<dyn BenchFn>> {
+    all()
+        .into_iter()
+        .find(|b| b.name() == name)
+        .ok_or_else(|| anyhow::anyhow!("unknown benchmark {name:?}"))
+}
+
+/// Evaluate a whole batch of raw rows into a normalised output buffer,
+/// given the manifest normalisation bounds.
+pub fn eval_batch_normalized(
+    bench: &dyn BenchFn,
+    man: &crate::formats::BenchManifest,
+    x_raw: &[f32],
+    n: usize,
+) -> Vec<f32> {
+    let (d_in, d_out) = (bench.n_in(), bench.n_out());
+    assert_eq!(x_raw.len(), n * d_in);
+    let mut out = vec![0.0f32; n * d_out];
+    let mut raw = vec![0.0f64; d_out];
+    for i in 0..n {
+        bench.eval(&x_raw[i * d_in..(i + 1) * d_in], &mut raw);
+        man.normalize_y_into(&raw, &mut out[i * d_out..(i + 1) * d_out]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_the_paper_suite() {
+        let names: Vec<&str> = all().iter().map(|b| b.name()).collect();
+        assert_eq!(
+            names,
+            vec!["blackscholes", "fft", "inversek2j", "jmeint", "jpeg", "kmeans", "sobel", "bessel"]
+        );
+    }
+
+    #[test]
+    fn generators_match_declared_dims() {
+        let mut rng = Rng::new(1);
+        for b in all() {
+            let mut x = vec![0.0f32; b.n_in()];
+            let mut y = vec![0.0f64; b.n_out()];
+            b.gen_into(&mut rng, &mut x);
+            b.eval(&x, &mut y);
+            assert!(y.iter().all(|v| v.is_finite()), "{} non-finite", b.name());
+            assert!(b.cpu_cycles() > 0);
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert!(by_name("sobel").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+}

@@ -1,0 +1,95 @@
+//! Sobel gradient magnitude of a 3x3 luminance window (Image Processing,
+//! 9 -> 1), normalised by 4*sqrt(2) and clamped to [0, 1].
+
+use super::BenchFn;
+use crate::util::rng::Rng;
+
+const GX: [f64; 9] = [-1.0, 0.0, 1.0, -2.0, 0.0, 2.0, -1.0, 0.0, 1.0];
+const GY: [f64; 9] = [-1.0, -2.0, -1.0, 0.0, 0.0, 0.0, 1.0, 2.0, 1.0];
+
+pub struct Sobel;
+
+impl BenchFn for Sobel {
+    fn name(&self) -> &'static str {
+        "sobel"
+    }
+
+    fn n_in(&self) -> usize {
+        9
+    }
+
+    fn n_out(&self) -> usize {
+        1
+    }
+
+    fn eval(&self, x: &[f32], out: &mut [f64]) {
+        let mut gx = 0.0f64;
+        let mut gy = 0.0f64;
+        for i in 0..9 {
+            gx += x[i] as f64 * GX[i];
+            gy += x[i] as f64 * GY[i];
+        }
+        out[0] = ((gx * gx + gy * gy).sqrt() / (4.0 * std::f64::consts::SQRT_2)).clamp(0.0, 1.0);
+    }
+
+    fn gen_into(&self, rng: &mut Rng, out: &mut [f32]) {
+        // Window = level + gradient + vertical step edge + noise.
+        let gx = rng.uniform(-0.5, 0.5);
+        let gy = rng.uniform(-0.5, 0.5);
+        let level = rng.uniform(0.1, 0.9);
+        let edge_pos = rng.uniform(-0.5, 2.5);
+        let edge_amp = rng.uniform(-0.6, 0.6);
+        for r in 0..3 {
+            for c in 0..3 {
+                let mut v = level
+                    + gx * (c as f64 - 1.0) / 4.0
+                    + gy * (r as f64 - 1.0) / 4.0
+                    + rng.normal_ms(0.0, 0.02);
+                if c as f64 > edge_pos {
+                    v += edge_amp;
+                }
+                out[r * 3 + c] = v.clamp(0.0, 1.0) as f32;
+            }
+        }
+    }
+
+    fn cpu_cycles(&self) -> u64 {
+        // 18 MACs + sqrt + clamp.
+        50
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_window_is_zero() {
+        let b = Sobel;
+        let mut y = [1.0f64];
+        b.eval(&[0.7f32; 9], &mut y);
+        assert!(y[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn strong_vertical_edge_detected() {
+        let b = Sobel;
+        let w = [0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0, 1.0f32];
+        let mut y = [0.0f64];
+        b.eval(&w, &mut y);
+        assert!(y[0] > 0.5, "edge magnitude {y:?}");
+    }
+
+    #[test]
+    fn output_in_unit_range() {
+        let b = Sobel;
+        let mut rng = Rng::new(12);
+        for _ in 0..300 {
+            let mut x = [0.0f32; 9];
+            b.gen_into(&mut rng, &mut x);
+            let mut y = [0.0f64];
+            b.eval(&x, &mut y);
+            assert!((0.0..=1.0).contains(&y[0]));
+        }
+    }
+}

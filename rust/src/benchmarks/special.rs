@@ -1,0 +1,274 @@
+//! Shared deterministic special functions, mirroring
+//! `python/compile/benchmarks.py` exactly (same constants, same quadrature
+//! nodes) so both languages compute the *identical* target function.
+
+use std::f64::consts::PI;
+
+const ERF_A: [f64; 5] = [0.254829592, -0.284496736, 1.421413741, -1.453152027, 1.061405429];
+const ERF_P: f64 = 0.3275911;
+
+/// Abramowitz–Stegun 7.1.26 rational erf approximation (|err| < 1.5e-7).
+pub fn erf_as(x: f64) -> f64 {
+    if x == 0.0 {
+        return 0.0; // numpy sign(0) == 0; keep bit-identical to Python
+    }
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + ERF_P * ax);
+    let poly = t * (ERF_A[0] + t * (ERF_A[1] + t * (ERF_A[2] + t * (ERF_A[3] + t * ERF_A[4]))));
+    sign * (1.0 - poly * (-ax * ax).exp())
+}
+
+/// Standard normal CDF via `erf_as`.
+pub fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf_as(x / std::f64::consts::SQRT_2))
+}
+
+// Simpson quadrature parameters — MUST match benchmarks.py.
+const BESSEL_N1: usize = 96;
+const BESSEL_N2: usize = 120;
+const BESSEL_S_MAX: f64 = 6.0;
+
+/// Deterministic J_nu(x) via fixed-node Simpson quadrature;
+/// valid for nu in [0, 4], x in [0.5, 15] (the benchmark domain).
+pub fn bessel_j(nu: f64, x: f64) -> f64 {
+    // First integral: (1/pi) ∫_0^pi cos(nu*t - x*sin t) dt.
+    let h1 = PI / BESSEL_N1 as f64;
+    let mut term1 = 0.0;
+    for k in 0..=BESSEL_N1 {
+        let t = k as f64 * h1;
+        let w = simpson_weight(k, BESSEL_N1) * (h1 / 3.0);
+        term1 += w * (nu * t - x * t.sin()).cos();
+    }
+    term1 /= PI;
+
+    // Second integral: sin(nu*pi)/pi ∫_0^smax exp(-x*sinh s - nu*s) ds.
+    let h2 = BESSEL_S_MAX / BESSEL_N2 as f64;
+    let mut term2 = 0.0;
+    for k in 0..=BESSEL_N2 {
+        let s = k as f64 * h2;
+        let w = simpson_weight(k, BESSEL_N2) * (h2 / 3.0);
+        term2 += w * (-x * s.sinh() - nu * s).exp();
+    }
+    term2 *= (nu * PI).sin() / PI;
+
+    term1 - term2
+}
+
+#[inline]
+fn simpson_weight(k: usize, n: usize) -> f64 {
+    if k == 0 || k == n {
+        1.0
+    } else if k % 2 == 1 {
+        4.0
+    } else {
+        2.0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 8x8 DCT machinery for the jpeg benchmark.
+// ---------------------------------------------------------------------------
+
+/// Standard JPEG luminance quantisation table (quality 50), row-major.
+pub const JPEG_QTABLE: [f64; 64] = [
+    16.0, 11.0, 10.0, 16.0, 24.0, 40.0, 51.0, 61.0,
+    12.0, 12.0, 14.0, 19.0, 26.0, 58.0, 60.0, 55.0,
+    14.0, 13.0, 16.0, 24.0, 40.0, 57.0, 69.0, 56.0,
+    14.0, 17.0, 22.0, 29.0, 51.0, 87.0, 80.0, 62.0,
+    18.0, 22.0, 37.0, 56.0, 68.0, 109.0, 103.0, 77.0,
+    24.0, 35.0, 55.0, 64.0, 81.0, 104.0, 113.0, 92.0,
+    49.0, 64.0, 78.0, 87.0, 103.0, 121.0, 120.0, 101.0,
+    72.0, 92.0, 95.0, 98.0, 112.0, 100.0, 103.0, 99.0,
+];
+
+/// Orthonormal DCT-II basis matrix C (8x8): X = C x C^T.
+pub fn dct8_matrix() -> [[f64; 8]; 8] {
+    let mut c = [[0.0; 8]; 8];
+    for (k, row) in c.iter_mut().enumerate() {
+        let alpha = if k == 0 { (1.0f64 / 8.0).sqrt() } else { (2.0f64 / 8.0).sqrt() };
+        for (n, v) in row.iter_mut().enumerate() {
+            *v = alpha * (PI * (2 * n + 1) as f64 * k as f64 / 16.0).cos();
+        }
+    }
+    c
+}
+
+/// DCT -> quantise -> dequantise -> IDCT on one 8x8 block of [0,1] pixels.
+pub fn jpeg_roundtrip_block(pixels: &[f32; 64]) -> [f64; 64] {
+    let c = dct8_matrix();
+    // Center to [-128, 127].
+    let mut b = [[0.0f64; 8]; 8];
+    for r in 0..8 {
+        for cc in 0..8 {
+            b[r][cc] = pixels[r * 8 + cc] as f64 * 255.0 - 128.0;
+        }
+    }
+    // coef = C b C^T
+    let mut tmp = [[0.0f64; 8]; 8];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                s += c[i][k] * b[k][j];
+            }
+            tmp[i][j] = s;
+        }
+    }
+    let mut coef = [[0.0f64; 8]; 8];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                s += tmp[i][k] * c[j][k];
+            }
+            coef[i][j] = s;
+        }
+    }
+    // Quantise / dequantise.
+    for i in 0..8 {
+        for j in 0..8 {
+            let q = JPEG_QTABLE[i * 8 + j];
+            coef[i][j] = (coef[i][j] / q).round() * q;
+        }
+    }
+    // rec = C^T coef C
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                s += c[k][i] * coef[k][j];
+            }
+            tmp[i][j] = s;
+        }
+    }
+    let mut out = [0.0f64; 64];
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut s = 0.0;
+            for k in 0..8 {
+                s += tmp[i][k] * c[k][j];
+            }
+            out[i * 8 + j] = ((s + 128.0) / 255.0).clamp(0.0, 1.0);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Triangle-triangle intersection (separating-axis test), matching
+// benchmarks.py::_tri_tri_overlap_one.
+// ---------------------------------------------------------------------------
+
+type V3 = [f64; 3];
+
+fn sub(a: V3, b: V3) -> V3 {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
+}
+
+fn cross(a: V3, b: V3) -> V3 {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+fn dot(a: V3, b: V3) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+/// SAT 3-D triangle intersection; `p`/`q` are 3 vertex rows each.
+pub fn tri_tri_overlap(p: &[V3; 3], q: &[V3; 3]) -> bool {
+    let e_p = [sub(p[1], p[0]), sub(p[2], p[1]), sub(p[0], p[2])];
+    let e_q = [sub(q[1], q[0]), sub(q[2], q[1]), sub(q[0], q[2])];
+    let mut axes: Vec<V3> = Vec::with_capacity(11);
+    axes.push(cross(e_p[0], e_p[1]));
+    axes.push(cross(e_q[0], e_q[1]));
+    for a in &e_p {
+        for b in &e_q {
+            axes.push(cross(*a, *b));
+        }
+    }
+    for ax in axes {
+        let n2 = dot(ax, ax);
+        if n2 < 1e-12 {
+            continue;
+        }
+        let dp: Vec<f64> = p.iter().map(|v| dot(*v, ax)).collect();
+        let dq: Vec<f64> = q.iter().map(|v| dot(*v, ax)).collect();
+        let (p_min, p_max) = min_max(&dp);
+        let (q_min, q_max) = min_max(&dq);
+        if p_max < q_min - 1e-12 || q_max < p_min - 1e-12 {
+            return false;
+        }
+    }
+    true
+}
+
+fn min_max(xs: &[f64]) -> (f64, f64) {
+    let mut lo = xs[0];
+    let mut hi = xs[0];
+    for &x in &xs[1..] {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf_as(0.0)).abs() < 1e-12);
+        assert!((erf_as(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf_as(-1.0) + 0.8427007).abs() < 1e-5);
+        assert!((erf_as(3.0) - 0.99997791).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bessel_known_values() {
+        // First zero of J_0.
+        assert!(bessel_j(0.0, 2.404825557695773).abs() < 1e-6);
+        assert!((bessel_j(0.0, 1.0) - 0.7651976866).abs() < 1e-7);
+        assert!((bessel_j(1.0, 1.0) - 0.4400505857).abs() < 1e-7);
+        assert!((bessel_j(2.0, 5.0) - 0.04656511628).abs() < 1e-7);
+    }
+
+    #[test]
+    fn dct_matrix_orthonormal() {
+        let c = dct8_matrix();
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += c[i][k] * c[j][k];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((s - expect).abs() < 1e-12, "({i},{j}) -> {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn jpeg_flat_block_identity() {
+        let level = 128.0 / 255.0;
+        let block = [level as f32; 64];
+        let out = jpeg_roundtrip_block(&block);
+        for v in out {
+            assert!((v - level).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn tri_tri_basic_cases() {
+        let t: [V3; 3] = [[0.0, 0.0, 0.0], [1.0, 0.0, 0.0], [0.0, 1.0, 0.0]];
+        assert!(tri_tri_overlap(&t, &t));
+        let far: [V3; 3] = [[10.0, 10.0, 10.0], [11.0, 10.0, 10.0], [10.0, 11.0, 10.0]];
+        assert!(!tri_tri_overlap(&t, &far));
+        let pierce: [V3; 3] = [[0.25, 0.25, -1.0], [0.25, 0.25, 1.0], [1.0, 1.0, 1.0]];
+        assert!(tri_tri_overlap(&t, &pierce));
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (clap substitute): subcommand + positional
+//! arguments + `--key value` options + `--flag` booleans.
+
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+/// Which option keys take a value (everything else after `--` is a flag).
+const VALUE_KEYS: [&str; 10] = [
+    "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
+    "case", "n", "seed",
+];
+
+impl Args {
+    /// Parse `std::env::args()`-style tokens (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> crate::Result<Self> {
+        let mut args = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if VALUE_KEYS.contains(&key) {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?;
+                    args.options.insert(key.to_string(), val);
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positionals.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub const USAGE: &str = "\
+mcma — invocation-driven neural approximate computing (ICCAD'18 reproduction)
+
+USAGE:
+  mcma <subcommand> [options]
+
+SUBCOMMANDS:
+  list-benchmarks                 show the benchmark suite (paper Fig. 6)
+  figure <7a|7b|7c|8a|8b|9|10|11|all>
+                                  regenerate a paper figure as a table
+  summary                         §IV.B headline numbers vs the paper
+  report                          full evaluation as JSON (plotting / CI)
+  eval   --bench B --method M     run one (benchmark, method) evaluation
+  serve  --bench B --method M     run the online serving pipeline demo
+         [--requests N] [--batch N] [--wait-us U]
+  npu-sim --bench B --method M    NPU cycle simulation + buffer-case ablation
+         [--case 1|2|3]
+
+COMMON OPTIONS:
+  --exec pjrt|native              execution engine (default pjrt)
+  --samples N                     cap test samples (default: full test set)
+
+ENVIRONMENT:
+  MCMA_ARTIFACTS                  artifact tree (default: ./artifacts)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        let a = parse("eval --bench sobel --method mcma_competitive --exec native");
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.opt("bench"), Some("sobel"));
+        assert_eq!(a.opt("method"), Some("mcma_competitive"));
+        assert_eq!(a.opt_or("exec", "pjrt"), "native");
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = parse("figure 7a");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positionals, vec!["7a"]);
+    }
+
+    #[test]
+    fn flags_vs_value_options() {
+        let a = parse("eval --verbose --samples 100");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.opt_usize("samples", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(["eval".into(), "--bench".into()]).is_err());
+    }
+
+    #[test]
+    fn bad_integer_is_error() {
+        let a = parse("eval --samples abc");
+        assert!(a.opt_usize("samples", 0).is_err());
+    }
+}

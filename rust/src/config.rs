@@ -1,0 +1,210 @@
+//! Run + NPU configuration.
+//!
+//! The benchmark registry itself lives in `artifacts/manifest.json` (the
+//! Python build is the source of truth for topologies and bounds); this
+//! module holds everything the *runtime* chooses: execution mode, batching
+//! policy, NPU microarchitecture parameters, and the method name mapping.
+
+use std::str::FromStr;
+
+/// Which engine executes MLP forwards on the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// PJRT CPU client running the AOT-lowered HLO (the real configuration).
+    Pjrt,
+    /// Pure-Rust `nn::Mlp` fallback (profiling the L3 logic in isolation).
+    Native,
+}
+
+impl FromStr for ExecMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pjrt" => Ok(ExecMode::Pjrt),
+            "native" => Ok(ExecMode::Native),
+            _ => anyhow::bail!("unknown exec mode {s:?} (pjrt|native)"),
+        }
+    }
+}
+
+/// The five training methods (artifact keys in `weights.bin`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    OnePass,
+    Iterative,
+    Mcca,
+    McmaComplementary,
+    McmaCompetitive,
+}
+
+impl Method {
+    pub const ALL: [Method; 5] = [
+        Method::OnePass,
+        Method::Iterative,
+        Method::Mcca,
+        Method::McmaComplementary,
+        Method::McmaCompetitive,
+    ];
+
+    /// Artifact key (matches `python/compile/train.py` method names).
+    pub fn key(self) -> &'static str {
+        match self {
+            Method::OnePass => "one_pass",
+            Method::Iterative => "iterative",
+            Method::Mcca => "mcca",
+            Method::McmaComplementary => "mcma_complementary",
+            Method::McmaCompetitive => "mcma_competitive",
+        }
+    }
+
+    /// Short display label (used in figure tables).
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::OnePass => "one-pass",
+            Method::Iterative => "iterative",
+            Method::Mcca => "MCCA",
+            Method::McmaComplementary => "MCMA-compl",
+            Method::McmaCompetitive => "MCMA-compet",
+        }
+    }
+
+    pub fn is_mcma(self) -> bool {
+        matches!(self, Method::McmaComplementary | Method::McmaCompetitive)
+    }
+
+    pub fn is_cascade(self) -> bool {
+        self == Method::Mcca
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Method::ALL
+            .into_iter()
+            .find(|m| m.key() == s || m.label() == s)
+            .ok_or_else(|| anyhow::anyhow!("unknown method {s:?}"))
+    }
+}
+
+/// Dynamic batching policy for the serving pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are pending (also the HLO batch size).
+    pub max_batch: usize,
+    /// Flush when the oldest pending request is this old.
+    pub max_wait_us: u64,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 256, max_wait_us: 2_000 }
+    }
+}
+
+/// NPU microarchitecture parameters (defaults follow the NPU of
+/// Esmaeilzadeh et al. [10]: 8 PEs, sigmoid LUT, weight buffers near MACs;
+/// energy constants are order-of-magnitude 45 nm figures — see DESIGN.md).
+#[derive(Clone, Copy, Debug)]
+pub struct NpuConfig {
+    /// Number of processing elements per tile.
+    pub pes_per_tile: usize,
+    /// Tiles in the NPU (classifier + approximator can map to tiles).
+    pub n_tiles: usize,
+    /// MACs one PE retires per cycle.
+    pub macs_per_pe_cycle: u64,
+    /// Activation unit latency (cycles per neuron).
+    pub act_latency: u64,
+    /// Input/output FIFO transfer: values moved per cycle over the bus.
+    pub bus_words_per_cycle: u64,
+    /// Per-PE weight buffer capacity, in f32 words.
+    pub weight_buffer_words: usize,
+    /// Cache -> weight-buffer refill bandwidth, words per cycle.
+    pub cache_refill_words_per_cycle: u64,
+    /// NPU clock relative to CPU clock (paper NPU runs at core clock).
+    pub clock_ratio: f64,
+    /// Energy per MAC (pJ).
+    pub e_mac_pj: f64,
+    /// Energy per word moved on the internal bus (pJ).
+    pub e_bus_word_pj: f64,
+    /// Energy per word refilled from on-chip cache (pJ).
+    pub e_cache_word_pj: f64,
+    /// CPU energy per cycle (pJ) — OoO core, ~0.5 W/GHz order.
+    pub e_cpu_cycle_pj: f64,
+    /// NPU static overhead per invocation (pJ).
+    pub e_invoke_pj: f64,
+}
+
+impl Default for NpuConfig {
+    fn default() -> Self {
+        NpuConfig {
+            pes_per_tile: 8,
+            n_tiles: 2,
+            macs_per_pe_cycle: 1,
+            act_latency: 2,
+            bus_words_per_cycle: 4,
+            weight_buffer_words: 2048,
+            cache_refill_words_per_cycle: 8,
+            clock_ratio: 1.0,
+            e_mac_pj: 1.2,
+            e_bus_word_pj: 0.8,
+            e_cache_word_pj: 2.0,
+            e_cpu_cycle_pj: 400.0,
+            e_invoke_pj: 60.0,
+        }
+    }
+}
+
+/// Everything a single evaluation/serving run needs.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub exec: ExecMode,
+    pub batch: BatchPolicy,
+    pub npu: NpuConfig,
+    /// Cap on test samples (0 = use the whole artifact test set).
+    pub max_samples: usize,
+    /// Worker threads for parallel eval across benchmarks.
+    pub threads: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            exec: ExecMode::Pjrt,
+            batch: BatchPolicy::default(),
+            npu: NpuConfig::default(),
+            max_samples: 0,
+            threads: crate::util::threadpool::default_parallelism(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_key_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::from_str(m.key()).unwrap(), m);
+            assert_eq!(Method::from_str(m.label()).unwrap(), m);
+        }
+        assert!(Method::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn exec_mode_parse() {
+        assert_eq!(ExecMode::from_str("pjrt").unwrap(), ExecMode::Pjrt);
+        assert_eq!(ExecMode::from_str("native").unwrap(), ExecMode::Native);
+        assert!(ExecMode::from_str("gpu").is_err());
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let c = NpuConfig::default();
+        assert!(c.pes_per_tile > 0 && c.e_cpu_cycle_pj > c.e_mac_pj);
+        assert_eq!(BatchPolicy::default().max_batch, 256);
+    }
+}

@@ -1,0 +1,181 @@
+//! Dynamic batcher: accumulate requests until the batch fills or the oldest
+//! request exceeds its age budget (size-or-timeout policy, the same shape
+//! vLLM-style servers use).  The offline eval path slices datasets directly;
+//! this is the online server's ingress stage.
+
+use std::time::{Duration, Instant};
+
+use crate::config::BatchPolicy;
+
+/// One queued request: opaque id + raw input row.
+#[derive(Clone, Debug)]
+pub struct Pending {
+    pub id: u64,
+    pub x_raw: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+/// A flushed batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub ids: Vec<u64>,
+    /// Row-major `(n, d_in)` raw inputs.
+    pub x_raw: Vec<f32>,
+    pub n: usize,
+    pub enqueued: Vec<Instant>,
+}
+
+/// Size-or-age dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    d_in: usize,
+    queue: Vec<Pending>,
+    pub flushes_full: u64,
+    pub flushes_timeout: u64,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy, d_in: usize) -> Self {
+        Batcher { policy, d_in, queue: Vec::new(), flushes_full: 0, flushes_timeout: 0 }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue; returns a full batch if this push filled it.
+    pub fn push(&mut self, id: u64, x_raw: Vec<f32>) -> Option<Batch> {
+        assert_eq!(x_raw.len(), self.d_in, "request dimensionality mismatch");
+        self.queue.push(Pending { id, x_raw, enqueued: Instant::now() });
+        if self.queue.len() >= self.policy.max_batch {
+            self.flushes_full += 1;
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// Flush if the oldest request has waited past the age budget.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        let oldest = self.queue.first()?.enqueued;
+        if now.duration_since(oldest) >= Duration::from_micros(self.policy.max_wait_us) {
+            self.flushes_timeout += 1;
+            Some(self.flush())
+        } else {
+            None
+        }
+    }
+
+    /// Unconditional flush (shutdown drain). Empty queue -> None.
+    pub fn drain(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            None
+        } else {
+            Some(self.flush())
+        }
+    }
+
+    fn flush(&mut self) -> Batch {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let taken: Vec<Pending> = self.queue.drain(..n).collect();
+        let mut x = Vec::with_capacity(n * self.d_in);
+        let mut ids = Vec::with_capacity(n);
+        let mut enq = Vec::with_capacity(n);
+        for p in taken {
+            ids.push(p.id);
+            enq.push(p.enqueued);
+            x.extend_from_slice(&p.x_raw);
+        }
+        Batch { ids, x_raw: x, n, enqueued: enq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn policy(max_batch: usize, max_wait_us: u64) -> BatchPolicy {
+        BatchPolicy { max_batch, max_wait_us }
+    }
+
+    #[test]
+    fn fills_at_max_batch() {
+        let mut b = Batcher::new(policy(3, 1_000_000), 2);
+        assert!(b.push(0, vec![0.0; 2]).is_none());
+        assert!(b.push(1, vec![0.0; 2]).is_none());
+        let batch = b.push(2, vec![0.0; 2]).expect("should flush");
+        assert_eq!(batch.n, 3);
+        assert_eq!(batch.ids, vec![0, 1, 2]);
+        assert_eq!(batch.x_raw.len(), 6);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.flushes_full, 1);
+    }
+
+    #[test]
+    fn timeout_flushes_partial() {
+        let mut b = Batcher::new(policy(100, 0), 1);
+        b.push(7, vec![1.0]);
+        let batch = b.poll(Instant::now()).expect("age 0 flushes immediately");
+        assert_eq!(batch.ids, vec![7]);
+        assert_eq!(b.flushes_timeout, 1);
+        assert!(b.poll(Instant::now()).is_none(), "empty queue never flushes");
+    }
+
+    #[test]
+    fn drain_returns_leftovers() {
+        let mut b = Batcher::new(policy(10, 1_000_000), 1);
+        assert!(b.drain().is_none());
+        b.push(1, vec![0.5]);
+        b.push(2, vec![0.6]);
+        let batch = b.drain().unwrap();
+        assert_eq!(batch.n, 2);
+        assert_eq!(batch.x_raw, vec![0.5, 0.6]);
+    }
+
+    /// Property: no request is lost or duplicated and arrival order is
+    /// preserved across any interleaving of push/poll/drain.
+    #[test]
+    fn prop_batcher_conserves_requests() {
+        prop::check(
+            "batcher-conservation",
+            150,
+            0xBA7C4,
+            |r: &mut Rng| {
+                let max_batch = 1 + r.below(8) as usize;
+                let n = r.below(200) as usize;
+                let polls: Vec<bool> = (0..n).map(|_| r.bool(0.2)).collect();
+                (max_batch, polls)
+            },
+            |(max_batch, polls)| {
+                let mut b = Batcher::new(policy(*max_batch, 0), 1);
+                let mut got: Vec<u64> = Vec::new();
+                for (i, &do_poll) in polls.iter().enumerate() {
+                    if let Some(batch) = b.push(i as u64, vec![i as f32]) {
+                        got.extend(&batch.ids);
+                    }
+                    if do_poll {
+                        if let Some(batch) = b.poll(Instant::now()) {
+                            got.extend(&batch.ids);
+                        }
+                    }
+                }
+                while let Some(batch) = b.drain() {
+                    got.extend(&batch.ids);
+                }
+                let want: Vec<u64> = (0..polls.len() as u64).collect();
+                if got != want {
+                    return Err(format!("ids out of order or lost: {got:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "dimensionality")]
+    fn rejects_wrong_width() {
+        let mut b = Batcher::new(policy(4, 0), 3);
+        b.push(0, vec![0.0; 2]);
+    }
+}

@@ -1,0 +1,364 @@
+//! The dispatcher: classify -> route -> execute (approximators on the
+//! PJRT "NPU", rejects on the precise CPU path).
+//!
+//! One `Dispatcher` serves one (benchmark, method) pair.  It is the
+//! synchronous core used both by the offline eval drivers (whole-dataset
+//! runs for the figures) and by the online `Server` (per-batch).
+
+use crate::benchmarks::{self, BenchFn};
+use crate::config::{ExecMode, Method};
+use crate::formats::{BenchManifest, Dataset};
+use crate::nn;
+use crate::runtime::{ModelBank, Role};
+
+use super::batcher::Batch;
+use super::metrics::RunMetrics;
+use super::router::{self, Route, RoutePlan};
+use super::weight_cache::WeightCache;
+
+/// Full offline evaluation result for one (benchmark, method, dataset).
+pub struct EvalOutput {
+    pub plan: RoutePlan,
+    /// Per-sample error of the value actually served (0 for CPU-served).
+    pub err: Vec<f64>,
+    /// Per-sample error under the method's best approximator — defines the
+    /// "actually safe" (A) split for rejected samples (Fig. 11).
+    pub err_if_invoked: Vec<f64>,
+    /// Served outputs, row-major `(n, d_out)` normalised space.
+    pub y_served: Vec<f32>,
+    pub metrics: RunMetrics,
+    pub weight_cache: WeightCache,
+}
+
+/// Routing policy — how classifier outputs become destinations.
+///
+/// `Argmax` is the paper's MCMA ("the approximator with the highest
+/// confidence consumes the input sample").  The other two are extensions
+/// evaluated in `benches/ablations.rs`:
+/// * `Confidence(t)` — route to the argmax approximator only when its
+///   softmax probability exceeds `t`, else CPU: trades invocation for
+///   quality with no retraining (a runtime quality knob the paper's §II.A
+///   related work tunes statically).
+/// * `Oracle` — route by the true lowest-error approximator (requires
+///   ground truth; upper-bounds what any classifier could achieve and
+///   quantifies the remaining classifier headroom).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RouterPolicy {
+    Argmax,
+    Confidence(f32),
+    Oracle,
+}
+
+/// Synchronous classify/route/execute engine for one (bench, method).
+pub struct Dispatcher<'a> {
+    pub bench: &'a BenchManifest,
+    pub bank: &'a ModelBank,
+    pub benchfn: Box<dyn BenchFn>,
+    pub method: Method,
+    pub exec: ExecMode,
+    pub npu_cfg: crate::config::NpuConfig,
+    pub policy: RouterPolicy,
+}
+
+impl<'a> Dispatcher<'a> {
+    pub fn new(
+        bench: &'a BenchManifest,
+        bank: &'a ModelBank,
+        method: Method,
+        exec: ExecMode,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            bank.has_method(method),
+            "artifacts for {} lack method {}",
+            bench.name,
+            method.key()
+        );
+        Ok(Dispatcher {
+            bench,
+            bank,
+            benchfn: benchmarks::by_name(&bench.name)?,
+            method,
+            exec,
+            npu_cfg: crate::config::NpuConfig::default(),
+            policy: RouterPolicy::Argmax,
+        })
+    }
+
+    /// Builder-style routing-policy override (extensions; see RouterPolicy).
+    pub fn with_policy(mut self, policy: RouterPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Number of approximators this method has.
+    pub fn n_approx(&self) -> usize {
+        self.bank.n_approx(self.method)
+    }
+
+    /// Normalise a raw-input batch into NN space.
+    pub fn normalize(&self, x_raw: &[f32], n: usize) -> Vec<f32> {
+        let d = self.bench.n_in;
+        let mut out = vec![0.0f32; n * d];
+        for i in 0..n {
+            self.bench
+                .normalize_x_into(&x_raw[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
+        }
+        out
+    }
+
+    /// Forward `n` rows through (role, idx), batched through the chosen
+    /// engine.  Chunks through the largest compiled batch on PJRT.
+    pub fn forward(
+        &self,
+        role: Role,
+        idx: usize,
+        x_norm: &[f32],
+        n: usize,
+    ) -> crate::Result<Vec<f32>> {
+        match self.exec {
+            ExecMode::Native => {
+                let mlp = self.bank.host_mlp(self.method, role, idx)?;
+                Ok(mlp.forward_batch(x_norm, n))
+            }
+            ExecMode::Pjrt => {
+                let d_in = x_norm.len() / n.max(1);
+                let b = self.bank.best_batch(role, n);
+                let exe = self.bank.exe(role, b)?;
+                let weights = self.bank.weight_set(self.method, role, idx)?;
+                let mut out = Vec::with_capacity(n * exe.n_out);
+                let mut i = 0;
+                while i < n {
+                    let take = (n - i).min(b);
+                    let chunk = &x_norm[i * d_in..(i + take) * d_in];
+                    out.extend(exe.run(chunk, take, weights)?);
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Classify a normalised batch into routes.
+    pub fn plan(&self, x_norm: &[f32], n: usize) -> crate::Result<RoutePlan> {
+        match self.method {
+            Method::Mcca => self.plan_cascade(x_norm, n),
+            m => {
+                let (role, n_classes) = if m.is_mcma() {
+                    (Role::ClfN, self.bank.host_mlp(m, Role::ClfN, 0)?.n_out())
+                } else {
+                    (Role::Clf2, 2)
+                };
+                let logits = self.forward(role, 0, x_norm, n)?;
+                let mut classes = nn::argmax_rows(&logits, n, n_classes);
+                let n_approx = if m.is_mcma() { n_classes - 1 } else { 1 };
+                if let RouterPolicy::Confidence(tau) = self.policy {
+                    // Demote low-confidence accepts to the CPU class.
+                    for (i, c) in classes.iter_mut().enumerate() {
+                        if *c < n_approx {
+                            let row = &logits[i * n_classes..(i + 1) * n_classes];
+                            if softmax_prob(row, *c) < tau {
+                                *c = n_approx; // nC
+                            }
+                        }
+                    }
+                }
+                Ok(router::plan_routes(&classes, n_approx))
+            }
+        }
+    }
+
+    /// Oracle routing (extension): assign each sample to its true
+    /// lowest-error approximator, CPU when even the best violates the
+    /// bound.  Upper-bounds any classifier.
+    pub fn plan_oracle(&self, ds: &Dataset) -> crate::Result<RoutePlan> {
+        let matrix = self.error_matrix(ds)?;
+        let n_approx = self.n_approx();
+        let classes: Vec<usize> = (0..ds.n)
+            .map(|i| {
+                let (mut best_k, mut best_e) = (0usize, f64::INFINITY);
+                for (k, row) in matrix.iter().enumerate() {
+                    if row[i] < best_e {
+                        best_e = row[i];
+                        best_k = k;
+                    }
+                }
+                if best_e <= self.bench.error_bound { best_k } else { n_approx }
+            })
+            .collect();
+        Ok(router::plan_routes(&classes, n_approx))
+    }
+
+    /// MCCA: cascade of binary stages (paper §III.B / Fig. 3b).
+    fn plan_cascade(&self, x_norm: &[f32], n: usize) -> crate::Result<RoutePlan> {
+        let d = self.bench.n_in;
+        let stages = self.bank.host.get(self.method.key())?.classifiers.len();
+        let mut plan = router::all_cpu_plan(n, stages);
+        plan.cpu.clear();
+        let mut remaining: Vec<usize> = (0..n).collect();
+        for s in 0..stages {
+            if remaining.is_empty() {
+                break;
+            }
+            // Gather the still-unrouted rows into a dense buffer.
+            let mut xs = Vec::with_capacity(remaining.len() * d);
+            for &i in &remaining {
+                xs.extend_from_slice(&x_norm[i * d..(i + 1) * d]);
+            }
+            let logits = self.forward(Role::Clf2, s, &xs, remaining.len())?;
+            let classes = nn::argmax_rows(&logits, remaining.len(), 2);
+            let accept: Vec<bool> = classes.iter().map(|&c| c == 0).collect();
+            remaining = router::cascade_stage(&mut plan, &remaining, &accept, s);
+        }
+        plan.cpu = remaining;
+        Ok(plan)
+    }
+
+    /// Execute a routed plan: approximators per group, precise CPU for the
+    /// rest.  Returns served outputs `(n, d_out)` in normalised space.
+    pub fn execute_plan(
+        &self,
+        plan: &RoutePlan,
+        x_norm: &[f32],
+        x_raw: &[f32],
+        n: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let d_in = self.bench.n_in;
+        let d_out = self.bench.n_out;
+        let mut y = vec![0.0f32; n * d_out];
+
+        for (k, group) in plan.groups.iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let mut xs = Vec::with_capacity(group.len() * d_in);
+            for &i in group {
+                xs.extend_from_slice(&x_norm[i * d_in..(i + 1) * d_in]);
+            }
+            let out = self.forward(Role::Approx, k, &xs, group.len())?;
+            for (j, &i) in group.iter().enumerate() {
+                y[i * d_out..(i + 1) * d_out]
+                    .copy_from_slice(&out[j * d_out..(j + 1) * d_out]);
+            }
+        }
+
+        // Precise CPU path for rejected samples.
+        let mut raw_out = vec![0.0f64; d_out];
+        for &i in &plan.cpu {
+            self.benchfn.eval(&x_raw[i * d_in..(i + 1) * d_in], &mut raw_out);
+            self.bench
+                .normalize_y_into(&raw_out, &mut y[i * d_out..(i + 1) * d_out]);
+        }
+        Ok(y)
+    }
+
+    /// Per-approximator error of EVERY sample (rows: approximator, cols:
+    /// sample) — feeds Figs. 10/11 and the `err_if_invoked` split.
+    pub fn error_matrix(&self, ds: &Dataset) -> crate::Result<Vec<Vec<f64>>> {
+        let x_norm = self.normalize(&ds.x_raw, ds.n);
+        let mut rows = Vec::with_capacity(self.n_approx());
+        for k in 0..self.n_approx() {
+            let pred = self.forward(Role::Approx, k, &x_norm, ds.n)?;
+            rows.push(nn::per_sample_rmse(&pred, &ds.y_norm, ds.n, self.bench.n_out));
+        }
+        Ok(rows)
+    }
+
+    /// Whole-dataset offline evaluation (the engine behind every figure).
+    pub fn run_dataset(&self, ds: &Dataset) -> crate::Result<EvalOutput> {
+        let x_norm = self.normalize(&ds.x_raw, ds.n);
+        let plan = if self.policy == RouterPolicy::Oracle {
+            self.plan_oracle(ds)?
+        } else {
+            self.plan(&x_norm, ds.n)?
+        };
+        let y_served = self.execute_plan(&plan, &x_norm, &ds.x_raw, ds.n)?;
+
+        // Errors of served values; CPU-served are exact by construction
+        // (same precise function), so their served error is 0.
+        let served_err_all =
+            nn::per_sample_rmse(&y_served, &ds.y_norm, ds.n, self.bench.n_out);
+        let err: Vec<f64> = plan
+            .routes
+            .iter()
+            .zip(&served_err_all)
+            .map(|(r, &e)| if r.is_approx() { e } else { 0.0 })
+            .collect();
+
+        // "Would-be" error for every sample: min over this method's
+        // approximators (defines the A/nA ground-truth split).
+        let matrix = self.error_matrix(ds)?;
+        let err_if_invoked: Vec<f64> = (0..ds.n)
+            .map(|i| {
+                matrix
+                    .iter()
+                    .map(|row| row[i])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+
+        // Weight-switch accounting over the arrival-order invocation trace.
+        let weight_words: Vec<usize> = (0..self.n_approx())
+            .map(|k| {
+                self.bank
+                    .host_mlp(self.method, Role::Approx, k)
+                    .map(|m| m.n_params())
+                    .unwrap_or(0)
+            })
+            .collect();
+        let mut wc = WeightCache::new(&self.npu_cfg, weight_words);
+        for r in &plan.routes {
+            if let Route::Approx(k) = r {
+                wc.access(*k);
+            }
+        }
+
+        let mut metrics = RunMetrics::from_routes(
+            &self.bench.name,
+            self.method.key(),
+            &plan.routes,
+            &err,
+            &err_if_invoked,
+            self.bench.error_bound,
+            self.n_approx(),
+        );
+        metrics.weight_switches = wc.switches;
+        metrics.weight_refill_cycles = wc.refill_cycles;
+
+        Ok(EvalOutput { plan, err, err_if_invoked, y_served, metrics, weight_cache: wc })
+    }
+
+    /// Online path: route + execute one dynamic batch (no ground-truth
+    /// error computation — the server doesn't know the answer).
+    pub fn process_batch(&self, batch: &Batch) -> crate::Result<(RoutePlan, Vec<f32>)> {
+        let x_norm = self.normalize(&batch.x_raw, batch.n);
+        let plan = self.plan(&x_norm, batch.n)?;
+        let y = self.execute_plan(&plan, &x_norm, &batch.x_raw, batch.n)?;
+        Ok((plan, y))
+    }
+}
+
+/// Softmax probability of class `c` for one logit row.
+fn softmax_prob(logits: &[f32], c: usize) -> f32 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = logits.iter().map(|&v| (v - max).exp()).sum();
+    (logits[c] - max).exp() / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::softmax_prob;
+
+    #[test]
+    fn softmax_prob_basic() {
+        let p0 = softmax_prob(&[2.0, 0.0], 0);
+        let p1 = softmax_prob(&[2.0, 0.0], 1);
+        assert!((p0 + p1 - 1.0).abs() < 1e-6);
+        assert!(p0 > 0.85 && p0 < 0.9); // sigmoid(2) ~ 0.8808
+    }
+
+    #[test]
+    fn softmax_prob_stable_for_large_logits() {
+        let p = softmax_prob(&[1000.0, 999.0, -1000.0], 0);
+        assert!(p.is_finite() && p > 0.7);
+    }
+}

@@ -1,0 +1,196 @@
+//! Run metrics — the quantities every figure is computed from.
+//!
+//! Definitions (shared with `python/compile/train.py`):
+//! * **invocation** — fraction of samples the classifier routes to any
+//!   approximator (the paper's headline metric);
+//! * **error / RMSE** — RMSE (normalised output space) over the *invoked*
+//!   samples only; the paper reports it normalised to the error bound;
+//! * **true invocation** — invoked AND actually under the bound (the "AC"
+//!   true positives of Fig. 11).
+
+use crate::util::stats;
+
+use super::router::Route;
+
+/// Confusion-style quadrant counts of Fig. 11 (A = actually safe,
+/// C = classifier accepts).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Quadrants {
+    pub ac: usize,   // true positive: invoked & under bound
+    pub n_ac: usize, // false positive: invoked & over bound (nAC)
+    pub a_nc: usize, // false negative: rejected but was safe (AnC)
+    pub nanc: usize, // true negative
+}
+
+/// Aggregate metrics for one (benchmark, method) run.
+#[derive(Clone, Debug)]
+pub struct RunMetrics {
+    pub bench: String,
+    pub method: String,
+    pub n: usize,
+    pub invoked: usize,
+    pub per_class: Vec<usize>,
+    pub cpu_count: usize,
+    /// RMSE over invoked samples (normalised space).
+    pub rmse_invoked: f64,
+    /// rmse_invoked / error_bound (the paper's Fig. 7b y-axis).
+    pub rmse_over_bound: f64,
+    pub quadrants: Quadrants,
+    /// Weight-switch statistics from the dispatcher's WeightCache.
+    pub weight_switches: u64,
+    pub weight_refill_cycles: u64,
+}
+
+impl RunMetrics {
+    /// Build from per-sample routes and errors.
+    ///
+    /// `err[i]` is sample i's RMSE vs the precise output in normalised
+    /// space, computed against the *approximator that served it* (0 for
+    /// CPU-served samples, which are exact); `err_if_invoked[i]` is the
+    /// error the sample WOULD have under its best approximator — used for
+    /// the A/nA split of rejected samples (Fig. 11's AnC category).
+    pub fn from_routes(
+        bench: &str,
+        method: &str,
+        routes: &[Route],
+        err: &[f64],
+        err_if_invoked: &[f64],
+        bound: f64,
+        n_approx: usize,
+    ) -> Self {
+        assert_eq!(routes.len(), err.len());
+        assert_eq!(routes.len(), err_if_invoked.len());
+        let mut per_class = vec![0usize; n_approx];
+        let mut cpu_count = 0usize;
+        let mut invoked_errs = Vec::new();
+        let mut q = Quadrants::default();
+        for (i, r) in routes.iter().enumerate() {
+            match r {
+                Route::Approx(k) => {
+                    per_class[*k] += 1;
+                    invoked_errs.push(err[i]);
+                    if err[i] <= bound {
+                        q.ac += 1;
+                    } else {
+                        q.n_ac += 1;
+                    }
+                }
+                Route::Cpu => {
+                    cpu_count += 1;
+                    if err_if_invoked[i] <= bound {
+                        q.a_nc += 1;
+                    } else {
+                        q.nanc += 1;
+                    }
+                }
+            }
+        }
+        let rmse = stats::rms(&invoked_errs);
+        RunMetrics {
+            bench: bench.to_string(),
+            method: method.to_string(),
+            n: routes.len(),
+            invoked: routes.len() - cpu_count,
+            per_class,
+            cpu_count,
+            rmse_invoked: rmse,
+            rmse_over_bound: if bound > 0.0 { rmse / bound } else { 0.0 },
+            quadrants: q,
+            weight_switches: 0,
+            weight_refill_cycles: 0,
+        }
+    }
+
+    pub fn invocation(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.invoked as f64 / self.n as f64
+        }
+    }
+
+    pub fn true_invocation(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.quadrants.ac as f64 / self.n as f64
+        }
+    }
+
+    /// Classifier recall on safe samples (paper: "high recall" of MCMA).
+    pub fn recall(&self) -> f64 {
+        let safe = self.quadrants.ac + self.quadrants.a_nc;
+        if safe == 0 {
+            0.0
+        } else {
+            self.quadrants.ac as f64 / safe as f64
+        }
+    }
+}
+
+/// Latency aggregates for the online server (microseconds).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub samples: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn push(&mut self, us: f64) {
+        self.samples.push(us);
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.samples, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.samples, 99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quadrants_and_rates() {
+        let routes = [Route::Approx(0), Route::Approx(1), Route::Cpu, Route::Cpu];
+        let err = [0.01, 0.20, 0.0, 0.0];
+        let err_if = [0.01, 0.20, 0.02, 0.50];
+        let m = RunMetrics::from_routes("b", "m", &routes, &err, &err_if, 0.05, 2);
+        assert_eq!(m.quadrants, Quadrants { ac: 1, n_ac: 1, a_nc: 1, nanc: 1 });
+        assert_eq!(m.invocation(), 0.5);
+        assert_eq!(m.true_invocation(), 0.25);
+        assert_eq!(m.recall(), 0.5);
+        assert_eq!(m.per_class, vec![1, 1]);
+        let want = ((0.01f64.powi(2) + 0.2f64.powi(2)) / 2.0).sqrt();
+        assert!((m.rmse_invoked - want).abs() < 1e-12);
+        assert!((m.rmse_over_bound - want / 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        let m = RunMetrics::from_routes("b", "m", &[], &[], &[], 0.05, 1);
+        assert_eq!(m.invocation(), 0.0);
+        assert_eq!(m.rmse_invoked, 0.0);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut l = LatencyStats::default();
+        for i in 1..=100 {
+            l.push(i as f64);
+        }
+        assert!((l.p50() - 50.5).abs() < 1.0);
+        assert!(l.p99() > 98.0);
+        assert!((l.mean() - 50.5).abs() < 1e-9);
+    }
+}

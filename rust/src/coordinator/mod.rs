@@ -1,0 +1,29 @@
+//! Layer-3 coordinator — the paper's system contribution at run time.
+//!
+//! The MCMA execution model (paper §III.C-D, Fig. 4-5):
+//!
+//! ```text
+//! requests ─► Batcher ─► classifier (PJRT, batched) ─► argmax class
+//!                ├─ class k < n ─► per-approximator queue ─► WeightCache.switch(k)
+//!                │                     └► approximator k (PJRT) ─► respond
+//!                └─ class nC   ─► precise CPU path (benchmarks::*) ─► respond
+//! ```
+//!
+//! `Dispatcher` is the synchronous engine (offline eval + the server's
+//! worker); `server` wraps it in a threaded pipeline with dynamic batching;
+//! `WeightCache` models the NPU weight-buffer residency cases of §III.D;
+//! `metrics` accumulates the quantities every figure is built from.
+
+pub mod batcher;
+pub mod dispatcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod weight_cache;
+
+pub use batcher::{Batch, Batcher};
+pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy};
+pub use metrics::{LatencyStats, RunMetrics};
+pub use router::{plan_routes, Route, RoutePlan};
+pub use server::{Server, ServerConfig, ServerReport};
+pub use weight_cache::{BufferCase, WeightCache};

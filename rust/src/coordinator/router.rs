@@ -1,0 +1,216 @@
+//! Routing: classifier outputs -> per-sample destinations.
+//!
+//! For MCMA the multiclass classifier's argmax picks the approximator (the
+//! paper's "the approximator with the highest confidence consumes the input
+//! sample"); class `n` is the reject class `nC` -> precise CPU.  For binary
+//! methods class 0 = safe -> the single approximator.  MCCA cascades binary
+//! stages; a sample rejected by stage k moves to stage k+1 (§III.B).
+
+/// Destination of one sample.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Route {
+    /// Served by approximator `k` on the NPU.
+    Approx(usize),
+    /// Rejected by the classifier(s); precise CPU computation.
+    Cpu,
+}
+
+impl Route {
+    pub fn is_approx(self) -> bool {
+        matches!(self, Route::Approx(_))
+    }
+}
+
+/// Routes for a batch plus the index groups the dispatcher executes.
+#[derive(Clone, Debug)]
+pub struct RoutePlan {
+    /// Per-sample destination, arrival order.
+    pub routes: Vec<Route>,
+    /// `groups[k]` = sample indices routed to approximator k.
+    pub groups: Vec<Vec<usize>>,
+    /// Sample indices routed to the CPU.
+    pub cpu: Vec<usize>,
+}
+
+impl RoutePlan {
+    pub fn invocation(&self) -> f64 {
+        if self.routes.is_empty() {
+            return 0.0;
+        }
+        let inv = self.routes.iter().filter(|r| r.is_approx()).count();
+        inv as f64 / self.routes.len() as f64
+    }
+}
+
+/// Build a plan from per-sample class ids.
+///
+/// `n_approx` approximators exist; class `>= n_approx` (or, for binary
+/// classifiers with `n_approx == 1`, class 1) means CPU.
+pub fn plan_routes(classes: &[usize], n_approx: usize) -> RoutePlan {
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_approx];
+    let mut cpu = Vec::new();
+    let mut routes = Vec::with_capacity(classes.len());
+    for (i, &c) in classes.iter().enumerate() {
+        if c < n_approx {
+            groups[c].push(i);
+            routes.push(Route::Approx(c));
+        } else {
+            cpu.push(i);
+            routes.push(Route::Cpu);
+        }
+    }
+    RoutePlan { routes, groups, cpu }
+}
+
+/// Merge a cascade stage's accept decisions into an existing plan:
+/// `remaining` holds the sample indices this stage saw (in order), `accept`
+/// their binary outcomes; accepted samples are routed to approximator
+/// `stage`, the rest flow to the next stage.  Returns the still-unrouted
+/// indices.
+pub fn cascade_stage(
+    plan: &mut RoutePlan,
+    remaining: &[usize],
+    accept: &[bool],
+    stage: usize,
+) -> Vec<usize> {
+    assert_eq!(remaining.len(), accept.len());
+    let mut next = Vec::new();
+    for (&idx, &ok) in remaining.iter().zip(accept) {
+        if ok {
+            plan.routes[idx] = Route::Approx(stage);
+            plan.groups[stage].push(idx);
+        } else {
+            next.push(idx);
+        }
+    }
+    next
+}
+
+/// An all-CPU plan of length `n` with `stages` approximator slots
+/// (cascade starting point).
+pub fn all_cpu_plan(n: usize, stages: usize) -> RoutePlan {
+    RoutePlan {
+        routes: vec![Route::Cpu; n],
+        groups: vec![Vec::new(); stages],
+        cpu: (0..n).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn plan_partitions_samples() {
+        let plan = plan_routes(&[0, 2, 3, 1, 0, 3], 3);
+        assert_eq!(plan.groups[0], vec![0, 4]);
+        assert_eq!(plan.groups[1], vec![3]);
+        assert_eq!(plan.groups[2], vec![1]);
+        assert_eq!(plan.cpu, vec![2, 5]);
+        assert_eq!(plan.routes[1], Route::Approx(2));
+        assert!((plan.invocation() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn binary_convention_class0_safe() {
+        let plan = plan_routes(&[0, 1, 0], 1);
+        assert_eq!(plan.routes, vec![Route::Approx(0), Route::Cpu, Route::Approx(0)]);
+    }
+
+    /// Property: every sample appears in exactly one group (routing is a
+    /// partition) and group membership agrees with `routes`.
+    #[test]
+    fn prop_routing_is_partition() {
+        prop::check(
+            "routing-partition",
+            200,
+            0xC0FFEE,
+            |r: &mut Rng| {
+                let n = r.below(400) as usize;
+                let n_approx = 1 + r.below(4) as usize;
+                let classes: Vec<usize> =
+                    (0..n).map(|_| r.below(n_approx as u64 + 2) as usize).collect();
+                (classes, n_approx)
+            },
+            |(classes, n_approx)| {
+                let plan = plan_routes(classes, *n_approx);
+                let mut seen = vec![0usize; classes.len()];
+                for g in &plan.groups {
+                    for &i in g {
+                        seen[i] += 1;
+                    }
+                }
+                for &i in &plan.cpu {
+                    seen[i] += 1;
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return Err("not a partition".into());
+                }
+                for (k, g) in plan.groups.iter().enumerate() {
+                    for &i in g {
+                        if plan.routes[i] != Route::Approx(k) {
+                            return Err(format!("group {k} disagrees with route[{i}]"));
+                        }
+                    }
+                }
+                for &i in &plan.cpu {
+                    if plan.routes[i] != Route::Cpu {
+                        return Err(format!("cpu group disagrees with route[{i}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Property: cascading preserves the partition invariant and never
+    /// routes a sample twice.
+    #[test]
+    fn prop_cascade_partition() {
+        prop::check(
+            "cascade-partition",
+            200,
+            0xBEEF,
+            |r: &mut Rng| {
+                let n = r.below(200) as usize;
+                let stages = 1 + r.below(3) as usize;
+                let accepts: Vec<Vec<bool>> =
+                    (0..stages).map(|_| (0..n).map(|_| r.bool(0.4)).collect()).collect();
+                (n, accepts)
+            },
+            |(n, accepts)| {
+                let stages = accepts.len();
+                let mut plan = all_cpu_plan(*n, stages);
+                plan.cpu.clear();
+                let mut remaining: Vec<usize> = (0..*n).collect();
+                for (s, acc) in accepts.iter().enumerate() {
+                    let stage_acc: Vec<bool> =
+                        remaining.iter().map(|&i| acc[i]).collect();
+                    remaining = cascade_stage(&mut plan, &remaining, &stage_acc, s);
+                }
+                plan.cpu = remaining;
+                let mut seen = vec![0usize; *n];
+                for g in &plan.groups {
+                    for &i in g {
+                        seen[i] += 1;
+                    }
+                }
+                for &i in &plan.cpu {
+                    seen[i] += 1;
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return Err("cascade not a partition".into());
+                }
+                // Earlier stages get priority: a sample accepted by stage 0
+                // must be in group 0 regardless of later stages.
+                for i in 0..*n {
+                    if accepts[0][i] && plan.routes[i] != Route::Approx(0) {
+                        return Err(format!("stage priority violated at {i}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

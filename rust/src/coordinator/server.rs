@@ -1,0 +1,291 @@
+//! Threaded serving pipeline (tokio substitute: dedicated threads + mpsc).
+//!
+//! ```text
+//! caller ──send──► ingress channel ──► batcher thread ──► batch channel
+//!                                                              │
+//! caller ◄──recv── egress channel ◄── dispatch worker(s) ◄─────┘
+//! ```
+//!
+//! The batcher thread owns the `Batcher` (size-or-timeout policy); dispatch
+//! workers own a `Dispatcher` each and execute classify/route/execute.
+//! Responses carry per-request latency; `ServerReport` aggregates
+//! throughput, latency percentiles and routing statistics.  This is the
+//! end-to-end driver `examples/serve_pipeline.rs` exercises.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::config::{BatchPolicy, ExecMode, Method};
+use crate::formats::{BenchManifest, Manifest};
+use crate::runtime::{ModelBank, Runtime};
+
+use super::batcher::Batcher;
+use super::dispatcher::Dispatcher;
+use super::metrics::LatencyStats;
+use super::router::Route;
+
+/// A request into the pipeline.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub x_raw: Vec<f32>,
+    pub submitted: Instant,
+}
+
+/// A response out of the pipeline.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Normalised-space output actually served.
+    pub y: Vec<f32>,
+    pub route: Route,
+    pub latency_us: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    pub method: Method,
+    pub exec: ExecMode,
+    /// Dispatch workers.  Each owns an independent PJRT runtime + model
+    /// bank (PJRT handles are thread-local by construction here), pulling
+    /// batches from a shared queue — scale-out for multi-core boxes.
+    pub workers: usize,
+}
+
+impl ServerConfig {
+    pub fn new(policy: BatchPolicy, method: Method, exec: ExecMode) -> Self {
+        ServerConfig { policy, method, exec, workers: 1 }
+    }
+}
+
+/// Aggregate report after `shutdown()`.
+#[derive(Clone, Debug)]
+pub struct ServerReport {
+    pub served: u64,
+    pub invoked: u64,
+    pub cpu: u64,
+    pub wall: Duration,
+    pub latency: LatencyStats,
+    pub flushes_full: u64,
+    pub flushes_timeout: u64,
+    pub batches: u64,
+}
+
+impl ServerReport {
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            self.served as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    pub fn invocation(&self) -> f64 {
+        if self.served == 0 {
+            0.0
+        } else {
+            self.invoked as f64 / self.served as f64
+        }
+    }
+}
+
+enum BatchMsg {
+    Work(super::batcher::Batch),
+    Stop,
+}
+
+/// Handle to the running pipeline.
+pub struct Server {
+    ingress: mpsc::Sender<Option<Request>>,
+    egress: mpsc::Receiver<Response>,
+    batcher_thread: Option<thread::JoinHandle<(u64, u64)>>,
+    worker_threads: Vec<thread::JoinHandle<crate::Result<u64>>>,
+    started: Instant,
+}
+
+impl Server {
+    /// Spawn the pipeline.
+    ///
+    /// PJRT handles are not `Send` (the underlying client is `Rc`-based),
+    /// so the dispatch worker constructs its OWN `Runtime` + `ModelBank`
+    /// inside the thread from the manifest — nothing device-side ever
+    /// crosses a thread boundary.
+    pub fn spawn(
+        man: Arc<Manifest>,
+        bench: Arc<BenchManifest>,
+        cfg: ServerConfig,
+    ) -> crate::Result<Self> {
+        let (in_tx, in_rx) = mpsc::channel::<Option<Request>>();
+        let (batch_tx, batch_rx) = mpsc::channel::<BatchMsg>();
+        let (out_tx, out_rx) = mpsc::channel::<Response>();
+        let batch_rx = Arc::new(std::sync::Mutex::new(batch_rx));
+        // Workers re-broadcast Stop so every sibling wakes and exits.
+        let stop_tx = batch_tx.clone();
+
+        let d_in = bench.n_in;
+        let policy = cfg.policy;
+
+        let batcher_thread = thread::Builder::new()
+            .name("mcma-batcher".into())
+            .spawn(move || {
+                let mut batcher = Batcher::new(policy, d_in);
+                let tick = Duration::from_micros((policy.max_wait_us / 2).max(50));
+                loop {
+                    match in_rx.recv_timeout(tick) {
+                        Ok(Some(req)) => {
+                            if let Some(b) = batcher.push(req.id, req.x_raw) {
+                                let _ = batch_tx.send(BatchMsg::Work(b));
+                            }
+                            // Age check must ALSO run on the arrival path:
+                            // a steady stream with interarrival < tick
+                            // would otherwise starve the timeout branch and
+                            // batches would only ever flush when full.
+                            if let Some(b) = batcher.poll(Instant::now()) {
+                                let _ = batch_tx.send(BatchMsg::Work(b));
+                            }
+                        }
+                        Ok(None) => {
+                            // Shutdown: drain leftovers, signal stop.
+                            while let Some(b) = batcher.drain() {
+                                let _ = batch_tx.send(BatchMsg::Work(b));
+                            }
+                            let _ = batch_tx.send(BatchMsg::Stop);
+                            return (batcher.flushes_full, batcher.flushes_timeout);
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if let Some(b) = batcher.poll(Instant::now()) {
+                                let _ = batch_tx.send(BatchMsg::Work(b));
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            let _ = batch_tx.send(BatchMsg::Stop);
+                            return (batcher.flushes_full, batcher.flushes_timeout);
+                        }
+                    }
+                }
+            })?;
+
+        let mut worker_threads = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let man = Arc::clone(&man);
+            let bench = Arc::clone(&bench);
+            let batch_rx = Arc::clone(&batch_rx);
+            let out_tx = out_tx.clone();
+            let stop_tx = stop_tx.clone();
+            let cfg = cfg.clone();
+            worker_threads.push(
+                thread::Builder::new()
+                    .name(format!("mcma-dispatch-{w}"))
+                    .spawn(move || -> crate::Result<u64> {
+                        // Build all device state thread-locally (see spawn
+                        // docs): PJRT handles never cross threads.
+                        let rt = match cfg.exec {
+                            ExecMode::Pjrt => Some(Runtime::cpu()?),
+                            ExecMode::Native => None,
+                        };
+                        let bank = ModelBank::load(
+                            rt.as_ref(),
+                            &man,
+                            &bench,
+                            &[cfg.method],
+                            &man.batch_sizes,
+                        )?;
+                        let dispatcher =
+                            Dispatcher::new(&bench, &bank, cfg.method, cfg.exec)?;
+                        let mut batches = 0u64;
+                        let d_out = bench.n_out;
+                        loop {
+                            let msg = { batch_rx.lock().unwrap().recv() };
+                            match msg {
+                                Ok(BatchMsg::Work(batch)) => {
+                                    batches += 1;
+                                    let (plan, y) = dispatcher.process_batch(&batch)?;
+                                    let now = Instant::now();
+                                    for (j, &id) in batch.ids.iter().enumerate() {
+                                        let _ = out_tx.send(Response {
+                                            id,
+                                            y: y[j * d_out..(j + 1) * d_out].to_vec(),
+                                            route: plan.routes[j],
+                                            latency_us: now
+                                                .duration_since(batch.enqueued[j])
+                                                .as_secs_f64()
+                                                * 1e6,
+                                        });
+                                    }
+                                }
+                                Ok(BatchMsg::Stop) | Err(_) => {
+                                    let _ = stop_tx.send(BatchMsg::Stop);
+                                    return Ok(batches);
+                                }
+                            }
+                        }
+                    })?,
+            );
+        }
+
+        Ok(Server {
+            ingress: in_tx,
+            egress: out_rx,
+            batcher_thread: Some(batcher_thread),
+            worker_threads,
+            started: Instant::now(),
+        })
+    }
+
+    /// Submit one request (non-blocking).
+    pub fn submit(&self, id: u64, x_raw: Vec<f32>) -> crate::Result<()> {
+        self.ingress
+            .send(Some(Request { id, x_raw, submitted: Instant::now() }))
+            .map_err(|_| anyhow::anyhow!("server ingress closed"))
+    }
+
+    /// Receive one response (blocking with timeout).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Response> {
+        self.egress.recv_timeout(timeout).ok()
+    }
+
+    /// Stop accepting, drain, join, and report.
+    pub fn shutdown(mut self, mut collected: Vec<Response>) -> crate::Result<ServerReport> {
+        let _ = self.ingress.send(None);
+        // Drain whatever is still in flight.
+        while let Ok(r) = self.egress.recv_timeout(Duration::from_millis(2000)) {
+            collected.push(r);
+        }
+        let (full, timeout) = self
+            .batcher_thread
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("batcher thread panicked"))?;
+        let mut batches = 0u64;
+        for t in self.worker_threads.drain(..) {
+            batches += t
+                .join()
+                .map_err(|_| anyhow::anyhow!("dispatch thread panicked"))??;
+        }
+        let wall = self.started.elapsed();
+        let mut latency = LatencyStats::default();
+        let mut invoked = 0u64;
+        let mut cpu = 0u64;
+        for r in &collected {
+            latency.push(r.latency_us);
+            match r.route {
+                Route::Approx(_) => invoked += 1,
+                Route::Cpu => cpu += 1,
+            }
+        }
+        Ok(ServerReport {
+            served: collected.len() as u64,
+            invoked,
+            cpu,
+            wall,
+            latency,
+            flushes_full: full,
+            flushes_timeout: timeout,
+            batches,
+        })
+    }
+}

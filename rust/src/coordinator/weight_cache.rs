@@ -1,0 +1,192 @@
+//! Weight-switch model — paper §III.D "Weight switch among different
+//! approximators", Cases 1-3.
+//!
+//! The NPU keeps approximator weights in per-PE buffers near the MACs.
+//! With multiple approximators sharing one physical array, consecutive
+//! samples routed to *different* approximators may force a refill from the
+//! on-chip cache:
+//!
+//! * **Case 1** — the buffers hold ALL approximators' weights: switching is
+//!   a register-select, zero extra cycles (the paper's "within a cycle").
+//! * **Case 2** — one approximator doesn't even fit: weights stream layer
+//!   by layer for every sample anyway; switching adds nothing.
+//! * **Case 3** — one fits, all don't: a switch reloads the incoming
+//!   approximator's weights from cache (`words / refill_bw` cycles).
+//!
+//! This module tracks residency and charges switch cycles; it is consumed
+//! by the NPU simulator and surfaced in the ablation benches.
+
+use crate::config::NpuConfig;
+
+/// Which §III.D case a (buffer size, net sizes) combination lands in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BufferCase {
+    AllResident,
+    StreamAlways,
+    OneResident,
+}
+
+/// Runtime weight-residency tracker for one NPU array.
+#[derive(Clone, Debug)]
+pub struct WeightCache {
+    case: BufferCase,
+    /// Approximator currently resident (Case 3 only).
+    resident: Option<usize>,
+    /// Per-approximator weight words (refill cost).
+    words: Vec<usize>,
+    refill_bw: u64,
+    /// Counters.
+    pub switches: u64,
+    pub refill_cycles: u64,
+    pub accesses: u64,
+}
+
+impl WeightCache {
+    /// Classify the case from the per-approximator weight word counts and
+    /// the per-PE buffer capacity (aggregated across the tile's PEs).
+    pub fn new(npu: &NpuConfig, weight_words: Vec<usize>) -> Self {
+        let capacity = npu.weight_buffer_words * npu.pes_per_tile;
+        let total: usize = weight_words.iter().sum();
+        let largest = weight_words.iter().copied().max().unwrap_or(0);
+        let case = if total <= capacity {
+            BufferCase::AllResident
+        } else if largest > capacity {
+            BufferCase::StreamAlways
+        } else {
+            BufferCase::OneResident
+        };
+        WeightCache {
+            case,
+            resident: None,
+            words: weight_words,
+            refill_bw: npu.cache_refill_words_per_cycle.max(1),
+            switches: 0,
+            refill_cycles: 0,
+            accesses: 0,
+        }
+    }
+
+    pub fn case(&self) -> BufferCase {
+        self.case
+    }
+
+    /// Force a specific case (ablation benches).
+    pub fn force_case(&mut self, case: BufferCase) {
+        self.case = case;
+        self.resident = None;
+    }
+
+    /// Record that approximator `k` serves the next sample; returns the
+    /// extra cycles this access pays for weight movement.
+    pub fn access(&mut self, k: usize) -> u64 {
+        self.accesses += 1;
+        match self.case {
+            BufferCase::AllResident => 0,
+            BufferCase::StreamAlways => {
+                // Streaming cost is charged by the PE pipeline itself (the
+                // weights pass through the buffer regardless of switches).
+                0
+            }
+            BufferCase::OneResident => {
+                if self.resident == Some(k) {
+                    0
+                } else {
+                    self.resident = Some(k);
+                    self.switches += 1;
+                    let cyc = (self.words[k] as u64).div_ceil(self.refill_bw);
+                    self.refill_cycles += cyc;
+                    cyc
+                }
+            }
+        }
+    }
+
+    /// Fraction of accesses that caused a refill.
+    pub fn switch_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.switches as f64 / self.accesses as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn npu(buffer_words: usize) -> NpuConfig {
+        NpuConfig { weight_buffer_words: buffer_words, pes_per_tile: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn case_classification() {
+        // 3 approximators of 100 words each.
+        assert_eq!(WeightCache::new(&npu(400), vec![100; 3]).case(), BufferCase::AllResident);
+        assert_eq!(WeightCache::new(&npu(150), vec![100; 3]).case(), BufferCase::OneResident);
+        assert_eq!(WeightCache::new(&npu(50), vec![100; 3]).case(), BufferCase::StreamAlways);
+    }
+
+    #[test]
+    fn case1_switches_free() {
+        let mut wc = WeightCache::new(&npu(1000), vec![100; 3]);
+        assert_eq!(wc.access(0) + wc.access(1) + wc.access(2), 0);
+        assert_eq!(wc.switches, 0);
+    }
+
+    #[test]
+    fn case3_charges_on_change_only() {
+        let mut wc = WeightCache::new(&npu(150), vec![128; 3]);
+        let c0 = wc.access(0); // cold: refill
+        let c1 = wc.access(0); // hit
+        let c2 = wc.access(1); // switch
+        assert!(c0 > 0);
+        assert_eq!(c1, 0);
+        assert_eq!(c2, 128u64.div_ceil(8));
+        assert_eq!(wc.switches, 2);
+        assert!((wc.switch_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    /// Property: refill cycles are exactly (#switches x per-switch cost)
+    /// when all approximators are the same size, and switches never exceed
+    /// accesses (state-machine sanity under random access streams).
+    #[test]
+    fn prop_case3_accounting() {
+        prop::check(
+            "weight-cache-accounting",
+            200,
+            0xCAFE,
+            |r: &mut Rng| {
+                let n_approx = 1 + r.below(4) as usize;
+                let stream: Vec<usize> =
+                    (0..r.below(500) as usize).map(|_| r.below(n_approx as u64) as usize).collect();
+                (n_approx, stream)
+            },
+            |(n_approx, stream)| {
+                let mut wc = WeightCache::new(&npu(200), vec![160; *n_approx]);
+                wc.force_case(BufferCase::OneResident);
+                let mut expected_switches = 0u64;
+                let mut last = None;
+                for &k in stream {
+                    wc.access(k);
+                    if last != Some(k) {
+                        expected_switches += 1;
+                        last = Some(k);
+                    }
+                }
+                if wc.switches != expected_switches {
+                    return Err(format!("switches {} != {expected_switches}", wc.switches));
+                }
+                let per = 160u64.div_ceil(8);
+                if wc.refill_cycles != expected_switches * per {
+                    return Err("refill cycles mismatch".into());
+                }
+                if wc.switches > wc.accesses {
+                    return Err("more switches than accesses".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

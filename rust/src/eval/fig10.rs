@@ -1,0 +1,154 @@
+//! Fig. 10: Bessel data distribution under MCMA — (a) which approximator
+//! owns which region of the (nu, x) input plane, (b) per-approximator
+//! error fields.  Rendered as ASCII occupancy grids (the paper's scatter
+//! plots) plus per-approximator stats.
+
+use std::sync::Arc;
+
+use crate::bench_harness::Table;
+use crate::config::Method;
+use crate::coordinator::{Dispatcher, Route};
+
+use super::Context;
+
+pub const BENCH: &str = "bessel";
+const GRID: usize = 20;
+
+pub struct Fig10 {
+    /// grids[k][gy][gx] = samples of approximator k in that input-space cell.
+    pub grids: Vec<Vec<Vec<usize>>>,
+    /// err_grids[k][gy][gx] = mean error of approximator k in that cell.
+    pub err_grids: Vec<Vec<Vec<f64>>>,
+    pub per_approx_counts: Vec<usize>,
+    pub cpu_count: usize,
+    pub method: Method,
+}
+
+pub fn run(ctx: &Context, method: Method) -> crate::Result<Fig10> {
+    let bench = ctx.man.bench(BENCH)?.clone();
+    let ds = ctx.dataset(BENCH)?;
+    let bank = Arc::new(ctx.bank(&bench, &[method])?);
+    let d = Dispatcher::new(&bench, &bank, method, ctx.cfg.exec)?;
+    let out = d.run_dataset(&ds)?;
+    let matrix = d.error_matrix(&ds)?;
+    let n_approx = d.n_approx();
+
+    let mut grids = vec![vec![vec![0usize; GRID]; GRID]; n_approx];
+    let mut err_sum = vec![vec![vec![0.0f64; GRID]; GRID]; n_approx];
+    let mut err_cnt = vec![vec![vec![0usize; GRID]; GRID]; n_approx];
+    let mut per_approx_counts = vec![0usize; n_approx];
+    let mut cpu_count = 0usize;
+
+    for i in 0..ds.n {
+        let x = ds.x_row(i);
+        let gx = grid_index(x[1], bench.x_lo[1], bench.x_hi[1]);
+        let gy = grid_index(x[0], bench.x_lo[0], bench.x_hi[0]);
+        match out.plan.routes[i] {
+            Route::Approx(k) => {
+                grids[k][gy][gx] += 1;
+                per_approx_counts[k] += 1;
+            }
+            Route::Cpu => cpu_count += 1,
+        }
+        for (k, row) in matrix.iter().enumerate() {
+            err_sum[k][gy][gx] += row[i];
+            err_cnt[k][gy][gx] += 1;
+        }
+    }
+
+    let err_grids = err_sum
+        .into_iter()
+        .zip(err_cnt)
+        .map(|(sums, cnts)| {
+            sums.into_iter()
+                .zip(cnts)
+                .map(|(srow, crow)| {
+                    srow.into_iter()
+                        .zip(crow)
+                        .map(|(s, c)| if c > 0 { s / c as f64 } else { 0.0 })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    Ok(Fig10 { grids, err_grids, per_approx_counts, cpu_count, method })
+}
+
+fn grid_index(v: f32, lo: f32, hi: f32) -> usize {
+    (((v - lo) / (hi - lo) * GRID as f32).floor() as i64).clamp(0, GRID as i64 - 1) as usize
+}
+
+impl Fig10 {
+    /// ASCII occupancy map: one char per cell, the densest approximator's
+    /// id (or '.' when empty / CPU-dominated).
+    pub fn territory_map(&self) -> String {
+        let mut s = String::new();
+        s.push_str("Fig 10(a): approximator territories over (nu [rows], x [cols])\n");
+        for gy in (0..GRID).rev() {
+            s.push_str("  ");
+            for gx in 0..GRID {
+                let counts: Vec<usize> = self.grids.iter().map(|g| g[gy][gx]).collect();
+                let best = counts
+                    .iter()
+                    .enumerate()
+                    .max_by_key(|(_, c)| **c)
+                    .filter(|(_, c)| **c > 0)
+                    .map(|(k, _)| k);
+                s.push(match best {
+                    Some(k) => char::from_digit(k as u32 + 1, 10).unwrap_or('?'),
+                    None => '.',
+                });
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Error-field map for one approximator: log-bucketed mean error.
+    pub fn error_map(&self, k: usize, bound: f64) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "Fig 10(b): mean error field of approximator A{} ('.': <bound, 'o': <2x, 'O': <4x, '#': worse)\n",
+            k + 1
+        ));
+        for gy in (0..GRID).rev() {
+            s.push_str("  ");
+            for gx in 0..GRID {
+                let e = self.err_grids[k][gy][gx];
+                s.push(if e <= bound {
+                    '.'
+                } else if e <= 2.0 * bound {
+                    'o'
+                } else if e <= 4.0 * bound {
+                    'O'
+                } else {
+                    '#'
+                });
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn stats_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig 10: per-approximator territory sizes (bessel test set)",
+            &["destination", "samples", "share"],
+        );
+        let total: usize = self.per_approx_counts.iter().sum::<usize>() + self.cpu_count;
+        for (k, &c) in self.per_approx_counts.iter().enumerate() {
+            t.row(vec![
+                format!("A{}", k + 1),
+                c.to_string(),
+                crate::bench_harness::pct(c as f64 / total.max(1) as f64),
+            ]);
+        }
+        t.row(vec![
+            "CPU (nC)".into(),
+            self.cpu_count.to_string(),
+            crate::bench_harness::pct(self.cpu_count as f64 / total.max(1) as f64),
+        ]);
+        t
+    }
+}

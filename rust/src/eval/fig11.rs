@@ -1,0 +1,131 @@
+//! Fig. 11: distribution of samples along the approximation error, with
+//! the AC / nAC / AnC / nAnC quadrant labels, for one-pass vs iterative vs
+//! MCMA (Bessel).  Rendered as a text histogram per method.
+
+use std::sync::Arc;
+
+use crate::bench_harness::Table;
+use crate::config::Method;
+use crate::coordinator::{Dispatcher, EvalOutput};
+use crate::util::stats;
+
+use super::Context;
+
+pub const BENCH: &str = "bessel";
+const BINS: usize = 24;
+
+pub struct MethodHist {
+    pub method: Method,
+    /// Histogram over err/bound in [0, 3): (invoked counts, rejected counts).
+    pub invoked: Vec<usize>,
+    pub rejected: Vec<usize>,
+    pub quadrants: crate::coordinator::metrics::Quadrants,
+    pub recall: f64,
+}
+
+pub struct Fig11 {
+    pub methods: Vec<MethodHist>,
+    pub bound: f64,
+}
+
+pub fn run(ctx: &Context) -> crate::Result<Fig11> {
+    let bench = ctx.man.bench(BENCH)?.clone();
+    let ds = ctx.dataset(BENCH)?;
+    let wanted = [Method::OnePass, Method::Iterative, Method::McmaCompetitive];
+    let bank = Arc::new(ctx.bank(&bench, &wanted)?);
+    let mut methods = Vec::new();
+    for m in wanted {
+        let d = Dispatcher::new(&bench, &bank, m, ctx.cfg.exec)?;
+        let out = d.run_dataset(&ds)?;
+        methods.push(hist_for(&out, bench.error_bound, m));
+    }
+    Ok(Fig11 { methods, bound: bench.error_bound })
+}
+
+fn hist_for(out: &EvalOutput, bound: f64, method: Method) -> MethodHist {
+    // Error axis: the error the sample's own (best) approximator yields,
+    // normalised to the bound — this is the x-axis of the paper's figure.
+    let norm: Vec<f64> = out.err_if_invoked.iter().map(|e| e / bound).collect();
+    let mut invoked_vals = Vec::new();
+    let mut rejected_vals = Vec::new();
+    for (i, r) in out.plan.routes.iter().enumerate() {
+        if r.is_approx() {
+            invoked_vals.push(norm[i].min(2.999));
+        } else {
+            rejected_vals.push(norm[i].min(2.999));
+        }
+    }
+    MethodHist {
+        method,
+        invoked: stats::histogram(&invoked_vals, 0.0, 3.0, BINS),
+        rejected: stats::histogram(&rejected_vals, 0.0, 3.0, BINS),
+        quadrants: out.metrics.quadrants,
+        recall: out.metrics.recall(),
+    }
+}
+
+impl Fig11 {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for mh in &self.methods {
+            s.push_str(&format!(
+                "\nFig 11 [{}]: samples along error/bound ('|' = bound)\n",
+                mh.method.label()
+            ));
+            let max = mh
+                .invoked
+                .iter()
+                .chain(&mh.rejected)
+                .copied()
+                .max()
+                .unwrap_or(1)
+                .max(1);
+            let bound_bin = BINS / 3; // err/bound == 1.0
+            s.push_str("  invoked (C):  ");
+            for (b, &c) in mh.invoked.iter().enumerate() {
+                if b == bound_bin {
+                    s.push('|');
+                }
+                s.push(density_char(c, max));
+            }
+            s.push('\n');
+            s.push_str("  rejected(nC): ");
+            for (b, &c) in mh.rejected.iter().enumerate() {
+                if b == bound_bin {
+                    s.push('|');
+                }
+                s.push(density_char(c, max));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn quadrant_table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig 11: quadrant counts (A = actually safe, C = classifier accepts)",
+            &["method", "AC (TP)", "nAC (FP)", "AnC (FN)", "nAnC (TN)", "recall"],
+        );
+        for mh in &self.methods {
+            t.row(vec![
+                mh.method.label().to_string(),
+                mh.quadrants.ac.to_string(),
+                mh.quadrants.n_ac.to_string(),
+                mh.quadrants.a_nc.to_string(),
+                mh.quadrants.nanc.to_string(),
+                format!("{:.3}", mh.recall),
+            ]);
+        }
+        t
+    }
+}
+
+fn density_char(c: usize, max: usize) -> char {
+    const RAMP: [char; 7] = ['.', ':', '-', '=', '+', '*', '#'];
+    if c == 0 {
+        ' '
+    } else {
+        let idx = (c * (RAMP.len() - 1)).div_ceil(max).min(RAMP.len() - 1);
+        RAMP[idx]
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 7(a) invocation and Fig. 7(b) normalised approximation error,
+//! per benchmark x method.
+
+use crate::bench_harness::{pct, Table};
+use crate::config::Method;
+
+use super::{BenchMethodEval, Context};
+
+pub struct Fig7 {
+    pub evals: Vec<BenchMethodEval>,
+    pub methods: Vec<Method>,
+}
+
+pub fn run(ctx: &Context) -> crate::Result<Fig7> {
+    let methods = Method::ALL.to_vec();
+    let mut evals = Vec::new();
+    for bench in ctx.man.bench_names_ordered() {
+        evals.extend(super::eval_bench(ctx, &bench, &methods)?);
+    }
+    Ok(Fig7 { evals, methods })
+}
+
+impl Fig7 {
+    fn cell(&self, bench: &str, m: Method, f: impl Fn(&BenchMethodEval) -> String) -> String {
+        self.evals
+            .iter()
+            .find(|e| e.bench == bench && e.method == m)
+            .map(f)
+            .unwrap_or_else(|| "-".into())
+    }
+
+    pub fn table_a(&self, ctx: &Context) -> Table {
+        let mut t = Table::new(
+            "Fig 7(a): invocation of the approximator(s)",
+            &["benchmark", "one-pass", "iterative", "MCCA", "MCMA-compl", "MCMA-compet"],
+        );
+        for bench in ctx.man.bench_names_ordered() {
+            let mut row = vec![bench.clone()];
+            for m in Method::ALL {
+                row.push(self.cell(&bench, m, |e| pct(e.out.metrics.invocation())));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    pub fn table_b(&self, ctx: &Context) -> Table {
+        let mut t = Table::new(
+            "Fig 7(b): approximation error normalised to the error bound",
+            &["benchmark", "one-pass", "iterative", "MCCA", "MCMA-compl", "MCMA-compet"],
+        );
+        for bench in ctx.man.bench_names_ordered() {
+            let mut row = vec![bench.clone()];
+            for m in Method::ALL {
+                row.push(self.cell(&bench, m, |e| {
+                    if e.out.metrics.invoked == 0 {
+                        "n/a".into()
+                    } else {
+                        format!("{:.2}", e.out.metrics.rmse_over_bound)
+                    }
+                }));
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    /// Paper headline: mean invocation gain of MCMA over one-pass.
+    pub fn mcma_gain_over_one_pass(&self, ctx: &Context) -> (f64, f64) {
+        let mut gain_sum = 0.0;
+        let mut err_ratio_sum = 0.0;
+        let mut n = 0.0;
+        for bench in ctx.man.bench_names_ordered() {
+            let get = |m: Method| {
+                self.evals
+                    .iter()
+                    .find(|e| e.bench == bench && e.method == m)
+            };
+            if let Some(op) = get(Method::OnePass) {
+                let best = [Method::McmaComplementary, Method::McmaCompetitive]
+                    .into_iter()
+                    .filter_map(get)
+                    .max_by(|a, b| {
+                        a.out
+                            .metrics
+                            .invocation()
+                            .partial_cmp(&b.out.metrics.invocation())
+                            .unwrap()
+                    });
+                if let Some(best) = best {
+                    gain_sum += best.out.metrics.invocation() - op.out.metrics.invocation();
+                    if op.out.metrics.rmse_invoked > 0.0 && best.out.metrics.invoked > 0 {
+                        err_ratio_sum +=
+                            1.0 - best.out.metrics.rmse_invoked / op.out.metrics.rmse_invoked;
+                    }
+                    n += 1.0;
+                }
+            }
+        }
+        if n == 0.0 {
+            (0.0, 0.0)
+        } else {
+            (gain_sum / n, err_ratio_sum / n)
+        }
+    }
+}

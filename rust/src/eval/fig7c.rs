@@ -1,0 +1,115 @@
+//! Fig. 7(c): invocation vs error bound on Black-Scholes.
+//!
+//! The Python build retrains every method at scaled bounds
+//! (`weights_bound_<scale>.bin`, scales 0.5/0.75/1.5/2 plus the default
+//! 1.0) because the classifier's labels depend on the bound; this driver
+//! evaluates each variant's invocation.
+
+use std::sync::Arc;
+
+use crate::bench_harness::{pct, Table};
+use crate::config::Method;
+use crate::coordinator::Dispatcher;
+use crate::runtime::ModelBank;
+
+use super::Context;
+
+pub const BENCH: &str = "blackscholes";
+pub const SCALES: [f64; 5] = [0.5, 0.75, 1.0, 1.5, 2.0];
+
+pub struct Fig7c {
+    /// (scale, method, invocation, rmse_over_bound)
+    pub rows: Vec<(f64, Method, f64, f64)>,
+}
+
+fn weights_file_for(scale: f64) -> String {
+    if (scale - 1.0).abs() < 1e-9 {
+        "weights.bin".to_string()
+    } else {
+        // Python writes f"{scale:g}" with '.' -> 'p' (0.5 -> "0p5", 2.0 -> "2").
+        let g = if scale.fract() == 0.0 {
+            format!("{}", scale as i64)
+        } else {
+            format!("{scale}")
+        };
+        format!("weights_bound_{}.bin", g.replace('.', "p"))
+    }
+}
+
+pub fn run(ctx: &Context) -> crate::Result<Fig7c> {
+    let mut bench = ctx.man.bench(BENCH)?.clone();
+    let ds = ctx.dataset(BENCH)?;
+    let mut rows = Vec::new();
+    for scale in SCALES {
+        let path = ctx.man.root.join(BENCH).join(weights_file_for(scale));
+        if !path.exists() {
+            continue; // bound sweep not built in this artifact tree
+        }
+        bench.error_bound = ctx.man.bench(BENCH)?.error_bound * scale;
+        let methods = Method::ALL.to_vec();
+        let bank = Arc::new(ModelBank::load_with_weights(
+            ctx.rt.as_ref(),
+            &ctx.man,
+            &bench,
+            &methods,
+            &ctx.man.batch_sizes,
+            &path,
+        )?);
+        for m in methods {
+            if !bank.has_method(m) {
+                continue;
+            }
+            let d = Dispatcher::new(&bench, &bank, m, ctx.cfg.exec)?;
+            let out = d.run_dataset(&ds)?;
+            rows.push((scale, m, out.metrics.invocation(), out.metrics.rmse_over_bound));
+        }
+    }
+    anyhow::ensure!(!rows.is_empty(), "no bound-sweep artifacts found (rebuild artifacts)");
+    Ok(Fig7c { rows })
+}
+
+impl Fig7c {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Fig 7(c): invocation vs error bound (blackscholes)",
+            &["bound scale", "one-pass", "iterative", "MCCA", "MCMA-compl", "MCMA-compet"],
+        );
+        for scale in SCALES {
+            let mut any = false;
+            let mut row = vec![format!("{scale:.2}x")];
+            for m in Method::ALL {
+                let cell = self
+                    .rows
+                    .iter()
+                    .find(|(s, mm, _, _)| (*s - scale).abs() < 1e-9 && *mm == m)
+                    .map(|(_, _, inv, _)| {
+                        any = true;
+                        pct(*inv)
+                    })
+                    .unwrap_or_else(|| "-".into());
+                row.push(cell);
+            }
+            if any {
+                t.row(row);
+            }
+        }
+        t
+    }
+
+    /// Invocation drop from the loosest to the tightest bound, per method
+    /// (paper: MCMA's drop is the smallest).
+    pub fn drop_per_method(&self) -> Vec<(Method, f64)> {
+        Method::ALL
+            .iter()
+            .filter_map(|&m| {
+                let at = |s: f64| {
+                    self.rows
+                        .iter()
+                        .find(|(sc, mm, _, _)| (*sc - s).abs() < 1e-9 && *mm == m)
+                        .map(|(_, _, inv, _)| *inv)
+                };
+                Some((m, at(2.0)? - at(0.5)?))
+            })
+            .collect()
+    }
+}

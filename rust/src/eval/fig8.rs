@@ -1,0 +1,102 @@
+//! Fig. 8: (a) speedup and (b) energy reduction, normalised to the
+//! one-pass method — driven by the cycle-level NPU simulator over the
+//! routing traces of Fig. 7.
+
+use crate::bench_harness::Table;
+use crate::config::Method;
+
+use super::{fig7::Fig7, Context};
+
+pub struct Fig8 {
+    /// (bench, method) -> (speedup vs cpu, energy reduction vs cpu).
+    pub raw: Vec<(String, Method, f64, f64)>,
+}
+
+pub fn run(_ctx: &Context, fig7: &Fig7) -> crate::Result<Fig8> {
+    let raw = fig7
+        .evals
+        .iter()
+        .map(|e| {
+            (
+                e.bench.clone(),
+                e.method,
+                e.sim.speedup_vs_cpu(),
+                e.sim.energy_reduction_vs_cpu(),
+            )
+        })
+        .collect();
+    Ok(Fig8 { raw })
+}
+
+impl Fig8 {
+    fn get(&self, bench: &str, m: Method) -> Option<(f64, f64)> {
+        self.raw
+            .iter()
+            .find(|(b, mm, _, _)| b == bench && *mm == m)
+            .map(|(_, _, s, e)| (*s, *e))
+    }
+
+    fn table(&self, ctx: &Context, title: &str, energy: bool) -> Table {
+        let mut t = Table::new(
+            title,
+            &["benchmark", "one-pass", "iterative", "MCCA", "MCMA-compl", "MCMA-compet"],
+        );
+        for bench in ctx.man.bench_names_ordered() {
+            let base = self
+                .get(&bench, Method::OnePass)
+                .map(|(s, e)| if energy { e } else { s })
+                .unwrap_or(1.0)
+                .max(1e-12);
+            let mut row = vec![bench.clone()];
+            for m in Method::ALL {
+                row.push(match self.get(&bench, m) {
+                    Some((s, e)) => {
+                        let v = if energy { e } else { s };
+                        format!("{:.2}x", v / base)
+                    }
+                    None => "-".into(),
+                });
+            }
+            t.row(row);
+        }
+        t
+    }
+
+    pub fn table_a(&self, ctx: &Context) -> Table {
+        self.table(ctx, "Fig 8(a): speedup normalised to one-pass", false)
+    }
+
+    pub fn table_b(&self, ctx: &Context) -> Table {
+        self.table(ctx, "Fig 8(b): energy reduction normalised to one-pass", true)
+    }
+
+    /// Mean MCMA speedup / energy gain over one-pass (paper: ~1.23x, ~1.15x).
+    /// Geometric mean — ratios-of-ratios are multiplicative, and benchmarks
+    /// where one-pass barely invokes would otherwise dominate the average.
+    pub fn mcma_mean_gains(&self, ctx: &Context) -> (f64, f64) {
+        let mut s_log = 0.0;
+        let mut e_log = 0.0;
+        let mut n = 0.0;
+        for bench in ctx.man.bench_names_ordered() {
+            if let Some((s0, e0)) = self.get(&bench, Method::OnePass) {
+                let best = [Method::McmaComplementary, Method::McmaCompetitive]
+                    .into_iter()
+                    .filter_map(|m| self.get(&bench, m))
+                    .fold(None::<(f64, f64)>, |acc, v| match acc {
+                        Some(a) if a.0 >= v.0 => Some(a),
+                        _ => Some(v),
+                    });
+                if let Some((s, e)) = best {
+                    s_log += (s / s0.max(1e-12)).max(1e-12).ln();
+                    e_log += (e / e0.max(1e-12)).max(1e-12).ln();
+                    n += 1.0;
+                }
+            }
+        }
+        if n == 0.0 {
+            (1.0, 1.0)
+        } else {
+            ((s_log / n).exp(), (e_log / n).exp())
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Fig. 9: invocation per training iteration, complementary vs competitive
+//! (Bessel) — read from the build-time trajectories the Python trainer
+//! records in `train_stats.json`.
+
+use crate::bench_harness::{pct, Table};
+use crate::util::json;
+
+use super::Context;
+
+pub struct Fig9 {
+    /// method -> per-iteration invocation.
+    pub series: Vec<(String, Vec<f64>)>,
+    pub bench: String,
+}
+
+pub fn run(ctx: &Context, bench: &str) -> crate::Result<Fig9> {
+    let v = json::parse_file(&ctx.man.root.join("train_stats.json"))?;
+    let b = v.req(bench)?;
+    let mut series = Vec::new();
+    for key in ["mcma_complementary", "mcma_competitive"] {
+        if let Some(hist) = b.get(key).and_then(|h| h.as_arr()) {
+            let invs: Vec<f64> = hist
+                .iter()
+                .filter_map(|it| it.get("invocation").and_then(json::Value::as_f64))
+                .collect();
+            series.push((key.to_string(), invs));
+        }
+    }
+    anyhow::ensure!(!series.is_empty(), "no MCMA trajectories for {bench}");
+    Ok(Fig9 { series, bench: bench.to_string() })
+}
+
+impl Fig9 {
+    pub fn table(&self) -> Table {
+        let iters = self.series.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        let mut header = vec!["method".to_string()];
+        header.extend((0..iters).map(|i| format!("iter {i}")));
+        let mut t = Table::new(
+            &format!("Fig 9: invocation per training iteration ({})", self.bench),
+            &header.iter().map(String::as_str).collect::<Vec<_>>(),
+        );
+        for (name, s) in &self.series {
+            let mut row = vec![name.clone()];
+            for i in 0..iters {
+                row.push(s.get(i).map(|v| pct(*v)).unwrap_or_else(|| "-".into()));
+            }
+            t.row(row);
+        }
+        t
+    }
+}

@@ -1,0 +1,121 @@
+//! Eval drivers — one per paper figure (DESIGN.md per-experiment index).
+//!
+//! Each driver loads artifacts, runs the coordinator over the held-out test
+//! set, and prints the same rows/series the paper reports.  The figure
+//! benches (`rust/benches/fig*.rs`) and the `mcma figure` CLI subcommand
+//! are thin wrappers over these.
+
+pub mod fig10;
+pub mod fig11;
+pub mod fig7;
+pub mod fig7c;
+pub mod fig8;
+pub mod fig9;
+pub mod summary;
+
+use std::sync::Arc;
+
+use crate::config::{ExecMode, Method, RunConfig};
+use crate::coordinator::{Dispatcher, EvalOutput};
+use crate::formats::{BenchManifest, Dataset, Manifest};
+use crate::npu::{NpuSim, SimResult};
+use crate::runtime::{ModelBank, Runtime};
+
+/// Shared state for all drivers: manifest + (optional) PJRT runtime.
+pub struct Context {
+    pub man: Manifest,
+    pub rt: Option<Runtime>,
+    pub cfg: RunConfig,
+}
+
+impl Context {
+    /// Load artifacts; create the PJRT client only when needed.
+    pub fn load(cfg: RunConfig) -> crate::Result<Self> {
+        let man = Manifest::load(&crate::artifacts_dir())?;
+        let rt = match cfg.exec {
+            ExecMode::Pjrt => Some(Runtime::cpu()?),
+            ExecMode::Native => None,
+        };
+        Ok(Context { man, rt, cfg })
+    }
+
+    pub fn bank(&self, bench: &BenchManifest, methods: &[Method]) -> crate::Result<ModelBank> {
+        ModelBank::load(self.rt.as_ref(), &self.man, bench, methods, &self.man.batch_sizes)
+    }
+
+    pub fn dataset(&self, bench: &str) -> crate::Result<Dataset> {
+        let ds = Dataset::load(&self.man.dataset_path(bench))?;
+        Ok(if self.cfg.max_samples > 0 { ds.truncated(self.cfg.max_samples) } else { ds })
+    }
+
+    /// Methods that exist in this artifact tree for `bench`.
+    pub fn available_methods(&self, bench: &BenchManifest) -> Vec<Method> {
+        Method::ALL
+            .into_iter()
+            .filter(|m| bench.methods.iter().any(|k| k == m.key()))
+            .collect()
+    }
+}
+
+/// One (bench, method) evaluation: coordinator output + NPU simulation.
+pub struct BenchMethodEval {
+    pub bench: String,
+    pub method: Method,
+    pub out: EvalOutput,
+    pub sim: SimResult,
+}
+
+/// Run the full coordinator + NPU sim for one (bench, method).
+pub fn eval_one(
+    ctx: &Context,
+    bench: &BenchManifest,
+    bank: &ModelBank,
+    method: Method,
+) -> crate::Result<BenchMethodEval> {
+    let ds = ctx.dataset(&bench.name)?;
+    let dispatcher = Dispatcher::new(bench, bank, method, ctx.cfg.exec)?;
+    let out = dispatcher.run_dataset(&ds)?;
+    let sim = simulate(ctx, bench, bank, method, &out)?;
+    Ok(BenchMethodEval { bench: bench.name.clone(), method, out, sim })
+}
+
+/// NPU-simulate an already-computed routing trace.
+pub fn simulate(
+    ctx: &Context,
+    bench: &BenchManifest,
+    bank: &ModelBank,
+    method: Method,
+    out: &EvalOutput,
+) -> crate::Result<SimResult> {
+    let benchfn = crate::benchmarks::by_name(&bench.name)?;
+    let clf_topo = if method.is_mcma() {
+        bench.clfn_topology.clone()
+    } else {
+        bench.clf2_topology.clone()
+    };
+    let n_approx = bank.n_approx(method);
+    let approx_topos: Vec<Vec<usize>> =
+        (0..n_approx).map(|_| bench.approx_topology.clone()).collect();
+    let sim = NpuSim::new(ctx.cfg.npu, &clf_topo, &approx_topos, benchfn.cpu_cycles());
+    Ok(sim.simulate(&out.plan.routes, None))
+}
+
+/// Evaluate every requested method on one benchmark (shared by Figs. 7/8).
+pub fn eval_bench(
+    ctx: &Context,
+    bench_name: &str,
+    methods: &[Method],
+) -> crate::Result<Vec<BenchMethodEval>> {
+    let bench = ctx.man.bench(bench_name)?.clone();
+    let methods: Vec<Method> = methods
+        .iter()
+        .copied()
+        .filter(|m| bench.methods.iter().any(|k| k == m.key()))
+        .collect();
+    let bank = Arc::new(ctx.bank(&bench, &methods)?);
+    let mut rows = Vec::new();
+    for &m in &methods {
+        rows.push(eval_one(ctx, &bench, &bank, m)?);
+    }
+    Ok(rows)
+}

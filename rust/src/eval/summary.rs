@@ -1,0 +1,52 @@
+//! §IV.B headline numbers: MCMA's mean invocation gain / error reduction
+//! over one-pass and the mean speedup / energy-reduction ratios (paper:
+//! +27% invocation, -10% error, ~1.23x speedup, ~1.15x energy).
+
+use crate::bench_harness::Table;
+
+use super::{fig7, fig8, Context};
+
+pub struct Summary {
+    pub invocation_gain: f64,
+    pub error_reduction: f64,
+    pub speedup_ratio: f64,
+    pub energy_ratio: f64,
+}
+
+pub fn run(ctx: &Context) -> crate::Result<Summary> {
+    let f7 = fig7::run(ctx)?;
+    let f8 = fig8::run(ctx, &f7)?;
+    let (invocation_gain, error_reduction) = f7.mcma_gain_over_one_pass(ctx);
+    let (speedup_ratio, energy_ratio) = f8.mcma_mean_gains(ctx);
+    Ok(Summary { invocation_gain, error_reduction, speedup_ratio, energy_ratio })
+}
+
+impl Summary {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "Headline (paper §IV.B): best-MCMA vs one-pass, averaged over benchmarks",
+            &["metric", "paper", "measured"],
+        );
+        t.row(vec![
+            "invocation gain".into(),
+            "+27%".into(),
+            format!("{:+.0}%", 100.0 * self.invocation_gain),
+        ]);
+        t.row(vec![
+            "approximation-error reduction".into(),
+            "-10%".into(),
+            format!("{:+.0}%", -100.0 * self.error_reduction),
+        ]);
+        t.row(vec![
+            "speedup vs one-pass".into(),
+            "~1.23x".into(),
+            format!("{:.2}x", self.speedup_ratio),
+        ]);
+        t.row(vec![
+            "energy reduction vs one-pass".into(),
+            "~1.15x".into(),
+            format!("{:.2}x", self.energy_ratio),
+        ]);
+        t
+    }
+}

@@ -1,0 +1,115 @@
+//! `dataset.bin` reader (magic `MCMD`, v1) — held-out test workloads.
+
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use super::{read_f32s, read_u32};
+
+/// A test dataset: raw (un-normalised) inputs plus normalised precise
+/// outputs.  The runtime normalises inputs itself using the manifest's
+/// static bounds; the raw inputs also feed the precise-CPU fallback path.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Row-major `(n, d_in)` raw inputs.
+    pub x_raw: Vec<f32>,
+    /// Row-major `(n, d_out)` normalised precise outputs.
+    pub y_norm: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"MCMD", "bad dataset magic {magic:?}");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == 1, "unsupported dataset version {version}");
+        let n = read_u32(&mut r)? as usize;
+        let d_in = read_u32(&mut r)? as usize;
+        let d_out = read_u32(&mut r)? as usize;
+        anyhow::ensure!(n * d_in <= 1 << 28, "unreasonable dataset size");
+        let x_raw = read_f32s(&mut r, n * d_in)?;
+        let y_norm = read_f32s(&mut r, n * d_out)?;
+        // Must be exactly at EOF.
+        let mut probe = [0u8; 1];
+        anyhow::ensure!(
+            r.read(&mut probe)? == 0,
+            "trailing bytes after dataset payload"
+        );
+        Ok(Dataset { n, d_in, d_out, x_raw, y_norm })
+    }
+
+    /// Raw input row `i`.
+    pub fn x_row(&self, i: usize) -> &[f32] {
+        &self.x_raw[i * self.d_in..(i + 1) * self.d_in]
+    }
+
+    /// Normalised precise output row `i`.
+    pub fn y_row(&self, i: usize) -> &[f32] {
+        &self.y_norm[i * self.d_out..(i + 1) * self.d_out]
+    }
+
+    /// A view restricted to the first `n` samples (for quick runs).
+    pub fn truncated(&self, n: usize) -> Dataset {
+        let n = n.min(self.n);
+        Dataset {
+            n,
+            d_in: self.d_in,
+            d_out: self.d_out,
+            x_raw: self.x_raw[..n * self.d_in].to_vec(),
+            y_norm: self.y_norm[..n * self.d_out].to_vec(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_ds(path: &Path, n: u32, d_in: u32, d_out: u32, extra: &[u8]) {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(b"MCMD");
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(n.to_le_bytes());
+        buf.extend(d_in.to_le_bytes());
+        buf.extend(d_out.to_le_bytes());
+        for i in 0..(n * d_in) {
+            buf.extend((i as f32).to_le_bytes());
+        }
+        for i in 0..(n * d_out) {
+            buf.extend((100.0 + i as f32).to_le_bytes());
+        }
+        buf.extend(extra);
+        std::fs::File::create(path).unwrap().write_all(&buf).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_handbuilt() {
+        let dir = std::env::temp_dir().join("mcma_dstest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("d.bin");
+        write_ds(&path, 3, 2, 1, &[]);
+        let ds = Dataset::load(&path).unwrap();
+        assert_eq!((ds.n, ds.d_in, ds.d_out), (3, 2, 1));
+        assert_eq!(ds.x_row(1), &[2.0, 3.0]);
+        assert_eq!(ds.y_row(2), &[102.0]);
+        let t = ds.truncated(2);
+        assert_eq!(t.n, 2);
+        assert_eq!(t.x_raw.len(), 4);
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let dir = std::env::temp_dir().join("mcma_dstest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.bin");
+        write_ds(&path, 1, 1, 1, b"junk");
+        assert!(Dataset::load(&path).is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! `manifest.json` — the contract between the Python build and this runtime:
+//! topologies, normalisation bounds, error bounds, file layout.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+/// Per-benchmark manifest entry.
+#[derive(Clone, Debug)]
+pub struct BenchManifest {
+    pub name: String,
+    pub domain: String,
+    pub n_in: usize,
+    pub n_out: usize,
+    pub approx_topology: Vec<usize>,
+    pub clf2_topology: Vec<usize>,
+    pub clfn_topology: Vec<usize>,
+    pub x_lo: Vec<f32>,
+    pub x_hi: Vec<f32>,
+    pub y_lo: Vec<f32>,
+    pub y_hi: Vec<f32>,
+    pub error_bound: f64,
+    pub train_n: usize,
+    pub test_n: usize,
+    pub methods: Vec<String>,
+    pub mcca_pairs: usize,
+}
+
+impl BenchManifest {
+    /// Normalise one raw input row into NN space (matches
+    /// `python/compile/benchmarks.py::Benchmark.normalize_x`).
+    pub fn normalize_x_into(&self, raw: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(raw.len(), self.n_in);
+        for i in 0..self.n_in {
+            out[i] = (raw[i] - self.x_lo[i]) / (self.x_hi[i] - self.x_lo[i]);
+        }
+    }
+
+    pub fn normalize_y_into(&self, raw: &[f64], out: &mut [f32]) {
+        debug_assert_eq!(raw.len(), self.n_out);
+        for i in 0..self.n_out {
+            out[i] = ((raw[i] - self.y_lo[i] as f64) / (self.y_hi[i] - self.y_lo[i]) as f64) as f32;
+        }
+    }
+}
+
+/// The whole artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_approx: usize,
+    pub batch_sizes: Vec<usize>,
+    pub benchmarks: HashMap<String, BenchManifest>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_root: &Path) -> crate::Result<Self> {
+        let v = json::parse_file(&artifacts_root.join("manifest.json"))?;
+        let n_approx = v.req("n_approx")?.as_usize().unwrap_or(3);
+        let batch_sizes = v
+            .req("batch_sizes")?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow::anyhow!("bad batch_sizes"))?;
+        let mut benchmarks = HashMap::new();
+        for (name, b) in v.req("benchmarks")?.as_obj().unwrap_or(&[]) {
+            benchmarks.insert(name.clone(), parse_bench(name, b)?);
+        }
+        anyhow::ensure!(!benchmarks.is_empty(), "manifest lists no benchmarks");
+        Ok(Manifest { n_approx, batch_sizes, benchmarks, root: artifacts_root.to_path_buf() })
+    }
+
+    pub fn bench(&self, name: &str) -> crate::Result<&BenchManifest> {
+        self.benchmarks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("benchmark {name:?} not in manifest"))
+    }
+
+    /// Benchmarks in the paper's Fig. 6 order (unknown names sort last).
+    pub fn bench_names_ordered(&self) -> Vec<String> {
+        const ORDER: [&str; 8] = [
+            "blackscholes", "fft", "inversek2j", "jmeint",
+            "jpeg", "kmeans", "sobel", "bessel",
+        ];
+        let mut names: Vec<String> = self.benchmarks.keys().cloned().collect();
+        names.sort_by_key(|n| ORDER.iter().position(|o| o == n).unwrap_or(ORDER.len()));
+        names
+    }
+
+    /// Path helpers.
+    pub fn weights_path(&self, bench: &str) -> PathBuf {
+        self.root.join(bench).join("weights.bin")
+    }
+
+    pub fn dataset_path(&self, bench: &str) -> PathBuf {
+        self.root.join(bench).join("test.bin")
+    }
+
+    pub fn hlo_path(&self, bench: &str, role: &str, batch: usize) -> PathBuf {
+        self.root.join(bench).join(format!("{role}_b{batch}.hlo.txt"))
+    }
+}
+
+fn parse_bench(name: &str, v: &Value) -> crate::Result<BenchManifest> {
+    let topo = |key: &str| -> crate::Result<Vec<usize>> {
+        v.req(key)?
+            .as_usize_vec()
+            .ok_or_else(|| anyhow::anyhow!("bad {key} for {name}"))
+    };
+    let f32s = |key: &str| -> crate::Result<Vec<f32>> {
+        v.req(key)?
+            .as_f32_vec()
+            .ok_or_else(|| anyhow::anyhow!("bad {key} for {name}"))
+    };
+    let m = BenchManifest {
+        name: name.to_string(),
+        domain: v.req("domain")?.as_str().unwrap_or("").to_string(),
+        n_in: v.req("n_in")?.as_usize().unwrap_or(0),
+        n_out: v.req("n_out")?.as_usize().unwrap_or(0),
+        approx_topology: topo("approx_topology")?,
+        clf2_topology: topo("clf2_topology")?,
+        clfn_topology: topo("clfN_topology")?,
+        x_lo: f32s("x_lo")?,
+        x_hi: f32s("x_hi")?,
+        y_lo: f32s("y_lo")?,
+        y_hi: f32s("y_hi")?,
+        error_bound: v.req("error_bound")?.as_f64().unwrap_or(0.0),
+        train_n: v.req("train_n")?.as_usize().unwrap_or(0),
+        test_n: v.req("test_n")?.as_usize().unwrap_or(0),
+        methods: v
+            .req("methods")?
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default(),
+        mcca_pairs: v.get("mcca_pairs").and_then(Value::as_usize).unwrap_or(0),
+    };
+    anyhow::ensure!(m.n_in == m.approx_topology[0], "{name}: n_in/topology mismatch");
+    anyhow::ensure!(
+        m.n_out == *m.approx_topology.last().unwrap(),
+        "{name}: n_out/topology mismatch"
+    );
+    anyhow::ensure!(m.x_lo.len() == m.n_in && m.x_hi.len() == m.n_in, "{name}: x bounds");
+    anyhow::ensure!(m.y_lo.len() == m.n_out && m.y_hi.len() == m.n_out, "{name}: y bounds");
+    anyhow::ensure!(m.error_bound > 0.0, "{name}: error bound must be positive");
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "n_approx": 3, "batch_sizes": [1, 256],
+      "train_config": {},
+      "benchmarks": {
+        "sobel": {
+          "domain": "Image Processing", "n_in": 9, "n_out": 1,
+          "approx_topology": [9, 8, 1], "clf2_topology": [9, 8, 2],
+          "clfN_topology": [9, 8, 4],
+          "x_lo": [0,0,0,0,0,0,0,0,0], "x_hi": [1,1,1,1,1,1,1,1,1],
+          "y_lo": [0], "y_hi": [1], "error_bound": 0.035,
+          "train_n": 100, "test_n": 50,
+          "methods": ["one_pass"], "mcca_pairs": 2
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("mcma_mantest");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_approx, 3);
+        let b = m.bench("sobel").unwrap();
+        assert_eq!(b.clfn_topology, vec![9, 8, 4]);
+        assert_eq!(b.mcca_pairs, 2);
+        assert!(m.bench("nope").is_err());
+        assert!(m.hlo_path("sobel", "approx", 256).ends_with("sobel/approx_b256.hlo.txt"));
+    }
+
+    #[test]
+    fn normalize_x_matches_formula() {
+        let b = BenchManifest {
+            name: "t".into(), domain: String::new(), n_in: 2, n_out: 1,
+            approx_topology: vec![2, 1], clf2_topology: vec![2, 2],
+            clfn_topology: vec![2, 4],
+            x_lo: vec![0.0, -1.0], x_hi: vec![2.0, 1.0],
+            y_lo: vec![0.0], y_hi: vec![10.0],
+            error_bound: 0.1, train_n: 0, test_n: 0,
+            methods: vec![], mcca_pairs: 0,
+        };
+        let mut out = [0.0f32; 2];
+        b.normalize_x_into(&[1.0, 0.0], &mut out);
+        assert_eq!(out, [0.5, 0.5]);
+        let mut y = [0.0f32; 1];
+        b.normalize_y_into(&[5.0], &mut y);
+        assert_eq!(y[0], 0.5);
+    }
+}

@@ -1,0 +1,45 @@
+//! Readers for the binary + JSON artifacts written by the Python build path
+//! (`python/compile/formats.py`, `python/compile/aot.py`).
+//!
+//! Byte-level specs live in the Python module docstring and DESIGN.md
+//! §Artifact formats; the pytest round-trip tests pin the Python side and
+//! the integration tests here pin the Rust side against real artifacts.
+
+pub mod dataset;
+pub mod manifest;
+pub mod weights;
+
+pub use dataset::Dataset;
+pub use manifest::{BenchManifest, Manifest};
+pub use weights::{MethodWeights, WeightsFile};
+
+use std::io::Read;
+
+pub(crate) fn read_u32(r: &mut impl Read) -> crate::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub(crate) fn read_u8(r: &mut impl Read) -> crate::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub(crate) fn read_f32s(r: &mut impl Read, n: usize) -> crate::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+pub(crate) fn read_string(r: &mut impl Read) -> crate::Result<String> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len < 1 << 20, "unreasonable string length {len}");
+    let mut bytes = vec![0u8; len];
+    r.read_exact(&mut bytes)?;
+    Ok(String::from_utf8(bytes)?)
+}

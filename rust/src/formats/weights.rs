@@ -1,0 +1,158 @@
+//! `weights.bin` reader (magic `MCMW`, v1) — trained nets for every method.
+
+use std::collections::HashMap;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use crate::nn::{Layer, Matrix, Mlp};
+
+use super::{read_f32s, read_string, read_u32, read_u8};
+
+/// One training method's nets: classifier(s) + approximator(s).
+#[derive(Clone, Debug)]
+pub struct MethodWeights {
+    pub method: String,
+    /// MCCA stores one binary classifier per cascade pair.
+    pub cascade: bool,
+    /// 2 for binary, n+1 for the MCMA multiclass classifier.
+    pub clf_classes: usize,
+    pub classifiers: Vec<Mlp>,
+    pub approximators: Vec<Mlp>,
+}
+
+impl MethodWeights {
+    /// The single classifier of non-cascade methods.
+    pub fn classifier(&self) -> &Mlp {
+        assert!(!self.cascade, "cascade methods have per-pair classifiers");
+        &self.classifiers[0]
+    }
+}
+
+/// Parsed `weights.bin`: method name -> nets.
+#[derive(Clone, Debug)]
+pub struct WeightsFile {
+    pub methods: HashMap<String, MethodWeights>,
+}
+
+impl WeightsFile {
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"MCMW", "bad weights magic {magic:?}");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == 1, "unsupported weights version {version}");
+        let n_methods = read_u32(&mut r)? as usize;
+        anyhow::ensure!(n_methods <= 64, "unreasonable method count {n_methods}");
+        let mut methods = HashMap::new();
+        for _ in 0..n_methods {
+            let method = read_string(&mut r)?;
+            let cascade = read_u8(&mut r)? != 0;
+            let clf_classes = read_u32(&mut r)? as usize;
+            let n_clf = read_u32(&mut r)? as usize;
+            let classifiers = (0..n_clf)
+                .map(|_| read_mlp(&mut r))
+                .collect::<crate::Result<Vec<_>>>()?;
+            let n_approx = read_u32(&mut r)? as usize;
+            let approximators = (0..n_approx)
+                .map(|_| read_mlp(&mut r))
+                .collect::<crate::Result<Vec<_>>>()?;
+            methods.insert(
+                method.clone(),
+                MethodWeights { method, cascade, clf_classes, classifiers, approximators },
+            );
+        }
+        Ok(WeightsFile { methods })
+    }
+
+    pub fn get(&self, method: &str) -> crate::Result<&MethodWeights> {
+        self.methods
+            .get(method)
+            .ok_or_else(|| anyhow::anyhow!("method {method:?} not in weights file"))
+    }
+}
+
+fn read_mlp(r: &mut impl Read) -> crate::Result<Mlp> {
+    let n_layers = read_u32(r)? as usize;
+    anyhow::ensure!(
+        (1..=16).contains(&n_layers),
+        "unreasonable layer count {n_layers}"
+    );
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let rows = read_u32(r)? as usize;
+        let cols = read_u32(r)? as usize;
+        anyhow::ensure!(rows * cols <= 1 << 24, "unreasonable layer size");
+        let w = read_f32s(r, rows * cols)?;
+        let blen = read_u32(r)? as usize;
+        anyhow::ensure!(blen == cols, "bias length {blen} != cols {cols}");
+        let b = read_f32s(r, blen)?;
+        layers.push(Layer { w: Matrix::new(rows, cols, w), b });
+    }
+    Ok(Mlp::new(layers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Hand-build a v1 weights file with one method and check the parse.
+    #[test]
+    fn parses_handbuilt_file() {
+        let dir = std::env::temp_dir().join("mcma_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(b"MCMW");
+        buf.extend(1u32.to_le_bytes()); // version
+        buf.extend(1u32.to_le_bytes()); // n_methods
+        buf.extend(8u32.to_le_bytes()); // name len
+        buf.extend(b"one_pass");
+        buf.push(0); // cascade = false
+        buf.extend(2u32.to_le_bytes()); // clf_classes
+        buf.extend(1u32.to_le_bytes()); // n_classifiers
+        // classifier mlp: 1 layer 2x2
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            buf.extend(v.to_le_bytes());
+        }
+        buf.extend(2u32.to_le_bytes());
+        for v in [0.5f32, -0.5] {
+            buf.extend(v.to_le_bytes());
+        }
+        // 1 approximator: 1 layer 2x1
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(2u32.to_le_bytes());
+        buf.extend(1u32.to_le_bytes());
+        for v in [7.0f32, 8.0] {
+            buf.extend(v.to_le_bytes());
+        }
+        buf.extend(1u32.to_le_bytes());
+        buf.extend(9.0f32.to_le_bytes());
+        std::fs::File::create(&path).unwrap().write_all(&buf).unwrap();
+
+        let wf = WeightsFile::load(&path).unwrap();
+        let m = wf.get("one_pass").unwrap();
+        assert!(!m.cascade);
+        assert_eq!(m.clf_classes, 2);
+        assert_eq!(m.classifier().topology(), vec![2, 2]);
+        assert_eq!(m.approximators[0].layers[0].w.at(0, 0), 7.0);
+        assert_eq!(m.approximators[0].layers[0].b[0], 9.0);
+        assert!(wf.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("mcma_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
+        assert!(WeightsFile::load(&path).is_err());
+    }
+}

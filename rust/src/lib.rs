@@ -1,0 +1,52 @@
+//! # MCMA — invocation-driven neural approximate computing
+//!
+//! Reproduction of *"Invocation-driven Neural Approximate Computing with a
+//! Multiclass-Classifier and Multiple Approximators"* (ICCAD 2018).
+//!
+//! This crate is Layer 3 of the three-layer stack: the **coordinator** that
+//! owns the request path.  Python/JAX/Pallas run once at build time
+//! (`make artifacts`) to train the classifier + approximators and lower
+//! their forward passes to HLO text; this crate loads those artifacts via
+//! the PJRT CPU client and serves requests with **no Python anywhere on the
+//! hot path**.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — substrates for crates unavailable offline: RNG, JSON,
+//!   thread pool, stats, a property-test harness.
+//! * [`config`] — benchmark registry and run/NPU configuration.
+//! * [`formats`] — readers for the binary artifacts written by
+//!   `python/compile/formats.py`.
+//! * [`nn`] — pure-Rust MLP inference (cross-checks PJRT numerics, serves
+//!   as a fallback execution engine).
+//! * [`benchmarks`] — the eight PRECISE target functions (the "CPU" path).
+//! * [`runtime`] — PJRT wrapper: load HLO text, compile, execute.
+//! * [`coordinator`] — the paper's contribution at run time: dynamic
+//!   batcher, multiclass router, MCCA cascade, weight-switch cache,
+//!   dispatcher, threaded pipeline server, metrics.
+//! * [`npu`] — cycle-level NPU simulator + energy model (Fig. 8).
+//! * [`eval`] — one driver per paper figure.
+//! * [`bench_harness`] — timing harness for `cargo bench` (criterion
+//!   substitute).
+
+pub mod bench_harness;
+pub mod benchmarks;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod formats;
+pub mod nn;
+pub mod npu;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Root of the artifact tree (overridable via `MCMA_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("MCMA_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

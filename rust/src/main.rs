@@ -1,0 +1,287 @@
+//! `mcma` — leader entrypoint / CLI for the MCMA reproduction.
+//!
+//! See `cli::USAGE` (or run with no arguments) for subcommands.  Python is
+//! never touched here: all models were AOT-lowered at `make artifacts`.
+
+use std::str::FromStr;
+use std::sync::Arc;
+use std::time::Instant;
+
+use mcma::bench_harness::{pct, Table};
+use mcma::cli::{Args, USAGE};
+use mcma::config::{BatchPolicy, ExecMode, Method, RunConfig};
+use mcma::coordinator::{BufferCase, Server, ServerConfig};
+use mcma::eval::{self, Context};
+use mcma::util::rng::Rng;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run_config(args: &Args) -> mcma::Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.exec = ExecMode::from_str(&args.opt_or("exec", "pjrt"))?;
+    cfg.max_samples = args.opt_usize("samples", 0)?;
+    Ok(cfg)
+}
+
+fn run(args: Args) -> mcma::Result<()> {
+    match args.subcommand.as_deref() {
+        None | Some("help") => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some("list-benchmarks") => list_benchmarks(&args),
+        Some("figure") => figure(&args),
+        Some("summary") => {
+            let ctx = Context::load(run_config(&args)?)?;
+            eval::summary::run(&ctx)?.table().print();
+            Ok(())
+        }
+        Some("eval") => eval_cmd(&args),
+        Some("serve") => serve_cmd(&args),
+        Some("npu-sim") => npu_sim_cmd(&args),
+        Some("report") => report_cmd(&args),
+        Some(other) => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
+    }
+}
+
+/// Machine-readable dump of the whole evaluation (Fig 7/8 data) as JSON on
+/// stdout — for plotting scripts and CI regression tracking.
+fn report_cmd(args: &Args) -> mcma::Result<()> {
+    use mcma::util::json::{obj, Value};
+    let ctx = Context::load(run_config(args)?)?;
+    let f7 = eval::fig7::run(&ctx)?;
+    let mut benches = Vec::new();
+    for e in &f7.evals {
+        let m = &e.out.metrics;
+        benches.push(Value::Obj(vec![
+            ("bench".into(), Value::Str(e.bench.clone())),
+            ("method".into(), Value::Str(m.method.clone())),
+            ("n".into(), Value::Num(m.n as f64)),
+            ("invocation".into(), Value::Num(m.invocation())),
+            ("true_invocation".into(), Value::Num(m.true_invocation())),
+            ("rmse_invoked".into(), Value::Num(m.rmse_invoked)),
+            ("rmse_over_bound".into(), Value::Num(m.rmse_over_bound)),
+            ("recall".into(), Value::Num(m.recall())),
+            ("weight_switches".into(), Value::Num(m.weight_switches as f64)),
+            ("speedup_vs_cpu".into(), Value::Num(e.sim.speedup_vs_cpu())),
+            (
+                "energy_reduction_vs_cpu".into(),
+                Value::Num(e.sim.energy_reduction_vs_cpu()),
+            ),
+        ]));
+    }
+    let f8 = eval::fig8::run(&ctx, &f7)?;
+    let (inv_gain, err_red) = f7.mcma_gain_over_one_pass(&ctx);
+    let (speedup, energy) = f8.mcma_mean_gains(&ctx);
+    let doc = obj(vec![
+        ("schema".into(), Value::Num(1.0)),
+        ("results".into(), Value::Arr(benches)),
+        (
+            "headline".into(),
+            obj(vec![
+                ("invocation_gain", Value::Num(inv_gain)),
+                ("error_reduction", Value::Num(err_red)),
+                ("speedup_vs_one_pass", Value::Num(speedup)),
+                ("energy_vs_one_pass", Value::Num(energy)),
+            ]),
+        ),
+    ]);
+    println!("{}", mcma::util::json::write(&doc));
+    Ok(())
+}
+
+fn list_benchmarks(args: &Args) -> mcma::Result<()> {
+    let ctx = Context::load(RunConfig { exec: ExecMode::Native, ..run_config(args)? })?;
+    let mut t = Table::new(
+        "Benchmark suite (paper Fig. 6)",
+        &["#", "benchmark", "domain", "test n", "approximator", "classifier", "bound"],
+    );
+    for (i, name) in ctx.man.bench_names_ordered().iter().enumerate() {
+        let b = ctx.man.bench(name)?;
+        t.row(vec![
+            (i + 1).to_string(),
+            b.name.clone(),
+            b.domain.clone(),
+            b.test_n.to_string(),
+            topo(&b.approx_topology),
+            format!("{} ({})", topo(&b.clf2_topology), topo(&b.clfn_topology)),
+            format!("{:.3}", b.error_bound),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn topo(t: &[usize]) -> String {
+    t.iter().map(|x| x.to_string()).collect::<Vec<_>>().join("->")
+}
+
+fn figure(args: &Args) -> mcma::Result<()> {
+    let which = args.positionals.first().map(String::as_str).unwrap_or("all");
+    let ctx = Context::load(run_config(args)?)?;
+    let wants = |k: &str| which == "all" || which == k;
+
+    if wants("7a") || wants("7b") || wants("8a") || wants("8b") {
+        let f7 = eval::fig7::run(&ctx)?;
+        if wants("7a") {
+            f7.table_a(&ctx).print();
+        }
+        if wants("7b") {
+            f7.table_b(&ctx).print();
+        }
+        if wants("8a") || wants("8b") {
+            let f8 = eval::fig8::run(&ctx, &f7)?;
+            if wants("8a") {
+                f8.table_a(&ctx).print();
+            }
+            if wants("8b") {
+                f8.table_b(&ctx).print();
+            }
+        }
+    }
+    if wants("7c") {
+        eval::fig7c::run(&ctx)?.table().print();
+    }
+    if wants("9") {
+        eval::fig9::run(&ctx, "bessel")?.table().print();
+    }
+    if wants("10") {
+        let f10 = eval::fig10::run(&ctx, Method::McmaCompetitive)?;
+        f10.stats_table().print();
+        println!("\n{}", f10.territory_map());
+        let bound = ctx.man.bench("bessel")?.error_bound;
+        for k in 0..f10.grids.len() {
+            println!("{}", f10.error_map(k, bound));
+        }
+    }
+    if wants("11") {
+        let f11 = eval::fig11::run(&ctx)?;
+        f11.quadrant_table().print();
+        println!("{}", f11.render());
+    }
+    if which == "all" {
+        eval::summary::run(&ctx)?.table().print();
+    }
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> mcma::Result<()> {
+    let bench = args
+        .opt("bench")
+        .ok_or_else(|| anyhow::anyhow!("--bench required"))?;
+    let method = Method::from_str(&args.opt_or("method", "mcma_competitive"))?;
+    let ctx = Context::load(run_config(args)?)?;
+    let t0 = Instant::now();
+    let rows = eval::eval_bench(&ctx, bench, &[method])?;
+    for e in rows {
+        let m = &e.out.metrics;
+        println!("benchmark        : {}", e.bench);
+        println!("method           : {}", e.method.label());
+        println!("samples          : {}", m.n);
+        println!("invocation       : {}", pct(m.invocation()));
+        println!("true invocation  : {}", pct(m.true_invocation()));
+        println!("rmse (invoked)   : {:.5}", m.rmse_invoked);
+        println!("rmse / bound     : {:.3}", m.rmse_over_bound);
+        println!("recall           : {:.3}", m.recall());
+        println!("per-class counts : {:?} + {} cpu", m.per_class, m.cpu_count);
+        println!("weight switches  : {}", m.weight_switches);
+        println!("npu speedup vs cpu-only     : {:.2}x", e.sim.speedup_vs_cpu());
+        println!("npu energy reduction vs cpu : {:.2}x", e.sim.energy_reduction_vs_cpu());
+    }
+    println!("wall time        : {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn serve_cmd(args: &Args) -> mcma::Result<()> {
+    let bench_name = args
+        .opt("bench")
+        .ok_or_else(|| anyhow::anyhow!("--bench required"))?;
+    let method = Method::from_str(&args.opt_or("method", "mcma_competitive"))?;
+    let n_requests = args.opt_usize("requests", 5_000)?;
+    let cfg = run_config(args)?;
+    let policy = BatchPolicy {
+        max_batch: args.opt_usize("batch", 256)?,
+        max_wait_us: args.opt_usize("wait-us", 2_000)? as u64,
+    };
+
+    let man = Arc::new(mcma::formats::Manifest::load(&mcma::artifacts_dir())?);
+    let bench = Arc::new(man.bench(bench_name)?.clone());
+    let benchfn = mcma::benchmarks::by_name(bench_name)?;
+
+    let server = Server::spawn(
+        Arc::clone(&man),
+        Arc::clone(&bench),
+        {
+            let mut sc = ServerConfig::new(policy, method, cfg.exec);
+            sc.workers = args.opt_usize("n", 1)?;
+            sc
+        },
+    )?;
+
+    let mut rng = Rng::new(42);
+    let mut x = vec![0.0f32; bench.n_in];
+    for id in 0..n_requests as u64 {
+        benchfn.gen_into(&mut rng, &mut x);
+        server.submit(id, x.clone())?;
+    }
+    let report = server.shutdown(Vec::new())?;
+    println!("served           : {}", report.served);
+    println!("throughput       : {:.0} req/s", report.throughput_rps());
+    println!("invocation       : {}", pct(report.invocation()));
+    println!("batches          : {} (full {}, timeout {})",
+             report.batches, report.flushes_full, report.flushes_timeout);
+    println!("latency p50/p95/p99 : {:.0} / {:.0} / {:.0} µs",
+             report.latency.p50(), report.latency.p95(), report.latency.p99());
+    anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
+    Ok(())
+}
+
+fn npu_sim_cmd(args: &Args) -> mcma::Result<()> {
+    let bench_name = args
+        .opt("bench")
+        .ok_or_else(|| anyhow::anyhow!("--bench required"))?;
+    let method = Method::from_str(&args.opt_or("method", "mcma_competitive"))?;
+    let ctx = Context::load(run_config(args)?)?;
+    let bench = ctx.man.bench(bench_name)?.clone();
+    let bank = ctx.bank(&bench, &[method])?;
+    let e = eval::eval_one(&ctx, &bench, &bank, method)?;
+
+    let force = match args.opt("case") {
+        Some("1") => Some(BufferCase::AllResident),
+        Some("2") => Some(BufferCase::StreamAlways),
+        Some("3") => Some(BufferCase::OneResident),
+        Some(other) => anyhow::bail!("--case must be 1|2|3, got {other}"),
+        None => None,
+    };
+    let benchfn = mcma::benchmarks::by_name(bench_name)?;
+    let clf_topo = if method.is_mcma() { &bench.clfn_topology } else { &bench.clf2_topology };
+    let approx_topos: Vec<Vec<usize>> =
+        (0..bank.n_approx(method)).map(|_| bench.approx_topology.clone()).collect();
+    let sim = mcma::npu::NpuSim::new(ctx.cfg.npu, clf_topo, &approx_topos, benchfn.cpu_cycles());
+    let r = sim.simulate(&e.out.plan.routes, force);
+
+    println!("benchmark / method : {} / {}", bench_name, method.label());
+    println!("buffer case        : {:?}", force);
+    println!("samples            : {}", r.n);
+    println!("cycles (approx)    : {:.0}", r.cycles);
+    println!("cycles (cpu-only)  : {:.0}", r.cycles_cpu_only);
+    println!("  classifier       : {:.0}", r.cycles_classifier);
+    println!("  approximators    : {:.0}", r.cycles_approx);
+    println!("  cpu fallback     : {:.0}", r.cycles_cpu_fallback);
+    println!("  weight switches  : {:.0} ({} switches)", r.cycles_weight_switch, r.weight_switches);
+    println!("speedup vs cpu     : {:.3}x", r.speedup_vs_cpu());
+    println!("energy reduction   : {:.3}x", r.energy_reduction_vs_cpu());
+    Ok(())
+}

@@ -1,0 +1,317 @@
+//! Pure-Rust MLP inference.
+//!
+//! Two roles: (1) cross-check the PJRT executables bit-for-bit-ish against
+//! an independent implementation (integration tests + golden vectors from
+//! the Python build), and (2) a fallback execution engine used by the
+//! coordinator when `ExecMode::Native` is selected — useful for profiling
+//! the L3 logic without PJRT in the loop, and as the perf baseline the
+//! PJRT path is compared against in `benches/hotpath.rs`.
+//!
+//! Layout matches the artifacts: weights row-major `(fan_in, fan_out)`,
+//! sigmoid hidden layers, linear output (the NPU PE activation scheme).
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn new(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+}
+
+/// One dense layer: `y = act(x W + b)`.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub w: Matrix,       // (fan_in, fan_out)
+    pub b: Vec<f32>,     // (fan_out,)
+}
+
+/// Multilayer perceptron with sigmoid hidden layers and linear output.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Layer>,
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+impl Mlp {
+    pub fn new(layers: Vec<Layer>) -> Self {
+        for pair in layers.windows(2) {
+            assert_eq!(
+                pair[0].w.cols, pair[1].w.rows,
+                "layer fan-out must match next layer fan-in"
+            );
+        }
+        Mlp { layers }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.layers.first().map(|l| l.w.rows).unwrap_or(0)
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.layers.last().map(|l| l.w.cols).unwrap_or(0)
+    }
+
+    /// Topology as `[in, hidden..., out]`.
+    pub fn topology(&self) -> Vec<usize> {
+        let mut t: Vec<usize> = self.layers.iter().map(|l| l.w.rows).collect();
+        t.push(self.n_out());
+        t
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w.data.len() + l.b.len()).sum()
+    }
+
+    /// Forward one sample.
+    pub fn forward1(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_in());
+        let mut h = x.to_vec();
+        let last = self.layers.len() - 1;
+        for (i, layer) in self.layers.iter().enumerate() {
+            h = dense(&h, layer, i < last);
+        }
+        h
+    }
+
+    /// Forward a batch laid out row-major `(n, n_in)` into `(n, n_out)`.
+    /// Scratch buffers are reused across rows — no allocation per sample
+    /// beyond the output (§Perf L3: native fallback hot loop).
+    pub fn forward_batch(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let n_in = self.n_in();
+        assert_eq!(x.len(), n * n_in, "batch buffer size mismatch");
+        let n_out = self.n_out();
+        let mut out = vec![0.0f32; n * n_out];
+        let widest = self.layers.iter().map(|l| l.w.cols.max(l.w.rows)).max().unwrap_or(0);
+        let mut h = vec![0.0f32; widest];
+        let mut h2 = vec![0.0f32; widest];
+        let last = self.layers.len() - 1;
+        for i in 0..n {
+            let row = &x[i * n_in..(i + 1) * n_in];
+            h[..n_in].copy_from_slice(row);
+            let mut cur = n_in;
+            for (li, layer) in self.layers.iter().enumerate() {
+                debug_assert_eq!(cur, layer.w.rows);
+                dense_into(&h[..cur], layer, li < last, &mut h2[..layer.w.cols]);
+                std::mem::swap(&mut h, &mut h2);
+                cur = layer.w.cols;
+            }
+            out[i * n_out..(i + 1) * n_out].copy_from_slice(&h[..n_out]);
+        }
+        out
+    }
+
+    /// Argmax class per row of a batched forward.
+    pub fn classify_batch(&self, x: &[f32], n: usize) -> Vec<usize> {
+        let logits = self.forward_batch(x, n);
+        argmax_rows(&logits, n, self.n_out())
+    }
+}
+
+fn dense(x: &[f32], layer: &Layer, sig: bool) -> Vec<f32> {
+    let mut out = vec![0.0f32; layer.w.cols];
+    dense_into(x, layer, sig, &mut out);
+    out
+}
+
+#[inline]
+fn dense_into(x: &[f32], layer: &Layer, sig: bool, out: &mut [f32]) {
+    let cols = layer.w.cols;
+    out.copy_from_slice(&layer.b);
+    // Row-major W: accumulate x[r] * W[r, :] — streams W linearly (§Perf).
+    for (r, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let wrow = layer.w.row(r);
+        for c in 0..cols {
+            out[c] += xv * wrow[c];
+        }
+    }
+    if sig {
+        for v in out.iter_mut() {
+            *v = sigmoid(*v);
+        }
+    }
+}
+
+/// Row-wise argmax for a `(n, k)` row-major buffer.
+pub fn argmax_rows(logits: &[f32], n: usize, k: usize) -> Vec<usize> {
+    assert_eq!(logits.len(), n * k);
+    (0..n)
+        .map(|i| {
+            let row = &logits[i * k..(i + 1) * k];
+            let mut best = 0;
+            for j in 1..k {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Per-sample RMSE across output dims between two `(n, k)` buffers — the
+/// error definition shared with `python/compile/model.py::per_sample_error`.
+pub fn per_sample_rmse(pred: &[f32], truth: &[f32], n: usize, k: usize) -> Vec<f64> {
+    assert_eq!(pred.len(), n * k);
+    assert_eq!(truth.len(), n * k);
+    (0..n)
+        .map(|i| {
+            let mut s = 0.0f64;
+            for j in 0..k {
+                let d = (pred[i * k + j] - truth[i * k + j]) as f64;
+                s += d * d;
+            }
+            (s / k as f64).sqrt()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp() -> Mlp {
+        // 2 -> 2 -> 1, hand-computable.
+        Mlp::new(vec![
+            Layer { w: Matrix::new(2, 2, vec![1.0, 0.0, 0.0, 1.0]), b: vec![0.0, 0.0] },
+            Layer { w: Matrix::new(2, 1, vec![1.0, -1.0]), b: vec![0.5] },
+        ])
+    }
+
+    #[test]
+    fn forward1_hand_checked() {
+        let m = tiny_mlp();
+        let y = m.forward1(&[0.0, 0.0]);
+        // hidden = sigmoid([0,0]) = [0.5, 0.5]; out = 0.5 - 0.5 + 0.5 = 0.5
+        assert!((y[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn forward_batch_matches_forward1() {
+        let m = tiny_mlp();
+        let xs = [0.1f32, -0.4, 2.0, 0.3, -1.0, 1.0];
+        let batch = m.forward_batch(&xs, 3);
+        for i in 0..3 {
+            let single = m.forward1(&xs[i * 2..(i + 1) * 2]);
+            assert_eq!(batch[i], single[0]);
+        }
+    }
+
+    #[test]
+    fn topology_and_params() {
+        let m = tiny_mlp();
+        assert_eq!(m.topology(), vec![2, 2, 1]);
+        assert_eq!(m.n_params(), 4 + 2 + 2 + 1);
+    }
+
+    #[test]
+    fn argmax_rows_ties_go_first() {
+        assert_eq!(argmax_rows(&[1.0, 1.0, 0.0, 2.0], 2, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn per_sample_rmse_hand_checked() {
+        let e = per_sample_rmse(&[0.0, 0.0, 3.0, 4.0], &[0.0, 0.0, 0.0, 0.0], 2, 2);
+        assert!((e[0] - 0.0).abs() < 1e-12);
+        assert!((e[1] - (12.5f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "fan-out")]
+    fn mismatched_layers_rejected() {
+        Mlp::new(vec![
+            Layer { w: Matrix::new(2, 3, vec![0.0; 6]), b: vec![0.0; 3] },
+            Layer { w: Matrix::new(2, 1, vec![0.0; 2]), b: vec![0.0] },
+        ]);
+    }
+
+    /// Property: the optimised row-major streaming forward equals a naive
+    /// per-neuron dot-product implementation on random nets.
+    #[test]
+    fn prop_forward_matches_naive() {
+        use crate::util::{prop, rng::Rng};
+        prop::check(
+            "mlp-forward-vs-naive",
+            100,
+            0x4E7,
+            |r: &mut Rng| {
+                let depth = 1 + r.below(3) as usize;
+                let mut topo = vec![1 + r.below(12) as usize];
+                for _ in 0..depth {
+                    topo.push(1 + r.below(12) as usize);
+                }
+                let layers: Vec<Layer> = topo
+                    .windows(2)
+                    .map(|w| Layer {
+                        w: Matrix::new(
+                            w[0],
+                            w[1],
+                            prop::gens::matrix(r, w[0], w[1], -2.0, 2.0),
+                        ),
+                        b: prop::gens::vec_f32(r, w[1], -1.0, 1.0),
+                    })
+                    .collect();
+                let n = 1 + r.below(20) as usize;
+                let x = prop::gens::vec_f32(r, n * topo[0], -2.0, 2.0);
+                (layers, x, n)
+            },
+            |(layers, x, n)| {
+                let mlp = Mlp::new(layers.clone());
+                let fast = mlp.forward_batch(x, *n);
+                // Naive: per neuron dot product, column access pattern.
+                let naive = {
+                    let mut cur: Vec<Vec<f32>> = (0..*n)
+                        .map(|i| x[i * mlp.n_in()..(i + 1) * mlp.n_in()].to_vec())
+                        .collect();
+                    let last = layers.len() - 1;
+                    for (li, l) in layers.iter().enumerate() {
+                        cur = cur
+                            .iter()
+                            .map(|h| {
+                                (0..l.w.cols)
+                                    .map(|c| {
+                                        let mut s = l.b[c];
+                                        for (r_, &hv) in h.iter().enumerate() {
+                                            s += hv * l.w.at(r_, c);
+                                        }
+                                        if li < last { sigmoid(s) } else { s }
+                                    })
+                                    .collect()
+                            })
+                            .collect();
+                    }
+                    cur.concat()
+                };
+                prop::assert_close(&fast, &naive, 1e-5, 1e-5)
+            },
+        );
+    }
+}

@@ -1,0 +1,138 @@
+//! Per-MLP cycle cost derivation on the tile-of-PEs microarchitecture.
+//!
+//! One layer `(fan_in -> fan_out)` executes as:
+//!   * the bus streams `fan_in` input words from the input FIFO to the PEs
+//!     (`fan_in / bus_words_per_cycle` cycles, overlapped per pass);
+//!   * PEs compute neurons in parallel: `ceil(fan_out / n_pes)` passes,
+//!     each pass = `ceil(fan_in / macs_per_pe_cycle)` MAC cycles + the
+//!     activation-unit latency;
+//!   * `fan_out` results stream to the output FIFO.
+//!
+//! The per-layer cycle count is `max(compute, io)` — the bus and the MAC
+//! array overlap (Fig. 5's FIFO decoupling) — summed over layers.  In
+//! Case 2 (weights never resident) add `weight_words / refill_bw` streaming
+//! cycles per inference (`stream_cycles`).
+
+use crate::config::NpuConfig;
+
+/// Cycle/energy-relevant counts for one layer.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub macs: u64,
+    pub compute_cycles: u64,
+    pub io_cycles: u64,
+    pub cycles: u64,
+}
+
+/// Whole-net cost.
+#[derive(Clone, Debug, Default)]
+pub struct MlpCost {
+    pub layers: Vec<LayerCost>,
+    /// Total pipeline cycles for one inference (sample-at-a-time, as the
+    /// NPU of [10] executes).
+    pub cycles: u64,
+    pub macs: u64,
+    /// Words moved over the internal bus (inputs + outputs per layer).
+    pub bus_words: u64,
+    /// Total weight words (buffer residency / refill cost).
+    pub weight_words: usize,
+    /// Extra cycles per inference when weights must stream from cache
+    /// (§III.D Case 2).
+    pub stream_cycles: u64,
+}
+
+/// Derive the cost of an MLP topology on `cfg`'s tile.
+pub fn mlp_cost(cfg: &NpuConfig, topology: &[usize]) -> MlpCost {
+    assert!(topology.len() >= 2, "topology needs at least in+out");
+    let n_pes = (cfg.pes_per_tile * cfg.n_tiles).max(1) as u64;
+    let mut out = MlpCost::default();
+    for w in topology.windows(2) {
+        let (fan_in, fan_out) = (w[0], w[1]);
+        let macs = (fan_in * fan_out) as u64;
+        let passes = (fan_out as u64).div_ceil(n_pes);
+        let mac_cycles = (fan_in as u64).div_ceil(cfg.macs_per_pe_cycle);
+        let compute = passes * (mac_cycles + cfg.act_latency);
+        let io = ((fan_in + fan_out) as u64).div_ceil(cfg.bus_words_per_cycle);
+        let cycles = compute.max(io);
+        out.layers.push(LayerCost { fan_in, fan_out, macs, compute_cycles: compute, io_cycles: io, cycles });
+        out.cycles += cycles;
+        out.macs += macs;
+        out.bus_words += (fan_in + fan_out) as u64;
+        out.weight_words += fan_in * fan_out + fan_out;
+    }
+    out.stream_cycles =
+        (out.weight_words as u64).div_ceil(cfg.cache_refill_words_per_cycle.max(1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn hand_checked_small_layer() {
+        // 1 tile x 8 PEs, 1 MAC/cycle, act 2, bus 4.
+        let cfg = NpuConfig { n_tiles: 1, ..Default::default() };
+        let c = mlp_cost(&cfg, &[6, 8, 1]);
+        // Layer 1: 8 neurons on 8 PEs = 1 pass x (6 + 2) = 8 compute;
+        // io = ceil((6+8)/4) = 4 -> 8 cycles.
+        assert_eq!(c.layers[0].cycles, 8);
+        // Layer 2: 1 neuron, 1 pass x (8 + 2) = 10; io = ceil(9/4) = 3 -> 10.
+        assert_eq!(c.layers[1].cycles, 10);
+        assert_eq!(c.cycles, 18);
+        assert_eq!(c.macs, 48 + 8);
+        assert_eq!(c.weight_words, 6 * 8 + 8 + 8 + 1);
+    }
+
+    #[test]
+    fn more_pes_never_slower() {
+        let a = mlp_cost(&NpuConfig { pes_per_tile: 2, ..Default::default() }, &[64, 16, 64]);
+        let b = mlp_cost(&NpuConfig { pes_per_tile: 32, ..Default::default() }, &[64, 16, 64]);
+        assert!(b.cycles <= a.cycles);
+    }
+
+    /// Properties: cycles bounded below by both pure-compute and pure-IO;
+    /// MAC count is exactly sum(fan_in*fan_out); costs are monotone in
+    /// topology width.
+    #[test]
+    fn prop_cost_invariants() {
+        prop::check(
+            "mlp-cost-invariants",
+            200,
+            0x57A75,
+            |r: &mut Rng| {
+                let depth = 2 + r.below(3) as usize;
+                let topo: Vec<usize> =
+                    (0..depth).map(|_| 1 + r.below(64) as usize).collect();
+                topo
+            },
+            |topo| {
+                let cfg = NpuConfig::default();
+                let c = mlp_cost(&cfg, topo);
+                let macs: u64 =
+                    topo.windows(2).map(|w| (w[0] * w[1]) as u64).sum();
+                if c.macs != macs {
+                    return Err(format!("macs {} != {macs}", c.macs));
+                }
+                for l in &c.layers {
+                    if l.cycles < l.compute_cycles.max(l.io_cycles) {
+                        return Err("cycles below max(compute, io)".into());
+                    }
+                }
+                // Widening any hidden layer cannot reduce cycles.
+                if topo.len() >= 3 {
+                    let mut wider = topo.clone();
+                    wider[1] += 8;
+                    let cw = mlp_cost(&cfg, &wider);
+                    if cw.cycles < c.cycles {
+                        return Err("wider net got cheaper".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

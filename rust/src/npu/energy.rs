@@ -1,0 +1,62 @@
+//! Energy model: per-event pJ constants applied to the cost counts.
+//!
+//! Constants (`config::NpuConfig`) are order-of-magnitude 45 nm figures in
+//! the spirit of [10]'s NPU evaluation: a MAC ~1 pJ, on-chip SRAM access a
+//! few pJ/word, an OoO CPU cycle a few hundred pJ.  Fig. 8 reports RATIOS
+//! normalised to the one-pass method, so only the relative magnitudes
+//! (CPU cycle >> MAC) matter for reproducing the paper's shape.
+
+use crate::config::NpuConfig;
+
+use super::cost::MlpCost;
+
+/// Applies the config's energy constants to cost counts.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    cfg: NpuConfig,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: NpuConfig) -> Self {
+        EnergyModel { cfg }
+    }
+
+    /// Energy of one MLP inference on the NPU (pJ): MACs + bus traffic.
+    pub fn mlp(&self, cost: &MlpCost) -> f64 {
+        cost.macs as f64 * self.cfg.e_mac_pj + cost.bus_words as f64 * self.cfg.e_bus_word_pj
+    }
+
+    /// Energy of refilling `cycles`-worth of weights from cache (pJ).
+    pub fn weight_refill(&self, refill_cycles: u64, cfg: &NpuConfig) -> f64 {
+        (refill_cycles * cfg.cache_refill_words_per_cycle) as f64 * cfg.e_cache_word_pj
+    }
+
+    /// Energy of one precise CPU evaluation (pJ).
+    pub fn cpu(&self, cpu_cycles: u64) -> f64 {
+        cpu_cycles as f64 * self.cfg.e_cpu_cycle_pj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::npu::cost::mlp_cost;
+
+    #[test]
+    fn npu_inference_cheaper_than_cpu_for_paper_nets() {
+        let cfg = NpuConfig::default();
+        let e = EnergyModel::new(cfg);
+        // Largest paper net (jmeint approximator) vs its CPU cost.
+        let cost = mlp_cost(&cfg, &[18, 32, 16, 2]);
+        assert!(e.mlp(&cost) < e.cpu(800), "NPU {} vs CPU {}", e.mlp(&cost), e.cpu(800));
+    }
+
+    #[test]
+    fn energy_scales_with_macs() {
+        let cfg = NpuConfig::default();
+        let e = EnergyModel::new(cfg);
+        let small = mlp_cost(&cfg, &[2, 4, 1]);
+        let big = mlp_cost(&cfg, &[64, 16, 64]);
+        assert!(e.mlp(&big) > e.mlp(&small));
+    }
+}

@@ -1,0 +1,210 @@
+//! Cycle-level NPU simulator + energy model (paper §III.D, Fig. 5; used to
+//! regenerate Fig. 8's speedup / energy-reduction bars).
+//!
+//! The microarchitecture follows the NPU of Esmaeilzadeh et al. [10] that
+//! the paper builds on: tiles of PEs behind input/output FIFOs and an
+//! internal bus; each PE computes one neuron at a time (a MAC loop over the
+//! fan-in, then the activation unit); weights live in per-PE buffers fed
+//! from an on-chip cache.  The MCMA extension is a controller that reads
+//! the classifier's prediction and switches the approximator weight set
+//! (`coordinator::WeightCache` models the §III.D residency cases).
+//!
+//! The paper estimates MCMA performance "by scaling the performance of NPU
+//! in [10] based on the invocation"; this simulator reproduces that scaling
+//! law from explicit per-layer cycle counts instead of a single scalar, so
+//! batching, topology and weight-switch effects are all first-class.
+
+pub mod cost;
+pub mod energy;
+
+pub use cost::{mlp_cost, LayerCost, MlpCost};
+pub use energy::EnergyModel;
+
+use crate::config::NpuConfig;
+use crate::coordinator::{BufferCase, Route, WeightCache};
+
+/// Result of simulating one routed trace.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub n: usize,
+    /// Total cycles with the approximate pipeline (classifier on NPU for
+    /// every sample; approximator or CPU per routing).
+    pub cycles: f64,
+    /// Total cycles if every sample ran precisely on the CPU (the paper's
+    /// "CPU only" baseline).
+    pub cycles_cpu_only: f64,
+    /// Energy (pJ) with the approximate pipeline.
+    pub energy_pj: f64,
+    /// Energy (pJ) CPU-only.
+    pub energy_cpu_only_pj: f64,
+    /// Cycle breakdown.
+    pub cycles_classifier: f64,
+    pub cycles_approx: f64,
+    pub cycles_cpu_fallback: f64,
+    pub cycles_weight_switch: f64,
+    pub weight_switches: u64,
+}
+
+impl SimResult {
+    /// Speedup over running everything on the CPU.
+    pub fn speedup_vs_cpu(&self) -> f64 {
+        if self.cycles == 0.0 {
+            0.0
+        } else {
+            self.cycles_cpu_only / self.cycles
+        }
+    }
+
+    /// Energy reduction over CPU-only.
+    pub fn energy_reduction_vs_cpu(&self) -> f64 {
+        if self.energy_pj == 0.0 {
+            0.0
+        } else {
+            self.energy_cpu_only_pj / self.energy_pj
+        }
+    }
+}
+
+/// The simulator: NPU config + per-net costs, applied to a routing trace.
+pub struct NpuSim {
+    pub cfg: NpuConfig,
+    pub clf_cost: MlpCost,
+    pub approx_costs: Vec<MlpCost>,
+    /// Precise CPU cycles per sample for this benchmark.
+    pub cpu_cycles: u64,
+    energy: EnergyModel,
+}
+
+impl NpuSim {
+    pub fn new(
+        cfg: NpuConfig,
+        clf_topology: &[usize],
+        approx_topologies: &[Vec<usize>],
+        cpu_cycles: u64,
+    ) -> Self {
+        let clf_cost = mlp_cost(&cfg, clf_topology);
+        let approx_costs = approx_topologies.iter().map(|t| mlp_cost(&cfg, t)).collect();
+        let energy = EnergyModel::new(cfg);
+        NpuSim { cfg, clf_cost, approx_costs, cpu_cycles, energy }
+    }
+
+    /// Simulate a routed trace in arrival order.  `force_case` overrides
+    /// the weight-buffer residency classification (ablations).
+    pub fn simulate(&self, routes: &[Route], force_case: Option<BufferCase>) -> SimResult {
+        let words: Vec<usize> = self.approx_costs.iter().map(|c| c.weight_words).collect();
+        let mut wc = WeightCache::new(&self.cfg, words);
+        if let Some(case) = force_case {
+            wc.force_case(case);
+        }
+        let stream_weights = wc.case() == BufferCase::StreamAlways;
+
+        let mut r = SimResult { n: routes.len(), ..Default::default() };
+        for route in routes {
+            // The classifier screens EVERY sample on the NPU (Fig. 5 stages
+            // 1-3); this is the MCMA overhead one-pass also pays.
+            r.cycles_classifier += self.clf_cost.cycles as f64;
+            r.energy_pj += self.energy.mlp(&self.clf_cost);
+            match route {
+                Route::Approx(k) => {
+                    let switch = wc.access(*k);
+                    r.cycles_weight_switch += switch as f64;
+                    let cost = &self.approx_costs[*k];
+                    let mut cyc = cost.cycles;
+                    if stream_weights {
+                        cyc += cost.stream_cycles;
+                    }
+                    r.cycles_approx += cyc as f64;
+                    r.energy_pj += self.energy.mlp(cost)
+                        + self.energy.weight_refill(switch, &self.cfg)
+                        + self.cfg.e_invoke_pj;
+                }
+                Route::Cpu => {
+                    r.cycles_cpu_fallback += self.cpu_cycles as f64 / self.cfg.clock_ratio;
+                    r.energy_pj += self.cpu_cycles as f64 * self.cfg.e_cpu_cycle_pj;
+                }
+            }
+            r.cycles_cpu_only += self.cpu_cycles as f64 / self.cfg.clock_ratio;
+            r.energy_cpu_only_pj += self.cpu_cycles as f64 * self.cfg.e_cpu_cycle_pj;
+        }
+        r.weight_switches = wc.switches;
+        r.cycles = r.cycles_classifier
+            + r.cycles_approx
+            + r.cycles_cpu_fallback
+            + r.cycles_weight_switch;
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routes(inv: usize, cpu: usize) -> Vec<Route> {
+        let mut v = vec![Route::Approx(0); inv];
+        v.extend(vec![Route::Cpu; cpu]);
+        v
+    }
+
+    fn sim() -> NpuSim {
+        NpuSim::new(
+            NpuConfig::default(),
+            &[6, 8, 2],
+            &[vec![6, 8, 1], vec![6, 8, 1], vec![6, 8, 1]],
+            2000,
+        )
+    }
+
+    #[test]
+    fn higher_invocation_higher_speedup() {
+        let s = sim();
+        let lo = s.simulate(&routes(100, 900), None);
+        let hi = s.simulate(&routes(900, 100), None);
+        assert!(hi.speedup_vs_cpu() > lo.speedup_vs_cpu(),
+            "hi {} <= lo {}", hi.speedup_vs_cpu(), lo.speedup_vs_cpu());
+        assert!(hi.energy_reduction_vs_cpu() > lo.energy_reduction_vs_cpu());
+    }
+
+    #[test]
+    fn all_cpu_slower_than_cpu_only() {
+        // Classifier screening makes the approximate pipeline strictly
+        // worse when nothing is ever invoked.
+        let s = sim();
+        let r = s.simulate(&routes(0, 500), None);
+        assert!(r.speedup_vs_cpu() < 1.0);
+        assert_eq!(r.weight_switches, 0);
+    }
+
+    #[test]
+    fn all_invoked_beats_cpu_when_npu_cheaper() {
+        let s = sim();
+        let r = s.simulate(&routes(1000, 0), None);
+        assert!(r.speedup_vs_cpu() > 1.0, "speedup {}", r.speedup_vs_cpu());
+        assert!(r.energy_reduction_vs_cpu() > 1.0);
+    }
+
+    #[test]
+    fn alternating_routes_charge_switches_in_case3() {
+        let mut cfg = NpuConfig::default();
+        cfg.weight_buffer_words = 16; // tiny: only one approximator resident
+        let s = NpuSim::new(cfg, &[6, 8, 2],
+                            &[vec![6, 8, 1], vec![6, 8, 1]], 2000);
+        let trace: Vec<Route> =
+            (0..100).map(|i| Route::Approx(i % 2)).collect();
+        let r = s.simulate(&trace, None);
+        assert_eq!(r.weight_switches, 100);
+        assert!(r.cycles_weight_switch > 0.0);
+        let forced = s.simulate(&trace, Some(BufferCase::AllResident));
+        assert_eq!(forced.weight_switches, 0);
+        assert!(forced.cycles < r.cycles);
+    }
+
+    #[test]
+    fn cycles_decompose() {
+        let s = sim();
+        let r = s.simulate(&routes(300, 200), None);
+        let sum = r.cycles_classifier + r.cycles_approx + r.cycles_cpu_fallback
+            + r.cycles_weight_switch;
+        assert!((r.cycles - sum).abs() < 1e-9);
+        assert_eq!(r.n, 500);
+    }
+}

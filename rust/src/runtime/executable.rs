@@ -1,0 +1,122 @@
+//! A compiled batched-MLP forward plus device-resident weight sets.
+
+use std::path::Path;
+
+use crate::nn::Mlp;
+
+use super::Runtime;
+
+/// Device-resident weights for one net (one buffer per W/b parameter, in
+/// the exported parameter order W1, b1, W2, b2, ...).
+pub struct WeightSet {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    /// Total parameter words (for the NPU weight-switch model).
+    pub n_words: usize,
+}
+
+impl WeightSet {
+    /// Upload an `nn::Mlp`'s parameters to the device once.
+    pub fn upload(rt: &Runtime, mlp: &Mlp) -> crate::Result<Self> {
+        let mut buffers = Vec::with_capacity(mlp.layers.len() * 2);
+        let mut n_words = 0usize;
+        for layer in &mlp.layers {
+            let w = rt
+                .client()
+                .buffer_from_host_buffer::<f32>(
+                    &layer.w.data,
+                    &[layer.w.rows, layer.w.cols],
+                    None,
+                )
+                .map_err(|e| anyhow::anyhow!("uploading weights: {e:?}"))?;
+            buffers.push(w);
+            let b = rt
+                .client()
+                .buffer_from_host_buffer::<f32>(&layer.b, &[layer.b.len()], None)
+                .map_err(|e| anyhow::anyhow!("uploading bias: {e:?}"))?;
+            buffers.push(b);
+            n_words += layer.w.data.len() + layer.b.len();
+        }
+        Ok(WeightSet { buffers, n_words })
+    }
+}
+
+/// One compiled `f(x, W1, b1, ...) -> (y,)` executable at a fixed batch.
+pub struct LoadedForward {
+    exe: xla::PjRtLoadedExecutable,
+    rt: Runtime,
+    pub batch: usize,
+    pub n_in: usize,
+    pub n_out: usize,
+    /// Weight/bias parameter count (2 per layer).
+    pub n_weight_params: usize,
+}
+
+impl LoadedForward {
+    /// Load + compile `path`, validating against the expected topology.
+    pub fn load(
+        rt: &Runtime,
+        path: &Path,
+        batch: usize,
+        topology: &[usize],
+    ) -> crate::Result<Self> {
+        let exe = rt.load_hlo(path)?;
+        Ok(LoadedForward {
+            exe,
+            rt: rt.clone(),
+            batch,
+            n_in: topology[0],
+            n_out: *topology.last().unwrap(),
+            n_weight_params: (topology.len() - 1) * 2,
+        })
+    }
+
+    /// Execute on exactly `self.batch` rows already laid out in `x`.
+    ///
+    /// `x` longer than one batch is rejected; shorter is padded with zeros.
+    /// Returns `(rows, n_out)` with only the first `n` rows meaningful.
+    pub fn run(&self, x: &[f32], n: usize, weights: &WeightSet) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(n <= self.batch, "batch overflow: {n} > {}", self.batch);
+        anyhow::ensure!(x.len() == n * self.n_in, "input buffer size mismatch");
+        anyhow::ensure!(
+            weights.buffers.len() == self.n_weight_params,
+            "weight parameter count mismatch: {} vs {}",
+            weights.buffers.len(),
+            self.n_weight_params
+        );
+
+        // Upload activations (padded to the compiled batch).
+        let xbuf = if n == self.batch {
+            self.rt
+                .client()
+                .buffer_from_host_buffer::<f32>(x, &[self.batch, self.n_in], None)
+        } else {
+            let mut padded = vec![0.0f32; self.batch * self.n_in];
+            padded[..x.len()].copy_from_slice(x);
+            self.rt
+                .client()
+                .buffer_from_host_buffer::<f32>(&padded, &[self.batch, self.n_in], None)
+        }
+        .map_err(|e| anyhow::anyhow!("uploading activations: {e:?}"))?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.buffers.len());
+        args.push(&xbuf);
+        args.extend(weights.buffers.iter());
+
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        // Exported with return_tuple=True -> unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("untuple: {e:?}"))?;
+        let mut values = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+        values.truncate(n * self.n_out);
+        Ok(values)
+    }
+}

@@ -1,0 +1,60 @@
+//! PJRT runtime: load the AOT-lowered HLO text, compile once, execute on
+//! the hot path.
+//!
+//! The exported modules are `f(x[B,in], W1, b1, ..., Wk, bk) -> (y[B,out],)`
+//! — weights are RUNTIME PARAMETERS, so one compiled executable serves all
+//! n approximators of a benchmark; switching approximators swaps device
+//! buffers, never recompiles (the XLA analogue of the paper's §III.D
+//! weight-buffer shipping).
+//!
+//! Perf notes (§Perf L3):
+//! * weights are uploaded once per net as device-resident `PjRtBuffer`s
+//!   (`WeightSet`), then every `execute_b` call passes borrowed buffers —
+//!   only the activations cross the host/device boundary per call;
+//! * partial batches are padded to the compiled batch size and sliced on
+//!   the way back; a B=1 variant avoids padding waste in latency mode.
+
+pub mod executable;
+pub mod model_bank;
+
+pub use executable::{LoadedForward, WeightSet};
+pub use model_bank::{ModelBank, Role};
+
+use std::sync::Arc;
+
+/// Shared PJRT CPU client (cheap to clone: the underlying client is
+/// reference-counted in the C layer; we wrap in Arc for rust-side clarity).
+#[derive(Clone)]
+pub struct Runtime {
+    client: Arc<xla::PjRtClient>,
+}
+
+impl Runtime {
+    /// Create the PJRT CPU client.
+    pub fn cpu() -> crate::Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client: Arc::new(client) })
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO text file and compile it.
+    pub fn load_hlo(&self, path: &std::path::Path) -> crate::Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-UTF8 path {}", path.display()))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}

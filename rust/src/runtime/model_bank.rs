@@ -1,0 +1,207 @@
+//! The model bank: every compiled executable + device weight set a
+//! benchmark/method pair needs at run time, loaded once up front.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::config::Method;
+use crate::formats::{BenchManifest, Manifest, WeightsFile};
+use crate::nn::Mlp;
+
+use super::{LoadedForward, Runtime, WeightSet};
+
+/// Which network an executable implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// The approximator MLP (paper Fig. 6 "Approximator Topology").
+    Approx,
+    /// Binary safe/unsafe classifier (one-pass, iterative, MCCA stages).
+    Clf2,
+    /// Multiclass classifier (MCMA): n+1 output classes.
+    ClfN,
+}
+
+impl Role {
+    pub fn artifact_key(self) -> &'static str {
+        match self {
+            Role::Approx => "approx",
+            Role::Clf2 => "clf2",
+            Role::ClfN => "clfN",
+        }
+    }
+}
+
+/// Compiled executables (per role x batch) + device weights for one
+/// benchmark.  Weight sets are keyed by (method, role, index) where index
+/// enumerates approximators / cascade stages.
+pub struct ModelBank {
+    pub bench: String,
+    exes: HashMap<(Role, usize), LoadedForward>,
+    weights: HashMap<(Method, Role, usize), WeightSet>,
+    /// Host-side copies for the native fallback engine and NPU cost model.
+    pub host: WeightsFile,
+}
+
+impl ModelBank {
+    /// Load everything one benchmark needs for `methods` at `batches`.
+    /// `rt = None` loads host weights only (native exec mode: no PJRT
+    /// compilation, no device uploads).
+    pub fn load(
+        rt: Option<&Runtime>,
+        man: &Manifest,
+        bench: &BenchManifest,
+        methods: &[Method],
+        batches: &[usize],
+    ) -> crate::Result<Self> {
+        Self::load_with_weights(rt, man, bench, methods, batches, &man.weights_path(&bench.name))
+    }
+
+    /// Like `load` but from an explicit weights file (Fig. 7c loads the
+    /// per-error-bound retrained variants `weights_bound_*.bin`).
+    pub fn load_with_weights(
+        rt: Option<&Runtime>,
+        man: &Manifest,
+        bench: &BenchManifest,
+        methods: &[Method],
+        batches: &[usize],
+        weights_path: &Path,
+    ) -> crate::Result<Self> {
+        let host = WeightsFile::load(weights_path)?;
+        let mut exes = HashMap::new();
+        let mut weights = HashMap::new();
+
+        let Some(rt) = rt else {
+            return Ok(ModelBank { bench: bench.name.clone(), exes, weights, host });
+        };
+
+        let need_clf2 = methods.iter().any(|m| !m.is_mcma());
+        let need_clfn = methods.iter().any(|m| m.is_mcma());
+
+        for &b in batches {
+            exes.insert(
+                (Role::Approx, b),
+                LoadedForward::load(
+                    rt,
+                    &man.hlo_path(&bench.name, "approx", b),
+                    b,
+                    &bench.approx_topology,
+                )?,
+            );
+            if need_clf2 {
+                exes.insert(
+                    (Role::Clf2, b),
+                    LoadedForward::load(
+                        rt,
+                        &man.hlo_path(&bench.name, "clf2", b),
+                        b,
+                        &bench.clf2_topology,
+                    )?,
+                );
+            }
+            if need_clfn {
+                exes.insert(
+                    (Role::ClfN, b),
+                    LoadedForward::load(
+                        rt,
+                        &man.hlo_path(&bench.name, "clfN", b),
+                        b,
+                        &bench.clfn_topology,
+                    )?,
+                );
+            }
+        }
+
+        for &m in methods {
+            let mw = host.get(m.key())?;
+            for (i, approx) in mw.approximators.iter().enumerate() {
+                weights.insert((m, Role::Approx, i), WeightSet::upload(rt, approx)?);
+            }
+            let clf_role = if m.is_mcma() { Role::ClfN } else { Role::Clf2 };
+            for (i, clf) in mw.classifiers.iter().enumerate() {
+                weights.insert((m, clf_role, i), WeightSet::upload(rt, clf)?);
+            }
+        }
+
+        Ok(ModelBank { bench: bench.name.clone(), exes, weights, host })
+    }
+
+    /// Build a native-only bank straight from host weights (no files, no
+    /// PJRT) — lets unit tests craft classifiers/approximators with known
+    /// behaviour and exercise the coordinator's routing semantics.
+    pub fn from_host(bench: &str, host: WeightsFile) -> Self {
+        ModelBank {
+            bench: bench.to_string(),
+            exes: HashMap::new(),
+            weights: HashMap::new(),
+            host,
+        }
+    }
+
+    /// The executable for `role` at exactly batch `b`.
+    pub fn exe(&self, role: Role, b: usize) -> crate::Result<&LoadedForward> {
+        self.exes
+            .get(&(role, b))
+            .ok_or_else(|| anyhow::anyhow!("no executable for {role:?} at batch {b}"))
+    }
+
+    /// Pick the compiled batch for `n` rows: the SMALLEST compiled size
+    /// >= n (padding one call is far cheaper than chunking into many
+    /// small dispatches — §Perf L3: routing groups are usually partial
+    /// batches, and n sequential B=1 executes cost ~n x the per-dispatch
+    /// overhead while one padded B=256 execute costs ~1x), falling back
+    /// to the largest size (chunked) when n exceeds everything.
+    pub fn best_batch(&self, role: Role, n: usize) -> usize {
+        let mut sizes: Vec<usize> =
+            self.exes.keys().filter(|(r, _)| *r == role).map(|(_, b)| *b).collect();
+        sizes.sort_unstable();
+        let n = n.max(1);
+        for &s in &sizes {
+            if s >= n {
+                return s;
+            }
+        }
+        *sizes.last().unwrap()
+    }
+
+    pub fn weight_set(&self, m: Method, role: Role, idx: usize) -> crate::Result<&WeightSet> {
+        self.weights
+            .get(&(m, role, idx))
+            .ok_or_else(|| anyhow::anyhow!("no weights for {m:?}/{role:?}[{idx}]"))
+    }
+
+    /// Host-side net (native engine / cost model).
+    pub fn host_mlp(&self, m: Method, role: Role, idx: usize) -> crate::Result<&Mlp> {
+        let mw = self.host.get(m.key())?;
+        match role {
+            Role::Approx => mw
+                .approximators
+                .get(idx)
+                .ok_or_else(|| anyhow::anyhow!("approximator {idx} out of range")),
+            Role::Clf2 | Role::ClfN => mw
+                .classifiers
+                .get(idx)
+                .ok_or_else(|| anyhow::anyhow!("classifier {idx} out of range")),
+        }
+    }
+
+    /// Number of approximators available for `m`.
+    pub fn n_approx(&self, m: Method) -> usize {
+        self.host
+            .methods
+            .get(m.key())
+            .map(|mw| mw.approximators.len())
+            .unwrap_or(0)
+    }
+
+    /// Does the artifact tree have this benchmark+method?
+    pub fn has_method(&self, m: Method) -> bool {
+        self.host.methods.contains_key(m.key())
+    }
+}
+
+/// Check that an artifacts directory looks complete for `bench`.
+pub fn artifacts_present(root: &Path, bench: &str) -> bool {
+    root.join(bench).join("weights.bin").exists()
+        && root.join(bench).join("test.bin").exists()
+        && root.join("manifest.json").exists()
+}

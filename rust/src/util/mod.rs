@@ -1,0 +1,12 @@
+//! Infrastructure substrates.
+//!
+//! The offline crate cache has no `rand`, `serde`, `tokio`, `criterion` or
+//! `proptest`; these modules stand in for them (see DESIGN.md
+//! "Substitutions").  Everything here is tested in its own module and used
+//! across the coordinator, the NPU simulator and the eval drivers.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

@@ -1,0 +1,100 @@
+//! Property-test harness (proptest substitute).
+//!
+//! `check` runs a property over `n` generated cases from seeded RNG streams;
+//! on failure it retries the same case once (to rule out flaky environment)
+//! and then panics with the exact seed so the case reproduces with
+//! `check_seed`.  No shrinking — generators here are small enough that the
+//! seed plus the Debug dump of the input is directly diagnosable.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` inputs drawn via `gen`. Panics on first failure
+/// with the reproducing seed.
+pub fn check<T, G, P>(name: &str, cases: u64, base_seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = base_seed ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property {name:?} failed on case {case} (seed {seed:#x}):\n  input: {input:?}\n  {msg}\n\
+                 reproduce with util::prop::check_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn check_seed<T, G, P>(seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    let input = gen(&mut rng);
+    if let Err(msg) = prop(&input) {
+        panic!("seed {seed:#x} still failing: {msg}\n  input: {input:?}");
+    }
+}
+
+/// Generator helpers.
+pub mod gens {
+    use super::Rng;
+
+    pub fn vec_f32(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..len).map(|_| rng.uniform(lo, hi) as f32).collect()
+    }
+
+    pub fn matrix(rng: &mut Rng, rows: usize, cols: usize, lo: f64, hi: f64) -> Vec<f32> {
+        vec_f32(rng, rows * cols, lo, hi)
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("element {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 64, 1, |r| (r.f64(), r.f64()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("addition not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 4, 2, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn assert_close_catches_mismatch() {
+        assert!(assert_close(&[1.0], &[1.0 + 1e-7], 1e-6, 0.0).is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+}

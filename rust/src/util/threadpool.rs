@@ -1,0 +1,154 @@
+//! Tiny fixed-size thread pool + scoped parallel map (tokio/rayon stand-in).
+//!
+//! The coordinator pipeline uses dedicated threads with mpsc channels
+//! (`coordinator::server`); this pool covers embarrassingly-parallel eval
+//! work (per-benchmark figure regeneration).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size worker pool. Jobs are FIFO. Dropping the pool joins workers.
+pub struct ThreadPool {
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        assert!(n > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let workers = (0..n)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                thread::spawn(move || loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(job) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::SeqCst);
+                        }
+                        Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx: Some(tx), workers, queued }
+    }
+
+    /// Submit a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::SeqCst);
+        self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
+    }
+
+    /// Busy-wait (with yield) until all submitted jobs finished.
+    pub fn wait_idle(&self) {
+        while self.queued.load(Ordering::SeqCst) > 0 {
+            thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Parallel map preserving order, using scoped threads (no 'static bound).
+/// Spawns `min(items, max_threads)` threads working over an atomic cursor.
+pub fn parallel_map<T, R, F>(items: &[T], max_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = max_threads.max(1).min(n);
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = Mutex::new(&mut out);
+    thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = f(&items[i]);
+                // Each index is written exactly once; the mutex only guards
+                // the &mut aliasing, contention is one lock per item.
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Number of worker threads to default to (leave a core for the OS).
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins() {
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<u64> = parallel_map(&Vec::<u64>::new(), 4, |&x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,106 @@
+//! Cross-language golden tests: the Rust precise implementations and the
+//! Rust MLP engine must agree with what the Python build computed.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, so unit test
+//! runs don't hard-depend on the build step).
+
+use mcma::benchmarks;
+use mcma::formats::Manifest;
+use mcma::util::json;
+
+fn artifacts() -> Option<Manifest> {
+    Manifest::load(&mcma::artifacts_dir()).ok()
+}
+
+fn golden() -> Option<json::Value> {
+    json::parse_file(&mcma::artifacts_dir().join("golden.json")).ok()
+}
+
+#[test]
+fn precise_functions_match_python_golden_vectors() {
+    let (Some(man), Some(g)) = (artifacts(), golden()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut checked = 0;
+    for (bench_name, entry) in g.as_obj().unwrap() {
+        let bench = man.bench(bench_name).unwrap();
+        let benchfn = benchmarks::by_name(bench_name).unwrap();
+        let xs = entry.req("x_raw").unwrap().as_arr().unwrap();
+        let ys = entry.req("y_norm").unwrap().as_arr().unwrap();
+        for (x, y_want) in xs.iter().zip(ys) {
+            let x: Vec<f32> = x.as_f32_vec().unwrap();
+            let y_want: Vec<f64> = y_want.as_f64_vec().unwrap();
+            let mut raw = vec![0.0f64; bench.n_out];
+            benchfn.eval(&x, &mut raw);
+            let mut norm = vec![0.0f32; bench.n_out];
+            bench.normalize_y_into(&raw, &mut norm);
+            for (j, (&got, &want)) in norm.iter().zip(&y_want).enumerate() {
+                // Inputs pass through f32; tolerate small drift but catch
+                // any real formula divergence.
+                assert!(
+                    (got as f64 - want).abs() < 2e-3,
+                    "{bench_name} golden mismatch at out[{j}]: {got} vs {want} (x={x:?})"
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(checked >= 8, "golden vectors missing ({checked} checked)");
+}
+
+#[test]
+fn native_mlp_matches_python_pallas_forward() {
+    let (Some(man), Some(g)) = (artifacts(), golden()) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    for (bench_name, entry) in g.as_obj().unwrap() {
+        let bench = man.bench(bench_name).unwrap();
+        let method = entry.req("mlp_method").unwrap().as_str().unwrap();
+        let wf = mcma::formats::WeightsFile::load(&man.weights_path(bench_name)).unwrap();
+        let mlp = &wf.get(method).unwrap().approximators[0];
+
+        let xin = entry.req("mlp_forward_in").unwrap().as_arr().unwrap();
+        let want = entry.req("mlp_forward_out").unwrap().as_arr().unwrap();
+        for (x, w) in xin.iter().zip(want) {
+            let x: Vec<f32> = x.as_f32_vec().unwrap();
+            let w: Vec<f64> = w.as_f64_vec().unwrap();
+            let got = mlp.forward1(&x);
+            assert_eq!(got.len(), bench.n_out);
+            for (j, (&g_, &w_)) in got.iter().zip(&w).enumerate() {
+                assert!(
+                    (g_ as f64 - w_).abs() < 1e-4,
+                    "{bench_name}/{method} forward mismatch out[{j}]: {g_} vs {w_}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dataset_precise_outputs_reproducible_from_raw_inputs() {
+    let Some(man) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // The dataset's stored Y_norm must equal our precise path applied to
+    // its stored raw inputs — the strongest cross-language contract.
+    for name in man.bench_names_ordered() {
+        let bench = man.bench(&name).unwrap();
+        let ds = mcma::formats::Dataset::load(&man.dataset_path(&name)).unwrap();
+        let benchfn = benchmarks::by_name(&name).unwrap();
+        let check_n = ds.n.min(200);
+        let mut raw = vec![0.0f64; bench.n_out];
+        let mut norm = vec![0.0f32; bench.n_out];
+        let mut worst = 0.0f64;
+        for i in 0..check_n {
+            benchfn.eval(ds.x_row(i), &mut raw);
+            bench.normalize_y_into(&raw, &mut norm);
+            for (a, b) in norm.iter().zip(ds.y_row(i)) {
+                worst = worst.max((*a as f64 - *b as f64).abs());
+            }
+        }
+        assert!(worst < 2e-3, "{name}: precise-path drift {worst}");
+    }
+}

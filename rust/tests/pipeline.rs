@@ -1,0 +1,167 @@
+//! Integration tests over real artifacts: PJRT-vs-native numerics, the
+//! whole coordinator, the MCCA cascade, the online server, and the NPU
+//! simulation consistency.  Skip (with a message) when artifacts are absent.
+
+use std::sync::Arc;
+
+use mcma::config::{BatchPolicy, ExecMode, Method, RunConfig};
+use mcma::coordinator::{Dispatcher, Route, Server, ServerConfig};
+use mcma::eval::{self, Context};
+use mcma::runtime::Role;
+use mcma::util::rng::Rng;
+
+fn ctx(exec: ExecMode) -> Option<Context> {
+    let cfg = RunConfig { exec, max_samples: 512, ..Default::default() };
+    Context::load(cfg).ok()
+}
+
+#[test]
+fn pjrt_matches_native_forward() {
+    let Some(ctx) = ctx(ExecMode::Pjrt) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // The PJRT path runs the Pallas-lowered HLO; the native path is an
+    // independent Rust implementation.  They must agree to f32 tolerance
+    // on every benchmark topology and both compiled batch sizes.
+    for name in ["bessel", "jpeg", "jmeint"] {
+        let bench = ctx.man.bench(name).unwrap().clone();
+        let method = Method::McmaCompetitive;
+        let bank = ctx.bank(&bench, &[method]).unwrap();
+        let dp = Dispatcher::new(&bench, &bank, method, ExecMode::Pjrt).unwrap();
+        let dn = Dispatcher::new(&bench, &bank, method, ExecMode::Native).unwrap();
+        let ds = ctx.dataset(name).unwrap();
+        let x = dp.normalize(&ds.x_raw, ds.n);
+        for role in [Role::Approx, Role::ClfN] {
+            for n in [1usize, 7, 256, ds.n.min(400)] {
+                let chunk = &x[..n * bench.n_in];
+                let a = dp.forward(role, 0, chunk, n).unwrap();
+                let b = dn.forward(role, 0, chunk, n).unwrap();
+                assert_eq!(a.len(), b.len());
+                for (i, (x_, y_)) in a.iter().zip(&b).enumerate() {
+                    assert!(
+                        (x_ - y_).abs() < 1e-4 + 1e-4 * y_.abs(),
+                        "{name} {role:?} n={n} elem {i}: pjrt {x_} vs native {y_}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn coordinator_end_to_end_all_methods() {
+    let Some(ctx) = ctx(ExecMode::Pjrt) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bench = ctx.man.bench("blackscholes").unwrap().clone();
+    let methods = Method::ALL;
+    let bank = ctx.bank(&bench, &methods).unwrap();
+    let ds = ctx.dataset("blackscholes").unwrap();
+    for m in methods {
+        let d = Dispatcher::new(&bench, &bank, m, ExecMode::Pjrt).unwrap();
+        let out = d.run_dataset(&ds).unwrap();
+        // Invariants: routing is total, outputs are filled, CPU samples
+        // carry zero served error (they are computed precisely).
+        assert_eq!(out.plan.routes.len(), ds.n);
+        assert_eq!(out.y_served.len(), ds.n * bench.n_out);
+        assert_eq!(out.err.len(), ds.n);
+        for (i, r) in out.plan.routes.iter().enumerate() {
+            match r {
+                Route::Cpu => assert_eq!(out.err[i], 0.0, "{} cpu err", m.key()),
+                Route::Approx(k) => assert!(*k < d.n_approx(), "{} class oob", m.key()),
+            }
+        }
+        let inv = out.metrics.invocation();
+        assert!((0.0..=1.0).contains(&inv));
+        assert!(out.metrics.true_invocation() <= inv + 1e-12);
+        // Quadrants partition the dataset.
+        let q = out.metrics.quadrants;
+        assert_eq!(q.ac + q.n_ac + q.a_nc + q.nanc, ds.n);
+    }
+}
+
+#[test]
+fn mcca_cascade_routes_by_stage_priority() {
+    let Some(ctx) = ctx(ExecMode::Native) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bench = ctx.man.bench("bessel").unwrap().clone();
+    let bank = ctx.bank(&bench, &[Method::Mcca]).unwrap();
+    let d = Dispatcher::new(&bench, &bank, Method::Mcca, ExecMode::Native).unwrap();
+    let ds = ctx.dataset("bessel").unwrap();
+    let out = d.run_dataset(&ds).unwrap();
+    let stages = bank.host.get("mcca").unwrap().classifiers.len();
+    assert!(stages >= 1);
+    // A sample accepted by stage 0's classifier must be routed to stage 0.
+    let x_norm = d.normalize(&ds.x_raw, ds.n);
+    let logits = d.forward(Role::Clf2, 0, &x_norm, ds.n).unwrap();
+    let accept0 = mcma::nn::argmax_rows(&logits, ds.n, 2);
+    for i in 0..ds.n {
+        if accept0[i] == 0 {
+            assert_eq!(out.plan.routes[i], Route::Approx(0), "stage priority at {i}");
+        }
+    }
+}
+
+#[test]
+fn eval_and_npu_sim_consistent() {
+    let Some(ctx) = ctx(ExecMode::Native) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let bench = ctx.man.bench("sobel").unwrap().clone();
+    let bank = ctx.bank(&bench, &[Method::OnePass]).unwrap();
+    let e = eval::eval_one(&ctx, &bench, &bank, Method::OnePass).unwrap();
+    // CPU-only cycle total must equal n * per-sample CPU cycles.
+    let benchfn = mcma::benchmarks::by_name("sobel").unwrap();
+    let want = (e.out.plan.routes.len() as f64) * benchfn.cpu_cycles() as f64;
+    assert!((e.sim.cycles_cpu_only - want).abs() < 1e-6);
+    // Invoking nothing or everything bounds the mixed cycle count.
+    assert!(e.sim.cycles > 0.0);
+}
+
+#[test]
+fn server_round_trip_no_losses() {
+    let Some(_probe) = ctx(ExecMode::Native) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let man = Arc::new(mcma::formats::Manifest::load(&mcma::artifacts_dir()).unwrap());
+    let bench = Arc::new(man.bench("kmeans").unwrap().clone());
+    let benchfn = mcma::benchmarks::by_name("kmeans").unwrap();
+    let server = Server::spawn(
+        Arc::clone(&man),
+        Arc::clone(&bench),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait_us: 500 },
+            method: Method::McmaCompetitive,
+            exec: ExecMode::Native,
+            workers: 2, // exercise the multi-worker shared-queue path
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(11);
+    let mut x = vec![0.0f32; bench.n_in];
+    let n = 1000;
+    for id in 0..n {
+        benchfn.gen_into(&mut rng, &mut x);
+        server.submit(id, x.clone()).unwrap();
+    }
+    let report = server.shutdown(Vec::new()).unwrap();
+    assert_eq!(report.served, n, "requests lost");
+    assert!(report.latency.p50() > 0.0);
+    assert!(report.batches >= (n as usize / 64) as u64);
+}
+
+#[test]
+fn truncated_dataset_respected() {
+    let Some(ctx) = ctx(ExecMode::Native) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let ds = ctx.dataset("fft").unwrap();
+    assert!(ds.n <= 512, "max_samples cap ignored: {}", ds.n);
+}

@@ -1,0 +1,207 @@
+//! Coordinator routing semantics under CRAFTED nets (no artifacts, no
+//! PJRT): hand-built classifiers with known outputs pin the exact
+//! contract between classifier logits and destinations, including the
+//! Confidence and Oracle policy extensions.
+
+use std::collections::HashMap;
+
+use mcma::config::{ExecMode, Method};
+use mcma::coordinator::{Dispatcher, Route, RouterPolicy};
+use mcma::formats::weights::{MethodWeights, WeightsFile};
+use mcma::formats::{BenchManifest, Dataset};
+use mcma::nn::{Layer, Matrix, Mlp};
+use mcma::runtime::ModelBank;
+
+/// sobel-shaped manifest (9 -> 1) with trivial normalisation.
+fn manifest() -> BenchManifest {
+    BenchManifest {
+        name: "sobel".into(),
+        domain: "test".into(),
+        n_in: 9,
+        n_out: 1,
+        approx_topology: vec![9, 1],
+        clf2_topology: vec![9, 2],
+        clfn_topology: vec![9, 4],
+        x_lo: vec![0.0; 9],
+        x_hi: vec![1.0; 9],
+        y_lo: vec![0.0],
+        y_hi: vec![1.0],
+        error_bound: 0.05,
+        train_n: 0,
+        test_n: 0,
+        methods: vec!["one_pass".into(), "mcma_competitive".into()],
+        mcca_pairs: 0,
+    }
+}
+
+/// Single linear layer whose output `c` is `bias[c] + sum(w_col_c * x)`.
+fn linear(n_in: usize, out_bias: Vec<f32>, w: Vec<f32>) -> Mlp {
+    let n_out = out_bias.len();
+    assert_eq!(w.len(), n_in * n_out);
+    Mlp::new(vec![Layer { w: Matrix::new(n_in, n_out, w), b: out_bias }])
+}
+
+/// Classifier that ALWAYS emits fixed logits (zero weights, bias = logits).
+fn const_clf(n_in: usize, logits: Vec<f32>) -> Mlp {
+    let n_out = logits.len();
+    linear(n_in, logits, vec![0.0; n_in * n_out])
+}
+
+/// Approximator that always outputs the constant `v`.
+fn const_approx(n_in: usize, v: f32) -> Mlp {
+    linear(n_in, vec![v], vec![0.0; n_in])
+}
+
+fn bank(clf_classes: usize, clf: Mlp, approxs: Vec<Mlp>, method: &str) -> ModelBank {
+    let mw = MethodWeights {
+        method: method.to_string(),
+        cascade: false,
+        clf_classes,
+        classifiers: vec![clf],
+        approximators: approxs,
+    };
+    let mut methods = HashMap::new();
+    methods.insert(method.to_string(), mw);
+    ModelBank::from_host("sobel", WeightsFile { methods })
+}
+
+fn dataset(n: usize) -> Dataset {
+    // Flat windows: the sobel precise output is exactly 0.
+    Dataset {
+        n,
+        d_in: 9,
+        d_out: 1,
+        x_raw: vec![0.5; n * 9],
+        y_norm: vec![0.0; n],
+    }
+}
+
+#[test]
+fn mcma_argmax_routes_to_highest_logit() {
+    let man = manifest();
+    // 4-class classifier preferring class 2 (approximator 3 of 3).
+    let bank = bank(
+        4,
+        const_clf(9, vec![0.0, 1.0, 3.0, 2.0]),
+        vec![const_approx(9, 0.0), const_approx(9, 0.0), const_approx(9, 0.0)],
+        "mcma_competitive",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let out = d.run_dataset(&dataset(16)).unwrap();
+    assert!(out.plan.routes.iter().all(|r| *r == Route::Approx(2)));
+    // Approximator outputs 0 and the truth is 0 -> perfect invocation.
+    assert_eq!(out.metrics.invocation(), 1.0);
+    assert_eq!(out.metrics.true_invocation(), 1.0);
+}
+
+#[test]
+fn mcma_nc_class_goes_to_cpu() {
+    let man = manifest();
+    let bank = bank(
+        4,
+        const_clf(9, vec![0.0, 1.0, 2.0, 9.0]), // class 3 = nC wins
+        vec![const_approx(9, 0.0); 3],
+        "mcma_competitive",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let out = d.run_dataset(&dataset(8)).unwrap();
+    assert!(out.plan.routes.iter().all(|r| *r == Route::Cpu));
+    assert_eq!(out.metrics.invocation(), 0.0);
+    // CPU path computed the precise value -> zero served error.
+    assert!(out.err.iter().all(|&e| e == 0.0));
+    // And the served outputs equal the normalised truth (sobel(flat)=0).
+    assert!(out.y_served.iter().all(|&y| y.abs() < 1e-6));
+}
+
+#[test]
+fn binary_class0_is_safe_convention() {
+    let man = manifest();
+    let bank = bank(
+        2,
+        const_clf(9, vec![1.0, 0.0]), // class 0 (safe) wins
+        vec![const_approx(9, 0.0)],
+        "one_pass",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::OnePass, ExecMode::Native).unwrap();
+    let out = d.run_dataset(&dataset(8)).unwrap();
+    assert!(out.plan.routes.iter().all(|r| *r == Route::Approx(0)));
+}
+
+#[test]
+fn confidence_policy_demotes_marginal_accepts() {
+    let man = manifest();
+    // Logit gap 0.2 over 4 classes -> softmax confidence ~0.29 for the
+    // winning class.
+    let bank = bank(
+        4,
+        const_clf(9, vec![0.2, 0.0, 0.0, 0.0]),
+        vec![const_approx(9, 0.0); 3],
+        "mcma_competitive",
+    );
+    let d_loose = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native)
+        .unwrap()
+        .with_policy(RouterPolicy::Confidence(0.25));
+    let d_tight = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native)
+        .unwrap()
+        .with_policy(RouterPolicy::Confidence(0.90));
+    let ds = dataset(8);
+    let loose = d_loose.run_dataset(&ds).unwrap();
+    let tight = d_tight.run_dataset(&ds).unwrap();
+    assert_eq!(loose.metrics.invocation(), 1.0, "tau below confidence keeps accepts");
+    assert_eq!(tight.metrics.invocation(), 0.0, "tau above confidence demotes to CPU");
+}
+
+#[test]
+fn oracle_policy_routes_to_lowest_error_approx() {
+    let man = manifest();
+    // A0 predicts 0.3 (err 0.3), A1 predicts 0.02 (err 0.02 <= bound 0.05),
+    // A2 predicts 0.9.  Classifier is adversarial (prefers A2) — oracle
+    // must ignore it.
+    let bank = bank(
+        4,
+        const_clf(9, vec![0.0, 0.0, 5.0, 0.0]),
+        vec![const_approx(9, 0.3), const_approx(9, 0.02), const_approx(9, 0.9)],
+        "mcma_competitive",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native)
+        .unwrap()
+        .with_policy(RouterPolicy::Oracle);
+    let out = d.run_dataset(&dataset(8)).unwrap();
+    assert!(out.plan.routes.iter().all(|r| *r == Route::Approx(1)));
+    assert_eq!(out.metrics.true_invocation(), 1.0);
+}
+
+#[test]
+fn oracle_rejects_when_no_approximator_fits() {
+    let man = manifest();
+    let bank = bank(
+        4,
+        const_clf(9, vec![5.0, 0.0, 0.0, 0.0]), // classifier would accept
+        vec![const_approx(9, 0.5); 3],          // all violate the bound
+        "mcma_competitive",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native)
+        .unwrap()
+        .with_policy(RouterPolicy::Oracle);
+    let out = d.run_dataset(&dataset(8)).unwrap();
+    assert!(out.plan.routes.iter().all(|r| *r == Route::Cpu));
+}
+
+#[test]
+fn served_error_matches_approximator_constant() {
+    let man = manifest();
+    let bank = bank(
+        2,
+        const_clf(9, vec![1.0, 0.0]),
+        vec![const_approx(9, 0.25)],
+        "one_pass",
+    );
+    let d = Dispatcher::new(&man, &bank, Method::OnePass, ExecMode::Native).unwrap();
+    let out = d.run_dataset(&dataset(4)).unwrap();
+    // Truth is 0, approximator says 0.25 -> per-sample RMSE 0.25 exactly.
+    for e in &out.err {
+        assert!((e - 0.25).abs() < 1e-6);
+    }
+    assert_eq!(out.metrics.quadrants.n_ac, 4); // all false positives
+    assert!((out.metrics.rmse_over_bound - 5.0).abs() < 1e-6);
+}

@@ -1,86 +1,231 @@
 //! L3 hot-path microbenchmarks (§Perf): where does a request's time go?
 //!
-//! * native MLP forward (single / batched) — the floor for L3 logic
+//! * native MLP forward (single / batched, packed GEMM vs scalar GEMV)
 //! * PJRT executable run at B=1 and B=256 — dispatch + execute cost
-//! * classify -> route -> execute for one full batch (the serving unit)
+//! * classify -> route -> execute for one full batch (the serving unit),
+//!   through the zero-allocation scratch-arena path
 //! * batcher push/flush overhead
 //!
 //! Criterion is unavailable offline; `mcma::bench_harness` provides
-//! warm-up, calibration and percentile reporting.
+//! warm-up, calibration and percentile reporting.  Results are also
+//! written to `BENCH_hotpath.json` at the repo root (override the
+//! directory with `MCMA_BENCH_JSON_DIR`) so the perf trajectory is
+//! tracked across PRs.  Without artifacts the suite falls back to
+//! synthetic blackscholes-shaped nets so the native kernel numbers are
+//! always measurable (CI smoke: set `MCMA_BENCH_BUDGET_MS=5`).
 
+use std::collections::HashMap;
 use std::time::Duration;
 
-use mcma::bench_harness::bench;
+use mcma::bench_harness::{bench_json_path, Recorder};
 use mcma::config::{BatchPolicy, ExecMode, Method, RunConfig};
-use mcma::coordinator::{Batcher, Dispatcher};
+use mcma::coordinator::{Batcher, Dispatcher, RoutePlan, Scratch};
 use mcma::eval::Context;
-use mcma::runtime::Role;
+use mcma::formats::weights::{MethodWeights, WeightsFile};
+use mcma::formats::BenchManifest;
+use mcma::nn::GemmScratch;
+use mcma::runtime::{ModelBank, Role};
 use mcma::util::rng::Rng;
 
+fn budget() -> Duration {
+    let ms = std::env::var("MCMA_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(400);
+    Duration::from_millis(ms.max(1))
+}
+
 fn main() -> mcma::Result<()> {
-    let budget = Duration::from_millis(400);
-    let ctx = Context::load(RunConfig::default())?;
+    let mut rec = Recorder::new();
+    let b = budget();
+
+    // Prefer real artifacts (PJRT if compiled in, else native-only); fall
+    // back to synthetic nets so the kernel numbers are always measurable.
+    if let Ok(ctx) = Context::load(RunConfig::default()) {
+        artifact_suite(&mut rec, &ctx, b, true)?;
+    } else if let Ok(ctx) =
+        Context::load(RunConfig { exec: ExecMode::Native, ..Default::default() })
+    {
+        println!("--- PJRT unavailable: native-only artifact suite ---");
+        artifact_suite(&mut rec, &ctx, b, false)?;
+    } else {
+        println!("--- artifacts not built: synthetic blackscholes-shaped suite ---");
+        synthetic_suite(&mut rec, b)?;
+    }
+
+    rec.write_json("hotpath", &bench_json_path("BENCH_hotpath.json"))
+}
+
+/// The full suite over real artifacts (blackscholes, MCMA-competitive).
+fn artifact_suite(
+    rec: &mut Recorder,
+    ctx: &Context,
+    budget: Duration,
+    pjrt: bool,
+) -> mcma::Result<()> {
     let bench_man = ctx.man.bench("blackscholes")?.clone();
     let method = Method::McmaCompetitive;
     let bank = ctx.bank(&bench_man, &[method])?;
     let ds = ctx.dataset("blackscholes")?;
-    let d_pjrt = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
     let d_native = Dispatcher::new(&bench_man, &bank, method, ExecMode::Native)?;
 
-    let x_norm = d_pjrt.normalize(&ds.x_raw, ds.n);
-    let one = &x_norm[..bench_man.n_in];
+    let x_norm = d_native.normalize(&ds.x_raw, ds.n);
+    let raw256 = &ds.x_raw[..256 * bench_man.n_in];
     let batch256 = &x_norm[..256 * bench_man.n_in];
+    let one = &x_norm[..bench_man.n_in];
 
     println!("--- L3 hot path (blackscholes, {}) ---", method.label());
+    native_benches(rec, budget, &bank, &d_native, method, one, batch256, raw256);
 
-    // Native engine floor.
-    let mlp = bank.host_mlp(method, Role::Approx, 0)?;
-    bench("native mlp forward x1", budget, || {
+    if pjrt {
+        let d_pjrt = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
+        rec.bench("pjrt approx run B=1", budget, || {
+            std::hint::black_box(d_pjrt.forward(Role::Approx, 0, one, 1).unwrap());
+        });
+        rec.bench("pjrt approx run B=256", budget, || {
+            std::hint::black_box(d_pjrt.forward(Role::Approx, 0, batch256, 256).unwrap());
+        });
+        rec.bench("pjrt clfN run B=256", budget, || {
+            std::hint::black_box(d_pjrt.forward(Role::ClfN, 0, batch256, 256).unwrap());
+        });
+        rec.bench("dispatch unit (classify+route+exec) pjrt B=256", budget, || {
+            let plan = d_pjrt.plan(batch256, 256).unwrap();
+            std::hint::black_box(d_pjrt.execute_plan(&plan, batch256, raw256, 256).unwrap());
+        });
+    }
+
+    common_tail(rec, budget, &ds.x_raw[..bench_man.n_in]);
+    Ok(())
+}
+
+/// Synthetic fallback: blackscholes-shaped manifest + random nets.  Keeps
+/// the acceptance-tracked native bench names measurable with no artifacts.
+fn synthetic_suite(rec: &mut Recorder, budget: Duration) -> mcma::Result<()> {
+    let man = synthetic_manifest();
+    let method = Method::McmaCompetitive;
+    let mut rng = Rng::new(0xB00C);
+    let host = synthetic_weights(&mut rng);
+    let bank = ModelBank::from_host("blackscholes", host);
+    let d_native = Dispatcher::new(&man, &bank, method, ExecMode::Native)?;
+
+    // Raw inputs from the precise function's own generator (valid domain).
+    let benchfn = mcma::benchmarks::by_name("blackscholes")?;
+    let mut x_raw = vec![0.0f32; 256 * man.n_in];
+    for i in 0..256 {
+        benchfn.gen_into(&mut rng, &mut x_raw[i * man.n_in..(i + 1) * man.n_in]);
+    }
+    let x_norm = d_native.normalize(&x_raw, 256);
+
+    println!("--- L3 hot path (synthetic blackscholes, {}) ---", method.label());
+    native_benches(
+        rec,
+        budget,
+        &bank,
+        &d_native,
+        method,
+        &x_norm[..man.n_in],
+        &x_norm,
+        &x_raw,
+    );
+    common_tail(rec, budget, &x_raw[..man.n_in]);
+    Ok(())
+}
+
+/// Native engine floor + the serving unit through the scratch arena.
+#[allow(clippy::too_many_arguments)]
+fn native_benches(
+    rec: &mut Recorder,
+    budget: Duration,
+    bank: &ModelBank,
+    d_native: &Dispatcher,
+    method: Method,
+    one: &[f32],
+    batch256: &[f32],
+    raw256: &[f32],
+) {
+    let mlp = bank.host_mlp(method, Role::Approx, 0).unwrap();
+    let packed = bank.host_packed(method, Role::Approx, 0).unwrap();
+    let mut gemm = GemmScratch::new();
+    let mut out256 = vec![0.0f32; 256 * packed.n_out()];
+
+    rec.bench("native mlp forward x1", budget, || {
         std::hint::black_box(mlp.forward1(one));
     });
-    bench("native mlp forward x256", budget, || {
+    rec.bench("native mlp forward x256", budget, || {
+        packed.forward_batch_to(batch256, 256, &mut gemm, &mut out256);
+        std::hint::black_box(&out256);
+    });
+    // The pre-tentpole scalar GEMV path, kept for the speedup ratio.
+    rec.bench("native mlp forward x256 (scalar gemv)", budget, || {
         std::hint::black_box(mlp.forward_batch(batch256, 256));
     });
 
-    // PJRT execute cost at both compiled batch sizes.
-    bench("pjrt approx run B=1", budget, || {
-        std::hint::black_box(d_pjrt.forward(Role::Approx, 0, one, 1).unwrap());
+    let mut plan = RoutePlan::default();
+    let mut scratch = Scratch::new();
+    let mut y = Vec::new();
+    rec.bench("dispatch unit native B=256", budget, || {
+        d_native.plan_into(batch256, 256, &mut plan, &mut scratch).unwrap();
+        d_native
+            .execute_plan_into(&plan, batch256, raw256, 256, &mut y, &mut scratch)
+            .unwrap();
+        std::hint::black_box(&y);
     });
-    bench("pjrt approx run B=256", budget, || {
-        std::hint::black_box(d_pjrt.forward(Role::Approx, 0, batch256, 256).unwrap());
-    });
-    bench("pjrt clfN run B=256", budget, || {
-        std::hint::black_box(d_pjrt.forward(Role::ClfN, 0, batch256, 256).unwrap());
-    });
+}
 
-    // The serving unit: classify + route + execute one 256-batch.
-    let raw256 = &ds.x_raw[..256 * bench_man.n_in];
-    bench("dispatch unit (classify+route+exec) pjrt B=256", budget, || {
-        let plan = d_pjrt.plan(batch256, 256).unwrap();
-        std::hint::black_box(d_pjrt.execute_plan(&plan, batch256, raw256, 256).unwrap());
-    });
-    bench("dispatch unit native B=256", budget, || {
-        let plan = d_native.plan(batch256, 256).unwrap();
-        std::hint::black_box(d_native.execute_plan(&plan, batch256, raw256, 256).unwrap());
-    });
-
-    // Batcher overhead per request.
+/// Batcher + precise-CPU benches shared by both suites.
+fn common_tail(rec: &mut Recorder, budget: Duration, one_raw: &[f32]) {
+    let d_in = one_raw.len();
     let mut rng = Rng::new(3);
-    let reqs: Vec<Vec<f32>> =
-        (0..256).map(|_| (0..6).map(|_| rng.uniform(0.0, 1.0) as f32).collect()).collect();
-    bench("batcher push+flush 256 reqs", budget, || {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 256, max_wait_us: 10_000 }, 6);
+    let reqs: Vec<Vec<f32>> = (0..256)
+        .map(|_| (0..d_in).map(|_| rng.uniform(0.0, 1.0) as f32).collect())
+        .collect();
+    rec.bench("batcher push+flush 256 reqs", budget, || {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 256, max_wait_us: 10_000 }, d_in);
         for (i, r) in reqs.iter().enumerate() {
             std::hint::black_box(b.push(i as u64, r.clone()));
         }
     });
 
     // Precise CPU path cost (the thing approximation avoids).
-    let benchfn = mcma::benchmarks::by_name("blackscholes")?;
+    let benchfn = mcma::benchmarks::by_name("blackscholes").unwrap();
     let mut out = vec![0.0f64; 1];
-    bench("precise cpu eval x1", budget, || {
-        benchfn.eval(&ds.x_raw[..6], &mut out);
+    rec.bench("precise cpu eval x1", budget, || {
+        benchfn.eval(one_raw, &mut out);
         std::hint::black_box(out[0]);
     });
-    Ok(())
+}
+
+fn synthetic_manifest() -> BenchManifest {
+    BenchManifest {
+        name: "blackscholes".into(),
+        domain: "synthetic".into(),
+        n_in: 6,
+        n_out: 1,
+        approx_topology: vec![6, 8, 8, 1],
+        clf2_topology: vec![6, 8, 2],
+        clfn_topology: vec![6, 8, 4],
+        x_lo: vec![0.0; 6],
+        x_hi: vec![1.0; 6],
+        y_lo: vec![0.0],
+        y_hi: vec![1.0],
+        error_bound: 0.05,
+        train_n: 0,
+        test_n: 0,
+        methods: vec!["mcma_competitive".into()],
+        mcca_pairs: 0,
+    }
+}
+
+fn synthetic_weights(rng: &mut Rng) -> WeightsFile {
+    use mcma::util::prop::gens;
+    let mw = MethodWeights {
+        method: "mcma_competitive".into(),
+        cascade: false,
+        clf_classes: 4,
+        classifiers: vec![gens::mlp(rng, &[6, 8, 4], 1.0, 0.5)],
+        approximators: (0..3).map(|_| gens::mlp(rng, &[6, 8, 8, 1], 1.0, 0.5)).collect(),
+    };
+    let mut methods = HashMap::new();
+    methods.insert("mcma_competitive".to_string(), mw);
+    WeightsFile { methods }
 }

@@ -1,11 +1,15 @@
 //! Timing harness for `cargo bench` (criterion substitute).
 //!
-//! Warm-up, calibrated iteration counts, and mean/p50/p95/std reporting.
-//! Figure benches also use `Table` to print paper-style rows.
+//! Warm-up, calibrated iteration counts, and mean/p50/p95/p99/std
+//! reporting.  Figure benches also use `Table` to print paper-style rows.
+//! [`Recorder`] additionally collects every timing and serialises them to
+//! a JSON report (e.g. `BENCH_hotpath.json` at the repo root) so the perf
+//! trajectory is machine-comparable across PRs.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
-use crate::util::stats;
+use crate::util::{json, stats};
 
 /// Timing summary for one benchmark case.
 #[derive(Clone, Debug)]
@@ -15,18 +19,20 @@ pub struct Timing {
     pub mean_ns: f64,
     pub p50_ns: f64,
     pub p95_ns: f64,
+    pub p99_ns: f64,
     pub std_ns: f64,
 }
 
 impl Timing {
     pub fn print(&self) {
         println!(
-            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  ±{:>10}",
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  ±{:>10}",
             self.name,
             self.iters,
             fmt_ns(self.mean_ns),
             fmt_ns(self.p50_ns),
             fmt_ns(self.p95_ns),
+            fmt_ns(self.p99_ns),
             fmt_ns(self.std_ns),
         );
     }
@@ -65,10 +71,78 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
         mean_ns: stats::mean(&samples),
         p50_ns: stats::percentile(&samples, 50.0),
         p95_ns: stats::percentile(&samples, 95.0),
+        p99_ns: stats::percentile(&samples, 99.0),
         std_ns: stats::std_dev(&samples),
     };
     timing.print();
     timing
+}
+
+/// Collects [`Timing`]s across a bench binary and writes the
+/// machine-readable JSON report consumed by cross-PR perf tracking.
+#[derive(Default)]
+pub struct Recorder {
+    pub timings: Vec<Timing>,
+}
+
+impl Recorder {
+    pub fn new() -> Self {
+        Recorder::default()
+    }
+
+    /// Run [`bench`] and keep the timing.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, budget: Duration, f: F) {
+        self.timings.push(bench(name, budget, f));
+    }
+
+    /// Write all recorded timings as JSON:
+    /// `{"suite": ..., "unix_time": ..., "results": [{name, iters, mean_ns,
+    /// p50_ns, p95_ns, p99_ns, std_ns}, ...]}`.
+    pub fn write_json(&self, suite: &str, path: &Path) -> crate::Result<()> {
+        let unix_time = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs() as f64)
+            .unwrap_or(0.0);
+        let results: Vec<json::Value> = self
+            .timings
+            .iter()
+            .map(|t| {
+                json::obj(vec![
+                    ("name", json::Value::Str(t.name.clone())),
+                    ("iters", json::Value::Num(t.iters as f64)),
+                    ("mean_ns", json::Value::Num(t.mean_ns)),
+                    ("p50_ns", json::Value::Num(t.p50_ns)),
+                    ("p95_ns", json::Value::Num(t.p95_ns)),
+                    ("p99_ns", json::Value::Num(t.p99_ns)),
+                    ("std_ns", json::Value::Num(t.std_ns)),
+                ])
+            })
+            .collect();
+        let doc = json::obj(vec![
+            ("suite", json::Value::Str(suite.to_string())),
+            ("unix_time", json::Value::Num(unix_time)),
+            ("results", json::Value::Arr(results)),
+        ]);
+        std::fs::write(path, json::write(&doc))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+        println!("wrote {} ({} results)", path.display(), self.timings.len());
+        Ok(())
+    }
+}
+
+/// Where a bench binary should drop its JSON report: `MCMA_BENCH_JSON_DIR`
+/// when set, else the repo root (benches run from `rust/`, so the root is
+/// whichever of `.`/`..` holds `.git`), else the working directory.
+pub fn bench_json_path(file: &str) -> PathBuf {
+    if let Some(dir) = std::env::var_os("MCMA_BENCH_JSON_DIR") {
+        return PathBuf::from(dir).join(file);
+    }
+    for base in [".", ".."] {
+        if Path::new(base).join(".git").exists() {
+            return Path::new(base).join(file);
+        }
+    }
+    PathBuf::from(file)
 }
 
 /// Fixed-column text table for the figure benches.
@@ -147,6 +221,24 @@ mod tests {
             t.row(vec!["only-one".into()]);
         }));
         assert!(result.is_err());
+    }
+
+    #[test]
+    fn recorder_writes_parseable_json() {
+        let mut rec = Recorder::new();
+        rec.bench("tiny", Duration::from_millis(5), || {
+            std::hint::black_box((0..10).sum::<u64>());
+        });
+        let path = std::env::temp_dir()
+            .join(format!("mcma_bench_recorder_test_{}.json", std::process::id()));
+        rec.write_json("test-suite", &path).unwrap();
+        let doc = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(doc.get("suite").unwrap().as_str().unwrap(), "test-suite");
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "tiny");
+        assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

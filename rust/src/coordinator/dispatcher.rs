@@ -4,17 +4,36 @@
 //! One `Dispatcher` serves one (benchmark, method) pair.  It is the
 //! synchronous core used both by the offline eval drivers (whole-dataset
 //! runs for the figures) and by the online `Server` (per-batch).
+//!
+//! ## Hot-path memory discipline (§Perf L3)
+//!
+//! Every per-batch buffer — normalised inputs, classifier logits, gather
+//! panels, GEMM activation panels, served outputs — lives in a caller-owned
+//! [`Scratch`] arena and a reusable [`RoutePlan`].  The `*_into` methods
+//! (`normalize_into`, `plan_into`, `execute_plan_into`,
+//! `process_batch_into`) clear-and-refill those buffers, so a steady-state
+//! batch performs **zero heap allocations**; the original allocating
+//! methods remain as thin wrappers for offline/one-shot callers.  Native
+//! forwards run through the bank's pre-packed tiled GEMM nets
+//! (`nn::gemm::PackedMlp`), and whole-dataset native batches shard across
+//! cores via `util::threadpool::parallel_map`.
 
 use crate::benchmarks::{self, BenchFn};
 use crate::config::{ExecMode, Method};
 use crate::formats::{BenchManifest, Dataset};
-use crate::nn;
+use crate::nn::{self, GemmScratch, PackedMlp};
 use crate::runtime::{ModelBank, Role};
+use crate::util::threadpool;
 
 use super::batcher::Batch;
 use super::metrics::RunMetrics;
 use super::router::{self, Route, RoutePlan};
 use super::weight_cache::WeightCache;
+
+/// Native batches at least this tall are sharded across cores; below it a
+/// single core's tiled kernel wins (thread fan-out costs more than it
+/// saves on a 256-row serving batch).
+const NATIVE_PAR_MIN_ROWS: usize = 2048;
 
 /// Full offline evaluation result for one (benchmark, method, dataset).
 pub struct EvalOutput {
@@ -47,6 +66,47 @@ pub enum RouterPolicy {
     Argmax,
     Confidence(f32),
     Oracle,
+}
+
+/// Reusable per-batch buffers for the dispatch hot path.  One `Scratch`
+/// per dispatching thread; buffers grow to the workload's high-water mark
+/// and then stop allocating.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    /// Normalised inputs (`process_batch_into`).
+    x_norm: Vec<f32>,
+    /// Classifier logits.
+    logits: Vec<f32>,
+    /// Per-sample argmax classes.
+    classes: Vec<usize>,
+    /// Gathered rows for one route group.
+    gather: Vec<f32>,
+    /// Forward output for one route group.
+    group_out: Vec<f32>,
+    /// Raw (denormalised) precise output for one sample.
+    raw_out: Vec<f64>,
+    /// Activation panels for the tiled GEMM layer chain.
+    gemm: GemmScratch,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// Capacities of every internal buffer.  The zero-allocation steady
+    /// state is observable as this signature going flat across batches.
+    pub fn capacity_signature(&self) -> Vec<usize> {
+        vec![
+            self.x_norm.capacity(),
+            self.logits.capacity(),
+            self.classes.capacity(),
+            self.gather.capacity(),
+            self.group_out.capacity(),
+            self.raw_out.capacity(),
+            self.gemm.capacity(),
+        ]
+    }
 }
 
 /// Synchronous classify/route/execute engine for one (bench, method).
@@ -97,13 +157,20 @@ impl<'a> Dispatcher<'a> {
 
     /// Normalise a raw-input batch into NN space.
     pub fn normalize(&self, x_raw: &[f32], n: usize) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.normalize_into(x_raw, n, &mut out);
+        out
+    }
+
+    /// [`Self::normalize`] into a reusable buffer (cleared, capacity kept).
+    pub fn normalize_into(&self, x_raw: &[f32], n: usize, out: &mut Vec<f32>) {
         let d = self.bench.n_in;
-        let mut out = vec![0.0f32; n * d];
+        out.clear();
+        out.resize(n * d, 0.0);
         for i in 0..n {
             self.bench
                 .normalize_x_into(&x_raw[i * d..(i + 1) * d], &mut out[i * d..(i + 1) * d]);
         }
-        out
     }
 
     /// Forward `n` rows through (role, idx), batched through the chosen
@@ -115,17 +182,44 @@ impl<'a> Dispatcher<'a> {
         x_norm: &[f32],
         n: usize,
     ) -> crate::Result<Vec<f32>> {
+        let mut gemm = GemmScratch::new();
+        let mut out = Vec::new();
+        self.forward_into(role, idx, x_norm, n, &mut gemm, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::forward`] into reusable buffers.  Native mode runs the
+    /// pre-packed tiled GEMM engine (sharded across cores for tall
+    /// panels); PJRT chunks through the largest compiled batch.
+    fn forward_into(
+        &self,
+        role: Role,
+        idx: usize,
+        x_norm: &[f32],
+        n: usize,
+        gemm: &mut GemmScratch,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<()> {
         match self.exec {
             ExecMode::Native => {
-                let mlp = self.bank.host_mlp(self.method, role, idx)?;
-                Ok(mlp.forward_batch(x_norm, n))
+                let packed = self.bank.host_packed(self.method, role, idx)?;
+                out.clear();
+                out.resize(n * packed.n_out(), 0.0);
+                let threads = threadpool::default_parallelism();
+                if n >= NATIVE_PAR_MIN_ROWS && threads > 1 {
+                    forward_native_parallel(packed, x_norm, n, threads, out);
+                } else {
+                    packed.forward_batch_to(x_norm, n, gemm, out);
+                }
+                Ok(())
             }
             ExecMode::Pjrt => {
                 let d_in = x_norm.len() / n.max(1);
                 let b = self.bank.best_batch(role, n);
                 let exe = self.bank.exe(role, b)?;
                 let weights = self.bank.weight_set(self.method, role, idx)?;
-                let mut out = Vec::with_capacity(n * exe.n_out);
+                out.clear();
+                out.reserve(n * exe.n_out);
                 let mut i = 0;
                 while i < n {
                     let take = (n - i).min(b);
@@ -133,23 +227,43 @@ impl<'a> Dispatcher<'a> {
                     out.extend(exe.run(chunk, take, weights)?);
                     i += take;
                 }
-                Ok(out)
+                Ok(())
             }
         }
     }
 
     /// Classify a normalised batch into routes.
     pub fn plan(&self, x_norm: &[f32], n: usize) -> crate::Result<RoutePlan> {
+        let mut plan = RoutePlan::default();
+        let mut scratch = Scratch::new();
+        self.plan_into(x_norm, n, &mut plan, &mut scratch)?;
+        Ok(plan)
+    }
+
+    /// [`Self::plan`] into a reusable plan + scratch (allocation-free in
+    /// steady state for the non-cascade methods; MCCA's stage gathers
+    /// still allocate).
+    pub fn plan_into(
+        &self,
+        x_norm: &[f32],
+        n: usize,
+        plan: &mut RoutePlan,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
         match self.method {
-            Method::Mcca => self.plan_cascade(x_norm, n),
+            Method::Mcca => {
+                *plan = self.plan_cascade(x_norm, n)?;
+                Ok(())
+            }
             m => {
                 let (role, n_classes) = if m.is_mcma() {
                     (Role::ClfN, self.bank.host_mlp(m, Role::ClfN, 0)?.n_out())
                 } else {
                     (Role::Clf2, 2)
                 };
-                let logits = self.forward(role, 0, x_norm, n)?;
-                let mut classes = nn::argmax_rows(&logits, n, n_classes);
+                let Scratch { logits, classes, gemm, .. } = scratch;
+                self.forward_into(role, 0, x_norm, n, gemm, logits)?;
+                nn::argmax_rows_into(logits, n, n_classes, classes);
                 let n_approx = if m.is_mcma() { n_classes - 1 } else { 1 };
                 if let RouterPolicy::Confidence(tau) = self.policy {
                     // Demote low-confidence accepts to the CPU class.
@@ -162,7 +276,8 @@ impl<'a> Dispatcher<'a> {
                         }
                     }
                 }
-                Ok(router::plan_routes(&classes, n_approx))
+                router::plan_routes_into(classes, n_approx, plan);
+                Ok(())
             }
         }
     }
@@ -172,8 +287,13 @@ impl<'a> Dispatcher<'a> {
     /// bound.  Upper-bounds any classifier.
     pub fn plan_oracle(&self, ds: &Dataset) -> crate::Result<RoutePlan> {
         let matrix = self.error_matrix(ds)?;
+        Ok(self.oracle_plan_from_matrix(&matrix, ds.n))
+    }
+
+    /// Oracle plan from an already-computed per-approximator error matrix.
+    fn oracle_plan_from_matrix(&self, matrix: &[Vec<f64>], n: usize) -> RoutePlan {
         let n_approx = self.n_approx();
-        let classes: Vec<usize> = (0..ds.n)
+        let classes: Vec<usize> = (0..n)
             .map(|i| {
                 let (mut best_k, mut best_e) = (0usize, f64::INFINITY);
                 for (k, row) in matrix.iter().enumerate() {
@@ -185,7 +305,7 @@ impl<'a> Dispatcher<'a> {
                 if best_e <= self.bench.error_bound { best_k } else { n_approx }
             })
             .collect();
-        Ok(router::plan_routes(&classes, n_approx))
+        router::plan_routes(&classes, n_approx)
     }
 
     /// MCCA: cascade of binary stages (paper §III.B / Fig. 3b).
@@ -222,56 +342,108 @@ impl<'a> Dispatcher<'a> {
         x_raw: &[f32],
         n: usize,
     ) -> crate::Result<Vec<f32>> {
+        let mut y = Vec::new();
+        let mut scratch = Scratch::new();
+        self.execute_plan_into(plan, x_norm, x_raw, n, &mut y, &mut scratch)?;
+        Ok(y)
+    }
+
+    /// [`Self::execute_plan`] into reusable buffers — the serving hot path.
+    /// Gather panels, group outputs and GEMM panels all come from
+    /// `scratch`; zero heap allocations once warm.
+    pub fn execute_plan_into(
+        &self,
+        plan: &RoutePlan,
+        x_norm: &[f32],
+        x_raw: &[f32],
+        n: usize,
+        y: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
         let d_in = self.bench.n_in;
         let d_out = self.bench.n_out;
-        let mut y = vec![0.0f32; n * d_out];
+        y.clear();
+        y.resize(n * d_out, 0.0);
 
+        let Scratch { gather, group_out, gemm, raw_out, .. } = scratch;
         for (k, group) in plan.groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            let mut xs = Vec::with_capacity(group.len() * d_in);
-            for &i in group {
-                xs.extend_from_slice(&x_norm[i * d_in..(i + 1) * d_in]);
+            gather.clear();
+            gather.reserve(group.len() * d_in);
+            for &i in group.iter() {
+                gather.extend_from_slice(&x_norm[i * d_in..(i + 1) * d_in]);
             }
-            let out = self.forward(Role::Approx, k, &xs, group.len())?;
+            self.forward_into(Role::Approx, k, gather, group.len(), gemm, group_out)?;
             for (j, &i) in group.iter().enumerate() {
                 y[i * d_out..(i + 1) * d_out]
-                    .copy_from_slice(&out[j * d_out..(j + 1) * d_out]);
+                    .copy_from_slice(&group_out[j * d_out..(j + 1) * d_out]);
             }
         }
 
         // Precise CPU path for rejected samples.
-        let mut raw_out = vec![0.0f64; d_out];
+        raw_out.clear();
+        raw_out.resize(d_out, 0.0);
         for &i in &plan.cpu {
-            self.benchfn.eval(&x_raw[i * d_in..(i + 1) * d_in], &mut raw_out);
+            self.benchfn.eval(&x_raw[i * d_in..(i + 1) * d_in], raw_out);
             self.bench
-                .normalize_y_into(&raw_out, &mut y[i * d_out..(i + 1) * d_out]);
+                .normalize_y_into(raw_out, &mut y[i * d_out..(i + 1) * d_out]);
         }
-        Ok(y)
+        Ok(())
     }
 
     /// Per-approximator error of EVERY sample (rows: approximator, cols:
     /// sample) — feeds Figs. 10/11 and the `err_if_invoked` split.
     pub fn error_matrix(&self, ds: &Dataset) -> crate::Result<Vec<Vec<f64>>> {
         let x_norm = self.normalize(&ds.x_raw, ds.n);
+        self.error_matrix_norm(ds, &x_norm)
+    }
+
+    /// [`Self::error_matrix`] over an already-normalised input panel —
+    /// lets `run_dataset` normalise the dataset exactly once.
+    pub fn error_matrix_norm(
+        &self,
+        ds: &Dataset,
+        x_norm: &[f32],
+    ) -> crate::Result<Vec<Vec<f64>>> {
         let mut rows = Vec::with_capacity(self.n_approx());
         for k in 0..self.n_approx() {
-            let pred = self.forward(Role::Approx, k, &x_norm, ds.n)?;
+            let pred = self.forward(Role::Approx, k, x_norm, ds.n)?;
             rows.push(nn::per_sample_rmse(&pred, &ds.y_norm, ds.n, self.bench.n_out));
         }
         Ok(rows)
     }
 
     /// Whole-dataset offline evaluation (the engine behind every figure).
+    ///
+    /// Normalises the dataset once and computes the per-approximator error
+    /// matrix once, sharing both between routing (Oracle policy), serving
+    /// and the `err_if_invoked` split.
     pub fn run_dataset(&self, ds: &Dataset) -> crate::Result<EvalOutput> {
+        let mut scratch = Scratch::new();
         let x_norm = self.normalize(&ds.x_raw, ds.n);
-        let plan = if self.policy == RouterPolicy::Oracle {
-            self.plan_oracle(ds)?
+
+        // "Would-be" error for every sample: min over this method's
+        // approximators (defines the A/nA ground-truth split).
+        let matrix = self.error_matrix_norm(ds, &x_norm)?;
+        let err_if_invoked: Vec<f64> = (0..ds.n)
+            .map(|i| {
+                matrix
+                    .iter()
+                    .map(|row| row[i])
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+
+        let mut plan = RoutePlan::default();
+        if self.policy == RouterPolicy::Oracle {
+            plan = self.oracle_plan_from_matrix(&matrix, ds.n);
         } else {
-            self.plan(&x_norm, ds.n)?
-        };
-        let y_served = self.execute_plan(&plan, &x_norm, &ds.x_raw, ds.n)?;
+            self.plan_into(&x_norm, ds.n, &mut plan, &mut scratch)?;
+        }
+        let mut y_served = Vec::new();
+        self.execute_plan_into(&plan, &x_norm, &ds.x_raw, ds.n, &mut y_served, &mut scratch)?;
 
         // Errors of served values; CPU-served are exact by construction
         // (same precise function), so their served error is 0.
@@ -282,18 +454,6 @@ impl<'a> Dispatcher<'a> {
             .iter()
             .zip(&served_err_all)
             .map(|(r, &e)| if r.is_approx() { e } else { 0.0 })
-            .collect();
-
-        // "Would-be" error for every sample: min over this method's
-        // approximators (defines the A/nA ground-truth split).
-        let matrix = self.error_matrix(ds)?;
-        let err_if_invoked: Vec<f64> = (0..ds.n)
-            .map(|i| {
-                matrix
-                    .iter()
-                    .map(|row| row[i])
-                    .fold(f64::INFINITY, f64::min)
-            })
             .collect();
 
         // Weight-switch accounting over the arrival-order invocation trace.
@@ -330,10 +490,66 @@ impl<'a> Dispatcher<'a> {
     /// Online path: route + execute one dynamic batch (no ground-truth
     /// error computation — the server doesn't know the answer).
     pub fn process_batch(&self, batch: &Batch) -> crate::Result<(RoutePlan, Vec<f32>)> {
-        let x_norm = self.normalize(&batch.x_raw, batch.n);
-        let plan = self.plan(&x_norm, batch.n)?;
-        let y = self.execute_plan(&plan, &x_norm, &batch.x_raw, batch.n)?;
+        let mut plan = RoutePlan::default();
+        let mut y = Vec::new();
+        let mut scratch = Scratch::new();
+        self.process_batch_into(batch, &mut plan, &mut y, &mut scratch)?;
         Ok((plan, y))
+    }
+
+    /// [`Self::process_batch`] into caller-owned buffers — the server's
+    /// per-batch unit.  Zero heap allocations in steady state: the plan,
+    /// outputs and every intermediate live in `plan`/`y`/`scratch`.
+    pub fn process_batch_into(
+        &self,
+        batch: &Batch,
+        plan: &mut RoutePlan,
+        y: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
+        // Take the normalised panel out of the arena so `scratch` can be
+        // reborrowed by the stages below; put it back even on error.
+        let mut x_norm = std::mem::take(&mut scratch.x_norm);
+        self.normalize_into(&batch.x_raw, batch.n, &mut x_norm);
+        let mut result = self.plan_into(&x_norm, batch.n, plan, scratch);
+        if result.is_ok() {
+            result =
+                self.execute_plan_into(plan, &x_norm, &batch.x_raw, batch.n, y, scratch);
+        }
+        scratch.x_norm = x_norm;
+        result
+    }
+}
+
+/// Shard a tall native panel across cores: contiguous row chunks, one
+/// local scratch per chunk, results stitched back in order.
+fn forward_native_parallel(
+    packed: &PackedMlp,
+    x: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    let d_in = packed.n_in();
+    let d_out = packed.n_out();
+    let rows_per = n.div_ceil(threads);
+    let chunks: Vec<(usize, usize)> = (0..n)
+        .step_by(rows_per)
+        .map(|start| (start, rows_per.min(n - start)))
+        .collect();
+    let parts = threadpool::parallel_map(&chunks, threads, |&(start, len)| {
+        let mut scratch = GemmScratch::new();
+        let mut part = vec![0.0f32; len * d_out];
+        packed.forward_batch_to(
+            &x[start * d_in..(start + len) * d_in],
+            len,
+            &mut scratch,
+            &mut part,
+        );
+        part
+    });
+    for (&(start, len), part) in chunks.iter().zip(&parts) {
+        out[start * d_out..(start + len) * d_out].copy_from_slice(part);
     }
 }
 

@@ -22,7 +22,7 @@ pub mod server;
 pub mod weight_cache;
 
 pub use batcher::{Batch, Batcher};
-pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy};
+pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy, Scratch};
 pub use metrics::{LatencyStats, RunMetrics};
 pub use router::{plan_routes, Route, RoutePlan};
 pub use server::{Server, ServerConfig, ServerReport};

@@ -22,7 +22,7 @@ impl Route {
 }
 
 /// Routes for a batch plus the index groups the dispatcher executes.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RoutePlan {
     /// Per-sample destination, arrival order.
     pub routes: Vec<Route>,
@@ -40,6 +40,20 @@ impl RoutePlan {
         let inv = self.routes.iter().filter(|r| r.is_approx()).count();
         inv as f64 / self.routes.len() as f64
     }
+
+    /// Clear for reuse with `n_approx` groups, keeping every allocation
+    /// (the dispatcher's zero-allocation steady state relies on this).
+    pub fn reset(&mut self, n_approx: usize) {
+        self.routes.clear();
+        self.cpu.clear();
+        self.groups.truncate(n_approx);
+        for g in &mut self.groups {
+            g.clear();
+        }
+        if self.groups.len() < n_approx {
+            self.groups.resize_with(n_approx, Vec::new);
+        }
+    }
 }
 
 /// Build a plan from per-sample class ids.
@@ -47,19 +61,24 @@ impl RoutePlan {
 /// `n_approx` approximators exist; class `>= n_approx` (or, for binary
 /// classifiers with `n_approx == 1`, class 1) means CPU.
 pub fn plan_routes(classes: &[usize], n_approx: usize) -> RoutePlan {
-    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); n_approx];
-    let mut cpu = Vec::new();
-    let mut routes = Vec::with_capacity(classes.len());
+    let mut plan = RoutePlan::default();
+    plan_routes_into(classes, n_approx, &mut plan);
+    plan
+}
+
+/// [`plan_routes`] into a reusable plan (reset, allocations kept).
+pub fn plan_routes_into(classes: &[usize], n_approx: usize, plan: &mut RoutePlan) {
+    plan.reset(n_approx);
+    plan.routes.reserve(classes.len());
     for (i, &c) in classes.iter().enumerate() {
         if c < n_approx {
-            groups[c].push(i);
-            routes.push(Route::Approx(c));
+            plan.groups[c].push(i);
+            plan.routes.push(Route::Approx(c));
         } else {
-            cpu.push(i);
-            routes.push(Route::Cpu);
+            plan.cpu.push(i);
+            plan.routes.push(Route::Cpu);
         }
     }
-    RoutePlan { routes, groups, cpu }
 }
 
 /// Merge a cascade stage's accept decisions into an existing plan:

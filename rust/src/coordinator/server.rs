@@ -197,12 +197,24 @@ impl Server {
                             Dispatcher::new(&bench, &bank, cfg.method, cfg.exec)?;
                         let mut batches = 0u64;
                         let d_out = bench.n_out;
+                        // Worker-owned hot-path arena: plan, outputs and
+                        // every intermediate buffer are reused across
+                        // batches — steady state allocates nothing per
+                        // batch beyond the response payloads.
+                        let mut scratch = super::dispatcher::Scratch::new();
+                        let mut plan = super::router::RoutePlan::default();
+                        let mut y: Vec<f32> = Vec::new();
                         loop {
                             let msg = { batch_rx.lock().unwrap().recv() };
                             match msg {
                                 Ok(BatchMsg::Work(batch)) => {
                                     batches += 1;
-                                    let (plan, y) = dispatcher.process_batch(&batch)?;
+                                    dispatcher.process_batch_into(
+                                        &batch,
+                                        &mut plan,
+                                        &mut y,
+                                        &mut scratch,
+                                    )?;
                                     let now = Instant::now();
                                     for (j, &id) in batch.ids.iter().enumerate() {
                                         let _ = out_tx.send(Response {

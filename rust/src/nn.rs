@@ -10,6 +10,10 @@
 //! Layout matches the artifacts: weights row-major `(fan_in, fan_out)`,
 //! sigmoid hidden layers, linear output (the NPU PE activation scheme).
 
+pub mod gemm;
+
+pub use gemm::{GemmScratch, PackedMlp};
+
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Matrix {
@@ -162,19 +166,25 @@ fn dense_into(x: &[f32], layer: &Layer, sig: bool, out: &mut [f32]) {
 
 /// Row-wise argmax for a `(n, k)` row-major buffer.
 pub fn argmax_rows(logits: &[f32], n: usize, k: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    argmax_rows_into(logits, n, k, &mut out);
+    out
+}
+
+/// [`argmax_rows`] into a reusable buffer (cleared, capacity kept).
+pub fn argmax_rows_into(logits: &[f32], n: usize, k: usize, out: &mut Vec<usize>) {
     assert_eq!(logits.len(), n * k);
-    (0..n)
-        .map(|i| {
-            let row = &logits[i * k..(i + 1) * k];
-            let mut best = 0;
-            for j in 1..k {
-                if row[j] > row[best] {
-                    best = j;
-                }
+    out.clear();
+    out.extend((0..n).map(|i| {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0;
+        for j in 1..k {
+            if row[j] > row[best] {
+                best = j;
             }
-            best
-        })
-        .collect()
+        }
+        best
+    }));
 }
 
 /// Per-sample RMSE across output dims between two `(n, k)` buffers — the

@@ -6,7 +6,7 @@ use std::path::Path;
 
 use crate::config::Method;
 use crate::formats::{BenchManifest, Manifest, WeightsFile};
-use crate::nn::Mlp;
+use crate::nn::{Mlp, PackedMlp};
 
 use super::{LoadedForward, Runtime, WeightSet};
 
@@ -40,6 +40,26 @@ pub struct ModelBank {
     weights: HashMap<(Method, Role, usize), WeightSet>,
     /// Host-side copies for the native fallback engine and NPU cost model.
     pub host: WeightsFile,
+    /// Host nets repacked once for the tiled GEMM engine (`nn::gemm`).
+    /// Keyed by (method, is_approx, index) so hot-path lookups allocate
+    /// nothing; Clf2/ClfN share the classifier slot like `host_mlp`.
+    packed: HashMap<(Method, bool, usize), PackedMlp>,
+}
+
+/// Pack every host net reachable through a known [`Method`] for the tiled
+/// native engine. Runs once at bank construction.
+fn pack_host(host: &WeightsFile) -> HashMap<(Method, bool, usize), PackedMlp> {
+    let mut packed = HashMap::new();
+    for m in Method::ALL {
+        let Some(mw) = host.methods.get(m.key()) else { continue };
+        for (i, net) in mw.approximators.iter().enumerate() {
+            packed.insert((m, true, i), PackedMlp::from_mlp(net));
+        }
+        for (i, net) in mw.classifiers.iter().enumerate() {
+            packed.insert((m, false, i), PackedMlp::from_mlp(net));
+        }
+    }
+    packed
 }
 
 impl ModelBank {
@@ -71,7 +91,8 @@ impl ModelBank {
         let mut weights = HashMap::new();
 
         let Some(rt) = rt else {
-            return Ok(ModelBank { bench: bench.name.clone(), exes, weights, host });
+            let packed = pack_host(&host);
+            return Ok(ModelBank { bench: bench.name.clone(), exes, weights, host, packed });
         };
 
         let need_clf2 = methods.iter().any(|m| !m.is_mcma());
@@ -122,18 +143,21 @@ impl ModelBank {
             }
         }
 
-        Ok(ModelBank { bench: bench.name.clone(), exes, weights, host })
+        let packed = pack_host(&host);
+        Ok(ModelBank { bench: bench.name.clone(), exes, weights, host, packed })
     }
 
     /// Build a native-only bank straight from host weights (no files, no
     /// PJRT) — lets unit tests craft classifiers/approximators with known
     /// behaviour and exercise the coordinator's routing semantics.
     pub fn from_host(bench: &str, host: WeightsFile) -> Self {
+        let packed = pack_host(&host);
         ModelBank {
             bench: bench.to_string(),
             exes: HashMap::new(),
             weights: HashMap::new(),
             host,
+            packed,
         }
     }
 
@@ -182,6 +206,14 @@ impl ModelBank {
                 .get(idx)
                 .ok_or_else(|| anyhow::anyhow!("classifier {idx} out of range")),
         }
+    }
+
+    /// Host net repacked for the tiled GEMM engine (native hot path).
+    pub fn host_packed(&self, m: Method, role: Role, idx: usize) -> crate::Result<&PackedMlp> {
+        let is_approx = role == Role::Approx;
+        self.packed
+            .get(&(m, is_approx, idx))
+            .ok_or_else(|| anyhow::anyhow!("no packed host net for {m:?}/{role:?}[{idx}]"))
     }
 
     /// Number of approximators available for `m`.

@@ -46,6 +46,7 @@ where
 /// Generator helpers.
 pub mod gens {
     use super::Rng;
+    use crate::nn::{Layer, Matrix, Mlp};
 
     pub fn vec_f32(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f32> {
         (0..len).map(|_| rng.uniform(lo, hi) as f32).collect()
@@ -53,6 +54,20 @@ pub mod gens {
 
     pub fn matrix(rng: &mut Rng, rows: usize, cols: usize, lo: f64, hi: f64) -> Vec<f32> {
         vec_f32(rng, rows * cols, lo, hi)
+    }
+
+    /// Random MLP over `topo`, weights in `±w_amp`, biases in `±b_amp` —
+    /// shared by the gemm property tests, the dispatcher scratch tests and
+    /// the synthetic hotpath bench.
+    pub fn mlp(rng: &mut Rng, topo: &[usize], w_amp: f64, b_amp: f64) -> Mlp {
+        let layers: Vec<Layer> = topo
+            .windows(2)
+            .map(|w| Layer {
+                w: Matrix::new(w[0], w[1], matrix(rng, w[0], w[1], -w_amp, w_amp)),
+                b: vec_f32(rng, w[1], -b_amp, b_amp),
+            })
+            .collect();
+        Mlp::new(layers)
     }
 }
 

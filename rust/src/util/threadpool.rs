@@ -2,20 +2,41 @@
 //!
 //! The coordinator pipeline uses dedicated threads with mpsc channels
 //! (`coordinator::server`); this pool covers embarrassingly-parallel eval
-//! work (per-benchmark figure regeneration).
+//! work (per-benchmark figure regeneration) and the dispatcher's native
+//! batch sharding.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pending-job count + the condvar `wait_idle` parks on.
+struct PoolState {
+    pending: Mutex<usize>,
+    idle: Condvar,
+}
+
+/// Decrements the pending count when dropped — panic-safe: a job that
+/// unwinds still releases its count, so `wait_idle` cannot deadlock.
+struct PendingGuard<'a>(&'a PoolState);
+
+impl Drop for PendingGuard<'_> {
+    fn drop(&mut self) {
+        let mut pending = self.0.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.0.idle.notify_all();
+        }
+    }
+}
 
 /// Fixed-size worker pool. Jobs are FIFO. Dropping the pool joins workers.
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
     workers: Vec<thread::JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+    state: Arc<PoolState>,
 }
 
 impl ThreadPool {
@@ -23,36 +44,41 @@ impl ThreadPool {
         assert!(n > 0);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
+        let state = Arc::new(PoolState { pending: Mutex::new(0), idle: Condvar::new() });
         let workers = (0..n)
             .map(|_| {
                 let rx = Arc::clone(&rx);
-                let queued = Arc::clone(&queued);
+                let state = Arc::clone(&state);
                 thread::spawn(move || loop {
                     let job = { rx.lock().unwrap().recv() };
                     match job {
                         Ok(job) => {
-                            job();
-                            queued.fetch_sub(1, Ordering::SeqCst);
+                            let _guard = PendingGuard(&state);
+                            // Contain job panics so the worker (and the
+                            // pool's capacity) survives them.
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            );
                         }
                         Err(_) => break,
                     }
                 })
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, queued }
+        ThreadPool { tx: Some(tx), workers, state }
     }
 
     /// Submit a job.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.queued.fetch_add(1, Ordering::SeqCst);
+        *self.state.pending.lock().unwrap() += 1;
         self.tx.as_ref().unwrap().send(Box::new(f)).unwrap();
     }
 
-    /// Busy-wait (with yield) until all submitted jobs finished.
+    /// Block until all submitted jobs finished (condvar wait, no spinning).
     pub fn wait_idle(&self) {
-        while self.queued.load(Ordering::SeqCst) > 0 {
-            thread::yield_now();
+        let mut pending = self.state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.state.idle.wait(pending).unwrap();
         }
     }
 }
@@ -67,7 +93,9 @@ impl Drop for ThreadPool {
 }
 
 /// Parallel map preserving order, using scoped threads (no 'static bound).
-/// Spawns `min(items, max_threads)` threads working over an atomic cursor.
+/// Spawns `min(items, max_threads)` threads over an atomic chunk cursor;
+/// each thread computes a whole chunk locally and publishes it under ONE
+/// short lock, so slot-mutex contention is per-chunk, not per-item.
 pub fn parallel_map<T, R, F>(items: &[T], max_threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -79,20 +107,32 @@ where
         return Vec::new();
     }
     let threads = max_threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().map(f).collect();
+    }
+    // Chunks small enough to load-balance uneven work across threads, big
+    // enough that the write-back lock is cold.
+    let chunk = (n / (threads * 8)).max(1);
     let cursor = AtomicUsize::new(0);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let slots = Mutex::new(&mut out);
     thread::scope(|s| {
         for _ in 0..threads {
             s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::SeqCst);
-                if i >= n {
+                let start = cursor.fetch_add(chunk, Ordering::SeqCst);
+                if start >= n {
                     break;
                 }
-                let r = f(&items[i]);
-                // Each index is written exactly once; the mutex only guards
-                // the &mut aliasing, contention is one lock per item.
-                slots.lock().unwrap()[i] = Some(r);
+                let end = (start + chunk).min(n);
+                let mut local: Vec<R> = Vec::with_capacity(end - start);
+                for item in &items[start..end] {
+                    local.push(f(item));
+                }
+                // One lock per finished chunk; each index written once.
+                let mut guard = slots.lock().unwrap();
+                for (j, r) in local.into_iter().enumerate() {
+                    guard[start + j] = Some(r);
+                }
             });
         }
     });
@@ -100,8 +140,13 @@ where
 }
 
 /// Number of worker threads to default to (leave a core for the OS).
+/// Cached: `available_parallelism` is a syscall and this gates the
+/// dispatcher's native forward on every batch.
 pub fn default_parallelism() -> usize {
-    thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(4)
+    })
 }
 
 #[cfg(test)]
@@ -140,10 +185,48 @@ mod tests {
     }
 
     #[test]
+    fn wait_idle_survives_panicking_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for i in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 2 == 0 {
+                    panic!("job panic (expected in test)");
+                }
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // Must terminate even though half the jobs panicked...
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 4);
+        // ...and the workers must still be alive for new work.
+        for _ in 0..4 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
     fn parallel_map_preserves_order() {
         let items: Vec<u64> = (0..500).collect();
         let out = parallel_map(&items, 8, |&x| x * 2);
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_uneven_work_and_threads() {
+        // Chunked scheduling must still cover every index when n is not a
+        // multiple of the chunk size or thread count.
+        for n in [1usize, 3, 7, 63, 100] {
+            let items: Vec<u64> = (0..n as u64).collect();
+            let out = parallel_map(&items, 5, |&x| x + 1);
+            assert_eq!(out, items.iter().map(|x| x + 1).collect::<Vec<_>>());
+        }
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Scratch-arena refactor guarantees, pinned with crafted nets (no
+//! artifacts, no PJRT):
+//!
+//! * the allocating wrappers and the `*_into` hot path produce bitwise
+//!   identical plans and served outputs;
+//! * `run_dataset` equals the manual normalize -> plan -> execute
+//!   composition bitwise (golden stability across the refactor);
+//! * repeated `process_batch_into` calls reach a steady state with zero
+//!   heap allocations, observed as buffer capacities going flat.
+
+use std::collections::HashMap;
+
+use mcma::config::{ExecMode, Method};
+use mcma::coordinator::{Batch, Dispatcher, RoutePlan, Scratch};
+use mcma::formats::weights::{MethodWeights, WeightsFile};
+use mcma::formats::{BenchManifest, Dataset};
+use mcma::runtime::ModelBank;
+use mcma::util::rng::Rng;
+
+/// sobel-shaped manifest (9 -> 1) with trivial normalisation.
+fn manifest() -> BenchManifest {
+    BenchManifest {
+        name: "sobel".into(),
+        domain: "test".into(),
+        n_in: 9,
+        n_out: 1,
+        approx_topology: vec![9, 8, 1],
+        clf2_topology: vec![9, 2],
+        clfn_topology: vec![9, 4],
+        x_lo: vec![0.0; 9],
+        x_hi: vec![1.0; 9],
+        y_lo: vec![0.0],
+        y_hi: vec![1.0],
+        error_bound: 0.05,
+        train_n: 0,
+        test_n: 0,
+        methods: vec!["mcma_competitive".into()],
+        mcca_pairs: 0,
+    }
+}
+
+fn random_mlp(rng: &mut Rng, topo: &[usize]) -> mcma::nn::Mlp {
+    mcma::util::prop::gens::mlp(rng, topo, 1.5, 0.5)
+}
+
+/// Random MCMA bank: 4-class classifier (3 approximators + nC) so batches
+/// exercise every route group and the CPU path.
+fn bank(rng: &mut Rng) -> ModelBank {
+    let mw = MethodWeights {
+        method: "mcma_competitive".into(),
+        cascade: false,
+        clf_classes: 4,
+        classifiers: vec![random_mlp(rng, &[9, 6, 4])],
+        approximators: (0..3).map(|_| random_mlp(rng, &[9, 8, 1])).collect(),
+    };
+    let mut methods = HashMap::new();
+    methods.insert("mcma_competitive".to_string(), mw);
+    ModelBank::from_host("sobel", WeightsFile { methods })
+}
+
+fn random_batch(rng: &mut Rng, n: usize) -> Batch {
+    let now = std::time::Instant::now();
+    Batch {
+        ids: (0..n as u64).collect(),
+        x_raw: (0..n * 9).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        n,
+        enqueued: vec![now; n],
+    }
+}
+
+#[test]
+fn process_batch_into_matches_allocating_wrapper_bitwise() {
+    let man = manifest();
+    let mut rng = Rng::new(0xA11C);
+    let bank = bank(&mut rng);
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+
+    let mut plan = RoutePlan::default();
+    let mut y = Vec::new();
+    let mut scratch = Scratch::new();
+    for n in [1usize, 7, 64, 256] {
+        let batch = random_batch(&mut rng, n);
+        let (plan_alloc, y_alloc) = d.process_batch(&batch).unwrap();
+        d.process_batch_into(&batch, &mut plan, &mut y, &mut scratch).unwrap();
+        assert_eq!(plan.routes, plan_alloc.routes, "n={n} routes diverge");
+        assert_eq!(plan.groups, plan_alloc.groups, "n={n} groups diverge");
+        assert_eq!(plan.cpu, plan_alloc.cpu, "n={n} cpu group diverges");
+        // Bitwise: both paths run the identical packed-GEMM engine.
+        assert_eq!(y, y_alloc, "n={n} served outputs diverge");
+    }
+}
+
+#[test]
+fn run_dataset_matches_manual_composition_bitwise() {
+    let man = manifest();
+    let mut rng = Rng::new(0x5EED);
+    let bank = bank(&mut rng);
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+
+    let n = 200;
+    let ds = Dataset {
+        n,
+        d_in: 9,
+        d_out: 1,
+        x_raw: (0..n * 9).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        y_norm: (0..n).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    };
+
+    let out = d.run_dataset(&ds).unwrap();
+    let x_norm = d.normalize(&ds.x_raw, ds.n);
+    let plan = d.plan(&x_norm, ds.n).unwrap();
+    let y = d.execute_plan(&plan, &x_norm, &ds.x_raw, ds.n).unwrap();
+    assert_eq!(out.plan.routes, plan.routes);
+    assert_eq!(out.y_served, y);
+
+    // error_matrix over pre-normalised inputs is the same computation
+    // run_dataset now shares (no second normalisation pass).
+    let m1 = d.error_matrix(&ds).unwrap();
+    let m2 = d.error_matrix_norm(&ds, &x_norm).unwrap();
+    assert_eq!(m1, m2);
+}
+
+#[test]
+fn steady_state_process_batch_stops_allocating() {
+    let man = manifest();
+    let mut rng = Rng::new(0xCAFE);
+    let bank = bank(&mut rng);
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+
+    let mut plan = RoutePlan::default();
+    let mut y = Vec::new();
+    let mut scratch = Scratch::new();
+
+    // Two fixed 256-row batches with different route mixes; alternating
+    // them models a steady request stream with a stable size envelope.
+    let batches = [random_batch(&mut rng, 256), random_batch(&mut rng, 256)];
+
+    // Warm-up: let every buffer reach its high-water mark.
+    for i in 0..4 {
+        d.process_batch_into(&batches[i % 2], &mut plan, &mut y, &mut scratch).unwrap();
+    }
+    let warm_caps = scratch.capacity_signature();
+    let warm_y = y.capacity();
+    let warm_routes = plan.routes.capacity();
+    let warm_cpu = plan.cpu.capacity();
+    let warm_groups: Vec<usize> = plan.groups.iter().map(|g| g.capacity()).collect();
+
+    // Steady state: equal-sized batches must not grow ANY buffer.
+    for i in 0..10 {
+        d.process_batch_into(&batches[i % 2], &mut plan, &mut y, &mut scratch).unwrap();
+        assert_eq!(scratch.capacity_signature(), warm_caps, "scratch grew");
+        assert_eq!(y.capacity(), warm_y, "output buffer grew");
+        assert_eq!(plan.routes.capacity(), warm_routes, "routes grew");
+        assert_eq!(plan.cpu.capacity(), warm_cpu, "cpu group grew");
+        let groups: Vec<usize> = plan.groups.iter().map(|g| g.capacity()).collect();
+        assert_eq!(groups, warm_groups, "route groups grew");
+    }
+}
+
+#[test]
+fn forward_native_agrees_with_scalar_reference() {
+    let man = manifest();
+    let mut rng = Rng::new(0xD15);
+    let bank = bank(&mut rng);
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let host = bank.host_mlp(Method::McmaCompetitive, mcma::runtime::Role::Approx, 1).unwrap();
+
+    let n = 50;
+    let x: Vec<f32> = (0..n * 9).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let fast = d.forward(mcma::runtime::Role::Approx, 1, &x, n).unwrap();
+    let slow = host.forward_batch(&x, n);
+    assert_eq!(fast.len(), slow.len());
+    for (a, b) in fast.iter().zip(&slow) {
+        assert!((a - b).abs() < 1e-5 + 1e-5 * b.abs(), "{a} vs {b}");
+    }
+}

@@ -1,9 +1,11 @@
 //! L3 hot-path microbenchmarks (§Perf): where does a request's time go?
 //!
-//! * native MLP forward (single / batched, packed GEMM vs scalar GEMV)
+//! * native MLP forward (single / batched, packed GEMM vs scalar GEMV,
+//!   f32 vs the int8 quantized engine — both precisions report rows/sec
+//!   so the speedup ratio is machine-readable in `BENCH_hotpath.json`)
 //! * PJRT executable run at B=1 and B=256 — dispatch + execute cost
 //! * classify -> route -> execute for one full batch (the serving unit),
-//!   through the zero-allocation scratch-arena path
+//!   through the zero-allocation scratch-arena path, f32 and int8
 //! * batcher push/flush overhead
 //!
 //! Criterion is unavailable offline; `mcma::bench_harness` provides
@@ -23,7 +25,7 @@ use mcma::coordinator::{Batcher, Dispatcher, RoutePlan, Scratch};
 use mcma::eval::Context;
 use mcma::formats::weights::{MethodWeights, WeightsFile};
 use mcma::formats::BenchManifest;
-use mcma::nn::GemmScratch;
+use mcma::nn::{GemmScratch, Kernel, QGemmScratch};
 use mcma::runtime::{ModelBank, Role};
 use mcma::util::rng::Rng;
 
@@ -38,6 +40,7 @@ fn budget() -> Duration {
 fn main() -> mcma::Result<()> {
     let mut rec = Recorder::new();
     let b = budget();
+    println!("SIMD kernel: {}", Kernel::detect().name());
 
     // Prefer real artifacts (PJRT if compiled in, else native-only); fall
     // back to synthetic nets so the kernel numbers are always measurable.
@@ -68,6 +71,7 @@ fn artifact_suite(
     let bank = ctx.bank(&bench_man, &[method])?;
     let ds = ctx.dataset("blackscholes")?;
     let d_native = Dispatcher::new(&bench_man, &bank, method, ExecMode::Native)?;
+    let d_q8 = Dispatcher::new(&bench_man, &bank, method, ExecMode::NativeQ8)?;
 
     let x_norm = d_native.normalize(&ds.x_raw, ds.n);
     let raw256 = &ds.x_raw[..256 * bench_man.n_in];
@@ -75,7 +79,7 @@ fn artifact_suite(
     let one = &x_norm[..bench_man.n_in];
 
     println!("--- L3 hot path (blackscholes, {}) ---", method.label());
-    native_benches(rec, budget, &bank, &d_native, method, one, batch256, raw256);
+    native_benches(rec, budget, &bank, &d_native, &d_q8, method, one, batch256, raw256);
 
     if pjrt {
         let d_pjrt = Dispatcher::new(&bench_man, &bank, method, ExecMode::Pjrt)?;
@@ -107,6 +111,7 @@ fn synthetic_suite(rec: &mut Recorder, budget: Duration) -> mcma::Result<()> {
     let host = synthetic_weights(&mut rng);
     let bank = ModelBank::from_host("blackscholes", host);
     let d_native = Dispatcher::new(&man, &bank, method, ExecMode::Native)?;
+    let d_q8 = Dispatcher::new(&man, &bank, method, ExecMode::NativeQ8)?;
 
     // Raw inputs from the precise function's own generator (valid domain).
     let benchfn = mcma::benchmarks::by_name("blackscholes")?;
@@ -122,6 +127,7 @@ fn synthetic_suite(rec: &mut Recorder, budget: Duration) -> mcma::Result<()> {
         budget,
         &bank,
         &d_native,
+        &d_q8,
         method,
         &x_norm[..man.n_in],
         &x_norm,
@@ -131,13 +137,15 @@ fn synthetic_suite(rec: &mut Recorder, budget: Duration) -> mcma::Result<()> {
     Ok(())
 }
 
-/// Native engine floor + the serving unit through the scratch arena.
+/// Native engine floor (f32 packed, int8 quantized, scalar GEMV baseline)
+/// + the serving unit through the scratch arena in both precisions.
 #[allow(clippy::too_many_arguments)]
 fn native_benches(
     rec: &mut Recorder,
     budget: Duration,
     bank: &ModelBank,
     d_native: &Dispatcher,
+    d_q8: &Dispatcher,
     method: Method,
     one: &[f32],
     batch256: &[f32],
@@ -145,28 +153,49 @@ fn native_benches(
 ) {
     let mlp = bank.host_mlp(method, Role::Approx, 0).unwrap();
     let packed = bank.host_packed(method, Role::Approx, 0).unwrap();
+    let packed_q8 = bank.host_packed_q8(method, Role::Approx, 0).unwrap();
     let mut gemm = GemmScratch::new();
+    let mut qgemm = QGemmScratch::new();
     let mut out256 = vec![0.0f32; 256 * packed.n_out()];
 
     rec.bench("native mlp forward x1", budget, || {
         std::hint::black_box(mlp.forward1(one));
     });
-    rec.bench("native mlp forward x256", budget, || {
+    rec.bench_rows("native mlp forward x256", budget, 256, || {
         packed.forward_batch_to(batch256, 256, &mut gemm, &mut out256);
         std::hint::black_box(&out256);
     });
-    // The pre-tentpole scalar GEMV path, kept for the speedup ratio.
-    rec.bench("native mlp forward x256 (scalar gemv)", budget, || {
+    rec.bench_rows("native mlp forward x256 (int8)", budget, 256, || {
+        packed_q8.forward_batch_to(batch256, 256, &mut qgemm, &mut out256);
+        std::hint::black_box(&out256);
+    });
+    // The PR 1 kernel exactly: the packed tiled f32 path forced onto the
+    // scalar micro-kernel (no explicit SIMD).  The int8 acceptance bar is
+    // >= 2x this case's rows/sec.
+    let packed_scalar = packed.clone().with_kernel(Kernel::Scalar);
+    let mut gemm_s = GemmScratch::new();
+    rec.bench_rows("native mlp forward x256 (f32 scalar-tiled)", budget, 256, || {
+        packed_scalar.forward_batch_to(batch256, 256, &mut gemm_s, &mut out256);
+        std::hint::black_box(&out256);
+    });
+    // The pre-PR 1 streaming GEMV, kept for the long-run ratio.
+    rec.bench_rows("native mlp forward x256 (scalar gemv)", budget, 256, || {
         std::hint::black_box(mlp.forward_batch(batch256, 256));
     });
 
     let mut plan = RoutePlan::default();
     let mut scratch = Scratch::new();
     let mut y = Vec::new();
-    rec.bench("dispatch unit native B=256", budget, || {
+    rec.bench_rows("dispatch unit native B=256", budget, 256, || {
         d_native.plan_into(batch256, 256, &mut plan, &mut scratch).unwrap();
         d_native
             .execute_plan_into(&plan, batch256, raw256, 256, &mut y, &mut scratch)
+            .unwrap();
+        std::hint::black_box(&y);
+    });
+    rec.bench_rows("dispatch unit native-q8 B=256", budget, 256, || {
+        d_q8.plan_into(batch256, 256, &mut plan, &mut scratch).unwrap();
+        d_q8.execute_plan_into(&plan, batch256, raw256, 256, &mut y, &mut scratch)
             .unwrap();
         std::hint::black_box(&y);
     });

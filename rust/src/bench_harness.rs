@@ -21,12 +21,26 @@ pub struct Timing {
     pub p95_ns: f64,
     pub p99_ns: f64,
     pub std_ns: f64,
+    /// Rows processed per iteration, when the case is a batched kernel —
+    /// enables throughput (rows/sec) comparison across precisions.
+    pub rows: Option<u64>,
 }
 
 impl Timing {
+    /// Throughput in rows/second (batched kernel cases only).
+    pub fn rows_per_sec(&self) -> Option<f64> {
+        self.rows
+            .filter(|_| self.mean_ns > 0.0)
+            .map(|r| r as f64 * 1e9 / self.mean_ns)
+    }
+
     pub fn print(&self) {
+        let tail = match self.rows_per_sec() {
+            Some(rps) => format!("  {:>12.0} rows/s", rps),
+            None => String::new(),
+        };
         println!(
-            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  ±{:>10}",
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  ±{:>10}{tail}",
             self.name,
             self.iters,
             fmt_ns(self.mean_ns),
@@ -51,7 +65,17 @@ pub fn fmt_ns(ns: f64) -> String {
 }
 
 /// Time `f`, auto-calibrating the iteration count to fill ~`budget`.
-pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, f: F) -> Timing {
+    bench_impl(name, budget, None, f)
+}
+
+/// [`bench`] for a batched kernel processing `rows` rows per iteration:
+/// the timing additionally reports rows/sec throughput.
+pub fn bench_with_rows<F: FnMut()>(name: &str, budget: Duration, rows: u64, f: F) -> Timing {
+    bench_impl(name, budget, Some(rows), f)
+}
+
+fn bench_impl<F: FnMut()>(name: &str, budget: Duration, rows: Option<u64>, mut f: F) -> Timing {
     // Warm-up + calibration.
     let t0 = Instant::now();
     f();
@@ -73,6 +97,7 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
         p95_ns: stats::percentile(&samples, 95.0),
         p99_ns: stats::percentile(&samples, 99.0),
         std_ns: stats::std_dev(&samples),
+        rows,
     };
     timing.print();
     timing
@@ -95,6 +120,12 @@ impl Recorder {
         self.timings.push(bench(name, budget, f));
     }
 
+    /// Run [`bench_with_rows`] and keep the timing (adds rows/sec to the
+    /// JSON report — the cross-precision throughput comparison).
+    pub fn bench_rows<F: FnMut()>(&mut self, name: &str, budget: Duration, rows: u64, f: F) {
+        self.timings.push(bench_with_rows(name, budget, rows, f));
+    }
+
     /// Write all recorded timings as JSON:
     /// `{"suite": ..., "unix_time": ..., "results": [{name, iters, mean_ns,
     /// p50_ns, p95_ns, p99_ns, std_ns}, ...]}`.
@@ -107,7 +138,7 @@ impl Recorder {
             .timings
             .iter()
             .map(|t| {
-                json::obj(vec![
+                let mut fields = vec![
                     ("name", json::Value::Str(t.name.clone())),
                     ("iters", json::Value::Num(t.iters as f64)),
                     ("mean_ns", json::Value::Num(t.mean_ns)),
@@ -115,7 +146,12 @@ impl Recorder {
                     ("p95_ns", json::Value::Num(t.p95_ns)),
                     ("p99_ns", json::Value::Num(t.p99_ns)),
                     ("std_ns", json::Value::Num(t.std_ns)),
-                ])
+                ];
+                if let (Some(rows), Some(rps)) = (t.rows, t.rows_per_sec()) {
+                    fields.push(("rows", json::Value::Num(rows as f64)));
+                    fields.push(("rows_per_sec", json::Value::Num(rps)));
+                }
+                json::obj(fields)
             })
             .collect();
         let doc = json::obj(vec![
@@ -238,6 +274,31 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "tiny");
         assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_rows_reports_throughput() {
+        let t = bench_with_rows("rows-case", Duration::from_millis(5), 256, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        let rps = t.rows_per_sec().expect("rows/sec must be present");
+        assert!((rps - 256.0 * 1e9 / t.mean_ns).abs() < 1e-6);
+        // Plain bench carries no throughput.
+        let plain = bench("plain", Duration::from_millis(5), || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(plain.rows_per_sec().is_none());
+
+        let mut rec = Recorder::new();
+        rec.timings.push(t);
+        let path = std::env::temp_dir()
+            .join(format!("mcma_bench_rows_test_{}.json", std::process::id()));
+        rec.write_json("rows-suite", &path).unwrap();
+        let doc = crate::util::json::parse_file(&path).unwrap();
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert!(results[0].get("rows_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(results[0].get("rows").unwrap().as_f64().unwrap(), 256.0);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -83,7 +83,8 @@ SUBCOMMANDS:
          [--case 1|2|3]
 
 COMMON OPTIONS:
-  --exec pjrt|native              execution engine (default pjrt)
+  --exec pjrt|native|native-q8    execution engine (default pjrt);
+                                  native-q8 = int8 quantized SIMD engine
   --samples N                     cap test samples (default: full test set)
 
 ENVIRONMENT:

@@ -12,8 +12,23 @@ use std::str::FromStr;
 pub enum ExecMode {
     /// PJRT CPU client running the AOT-lowered HLO (the real configuration).
     Pjrt,
-    /// Pure-Rust `nn::Mlp` fallback (profiling the L3 logic in isolation).
+    /// Pure-Rust f32 packed-GEMM engine (`nn::gemm`).
     Native,
+    /// Pure-Rust quantized engine (`nn::qgemm`): per-tensor symmetric int8
+    /// weights/activations, i32 accumulation, requantize-on-store — the
+    /// faithful model of the NPU's fixed-point MAC arrays, and the fastest
+    /// serving floor on SIMD-capable hosts.
+    NativeQ8,
+}
+
+impl ExecMode {
+    /// Numeric precision of the MAC datapath this engine models.
+    pub fn precision(self) -> Precision {
+        match self {
+            ExecMode::NativeQ8 => Precision::Int8,
+            ExecMode::Pjrt | ExecMode::Native => Precision::F32,
+        }
+    }
 }
 
 impl FromStr for ExecMode {
@@ -23,7 +38,35 @@ impl FromStr for ExecMode {
         match s {
             "pjrt" => Ok(ExecMode::Pjrt),
             "native" => Ok(ExecMode::Native),
-            _ => anyhow::bail!("unknown exec mode {s:?} (pjrt|native)"),
+            "native-q8" | "native_q8" | "q8" => Ok(ExecMode::NativeQ8),
+            _ => anyhow::bail!("unknown exec mode {s:?} (pjrt|native|native-q8)"),
+        }
+    }
+}
+
+/// Numeric precision of the NPU MAC datapath (and of the native engines
+/// that model it).  Int8 follows the paper's fixed-point MAC arrays:
+/// cheaper MACs, and 4 values packed per 32-bit bus/cache word.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    Int8,
+}
+
+impl Precision {
+    /// Values moved per 32-bit bus/cache word at this precision.
+    pub fn values_per_word(self) -> u64 {
+        match self {
+            Precision::F32 => 1,
+            Precision::Int8 => 4,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
         }
     }
 }
@@ -113,8 +156,11 @@ pub struct NpuConfig {
     pub pes_per_tile: usize,
     /// Tiles in the NPU (classifier + approximator can map to tiles).
     pub n_tiles: usize,
-    /// MACs one PE retires per cycle.
+    /// f32 MACs one PE retires per cycle.
     pub macs_per_pe_cycle: u64,
+    /// Int8 MACs one PE retires per cycle (fixed-point arrays pack 4 narrow
+    /// multipliers in roughly one f32 MAC's area — DianNao-style figures).
+    pub q8_macs_per_pe_cycle: u64,
     /// Activation unit latency (cycles per neuron).
     pub act_latency: u64,
     /// Input/output FIFO transfer: values moved per cycle over the bus.
@@ -125,8 +171,11 @@ pub struct NpuConfig {
     pub cache_refill_words_per_cycle: u64,
     /// NPU clock relative to CPU clock (paper NPU runs at core clock).
     pub clock_ratio: f64,
-    /// Energy per MAC (pJ).
+    /// Energy per f32 MAC (pJ).
     pub e_mac_pj: f64,
+    /// Energy per int8 MAC (pJ) — narrow multipliers are ~4x cheaper at
+    /// 45 nm (Horowitz ISSCC'14 orders of magnitude).
+    pub e_mac_q8_pj: f64,
     /// Energy per word moved on the internal bus (pJ).
     pub e_bus_word_pj: f64,
     /// Energy per word refilled from on-chip cache (pJ).
@@ -143,12 +192,14 @@ impl Default for NpuConfig {
             pes_per_tile: 8,
             n_tiles: 2,
             macs_per_pe_cycle: 1,
+            q8_macs_per_pe_cycle: 4,
             act_latency: 2,
             bus_words_per_cycle: 4,
             weight_buffer_words: 2048,
             cache_refill_words_per_cycle: 8,
             clock_ratio: 1.0,
             e_mac_pj: 1.2,
+            e_mac_q8_pj: 0.3,
             e_bus_word_pj: 0.8,
             e_cache_word_pj: 2.0,
             e_cpu_cycle_pj: 400.0,
@@ -198,13 +249,26 @@ mod tests {
     fn exec_mode_parse() {
         assert_eq!(ExecMode::from_str("pjrt").unwrap(), ExecMode::Pjrt);
         assert_eq!(ExecMode::from_str("native").unwrap(), ExecMode::Native);
+        assert_eq!(ExecMode::from_str("native-q8").unwrap(), ExecMode::NativeQ8);
+        assert_eq!(ExecMode::from_str("native_q8").unwrap(), ExecMode::NativeQ8);
         assert!(ExecMode::from_str("gpu").is_err());
+    }
+
+    #[test]
+    fn exec_mode_precision() {
+        assert_eq!(ExecMode::Pjrt.precision(), Precision::F32);
+        assert_eq!(ExecMode::Native.precision(), Precision::F32);
+        assert_eq!(ExecMode::NativeQ8.precision(), Precision::Int8);
+        assert_eq!(Precision::F32.values_per_word(), 1);
+        assert_eq!(Precision::Int8.values_per_word(), 4);
     }
 
     #[test]
     fn defaults_sane() {
         let c = NpuConfig::default();
         assert!(c.pes_per_tile > 0 && c.e_cpu_cycle_pj > c.e_mac_pj);
+        assert!(c.e_mac_q8_pj < c.e_mac_pj, "int8 MAC must be cheaper");
+        assert!(c.q8_macs_per_pe_cycle >= c.macs_per_pe_cycle);
         assert_eq!(BatchPolicy::default().max_batch, 256);
     }
 }

@@ -21,7 +21,7 @@
 use crate::benchmarks::{self, BenchFn};
 use crate::config::{ExecMode, Method};
 use crate::formats::{BenchManifest, Dataset};
-use crate::nn::{self, GemmScratch, PackedMlp};
+use crate::nn::{self, GemmScratch, PackedMlp, PackedMlpQ8, QGemmScratch};
 use crate::runtime::{ModelBank, Role};
 use crate::util::threadpool;
 
@@ -87,6 +87,8 @@ pub struct Scratch {
     raw_out: Vec<f64>,
     /// Activation panels for the tiled GEMM layer chain.
     gemm: GemmScratch,
+    /// Quantized-panel + activation buffers for the int8 engine.
+    qgemm: QGemmScratch,
 }
 
 impl Scratch {
@@ -105,6 +107,7 @@ impl Scratch {
             self.group_out.capacity(),
             self.raw_out.capacity(),
             self.gemm.capacity(),
+            self.qgemm.capacity(),
         ]
     }
 }
@@ -118,6 +121,12 @@ pub struct Dispatcher<'a> {
     pub exec: ExecMode,
     pub npu_cfg: crate::config::NpuConfig,
     pub policy: RouterPolicy,
+    /// Model the NPU executing each batch class-sorted (groups in index
+    /// order, then CPU) instead of in arrival order, collapsing §III.D
+    /// Case-3 weight refills to at most one per approximator per batch.
+    /// The native engines already execute group-by-group; this flag makes
+    /// the weight-switch accounting follow the same order.
+    pub route_sorted: bool,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -141,12 +150,19 @@ impl<'a> Dispatcher<'a> {
             exec,
             npu_cfg: crate::config::NpuConfig::default(),
             policy: RouterPolicy::Argmax,
+            route_sorted: false,
         })
     }
 
     /// Builder-style routing-policy override (extensions; see RouterPolicy).
     pub fn with_policy(mut self, policy: RouterPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Builder-style route-sorted execution toggle (see `route_sorted`).
+    pub fn with_route_sorted(mut self, sorted: bool) -> Self {
+        self.route_sorted = sorted;
         self
     }
 
@@ -183,14 +199,17 @@ impl<'a> Dispatcher<'a> {
         n: usize,
     ) -> crate::Result<Vec<f32>> {
         let mut gemm = GemmScratch::new();
+        let mut qgemm = QGemmScratch::new();
         let mut out = Vec::new();
-        self.forward_into(role, idx, x_norm, n, &mut gemm, &mut out)?;
+        self.forward_into(role, idx, x_norm, n, &mut gemm, &mut qgemm, &mut out)?;
         Ok(out)
     }
 
     /// [`Self::forward`] into reusable buffers.  Native mode runs the
-    /// pre-packed tiled GEMM engine (sharded across cores for tall
-    /// panels); PJRT chunks through the largest compiled batch.
+    /// pre-packed tiled GEMM engine (f32 or the int8 quantized twin,
+    /// sharded across cores for tall panels); PJRT chunks through the
+    /// largest compiled batch.
+    #[allow(clippy::too_many_arguments)]
     fn forward_into(
         &self,
         role: Role,
@@ -198,6 +217,7 @@ impl<'a> Dispatcher<'a> {
         x_norm: &[f32],
         n: usize,
         gemm: &mut GemmScratch,
+        qgemm: &mut QGemmScratch,
         out: &mut Vec<f32>,
     ) -> crate::Result<()> {
         match self.exec {
@@ -210,6 +230,22 @@ impl<'a> Dispatcher<'a> {
                     forward_native_parallel(packed, x_norm, n, threads, out);
                 } else {
                     packed.forward_batch_to(x_norm, n, gemm, out);
+                }
+                Ok(())
+            }
+            ExecMode::NativeQ8 => {
+                let packed = self.bank.host_packed_q8(self.method, role, idx)?;
+                out.clear();
+                out.resize(n * packed.n_out(), 0.0);
+                // Tall panels ALWAYS take the fixed-block sharded path
+                // (even on one core): activation scales are per panel, so
+                // the block split must depend only on n — never on the
+                // machine's core count — for reproducible q8 outputs.
+                if n >= NATIVE_PAR_MIN_ROWS {
+                    let threads = threadpool::default_parallelism();
+                    forward_native_parallel_q8(packed, x_norm, n, threads, out);
+                } else {
+                    packed.forward_batch_to(x_norm, n, qgemm, out);
                 }
                 Ok(())
             }
@@ -261,8 +297,8 @@ impl<'a> Dispatcher<'a> {
                 } else {
                     (Role::Clf2, 2)
                 };
-                let Scratch { logits, classes, gemm, .. } = scratch;
-                self.forward_into(role, 0, x_norm, n, gemm, logits)?;
+                let Scratch { logits, classes, gemm, qgemm, .. } = scratch;
+                self.forward_into(role, 0, x_norm, n, gemm, qgemm, logits)?;
                 nn::argmax_rows_into(logits, n, n_classes, classes);
                 let n_approx = if m.is_mcma() { n_classes - 1 } else { 1 };
                 if let RouterPolicy::Confidence(tau) = self.policy {
@@ -365,7 +401,7 @@ impl<'a> Dispatcher<'a> {
         y.clear();
         y.resize(n * d_out, 0.0);
 
-        let Scratch { gather, group_out, gemm, raw_out, .. } = scratch;
+        let Scratch { gather, group_out, gemm, qgemm, raw_out, .. } = scratch;
         for (k, group) in plan.groups.iter().enumerate() {
             if group.is_empty() {
                 continue;
@@ -375,7 +411,7 @@ impl<'a> Dispatcher<'a> {
             for &i in group.iter() {
                 gather.extend_from_slice(&x_norm[i * d_in..(i + 1) * d_in]);
             }
-            self.forward_into(Role::Approx, k, gather, group.len(), gemm, group_out)?;
+            self.forward_into(Role::Approx, k, gather, group.len(), gemm, qgemm, group_out)?;
             for (j, &i) in group.iter().enumerate() {
                 y[i * d_out..(i + 1) * d_out]
                     .copy_from_slice(&group_out[j * d_out..(j + 1) * d_out]);
@@ -456,19 +492,33 @@ impl<'a> Dispatcher<'a> {
             .map(|(r, &e)| if r.is_approx() { e } else { 0.0 })
             .collect();
 
-        // Weight-switch accounting over the arrival-order invocation trace.
+        // Weight-switch accounting over the invocation trace: arrival order
+        // by default; class-sorted (the order `execute_plan` actually runs
+        // groups) when `route_sorted` is on, collapsing Case-3 refills to
+        // at most one per approximator per batch.  Residency is charged in
+        // f32-word units at the engine's precision (int8 weights occupy a
+        // quarter word each — the same rule `NpuSim::simulate` applies).
+        let vpw = self.exec.precision().values_per_word() as usize;
         let weight_words: Vec<usize> = (0..self.n_approx())
             .map(|k| {
                 self.bank
                     .host_mlp(self.method, Role::Approx, k)
-                    .map(|m| m.n_params())
+                    .map(|m| m.n_params().div_ceil(vpw))
                     .unwrap_or(0)
             })
             .collect();
         let mut wc = WeightCache::new(&self.npu_cfg, weight_words);
-        for r in &plan.routes {
-            if let Route::Approx(k) = r {
-                wc.access(*k);
+        if self.route_sorted {
+            for r in plan.execution_order_routes() {
+                if let Route::Approx(k) = r {
+                    wc.access(k);
+                }
+            }
+        } else {
+            for r in &plan.routes {
+                if let Route::Approx(k) = r {
+                    wc.access(*k);
+                }
             }
         }
 
@@ -521,8 +571,36 @@ impl<'a> Dispatcher<'a> {
     }
 }
 
-/// Shard a tall native panel across cores: contiguous row chunks, one
-/// local scratch per chunk, results stitched back in order.
+/// Shard a tall native panel across cores in `rows_per`-row chunks,
+/// results stitched back in order.  `fwd` forwards one chunk — each
+/// engine plugs in its packed net with a chunk-local scratch.
+#[allow(clippy::too_many_arguments)]
+fn forward_native_parallel_with<F>(
+    d_in: usize,
+    d_out: usize,
+    x: &[f32],
+    n: usize,
+    rows_per: usize,
+    threads: usize,
+    out: &mut [f32],
+    fwd: F,
+) where
+    F: Fn(&[f32], usize, &mut [f32]) + Sync,
+{
+    let chunks: Vec<(usize, usize)> = (0..n)
+        .step_by(rows_per.max(1))
+        .map(|start| (start, rows_per.min(n - start)))
+        .collect();
+    let parts = threadpool::parallel_map(&chunks, threads.max(1), |&(start, len)| {
+        let mut part = vec![0.0f32; len * d_out];
+        fwd(&x[start * d_in..(start + len) * d_in], len, &mut part);
+        part
+    });
+    for (&(start, len), part) in chunks.iter().zip(&parts) {
+        out[start * d_out..(start + len) * d_out].copy_from_slice(part);
+    }
+}
+
 fn forward_native_parallel(
     packed: &PackedMlp,
     x: &[f32],
@@ -530,27 +608,46 @@ fn forward_native_parallel(
     threads: usize,
     out: &mut [f32],
 ) {
-    let d_in = packed.n_in();
-    let d_out = packed.n_out();
-    let rows_per = n.div_ceil(threads);
-    let chunks: Vec<(usize, usize)> = (0..n)
-        .step_by(rows_per)
-        .map(|start| (start, rows_per.min(n - start)))
-        .collect();
-    let parts = threadpool::parallel_map(&chunks, threads, |&(start, len)| {
-        let mut scratch = GemmScratch::new();
-        let mut part = vec![0.0f32; len * d_out];
-        packed.forward_batch_to(
-            &x[start * d_in..(start + len) * d_in],
-            len,
-            &mut scratch,
-            &mut part,
-        );
-        part
-    });
-    for (&(start, len), part) in chunks.iter().zip(&parts) {
-        out[start * d_out..(start + len) * d_out].copy_from_slice(part);
-    }
+    // f32 forwards are chunking-exact, so chunks can follow the core count.
+    forward_native_parallel_with(
+        packed.n_in(),
+        packed.n_out(),
+        x,
+        n,
+        n.div_ceil(threads),
+        threads,
+        out,
+        |chunk, len, part| {
+            packed.forward_batch_to(chunk, len, &mut GemmScratch::new(), part);
+        },
+    );
+}
+
+/// [`forward_native_parallel`] for the int8 engine.  Each chunk quantizes
+/// its own activation panels (per-panel dynamic scales), so the split uses
+/// FIXED [`NATIVE_PAR_MIN_ROWS`]-row blocks — a function of n only, never
+/// of the core count — keeping q8 outputs bit-reproducible across
+/// machines.  Blockwise scales differ from whole-panel scales by at most
+/// a fraction of a quantization step, inside the property-tested bound.
+fn forward_native_parallel_q8(
+    packed: &PackedMlpQ8,
+    x: &[f32],
+    n: usize,
+    threads: usize,
+    out: &mut [f32],
+) {
+    forward_native_parallel_with(
+        packed.n_in(),
+        packed.n_out(),
+        x,
+        n,
+        NATIVE_PAR_MIN_ROWS,
+        threads,
+        out,
+        |chunk, len, part| {
+            packed.forward_batch_to(chunk, len, &mut QGemmScratch::new(), part);
+        },
+    );
 }
 
 /// Softmax probability of class `c` for one logit row.

@@ -41,6 +41,20 @@ impl RoutePlan {
         inv as f64 / self.routes.len() as f64
     }
 
+    /// Routes in the class-sorted order `execute_plan` actually runs the
+    /// batch: approximator groups in index order, then the CPU group.
+    /// This is the §III.D Case-3 trace under route-sorted execution — at
+    /// most one weight refill per approximator per batch, versus up to one
+    /// per consecutive class change in arrival order.
+    pub fn execution_order_routes(&self) -> Vec<Route> {
+        let mut out = Vec::with_capacity(self.routes.len());
+        for (k, g) in self.groups.iter().enumerate() {
+            out.extend(std::iter::repeat(Route::Approx(k)).take(g.len()));
+        }
+        out.extend(std::iter::repeat(Route::Cpu).take(self.cpu.len()));
+        out
+    }
+
     /// Clear for reuse with `n_approx` groups, keeping every allocation
     /// (the dispatcher's zero-allocation steady state relies on this).
     pub fn reset(&mut self, n_approx: usize) {
@@ -135,6 +149,70 @@ mod tests {
     fn binary_convention_class0_safe() {
         let plan = plan_routes(&[0, 1, 0], 1);
         assert_eq!(plan.routes, vec![Route::Approx(0), Route::Cpu, Route::Approx(0)]);
+    }
+
+    /// Property: the class-sorted execution trace is a permutation of the
+    /// arrival trace (same route multiset) and is non-decreasing in class,
+    /// so a §III.D Case-3 weight cache refills at most once per
+    /// approximator per batch.
+    #[test]
+    fn prop_execution_order_is_sorted_permutation() {
+        use crate::config::NpuConfig;
+        use crate::coordinator::weight_cache::{BufferCase, WeightCache};
+        prop::check(
+            "execution-order-routes",
+            200,
+            0x50F7,
+            |r: &mut Rng| {
+                let n = r.below(300) as usize;
+                let n_approx = 1 + r.below(4) as usize;
+                let classes: Vec<usize> =
+                    (0..n).map(|_| r.below(n_approx as u64 + 2) as usize).collect();
+                (classes, n_approx)
+            },
+            |(classes, n_approx)| {
+                let plan = plan_routes(classes, *n_approx);
+                let sorted = plan.execution_order_routes();
+                if sorted.len() != plan.routes.len() {
+                    return Err("length changed".into());
+                }
+                // Same multiset: count per destination.
+                let count = |rs: &[Route]| {
+                    let mut c = vec![0usize; n_approx + 1];
+                    for r in rs {
+                        match r {
+                            Route::Approx(k) => c[*k] += 1,
+                            Route::Cpu => c[*n_approx] += 1,
+                        }
+                    }
+                    c
+                };
+                if count(&sorted) != count(&plan.routes) {
+                    return Err("not a permutation".into());
+                }
+                // Case-3 cache over the sorted trace: <= 1 refill per
+                // approximator.
+                let npu = NpuConfig {
+                    weight_buffer_words: 200,
+                    pes_per_tile: 1,
+                    ..Default::default()
+                };
+                let mut wc = WeightCache::new(&npu, vec![160; *n_approx]);
+                wc.force_case(BufferCase::OneResident);
+                for r in &sorted {
+                    if let Route::Approx(k) = r {
+                        wc.access(*k);
+                    }
+                }
+                if wc.switches > *n_approx as u64 {
+                    return Err(format!(
+                        "sorted trace paid {} switches for {n_approx} approximators",
+                        wc.switches
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Property: every sample appears in exactly one group (routing is a

@@ -12,6 +12,7 @@
 //! throughput, latency percentiles and routing statistics.  This is the
 //! end-to-end driver `examples/serve_pipeline.rs` exercises.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
@@ -104,6 +105,10 @@ pub struct Server {
     batcher_thread: Option<thread::JoinHandle<(u64, u64)>>,
     worker_threads: Vec<thread::JoinHandle<crate::Result<u64>>>,
     started: Instant,
+    /// Requests accepted so far; `shutdown` drains exactly
+    /// `submitted - already_collected` responses instead of spinning on a
+    /// fixed timeout after the last one.
+    submitted: AtomicU64,
 }
 
 impl Server {
@@ -184,7 +189,7 @@ impl Server {
                         // docs): PJRT handles never cross threads.
                         let rt = match cfg.exec {
                             ExecMode::Pjrt => Some(Runtime::cpu()?),
-                            ExecMode::Native => None,
+                            ExecMode::Native | ExecMode::NativeQ8 => None,
                         };
                         let bank = ModelBank::load(
                             rt.as_ref(),
@@ -244,6 +249,7 @@ impl Server {
             batcher_thread: Some(batcher_thread),
             worker_threads,
             started: Instant::now(),
+            submitted: AtomicU64::new(0),
         })
     }
 
@@ -251,7 +257,9 @@ impl Server {
     pub fn submit(&self, id: u64, x_raw: Vec<f32>) -> crate::Result<()> {
         self.ingress
             .send(Some(Request { id, x_raw, submitted: Instant::now() }))
-            .map_err(|_| anyhow::anyhow!("server ingress closed"))
+            .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
     }
 
     /// Receive one response (blocking with timeout).
@@ -262,9 +270,21 @@ impl Server {
     /// Stop accepting, drain, join, and report.
     pub fn shutdown(mut self, mut collected: Vec<Response>) -> crate::Result<ServerReport> {
         let _ = self.ingress.send(None);
-        // Drain whatever is still in flight.
-        while let Ok(r) = self.egress.recv_timeout(Duration::from_millis(2000)) {
-            collected.push(r);
+        // Drain exactly the outstanding responses (submitted minus already
+        // received): the drain stops the moment the count hits zero rather
+        // than paying a full recv timeout after the last response.  The
+        // timeout stays only as a safety net against responses lost to a
+        // worker error, so a healthy shutdown never stalls on it.
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        let mut outstanding = submitted.saturating_sub(collected.len() as u64);
+        while outstanding > 0 {
+            match self.egress.recv_timeout(Duration::from_millis(2000)) {
+                Ok(r) => {
+                    collected.push(r);
+                    outstanding -= 1;
+                }
+                Err(_) => break,
+            }
         }
         let (full, timeout) = self
             .batcher_thread

@@ -34,7 +34,7 @@ impl Context {
         let man = Manifest::load(&crate::artifacts_dir())?;
         let rt = match cfg.exec {
             ExecMode::Pjrt => Some(Runtime::cpu()?),
-            ExecMode::Native => None,
+            ExecMode::Native | ExecMode::NativeQ8 => None,
         };
         Ok(Context { man, rt, cfg })
     }
@@ -96,7 +96,11 @@ pub fn simulate(
     let n_approx = bank.n_approx(method);
     let approx_topos: Vec<Vec<usize>> =
         (0..n_approx).map(|_| bench.approx_topology.clone()).collect();
-    let sim = NpuSim::new(ctx.cfg.npu, &clf_topo, &approx_topos, benchfn.cpu_cycles());
+    // The cost model charges the datapath precision the execution engine
+    // models, so fig8-style speedup/energy reflect quantization under
+    // `--exec native-q8`.
+    let sim = NpuSim::new(ctx.cfg.npu, &clf_topo, &approx_topos, benchfn.cpu_cycles())
+        .with_precision(ctx.cfg.exec.precision());
     Ok(sim.simulate(&out.plan.routes, None))
 }
 

@@ -1,8 +1,13 @@
 //! §IV.B headline numbers: MCMA's mean invocation gain / error reduction
 //! over one-pass and the mean speedup / energy-reduction ratios (paper:
-//! +27% invocation, -10% error, ~1.23x speedup, ~1.15x energy).
+//! +27% invocation, -10% error, ~1.23x speedup, ~1.15x energy) — plus the
+//! quantization scenario axis: per-benchmark invocation-rate deltas
+//! between the f32 native engine and its int8 twin.
 
-use crate::bench_harness::Table;
+use crate::bench_harness::{pct, Table};
+use crate::config::{ExecMode, Method, Precision};
+use crate::coordinator::Dispatcher;
+use crate::npu::NpuSim;
 
 use super::{fig7, fig8, Context};
 
@@ -19,6 +24,90 @@ pub fn run(ctx: &Context) -> crate::Result<Summary> {
     let (invocation_gain, error_reduction) = f7.mcma_gain_over_one_pass(ctx);
     let (speedup_ratio, energy_ratio) = f8.mcma_mean_gains(ctx);
     Ok(Summary { invocation_gain, error_reduction, speedup_ratio, energy_ratio })
+}
+
+/// One benchmark's f32-vs-int8 serving comparison.
+pub struct QuantRow {
+    pub bench: String,
+    pub method: Method,
+    pub invocation_f32: f64,
+    pub invocation_q8: f64,
+    pub rmse_over_bound_f32: f64,
+    pub rmse_over_bound_q8: f64,
+    pub energy_reduction_f32: f64,
+    pub energy_reduction_q8: f64,
+}
+
+/// Quantization scenario axis: run every benchmark's best available MCMA
+/// method through the f32 native engine AND its int8 quantized twin, and
+/// report the invocation-rate delta (does reduced precision flip routing
+/// decisions?) alongside the energy reduction each datapath earns — the
+/// AXNet/QoS-Nets question of approximator quality under reduced
+/// precision, answered per benchmark.
+pub fn quantized_deltas(ctx: &Context) -> crate::Result<Vec<QuantRow>> {
+    let mut rows = Vec::new();
+    for name in ctx.man.bench_names_ordered() {
+        let bench = ctx.man.bench(&name)?.clone();
+        let method = [
+            Method::McmaCompetitive,
+            Method::McmaComplementary,
+            Method::OnePass,
+        ]
+        .into_iter()
+        .find(|m| bench.methods.iter().any(|k| k == m.key()));
+        let Some(method) = method else { continue };
+        let bank = ctx.bank(&bench, &[method])?;
+        let ds = ctx.dataset(&name)?;
+        let o32 = Dispatcher::new(&bench, &bank, method, ExecMode::Native)?.run_dataset(&ds)?;
+        let o8 = Dispatcher::new(&bench, &bank, method, ExecMode::NativeQ8)?.run_dataset(&ds)?;
+
+        let benchfn = crate::benchmarks::by_name(&name)?;
+        let clf_topo =
+            if method.is_mcma() { &bench.clfn_topology } else { &bench.clf2_topology };
+        let approx_topos: Vec<Vec<usize>> =
+            (0..bank.n_approx(method)).map(|_| bench.approx_topology.clone()).collect();
+        let sim = NpuSim::new(ctx.cfg.npu, clf_topo, &approx_topos, benchfn.cpu_cycles());
+        let e32 = sim.simulate(&o32.plan.routes, None).energy_reduction_vs_cpu();
+        let e8 = sim
+            .with_precision(Precision::Int8)
+            .simulate(&o8.plan.routes, None)
+            .energy_reduction_vs_cpu();
+
+        rows.push(QuantRow {
+            bench: name.clone(),
+            method,
+            invocation_f32: o32.metrics.invocation(),
+            invocation_q8: o8.metrics.invocation(),
+            rmse_over_bound_f32: o32.metrics.rmse_over_bound,
+            rmse_over_bound_q8: o8.metrics.rmse_over_bound,
+            energy_reduction_f32: e32,
+            energy_reduction_q8: e8,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render [`quantized_deltas`] as a paper-style table.
+pub fn quantized_table(rows: &[QuantRow]) -> Table {
+    let mut t = Table::new(
+        "Quantization axis: f32 vs int8 native engine, per benchmark",
+        &["benchmark", "method", "inv f32", "inv int8", "Δ inv", "rmse/bound f32",
+          "rmse/bound int8", "energy red. f32", "energy red. int8"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.bench.clone(),
+            r.method.label().into(),
+            pct(r.invocation_f32),
+            pct(r.invocation_q8),
+            format!("{:+.1}pp", 100.0 * (r.invocation_q8 - r.invocation_f32)),
+            format!("{:.2}", r.rmse_over_bound_f32),
+            format!("{:.2}", r.rmse_over_bound_q8),
+            format!("{:.3}x", r.energy_reduction_f32),
+            format!("{:.3}x", r.energy_reduction_q8),
+        ]);
+    }
+    t
 }
 
 impl Summary {

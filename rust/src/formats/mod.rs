@@ -11,7 +11,7 @@ pub mod weights;
 
 pub use dataset::Dataset;
 pub use manifest::{BenchManifest, Manifest};
-pub use weights::{MethodWeights, WeightsFile};
+pub use weights::{MethodWeights, QuantizedMlpFile, QuantizedTensor, WeightsFile};
 
 use std::io::Read;
 
@@ -34,6 +34,12 @@ pub(crate) fn read_f32s(r: &mut impl Read, n: usize) -> crate::Result<Vec<f32>> 
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+pub(crate) fn read_i8s(r: &mut impl Read, n: usize) -> crate::Result<Vec<i8>> {
+    let mut bytes = vec![0u8; n];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.into_iter().map(|b| b as i8).collect())
 }
 
 pub(crate) fn read_string(r: &mut impl Read) -> crate::Result<String> {

@@ -1,4 +1,6 @@
-//! `weights.bin` reader (magic `MCMW`, v1) — trained nets for every method.
+//! `weights.bin` reader (magic `MCMW`, v1) — trained nets for every method —
+//! plus the per-tensor symmetric int8 quantizer and the quantized weight
+//! format (magic `MCQW`, v1) consumed by the `nn::qgemm` engine.
 
 use std::collections::HashMap;
 use std::io::{BufReader, Read};
@@ -6,7 +8,7 @@ use std::path::Path;
 
 use crate::nn::{Layer, Matrix, Mlp};
 
-use super::{read_f32s, read_string, read_u32, read_u8};
+use super::{read_f32s, read_i8s, read_string, read_u32, read_u8};
 
 /// One training method's nets: classifier(s) + approximator(s).
 #[derive(Clone, Debug)]
@@ -71,6 +73,171 @@ impl WeightsFile {
         self.methods
             .get(method)
             .ok_or_else(|| anyhow::anyhow!("method {method:?} not in weights file"))
+    }
+}
+
+/// Per-tensor symmetric int8 quantization: zero-point 0, scale chosen so
+/// the largest magnitude maps to ±127 (the -128 code is never produced —
+/// the range stays symmetric, matching fixed-point MAC arrays).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedTensor {
+    pub data: Vec<i8>,
+    /// Dequantization scale: `value ≈ data[i] as f32 * scale`.
+    pub scale: f32,
+}
+
+impl QuantizedTensor {
+    /// Symmetric scale for `values`: largest magnitude maps to ±127
+    /// (1.0 for an all-zero tensor, avoiding a zero divide).
+    pub fn scale_for(values: &[f32]) -> f32 {
+        let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        if amax > 0.0 {
+            amax / 127.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Quantize `values` into `out` at `scale`.  The ONE rounding routine
+    /// every quantization site shares (weights at pack time, activation
+    /// panels in `nn::qgemm`), so identical f32 inputs always produce
+    /// identical codes.  Multiplies by the reciprocal — ~4x cheaper than
+    /// dividing per element on the activation hot path, and the <= 1 ulp
+    /// difference vs exact division stays inside the half-step error
+    /// bound the engines are property-tested against.
+    pub fn quantize_into(values: &[f32], scale: f32, out: &mut [i8]) {
+        let inv = 1.0 / scale;
+        for (q, &v) in out.iter_mut().zip(values) {
+            *q = (v * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+
+    pub fn quantize(values: &[f32]) -> Self {
+        let scale = Self::scale_for(values);
+        let mut data = vec![0i8; values.len()];
+        Self::quantize_into(values, scale, &mut data);
+        QuantizedTensor { data, scale }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.data.iter().map(|&q| q as f32 * self.scale).collect()
+    }
+
+    /// Worst-case absolute reconstruction error: half a quantization step.
+    pub fn max_abs_err(&self) -> f32 {
+        0.5 * self.scale
+    }
+}
+
+/// One quantized dense layer as stored on disk: int8 weights + f32 bias
+/// (bias stays full precision — it adds into the i32 accumulator's f32
+/// requantization, exactly as the qgemm engine computes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedLayerRecord {
+    pub rows: usize,
+    pub cols: usize,
+    pub w: QuantizedTensor,
+    pub b: Vec<f32>,
+}
+
+/// A whole quantized MLP (magic `MCQW`, v1).  Layout per layer:
+/// `u32 rows, u32 cols, f32 scale, rows*cols i8, u32 blen, blen f32`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedMlpFile {
+    pub layers: Vec<QuantizedLayerRecord>,
+}
+
+impl QuantizedMlpFile {
+    pub fn from_mlp(mlp: &Mlp) -> Self {
+        let layers = mlp
+            .layers
+            .iter()
+            .map(|l| QuantizedLayerRecord {
+                rows: l.w.rows,
+                cols: l.w.cols,
+                w: QuantizedTensor::quantize(&l.w.data),
+                b: l.b.clone(),
+            })
+            .collect();
+        QuantizedMlpFile { layers }
+    }
+
+    /// Dequantized f32 twin: every weight within half a step of the
+    /// original (`QuantizedTensor::max_abs_err`).
+    pub fn to_mlp(&self) -> Mlp {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| Layer {
+                w: Matrix::new(l.rows, l.cols, l.w.dequantize()),
+                b: l.b.clone(),
+            })
+            .collect();
+        Mlp::new(layers)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(b"MCQW");
+        buf.extend(1u32.to_le_bytes());
+        buf.extend((self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            buf.extend((l.rows as u32).to_le_bytes());
+            buf.extend((l.cols as u32).to_le_bytes());
+            buf.extend(l.w.scale.to_le_bytes());
+            buf.extend(l.w.data.iter().map(|&q| q as u8));
+            buf.extend((l.b.len() as u32).to_le_bytes());
+            for v in &l.b {
+                buf.extend(v.to_le_bytes());
+            }
+        }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let f = std::fs::File::open(path)
+            .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+        Self::read(&mut BufReader::new(f))
+    }
+
+    pub fn read(r: &mut impl Read) -> crate::Result<Self> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"MCQW", "bad quantized weights magic {magic:?}");
+        let version = read_u32(r)?;
+        anyhow::ensure!(version == 1, "unsupported quantized weights version {version}");
+        let n_layers = read_u32(r)? as usize;
+        anyhow::ensure!(
+            (1..=16).contains(&n_layers),
+            "unreasonable layer count {n_layers}"
+        );
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let rows = read_u32(r)? as usize;
+            let cols = read_u32(r)? as usize;
+            anyhow::ensure!(rows * cols <= 1 << 24, "unreasonable layer size");
+            let scale = read_f32s(r, 1)?[0];
+            anyhow::ensure!(
+                scale.is_finite() && scale > 0.0,
+                "bad quantization scale {scale}"
+            );
+            let data = read_i8s(r, rows * cols)?;
+            let blen = read_u32(r)? as usize;
+            anyhow::ensure!(blen == cols, "bias length {blen} != cols {cols}");
+            let b = read_f32s(r, blen)?;
+            layers.push(QuantizedLayerRecord {
+                rows,
+                cols,
+                w: QuantizedTensor { data, scale },
+                b,
+            });
+        }
+        Ok(QuantizedMlpFile { layers })
     }
 }
 
@@ -154,5 +321,87 @@ mod tests {
         let path = dir.join("bad.bin");
         std::fs::write(&path, b"NOPE\x01\x00\x00\x00").unwrap();
         assert!(WeightsFile::load(&path).is_err());
+    }
+
+    #[test]
+    fn quantizer_hand_checked() {
+        let q = QuantizedTensor::quantize(&[1.0, -0.5, 0.25, -1.0]);
+        // amax = 1.0, scale = 1/127: ±1.0 -> ±127, -0.5 -> -64 (rounded).
+        assert_eq!(q.data, vec![127, -64, 32, -127]);
+        assert!((q.scale - 1.0 / 127.0).abs() < 1e-9);
+        let d = q.dequantize();
+        for (orig, deq) in [1.0f32, -0.5, 0.25, -1.0].iter().zip(&d) {
+            assert!((orig - deq).abs() <= q.max_abs_err(), "{orig} vs {deq}");
+        }
+        // All-zero tensors quantize without dividing by zero.
+        let z = QuantizedTensor::quantize(&[0.0; 4]);
+        assert_eq!(z.data, vec![0; 4]);
+        assert_eq!(z.dequantize(), vec![0.0; 4]);
+    }
+
+    /// Property: dequantization reconstructs every element within half a
+    /// quantization step, and the extreme element maps to ±127 exactly.
+    #[test]
+    fn prop_quantize_error_bounded() {
+        use crate::util::{prop, rng::Rng};
+        prop::check(
+            "quantize-error-bound",
+            200,
+            0x0708,
+            |r: &mut Rng| prop::gens::vec_f32(r, 1 + r.below(256) as usize, -8.0, 8.0),
+            |values| {
+                let q = QuantizedTensor::quantize(values);
+                let deq = q.dequantize();
+                for (i, (&v, &d)) in values.iter().zip(&deq).enumerate() {
+                    if (v - d).abs() > q.max_abs_err() + 1e-6 {
+                        return Err(format!("element {i}: {v} vs {d} (step {})", q.scale));
+                    }
+                }
+                let amax = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                if amax > 0.0 && !q.data.iter().any(|&c| c.abs() == 127) {
+                    return Err("extreme element did not map to ±127".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The quantized weight format round-trips bitwise: codes, scales and
+    /// biases all survive save -> load.
+    #[test]
+    fn quantized_format_roundtrip() {
+        use crate::util::{prop, rng::Rng};
+        let dir = std::env::temp_dir().join("mcma_qwtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("q_{}.bin", std::process::id()));
+
+        let mut r = Rng::new(0x0F0F);
+        let mlp = prop::gens::mlp(&mut r, &[6, 8, 8, 1], 2.0, 1.0);
+        let qf = QuantizedMlpFile::from_mlp(&mlp);
+        qf.save(&path).unwrap();
+        let back = QuantizedMlpFile::load(&path).unwrap();
+        assert_eq!(qf, back, "quantized weights did not round-trip bitwise");
+
+        // The dequantized twin stays within half a step per weight.
+        let twin = back.to_mlp();
+        assert_eq!(twin.topology(), mlp.topology());
+        for (lq, (lt, lo)) in back.layers.iter().zip(twin.layers.iter().zip(&mlp.layers)) {
+            assert_eq!(lt.b, lo.b, "bias must be exact (stored f32)");
+            for (&t, &o) in lt.w.data.iter().zip(&lo.w.data) {
+                assert!((t - o).abs() <= lq.w.max_abs_err() + 1e-6);
+            }
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn quantized_format_rejects_corruption() {
+        let mut r = crate::util::rng::Rng::new(7);
+        let mlp = crate::util::prop::gens::mlp(&mut r, &[3, 4, 1], 1.0, 0.5);
+        let mut bytes = QuantizedMlpFile::from_mlp(&mlp).to_bytes();
+        bytes[0] = b'X'; // bad magic
+        assert!(QuantizedMlpFile::read(&mut bytes.as_slice()).is_err());
+        let good = QuantizedMlpFile::from_mlp(&mlp).to_bytes();
+        assert!(QuantizedMlpFile::read(&mut &good[..good.len() - 2]).is_err());
     }
 }

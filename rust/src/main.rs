@@ -29,10 +29,11 @@ fn main() {
 }
 
 fn run_config(args: &Args) -> mcma::Result<RunConfig> {
-    let mut cfg = RunConfig::default();
-    cfg.exec = ExecMode::from_str(&args.opt_or("exec", "pjrt"))?;
-    cfg.max_samples = args.opt_usize("samples", 0)?;
-    Ok(cfg)
+    Ok(RunConfig {
+        exec: ExecMode::from_str(&args.opt_or("exec", "pjrt"))?,
+        max_samples: args.opt_usize("samples", 0)?,
+        ..RunConfig::default()
+    })
 }
 
 fn run(args: Args) -> mcma::Result<()> {
@@ -46,6 +47,8 @@ fn run(args: Args) -> mcma::Result<()> {
         Some("summary") => {
             let ctx = Context::load(run_config(&args)?)?;
             eval::summary::run(&ctx)?.table().print();
+            let rows = eval::summary::quantized_deltas(&ctx)?;
+            eval::summary::quantized_table(&rows).print();
             Ok(())
         }
         Some("eval") => eval_cmd(&args),

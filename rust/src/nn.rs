@@ -11,8 +11,12 @@
 //! sigmoid hidden layers, linear output (the NPU PE activation scheme).
 
 pub mod gemm;
+pub mod qgemm;
+pub mod simd;
 
 pub use gemm::{GemmScratch, PackedMlp};
+pub use qgemm::{PackedMlpQ8, QGemmScratch};
+pub use simd::Kernel;
 
 /// Row-major f32 matrix.
 #[derive(Clone, Debug, PartialEq)]

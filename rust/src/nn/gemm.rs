@@ -16,11 +16,17 @@
 //!   panels ([`GemmScratch`]) instead of per-sample swap buffers, so a
 //!   steady-state batch performs zero heap allocations.
 //!
+//! * **SIMD micro-kernels** — full `MR x NR` micro-tiles run through the
+//!   runtime-dispatched kernels in [`super::simd`] (AVX2 / NEON / scalar),
+//!   selected once at pack time; tail rows stay scalar.
+//!
 //! Numerics: accumulation over `fan_in` runs in the same ascending-k order
 //! as the scalar path; only the bias add is reassociated (applied after the
 //! dot product rather than before), so packed and scalar forwards agree to
-//! f32 rounding (the property test below pins 1e-5).
+//! f32 rounding (the property test below pins 1e-5; FMA contraction in the
+//! SIMD variants stays inside the same tolerance).
 
+use super::simd::{self, Kernel};
 use super::{sigmoid, Mlp};
 
 /// Column-tile width (outputs per micro-tile). A whole tile row is one
@@ -102,6 +108,8 @@ pub struct PackedMlp {
     n_out: usize,
     /// Widest layer output — sizes the intermediate panels.
     max_width: usize,
+    /// Micro-kernel chosen at pack time (runtime CPU detection).
+    kernel: Kernel,
 }
 
 impl PackedMlp {
@@ -114,7 +122,25 @@ impl PackedMlp {
             .map(|(i, l)| PackedLayer::pack(&l.w, &l.b, i < last))
             .collect();
         let max_width = layers.iter().map(|l| l.fan_out).max().unwrap_or(0);
-        PackedMlp { layers, n_in: mlp.n_in(), n_out: mlp.n_out(), max_width }
+        PackedMlp {
+            layers,
+            n_in: mlp.n_in(),
+            n_out: mlp.n_out(),
+            max_width,
+            kernel: Kernel::detect(),
+        }
+    }
+
+    /// Force a specific micro-kernel (parity tests, ablations).  Panics if
+    /// the kernel is not runnable on this CPU.
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        assert!(kernel.available(), "{} kernel unavailable on this CPU", kernel.name());
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
     }
 
     pub fn n_in(&self) -> usize {
@@ -141,7 +167,7 @@ impl PackedMlp {
             return;
         }
         if self.layers.len() == 1 {
-            layer_forward(&self.layers[0], x, n, out);
+            layer_forward(&self.layers[0], x, n, out, self.kernel);
             return;
         }
         // Ping-pong intermediates through the two reusable scratch panels;
@@ -152,17 +178,17 @@ impl PackedMlp {
         let pa = &mut scratch.a[..panel_len];
         let pb = &mut scratch.b[..panel_len];
         let last = self.layers.len() - 1;
-        layer_forward(&self.layers[0], x, n, pa);
+        layer_forward(&self.layers[0], x, n, pa, self.kernel);
         let mut cur_is_a = true;
         for (i, layer) in self.layers.iter().enumerate().skip(1) {
             if i == last {
                 let src: &[f32] = if cur_is_a { &*pa } else { &*pb };
-                layer_forward(layer, src, n, out);
+                layer_forward(layer, src, n, out, self.kernel);
             } else if cur_is_a {
-                layer_forward(layer, &*pa, n, &mut *pb);
+                layer_forward(layer, &*pa, n, &mut *pb, self.kernel);
                 cur_is_a = false;
             } else {
-                layer_forward(layer, &*pb, n, &mut *pa);
+                layer_forward(layer, &*pb, n, &mut *pa, self.kernel);
                 cur_is_a = true;
             }
         }
@@ -179,7 +205,7 @@ impl PackedMlp {
 
 /// One packed layer over a whole activation panel:
 /// `out[(n, fan_out)] = act(x[(n, fan_in)] . W + b)`.
-fn layer_forward(layer: &PackedLayer, x: &[f32], n: usize, out: &mut [f32]) {
+fn layer_forward(layer: &PackedLayer, x: &[f32], n: usize, out: &mut [f32], kernel: Kernel) {
     let fi = layer.fan_in;
     let fo = layer.fan_out;
     debug_assert!(x.len() >= n * fi);
@@ -189,20 +215,12 @@ fn layer_forward(layer: &PackedLayer, x: &[f32], n: usize, out: &mut [f32]) {
         let width = NR.min(fo - c0);
         let w_tile = &layer.w[t * fi * NR..(t + 1) * fi * NR];
         let b_tile = &layer.b[c0..c0 + NR];
-        // Full MR-row micro-tiles: MR x NR accumulators live in registers,
-        // the k-loop streams one NR-wide packed weight row per iteration.
+        // Full MR-row micro-tiles run the dispatched SIMD micro-kernel:
+        // MR x NR accumulators live in registers, the k-loop streams one
+        // NR-wide packed weight row per iteration.
         let mut i0 = 0;
         while i0 + MR <= n {
-            let mut acc = [[0.0f32; NR]; MR];
-            for k in 0..fi {
-                let wrow = &w_tile[k * NR..k * NR + NR];
-                for r in 0..MR {
-                    let xv = x[(i0 + r) * fi + k];
-                    for j in 0..NR {
-                        acc[r][j] += xv * wrow[j];
-                    }
-                }
-            }
+            let acc = simd::mr_tile_f32(kernel, x, i0, fi, w_tile);
             for r in 0..MR {
                 let row = &mut out[(i0 + r) * fo + c0..(i0 + r) * fo + c0 + width];
                 for j in 0..width {
@@ -284,6 +302,35 @@ mod tests {
             let mut out2 = vec![0.0f32; n * 4];
             p2.forward_batch_to(&x2, n, &mut scratch, &mut out2);
             prop::assert_close(&out2, &m2.forward_batch(&x2, n), 1e-5, 1e-5).unwrap();
+        }
+    }
+
+    /// Kernel parity: every SIMD variant runnable on this CPU agrees with
+    /// the forced-scalar packed kernel to 1e-5 (FMA contraction is the only
+    /// numeric difference; accumulation order is identical).
+    #[test]
+    fn simd_kernels_match_scalar_forward() {
+        let mut r = Rng::new(0x51D1);
+        let topos: [&[usize]; 3] = [&[6, 8, 8, 1], &[9, 17, 3], &[5, 7, 2]];
+        for topo in topos {
+            let mlp = random_mlp(&mut r, topo);
+            let scalar = PackedMlp::from_mlp(&mlp).with_kernel(Kernel::Scalar);
+            for k in [Kernel::Avx2, Kernel::Neon] {
+                if !k.available() {
+                    continue;
+                }
+                let fast = PackedMlp::from_mlp(&mlp).with_kernel(k);
+                for n in [1usize, 4, 9, 33] {
+                    let x = prop::gens::vec_f32(&mut r, n * topo[0], -2.0, 2.0);
+                    prop::assert_close(
+                        &fast.forward_batch(&x, n),
+                        &scalar.forward_batch(&x, n),
+                        1e-5,
+                        1e-5,
+                    )
+                    .unwrap_or_else(|e| panic!("{} vs scalar: {e}", k.name()));
+                }
+            }
         }
     }
 

@@ -1,0 +1,481 @@
+//! Quantized int8 packed GEMM engine (§Perf L3, the NPU-faithful path).
+//!
+//! The paper's NPU executes approximators on fixed-point MAC arrays;
+//! [`PackedMlpQ8`] models that numerics on the host and is also the
+//! fastest serving floor on SIMD-capable CPUs:
+//!
+//! * **Weights** are quantized per-tensor symmetric
+//!   ([`QuantizedTensor`]: zero-point 0, scale = amax/127) at pack time
+//!   and repacked into the same `NR`-wide column tiles as the f32 kernel.
+//! * **Activations** are quantized dynamically per layer panel with the
+//!   same symmetric scheme (one scalar amax pass, then rounding — always
+//!   scalar, so every kernel variant sees identical int8 codes).
+//! * **The dot product accumulates in i32** through the runtime-dispatched
+//!   micro-kernels in [`super::simd`] (AVX2 `vpmaddwd` paired-i16 MACs
+//!   over pair-interleaved tiles / NEON `vmlal_s16` / scalar) — exact in
+//!   every variant, so scalar and SIMD forwards are bitwise identical.
+//! * **Requantize-on-store**: each i32 accumulator is mapped back to f32
+//!   with one fused scale `sx * sw`, the f32 bias is added, and the
+//!   sigmoid (hidden layers) runs in f32 — matching the NPU's wide
+//!   accumulator + activation-unit structure.
+//!
+//! Numerics: the int8 forward differs from the f32 path by a bounded
+//! quantization error; `tests::prop_q8_within_derived_bound` derives the
+//! layer-propagated bound (weight step, activation step, sigmoid's 1/4
+//! Lipschitz constant) and pins the engine inside it.
+
+use crate::formats::weights::{QuantizedLayerRecord, QuantizedMlpFile, QuantizedTensor};
+
+use super::gemm::{MR, NR};
+use super::simd::{self, Kernel};
+use super::{sigmoid, Mlp};
+
+/// One dense layer quantized + packed for the tiled int8 kernel.
+#[derive(Clone, Debug)]
+pub struct PackedLayerQ8 {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// `ceil(fan_out / NR)` column tiles.
+    n_tiles: usize,
+    /// Tile-major, PAIR-INTERLEAVED int8 weights (see `simd::q8_tile_len`):
+    /// within tile `t`, byte `(k/2)*2*NR + j*2 + k%2` = Wq[k, t*NR + j],
+    /// odd fan-in row and column tail zero-padded — the layout the paired
+    /// i16 multiply-accumulate kernels consume directly.
+    w: Vec<i8>,
+    /// Per-tensor symmetric dequantization scale.
+    w_scale: f32,
+    /// f32 bias padded to `n_tiles * NR` (bias adds after requantization).
+    b: Vec<f32>,
+    /// Apply the sigmoid activation (hidden layers).
+    sigmoid: bool,
+}
+
+impl PackedLayerQ8 {
+    /// Pack one already-quantized layer record (the `MCQW` unit) into the
+    /// pair-interleaved tile layout.
+    fn pack(rec: &QuantizedLayerRecord, sig: bool) -> Self {
+        let (fan_in, fan_out) = (rec.rows, rec.cols);
+        let n_tiles = fan_out.div_ceil(NR);
+        let tile_len = simd::q8_tile_len(fan_in);
+        let mut packed = vec![0i8; n_tiles * tile_len];
+        for t in 0..n_tiles {
+            let c0 = t * NR;
+            let width = NR.min(fan_out - c0);
+            let tile = &mut packed[t * tile_len..(t + 1) * tile_len];
+            for k in 0..fan_in {
+                for j in 0..width {
+                    tile[(k / 2) * 2 * NR + j * 2 + (k % 2)] =
+                        rec.w.data[k * fan_out + c0 + j];
+                }
+            }
+        }
+        let mut bias = vec![0.0f32; n_tiles * NR];
+        bias[..fan_out].copy_from_slice(&rec.b);
+        PackedLayerQ8 {
+            fan_in,
+            fan_out,
+            n_tiles,
+            w: packed,
+            w_scale: rec.w.scale,
+            b: bias,
+            sigmoid: sig,
+        }
+    }
+}
+
+/// Reusable buffers for the quantized layer chain: two f32 activation
+/// panels (ping-pong, as in [`super::gemm::GemmScratch`]) plus the int8
+/// panel the current layer's quantized activations land in.
+#[derive(Debug, Default)]
+pub struct QGemmScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    xq: Vec<i8>,
+}
+
+impl QGemmScratch {
+    pub fn new() -> Self {
+        QGemmScratch::default()
+    }
+
+    /// Total capacity currently held (for allocation-stability tests).
+    pub fn capacity(&self) -> usize {
+        self.a.capacity() + self.b.capacity() + self.xq.capacity()
+    }
+
+    fn panel(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+        if buf.len() < len {
+            buf.resize(len, 0.0);
+        }
+        &mut buf[..len]
+    }
+}
+
+/// An [`Mlp`] quantized to int8 and repacked for the tiled batched kernel.
+/// Quantize + pack once at load time, forward many times.
+#[derive(Clone, Debug)]
+pub struct PackedMlpQ8 {
+    layers: Vec<PackedLayerQ8>,
+    n_in: usize,
+    n_out: usize,
+    /// Widest layer output — sizes the intermediate panels.
+    max_width: usize,
+    /// Micro-kernel chosen at pack time (runtime CPU detection).
+    kernel: Kernel,
+}
+
+impl PackedMlpQ8 {
+    /// Quantize an f32 net and pack it (`ModelBank`'s twin-packing path).
+    pub fn from_mlp(mlp: &Mlp) -> Self {
+        Self::from_quantized(&QuantizedMlpFile::from_mlp(mlp))
+    }
+
+    /// Pack an already-quantized net — e.g. one loaded from an `MCQW`
+    /// file — without touching f32 weights.
+    pub fn from_quantized(qf: &QuantizedMlpFile) -> Self {
+        let last = qf.layers.len().saturating_sub(1);
+        let layers: Vec<PackedLayerQ8> = qf
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, rec)| PackedLayerQ8::pack(rec, i < last))
+            .collect();
+        let max_width = layers.iter().map(|l| l.fan_out).max().unwrap_or(0);
+        PackedMlpQ8 {
+            n_in: layers.first().map(|l| l.fan_in).unwrap_or(0),
+            n_out: layers.last().map(|l| l.fan_out).unwrap_or(0),
+            layers,
+            max_width,
+            kernel: Kernel::detect(),
+        }
+    }
+
+    /// Force a specific micro-kernel (parity tests, ablations).  Panics if
+    /// the kernel is not runnable on this CPU.
+    pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        assert!(kernel.available(), "{} kernel unavailable on this CPU", kernel.name());
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn kernel(&self) -> Kernel {
+        self.kernel
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    /// Forward a row-major `(n, n_in)` f32 panel into `out` (`(n, n_out)`,
+    /// resized by the caller), quantizing activations per layer.  Zero
+    /// allocations once `scratch` is warm.
+    pub fn forward_batch_to(
+        &self,
+        x: &[f32],
+        n: usize,
+        scratch: &mut QGemmScratch,
+        out: &mut [f32],
+    ) {
+        assert_eq!(x.len(), n * self.n_in, "batch buffer size mismatch");
+        assert_eq!(out.len(), n * self.n_out, "output buffer size mismatch");
+        if self.layers.is_empty() {
+            out.copy_from_slice(x);
+            return;
+        }
+        if self.layers.len() == 1 {
+            layer_forward_q8(&self.layers[0], x, n, &mut scratch.xq, out, self.kernel);
+            return;
+        }
+        let panel_len = n * self.max_width;
+        QGemmScratch::panel(&mut scratch.a, panel_len);
+        QGemmScratch::panel(&mut scratch.b, panel_len);
+        let pa = &mut scratch.a[..panel_len];
+        let pb = &mut scratch.b[..panel_len];
+        let xq = &mut scratch.xq;
+        let last = self.layers.len() - 1;
+        layer_forward_q8(&self.layers[0], x, n, xq, pa, self.kernel);
+        let mut cur_is_a = true;
+        for (i, layer) in self.layers.iter().enumerate().skip(1) {
+            if i == last {
+                let src: &[f32] = if cur_is_a { &*pa } else { &*pb };
+                layer_forward_q8(layer, src, n, xq, out, self.kernel);
+            } else if cur_is_a {
+                layer_forward_q8(layer, &*pa, n, xq, &mut *pb, self.kernel);
+                cur_is_a = false;
+            } else {
+                layer_forward_q8(layer, &*pb, n, xq, &mut *pa, self.kernel);
+                cur_is_a = true;
+            }
+        }
+    }
+
+    /// Convenience allocating wrapper (offline paths, tests).
+    pub fn forward_batch(&self, x: &[f32], n: usize) -> Vec<f32> {
+        let mut scratch = QGemmScratch::new();
+        let mut out = vec![0.0f32; n * self.n_out];
+        self.forward_batch_to(x, n, &mut scratch, &mut out);
+        out
+    }
+}
+
+/// Quantize one `(n, fan_in)` f32 activation panel symmetrically into
+/// `xq`; returns the dequantization scale.  Shares the exact rounding
+/// routine with the weight quantizer ([`QuantizedTensor::quantize_into`])
+/// and is always scalar, so every kernel variant consumes identical codes.
+fn quantize_panel(x: &[f32], xq: &mut Vec<i8>) -> f32 {
+    let sx = QuantizedTensor::scale_for(x);
+    if xq.len() < x.len() {
+        xq.resize(x.len(), 0);
+    }
+    QuantizedTensor::quantize_into(x, sx, &mut xq[..x.len()]);
+    sx
+}
+
+/// One quantized layer over a whole activation panel:
+/// `out[(n, fan_out)] = act(requant(xq[(n, fan_in)] . Wq) + b)`.
+fn layer_forward_q8(
+    layer: &PackedLayerQ8,
+    x: &[f32],
+    n: usize,
+    xq: &mut Vec<i8>,
+    out: &mut [f32],
+    kernel: Kernel,
+) {
+    let fi = layer.fan_in;
+    let fo = layer.fan_out;
+    debug_assert!(x.len() >= n * fi);
+    debug_assert!(out.len() >= n * fo);
+    let sx = quantize_panel(&x[..n * fi], xq);
+    // Fused requantization scale: i32 accumulator -> f32 pre-activation.
+    let scale = sx * layer.w_scale;
+    let xq = &xq[..n * fi];
+    let tile_len = simd::q8_tile_len(fi);
+    for t in 0..layer.n_tiles {
+        let c0 = t * NR;
+        let width = NR.min(fo - c0);
+        let w_tile = &layer.w[t * tile_len..(t + 1) * tile_len];
+        let b_tile = &layer.b[c0..c0 + NR];
+        let mut i0 = 0;
+        while i0 + MR <= n {
+            let acc = simd::mr_tile_q8(kernel, xq, i0, fi, w_tile);
+            for r in 0..MR {
+                let row = &mut out[(i0 + r) * fo + c0..(i0 + r) * fo + c0 + width];
+                for j in 0..width {
+                    let v = acc[r][j] as f32 * scale + b_tile[j];
+                    row[j] = if layer.sigmoid { sigmoid(v) } else { v };
+                }
+            }
+            i0 += MR;
+        }
+        // Tail rows (n % MR) — scalar, same exact i32 accumulation.
+        for i in i0..n {
+            let acc = simd::row_tile_q8(&xq[i * fi..(i + 1) * fi], w_tile);
+            let row = &mut out[i * fo + c0..i * fo + c0 + width];
+            for j in 0..width {
+                let v = acc[j] as f32 * scale + b_tile[j];
+                row[j] = if layer.sigmoid { sigmoid(v) } else { v };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Layer, Matrix};
+    use crate::util::{prop, rng::Rng};
+
+    fn random_mlp(r: &mut Rng, topo: &[usize]) -> Mlp {
+        prop::gens::mlp(r, topo, 2.0, 1.0)
+    }
+
+    /// Exact f32 reference for one layer (naive per-neuron dots).
+    fn layer_ref(l: &Layer, x: &[f32], n: usize, sig: bool) -> Vec<f32> {
+        let (fi, fo) = (l.w.rows, l.w.cols);
+        let mut out = vec![0.0f32; n * fo];
+        for i in 0..n {
+            for c in 0..fo {
+                let mut s = l.b[c];
+                for k in 0..fi {
+                    s += x[i * fi + k] * l.w.at(k, c);
+                }
+                out[i * fo + c] = if sig { sigmoid(s) } else { s };
+            }
+        }
+        out
+    }
+
+    /// Conservative per-element quantization error bound, propagated layer
+    /// by layer.  With `e` the incoming activation error, `sx`/`sw` the
+    /// activation/weight quantization steps and `amax`/`wmax` the reference
+    /// magnitudes, one dot term errs by at most
+    /// `(e + sx/2)(wmax + sw/2) + amax * sw/2`; the sigmoid contracts by
+    /// its Lipschitz constant 1/4.  A small slop absorbs f32 rounding and
+    /// summation-order differences vs the scalar reference.
+    fn q8_bound(mlp: &Mlp, x: &[f32], n: usize) -> f32 {
+        let last = mlp.layers.len() - 1;
+        let mut act: Vec<f32> = x.to_vec();
+        let mut e = 0.0f32;
+        for (li, l) in mlp.layers.iter().enumerate() {
+            let amax = act.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let wmax = l.w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let sw = QuantizedTensor::quantize(&l.w.data).scale;
+            let sx = (amax + e) / 127.0;
+            let fan_in = l.w.rows as f32;
+            let dot = fan_in * ((e + 0.5 * sx) * (wmax + 0.5 * sw) + amax * 0.5 * sw);
+            e = if li < last { 0.25 * dot } else { dot };
+            e = e * 1.001 + 1e-5;
+            act = layer_ref(l, &act, n, li < last);
+        }
+        e
+    }
+
+    #[test]
+    fn q8_hand_checked_exact_case() {
+        // Single linear layer, x = [1, 1], w = [1, -1], b = 0.5: both the
+        // dot's terms quantize exactly (±127) and cancel, so the int8 path
+        // reproduces 0.5 exactly.
+        let mlp = Mlp::new(vec![Layer {
+            w: Matrix::new(2, 1, vec![1.0, -1.0]),
+            b: vec![0.5],
+        }]);
+        let q = PackedMlpQ8::from_mlp(&mlp);
+        assert_eq!(q.n_in(), 2);
+        assert_eq!(q.n_out(), 1);
+        let y = q.forward_batch(&[1.0, 1.0], 1);
+        assert_eq!(y[0], 0.5);
+    }
+
+    #[test]
+    fn q8_handles_tile_tails() {
+        let mut r = Rng::new(0x9E78);
+        for fo in [1, 7, 8, 9, 16, 17] {
+            let mlp = random_mlp(&mut r, &[5, fo, 3]);
+            let q = PackedMlpQ8::from_mlp(&mlp);
+            for n in 1..=9usize {
+                let x = prop::gens::vec_f32(&mut r, n * 5, -2.0, 2.0);
+                let fast = q.forward_batch(&x, n);
+                let slow = mlp.forward_batch(&x, n);
+                let bound = q8_bound(&mlp, &x, n);
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    assert!(
+                        (a - b).abs() <= bound,
+                        "fo={fo} n={n} elem {i}: {a} vs {b} (bound {bound})"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Property: the int8 forward stays within the derived quantization
+    /// error bound of the f32 scalar path on random topologies.
+    #[test]
+    fn prop_q8_within_derived_bound() {
+        prop::check(
+            "q8-vs-f32-error-bound",
+            100,
+            0x6E45,
+            |r: &mut Rng| {
+                let depth = 1 + r.below(3) as usize;
+                let mut topo = vec![1 + r.below(24) as usize];
+                for _ in 0..depth {
+                    topo.push(1 + r.below(24) as usize);
+                }
+                let mlp = random_mlp(r, &topo);
+                let n = 1 + r.below(40) as usize;
+                let x = prop::gens::vec_f32(r, n * topo[0], -2.0, 2.0);
+                (mlp, x, n)
+            },
+            |(mlp, x, n)| {
+                let q = PackedMlpQ8::from_mlp(mlp);
+                let fast = q.forward_batch(x, *n);
+                let slow = mlp.forward_batch(x, *n);
+                let bound = q8_bound(mlp, x, *n);
+                if !bound.is_finite() {
+                    return Err(format!("non-finite bound {bound}"));
+                }
+                for (i, (a, b)) in fast.iter().zip(&slow).enumerate() {
+                    if (a - b).abs() > bound {
+                        return Err(format!("elem {i}: {a} vs {b} exceeds bound {bound}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Kernel parity: int8 accumulation is exact in every variant, and all
+    /// post-accumulator math is identical scalar f32 code — so SIMD and
+    /// scalar forwards must be BITWISE identical.
+    #[test]
+    fn simd_kernels_bitwise_match_scalar() {
+        let mut r = Rng::new(0x51D2);
+        let topos: [&[usize]; 3] = [&[6, 8, 8, 1], &[9, 17, 3], &[5, 7, 2]];
+        for topo in topos {
+            let mlp = random_mlp(&mut r, topo);
+            let scalar = PackedMlpQ8::from_mlp(&mlp).with_kernel(Kernel::Scalar);
+            for k in [Kernel::Avx2, Kernel::Neon] {
+                if !k.available() {
+                    continue;
+                }
+                let fast = PackedMlpQ8::from_mlp(&mlp).with_kernel(k);
+                for n in [1usize, 4, 9, 33] {
+                    let x = prop::gens::vec_f32(&mut r, n * topo[0], -2.0, 2.0);
+                    assert_eq!(
+                        fast.forward_batch(&x, n),
+                        scalar.forward_batch(&x, n),
+                        "{} kernel diverges bitwise (topo {topo:?}, n {n})",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// The MCQW format is the pack path's native input: packing a net
+    /// quantized-then-serialized-then-reloaded forwards bitwise
+    /// identically to packing straight from f32.
+    #[test]
+    fn packing_from_mcqw_roundtrip_is_identical() {
+        let mut r = Rng::new(0x0FF1);
+        let mlp = random_mlp(&mut r, &[6, 8, 8, 1]);
+        let bytes = QuantizedMlpFile::from_mlp(&mlp).to_bytes();
+        let reloaded = QuantizedMlpFile::read(&mut bytes.as_slice()).unwrap();
+        let direct = PackedMlpQ8::from_mlp(&mlp);
+        let via_file = PackedMlpQ8::from_quantized(&reloaded);
+        let x = prop::gens::vec_f32(&mut r, 9 * 6, -2.0, 2.0);
+        assert_eq!(direct.forward_batch(&x, 9), via_file.forward_batch(&x, 9));
+    }
+
+    #[test]
+    fn scratch_reusable_across_batch_sizes_and_nets() {
+        let mut r = Rng::new(8);
+        let m1 = random_mlp(&mut r, &[6, 8, 8, 1]);
+        let m2 = random_mlp(&mut r, &[3, 12, 4]);
+        let (q1, q2) = (PackedMlpQ8::from_mlp(&m1), PackedMlpQ8::from_mlp(&m2));
+        let mut scratch = QGemmScratch::new();
+        for n in [1usize, 5, 64, 3] {
+            let x1 = prop::gens::vec_f32(&mut r, n * 6, -1.0, 1.0);
+            let mut out1 = vec![0.0f32; n];
+            q1.forward_batch_to(&x1, n, &mut scratch, &mut out1);
+            assert_eq!(out1, q1.forward_batch(&x1, n), "scratch path diverges");
+            let x2 = prop::gens::vec_f32(&mut r, n * 3, -1.0, 1.0);
+            let mut out2 = vec![0.0f32; n * 4];
+            q2.forward_batch_to(&x2, n, &mut scratch, &mut out2);
+            assert_eq!(out2, q2.forward_batch(&x2, n), "scratch path diverges");
+        }
+        // Steady state: repeating the largest batch allocates nothing.
+        let x: Vec<f32> = prop::gens::vec_f32(&mut r, 64 * 6, -1.0, 1.0);
+        let mut out = vec![0.0f32; 64];
+        q1.forward_batch_to(&x, 64, &mut scratch, &mut out);
+        let warm = scratch.capacity();
+        for _ in 0..4 {
+            q1.forward_batch_to(&x, 64, &mut scratch, &mut out);
+            assert_eq!(scratch.capacity(), warm, "q8 scratch grew");
+        }
+    }
+}

@@ -1,0 +1,448 @@
+//! Runtime-dispatched SIMD micro-kernels shared by the f32 ([`super::gemm`])
+//! and int8 ([`super::qgemm`]) packed GEMM engines.
+//!
+//! The dispatch decision is made ONCE, at pack time ([`Kernel::detect`]),
+//! and stored in the packed net — the hot loop pays no per-call feature
+//! checks.  Three variants:
+//!
+//! * [`Kernel::Scalar`] — portable fallback, and the reference every SIMD
+//!   variant is parity-tested against (exact for int8, where all math is
+//!   integer; 1e-5 for f32, where FMA contracts the multiply-add).
+//! * [`Kernel::Avx2`] — x86-64 with AVX2+FMA: one 256-bit register per
+//!   `NR = 8`-wide accumulator row; `_mm256_fmadd_ps` for f32; for int8,
+//!   `_mm256_madd_epi16` paired i16 multiply-accumulate (32 exact MACs per
+//!   instruction — the maddubs-style widening trick, minus the unsigned
+//!   saturation hazard).
+//! * [`Kernel::Neon`] — aarch64: two `float32x4_t` per row (`vfmaq_n_f32`)
+//!   for f32; de-interleaving `vld2_s8` loads + `vmlal_s16` widening MACs
+//!   (exact, i16 products into i32 accumulators) for int8.
+//!
+//! Micro-kernel contract (f32): given the packed weight tile (`fan_in`
+//! rows of `NR` contiguous columns) and `MR` sample rows starting at row
+//! `i0` of a row-major activation panel with stride `fan_in`, return the
+//! `MR x NR` accumulator block
+//! `acc[r][j] = Σ_k x[(i0+r)*fan_in + k] * w[k*NR + j]`.
+//!
+//! The int8 tile is **pair-interleaved** (see [`q8_tile_len`]): tile row
+//! `k2` holds the `2*NR` bytes `[w(2k2, j), w(2k2+1, j)]` for `j` in
+//! `0..NR`, odd fan-in row and column tail zero-padded.  This feeds the
+//! AVX2 paired-i16 MACs directly; the scalar and NEON variants walk the
+//! same layout.  Integer accumulation is associative, so every variant
+//! returns IDENTICAL i32 blocks.  Quantization, bias, activation and
+//! stores stay in the (scalar, shared) callers.
+
+use super::gemm::{MR, NR};
+
+/// Which micro-kernel the packed engines run.  Selected once at pack time;
+/// `with_kernel` on the packed nets overrides it for parity tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+impl Kernel {
+    /// Best kernel the current CPU supports.
+    pub fn detect() -> Kernel {
+        if avx2_available() {
+            Kernel::Avx2
+        } else if neon_available() {
+            Kernel::Neon
+        } else {
+            Kernel::Scalar
+        }
+    }
+
+    /// Is this variant runnable on the current CPU?  (Forcing an
+    /// unavailable kernel would execute illegal instructions.)
+    pub fn available(self) -> bool {
+        match self {
+            Kernel::Scalar => true,
+            Kernel::Avx2 => avx2_available(),
+            Kernel::Neon => neon_available(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::Scalar => "scalar",
+            Kernel::Avx2 => "avx2",
+            Kernel::Neon => "neon",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// f32 micro-tile: `acc[r][j] = Σ_k x[(i0+r)*fi + k] * w_tile[k*NR + j]`.
+#[inline]
+pub fn mr_tile_f32(
+    kernel: Kernel,
+    x: &[f32],
+    i0: usize,
+    fi: usize,
+    w_tile: &[f32],
+) -> [[f32; NR]; MR] {
+    debug_assert!(w_tile.len() >= fi * NR);
+    debug_assert!(x.len() >= (i0 + MR) * fi);
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Kernel::Avx2 is only constructed when detect()/available()
+        // confirmed AVX2+FMA (with_kernel asserts the same).
+        Kernel::Avx2 => unsafe { mr_tile_f32_avx2(x, i0, fi, w_tile) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above, for NEON.
+        Kernel::Neon => unsafe { mr_tile_f32_neon(x, i0, fi, w_tile) },
+        _ => mr_tile_f32_scalar(x, i0, fi, w_tile),
+    }
+}
+
+/// Bytes one pair-interleaved int8 weight tile occupies for fan-in `fi`:
+/// `ceil(fi / 2)` pair rows of `2 * NR` bytes.
+pub fn q8_tile_len(fi: usize) -> usize {
+    fi.div_ceil(2) * 2 * NR
+}
+
+/// int8 micro-tile over a pair-interleaved weight tile, i32 accumulation —
+/// bitwise identical across variants.
+#[inline]
+pub fn mr_tile_q8(
+    kernel: Kernel,
+    x: &[i8],
+    i0: usize,
+    fi: usize,
+    w_tile: &[i8],
+) -> [[i32; NR]; MR] {
+    debug_assert!(w_tile.len() >= q8_tile_len(fi));
+    debug_assert!(x.len() >= (i0 + MR) * fi);
+    match kernel {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: see mr_tile_f32.
+        Kernel::Avx2 => unsafe { mr_tile_q8_avx2(x, i0, fi, w_tile) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: see mr_tile_f32.
+        Kernel::Neon => unsafe { mr_tile_q8_neon(x, i0, fi, w_tile) },
+        _ => mr_tile_q8_scalar(x, i0, fi, w_tile),
+    }
+}
+
+pub fn mr_tile_f32_scalar(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [[f32; NR]; MR] {
+    let mut acc = [[0.0f32; NR]; MR];
+    for k in 0..fi {
+        let wrow = &w_tile[k * NR..k * NR + NR];
+        for r in 0..MR {
+            let xv = x[(i0 + r) * fi + k];
+            for j in 0..NR {
+                acc[r][j] += xv * wrow[j];
+            }
+        }
+    }
+    acc
+}
+
+pub fn mr_tile_q8_scalar(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i32; NR]; MR] {
+    let mut acc = [[0i32; NR]; MR];
+    let pairs = fi / 2;
+    for k2 in 0..pairs {
+        let wrow = &w_tile[k2 * 2 * NR..(k2 + 1) * 2 * NR];
+        for r in 0..MR {
+            let base = (i0 + r) * fi + 2 * k2;
+            let x0 = x[base] as i32;
+            let x1 = x[base + 1] as i32;
+            for j in 0..NR {
+                acc[r][j] += x0 * wrow[2 * j] as i32 + x1 * wrow[2 * j + 1] as i32;
+            }
+        }
+    }
+    if fi % 2 == 1 {
+        // Final odd fan-in row; the interleaved partner weights are the
+        // zero padding, so only the even slots contribute.
+        let wrow = &w_tile[pairs * 2 * NR..(pairs + 1) * 2 * NR];
+        for r in 0..MR {
+            let x0 = x[(i0 + r) * fi + fi - 1] as i32;
+            for j in 0..NR {
+                acc[r][j] += x0 * wrow[2 * j] as i32;
+            }
+        }
+    }
+    acc
+}
+
+/// Single-row int8 dot over one pair-interleaved tile (panel tail rows).
+pub fn row_tile_q8(xrow: &[i8], w_tile: &[i8]) -> [i32; NR] {
+    let fi = xrow.len();
+    debug_assert!(w_tile.len() >= q8_tile_len(fi));
+    let mut acc = [0i32; NR];
+    let pairs = fi / 2;
+    for k2 in 0..pairs {
+        let wrow = &w_tile[k2 * 2 * NR..(k2 + 1) * 2 * NR];
+        let x0 = xrow[2 * k2] as i32;
+        let x1 = xrow[2 * k2 + 1] as i32;
+        for j in 0..NR {
+            acc[j] += x0 * wrow[2 * j] as i32 + x1 * wrow[2 * j + 1] as i32;
+        }
+    }
+    if fi % 2 == 1 {
+        let wrow = &w_tile[pairs * 2 * NR..(pairs + 1) * 2 * NR];
+        let x0 = xrow[fi - 1] as i32;
+        for j in 0..NR {
+            acc[j] += x0 * wrow[2 * j] as i32;
+        }
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mr_tile_f32_avx2(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [[f32; NR]; MR] {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR];
+    for k in 0..fi {
+        let w = _mm256_loadu_ps(w_tile.as_ptr().add(k * NR));
+        for r in 0..MR {
+            let xv = _mm256_set1_ps(*x.get_unchecked((i0 + r) * fi + k));
+            acc[r] = _mm256_fmadd_ps(xv, w, acc[r]);
+        }
+    }
+    let mut out = [[0.0f32; NR]; MR];
+    for r in 0..MR {
+        _mm256_storeu_ps(out[r].as_mut_ptr(), acc[r]);
+    }
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mr_tile_q8_avx2(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i32; NR]; MR] {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_si256(); MR];
+    let pairs = fi / 2;
+    for k2 in 0..pairs {
+        // 16 interleaved bytes [w(k,j), w(k+1,j)]_j sign-extend to 16 i16
+        // lanes; one vpmaddwd then computes x0*w(k,j) + x1*w(k+1,j) for
+        // all 8 columns — 16 exact MACs per row per instruction (i16
+        // products of |v| <= 127 cannot reach the i32 edge).
+        let w8 = _mm_loadu_si128(w_tile.as_ptr().add(k2 * 2 * NR) as *const __m128i);
+        let w16 = _mm256_cvtepi8_epi16(w8);
+        for r in 0..MR {
+            let base = (i0 + r) * fi + 2 * k2;
+            let x0 = *x.get_unchecked(base) as u16 as i32;
+            let x1 = *x.get_unchecked(base + 1) as u16 as i32;
+            let xpair = _mm256_set1_epi32((x1 << 16) | x0);
+            acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(xpair, w16));
+        }
+    }
+    if fi % 2 == 1 {
+        // Odd fan-in tail: the interleaved partner lane is zero-padded.
+        let w8 = _mm_loadu_si128(w_tile.as_ptr().add(pairs * 2 * NR) as *const __m128i);
+        let w16 = _mm256_cvtepi8_epi16(w8);
+        for r in 0..MR {
+            let x0 = *x.get_unchecked((i0 + r) * fi + fi - 1) as u16 as i32;
+            let xpair = _mm256_set1_epi32(x0);
+            acc[r] = _mm256_add_epi32(acc[r], _mm256_madd_epi16(xpair, w16));
+        }
+    }
+    let mut out = [[0i32; NR]; MR];
+    for r in 0..MR {
+        _mm256_storeu_si256(out[r].as_mut_ptr() as *mut __m256i, acc[r]);
+    }
+    out
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mr_tile_f32_neon(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [[f32; NR]; MR] {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_f32(0.0); MR];
+    let mut hi = [vdupq_n_f32(0.0); MR];
+    for k in 0..fi {
+        let wl = vld1q_f32(w_tile.as_ptr().add(k * NR));
+        let wh = vld1q_f32(w_tile.as_ptr().add(k * NR + 4));
+        for r in 0..MR {
+            let xv = *x.get_unchecked((i0 + r) * fi + k);
+            lo[r] = vfmaq_n_f32(lo[r], wl, xv);
+            hi[r] = vfmaq_n_f32(hi[r], wh, xv);
+        }
+    }
+    let mut out = [[0.0f32; NR]; MR];
+    for r in 0..MR {
+        vst1q_f32(out[r].as_mut_ptr(), lo[r]);
+        vst1q_f32(out[r].as_mut_ptr().add(4), hi[r]);
+    }
+    out
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn mr_tile_q8_neon(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i32; NR]; MR] {
+    use std::arch::aarch64::*;
+    let mut lo = [vdupq_n_s32(0); MR];
+    let mut hi = [vdupq_n_s32(0); MR];
+    let pairs = fi / 2;
+    for k2 in 0..pairs {
+        // vld2 de-interleaves the pair tile row back into the k and k+1
+        // weight vectors; widen to i16 once, then vmlal into the i32
+        // accumulators — i16 x i16 products cannot overflow i32 here.
+        let w = vld2_s8(w_tile.as_ptr().add(k2 * 2 * NR));
+        let w0 = vmovl_s8(w.0);
+        let w1 = vmovl_s8(w.1);
+        let (w0l, w0h) = (vget_low_s16(w0), vget_high_s16(w0));
+        let (w1l, w1h) = (vget_low_s16(w1), vget_high_s16(w1));
+        for r in 0..MR {
+            let base = (i0 + r) * fi + 2 * k2;
+            let x0 = *x.get_unchecked(base) as i16;
+            let x1 = *x.get_unchecked(base + 1) as i16;
+            lo[r] = vmlal_n_s16(lo[r], w0l, x0);
+            hi[r] = vmlal_n_s16(hi[r], w0h, x0);
+            lo[r] = vmlal_n_s16(lo[r], w1l, x1);
+            hi[r] = vmlal_n_s16(hi[r], w1h, x1);
+        }
+    }
+    if fi % 2 == 1 {
+        // Odd fan-in tail: only the even interleave slots carry weights.
+        let w = vld2_s8(w_tile.as_ptr().add(pairs * 2 * NR));
+        let w0 = vmovl_s8(w.0);
+        let (w0l, w0h) = (vget_low_s16(w0), vget_high_s16(w0));
+        for r in 0..MR {
+            let x0 = *x.get_unchecked((i0 + r) * fi + fi - 1) as i16;
+            lo[r] = vmlal_n_s16(lo[r], w0l, x0);
+            hi[r] = vmlal_n_s16(hi[r], w0h, x0);
+        }
+    }
+    let mut out = [[0i32; NR]; MR];
+    for r in 0..MR {
+        vst1q_s32(out[r].as_mut_ptr(), lo[r]);
+        vst1q_s32(out[r].as_mut_ptr().add(4), hi[r]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn simd_variants() -> Vec<Kernel> {
+        [Kernel::Avx2, Kernel::Neon]
+            .into_iter()
+            .filter(|k| k.available())
+            .collect()
+    }
+
+    #[test]
+    fn detect_is_available() {
+        let k = Kernel::detect();
+        assert!(k.available(), "detected kernel {k:?} must be runnable");
+        assert!(Kernel::Scalar.available());
+    }
+
+    /// Pair-interleave a plain row-major `(fi, NR)` int8 weight block into
+    /// the tile layout the q8 kernels consume.
+    fn interleave_tile(w: &[i8], fi: usize) -> Vec<i8> {
+        let mut t = vec![0i8; q8_tile_len(fi)];
+        for k in 0..fi {
+            for j in 0..NR {
+                t[(k / 2) * 2 * NR + j * 2 + (k % 2)] = w[k * NR + j];
+            }
+        }
+        t
+    }
+
+    /// SIMD-vs-scalar micro-tile parity: exact for int8 (also pinned
+    /// against a naive plain-layout dot product, catching interleave
+    /// bugs), 1e-5 for f32 (FMA contracts the multiply-add; accumulation
+    /// order is identical).
+    #[test]
+    fn prop_microtile_simd_matches_scalar() {
+        let variants = simd_variants();
+        if variants.is_empty() {
+            eprintln!("no SIMD variant on this CPU; scalar-only");
+        }
+        prop::check(
+            "simd-microtile-parity",
+            100,
+            0x51D0,
+            |r: &mut Rng| {
+                let fi = 1 + r.below(48) as usize;
+                let rows = MR + r.below(3) as usize;
+                let x = prop::gens::vec_f32(r, rows * fi, -2.0, 2.0);
+                let w = prop::gens::vec_f32(r, fi * NR, -2.0, 2.0);
+                let xq: Vec<i8> = (0..rows * fi).map(|_| r.below(255) as i8).collect();
+                let wq: Vec<i8> = (0..fi * NR).map(|_| r.below(255) as i8).collect();
+                let i0 = r.below((rows - MR + 1) as u64) as usize;
+                (fi, i0, x, w, xq, wq)
+            },
+            |(fi, i0, x, w, xq, wq)| {
+                let (fi, i0) = (*fi, *i0);
+                let f_ref = mr_tile_f32_scalar(x, i0, fi, w);
+                let tile = interleave_tile(wq, fi);
+                let q_ref = mr_tile_q8_scalar(xq, i0, fi, &tile);
+                // Naive plain-layout oracle for the scalar interleaved walk.
+                for r in 0..MR {
+                    for j in 0..NR {
+                        let want: i32 = (0..fi)
+                            .map(|k| xq[(i0 + r) * fi + k] as i32 * wq[k * NR + j] as i32)
+                            .sum();
+                        if q_ref[r][j] != want {
+                            return Err(format!(
+                                "scalar interleaved walk wrong at ({r},{j}): {} vs {want}",
+                                q_ref[r][j]
+                            ));
+                        }
+                    }
+                }
+                // Tail-row helper agrees with the micro-tile's first row.
+                let row = row_tile_q8(&xq[i0 * fi..(i0 + 1) * fi], &tile);
+                if row != q_ref[0] {
+                    return Err("row_tile_q8 diverges from micro-tile row 0".into());
+                }
+                for &k in &simd_variants() {
+                    let f = mr_tile_f32(k, x, i0, fi, w);
+                    for r in 0..MR {
+                        prop::assert_close(&f[r], &f_ref[r], 1e-5, 1e-5)
+                            .map_err(|e| format!("{} f32 row {r}: {e}", k.name()))?;
+                    }
+                    let q = mr_tile_q8(k, xq, i0, fi, &tile);
+                    if q != q_ref {
+                        return Err(format!("{} int8 tile diverges from scalar", k.name()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The i32 accumulator cannot overflow for any realistic fan-in: the
+    /// worst per-term magnitude is 127*127, leaving room for fan-in beyond
+    /// 100k — far past any MLP here.  Pin the extreme case.
+    #[test]
+    fn q8_extremes_exact() {
+        let fi = 1023; // odd: exercises the zero-padded tail pair too
+        let x = vec![-127i8; (MR + 1) * fi];
+        let w = interleave_tile(&vec![-127i8; fi * NR], fi);
+        let acc = mr_tile_q8_scalar(&x, 1, fi, &w);
+        assert_eq!(acc[0][0], 127 * 127 * fi as i32);
+        for &k in &simd_variants() {
+            assert_eq!(mr_tile_q8(k, &x, 1, fi, &w), acc, "{} extremes", k.name());
+        }
+    }
+}

@@ -12,8 +12,15 @@
 //! array overlap (Fig. 5's FIFO decoupling) — summed over layers.  In
 //! Case 2 (weights never resident) add `weight_words / refill_bw` streaming
 //! cycles per inference (`stream_cycles`).
+//!
+//! Precision: [`mlp_cost_prec`] derives the same counts for the int8
+//! datapath — each PE retires `q8_macs_per_pe_cycle` narrow MACs per cycle
+//! and the bus/cache move `Precision::values_per_word` packed values per
+//! word, so both compute and IO cycles shrink.  MAC/word *counts* stay
+//! precision-independent (they are workload properties); the energy model
+//! applies the per-precision constants.
 
-use crate::config::NpuConfig;
+use crate::config::{NpuConfig, Precision};
 
 /// Cycle/energy-relevant counts for one layer.
 #[derive(Clone, Copy, Debug)]
@@ -41,29 +48,49 @@ pub struct MlpCost {
     /// Extra cycles per inference when weights must stream from cache
     /// (§III.D Case 2).
     pub stream_cycles: u64,
+    /// Datapath precision the cycle counts were derived for.
+    pub precision: Precision,
 }
 
-/// Derive the cost of an MLP topology on `cfg`'s tile.
+/// Derive the cost of an MLP topology on `cfg`'s tile (f32 datapath).
 pub fn mlp_cost(cfg: &NpuConfig, topology: &[usize]) -> MlpCost {
+    mlp_cost_prec(cfg, topology, Precision::F32)
+}
+
+/// [`mlp_cost`] for an explicit datapath precision.
+pub fn mlp_cost_prec(cfg: &NpuConfig, topology: &[usize], prec: Precision) -> MlpCost {
     assert!(topology.len() >= 2, "topology needs at least in+out");
     let n_pes = (cfg.pes_per_tile * cfg.n_tiles).max(1) as u64;
-    let mut out = MlpCost::default();
+    let mac_rate = match prec {
+        Precision::F32 => cfg.macs_per_pe_cycle,
+        Precision::Int8 => cfg.q8_macs_per_pe_cycle,
+    }
+    .max(1);
+    let vpw = prec.values_per_word();
+    let mut out = MlpCost { precision: prec, ..Default::default() };
     for w in topology.windows(2) {
         let (fan_in, fan_out) = (w[0], w[1]);
         let macs = (fan_in * fan_out) as u64;
         let passes = (fan_out as u64).div_ceil(n_pes);
-        let mac_cycles = (fan_in as u64).div_ceil(cfg.macs_per_pe_cycle);
+        let mac_cycles = (fan_in as u64).div_ceil(mac_rate);
         let compute = passes * (mac_cycles + cfg.act_latency);
-        let io = ((fan_in + fan_out) as u64).div_ceil(cfg.bus_words_per_cycle);
+        let io = ((fan_in + fan_out) as u64).div_ceil(cfg.bus_words_per_cycle * vpw);
         let cycles = compute.max(io);
-        out.layers.push(LayerCost { fan_in, fan_out, macs, compute_cycles: compute, io_cycles: io, cycles });
+        out.layers.push(LayerCost {
+            fan_in,
+            fan_out,
+            macs,
+            compute_cycles: compute,
+            io_cycles: io,
+            cycles,
+        });
         out.cycles += cycles;
         out.macs += macs;
         out.bus_words += (fan_in + fan_out) as u64;
         out.weight_words += fan_in * fan_out + fan_out;
     }
     out.stream_cycles =
-        (out.weight_words as u64).div_ceil(cfg.cache_refill_words_per_cycle.max(1));
+        (out.weight_words as u64).div_ceil(cfg.cache_refill_words_per_cycle.max(1) * vpw);
     out
 }
 
@@ -85,6 +112,29 @@ mod tests {
         assert_eq!(c.cycles, 18);
         assert_eq!(c.macs, 48 + 8);
         assert_eq!(c.weight_words, 6 * 8 + 8 + 8 + 1);
+    }
+
+    /// Int8 never costs more cycles than f32 on the same topology, and the
+    /// MAC/word counts (workload properties) are precision-independent.
+    #[test]
+    fn int8_no_slower_and_counts_match() {
+        let cfg = NpuConfig::default();
+        for topo in [vec![6, 8, 1], vec![18, 32, 16, 2], vec![64, 16, 64]] {
+            let f = mlp_cost_prec(&cfg, &topo, Precision::F32);
+            let q = mlp_cost_prec(&cfg, &topo, Precision::Int8);
+            assert!(q.cycles <= f.cycles, "{topo:?}: int8 {} > f32 {}", q.cycles, f.cycles);
+            assert!(q.stream_cycles <= f.stream_cycles);
+            assert_eq!(q.macs, f.macs);
+            assert_eq!(q.bus_words, f.bus_words);
+            assert_eq!(q.weight_words, f.weight_words);
+            assert_eq!(q.precision, Precision::Int8);
+            assert_eq!(f.precision, Precision::F32);
+        }
+        // With the default 4x MAC rate, a wide compute-bound layer gets a
+        // real cycle reduction (not merely "no slower").
+        let f = mlp_cost_prec(&cfg, &[64, 64, 64], Precision::F32);
+        let q = mlp_cost_prec(&cfg, &[64, 64, 64], Precision::Int8);
+        assert!(q.cycles < f.cycles, "int8 {} !< f32 {}", q.cycles, f.cycles);
     }
 
     #[test]

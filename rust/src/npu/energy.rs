@@ -6,7 +6,12 @@
 //! normalised to the one-pass method, so only the relative magnitudes
 //! (CPU cycle >> MAC) matter for reproducing the paper's shape.
 
-use crate::config::NpuConfig;
+//! Precision: int8 inference charges `e_mac_q8_pj` per MAC and moves 4
+//! packed values per bus word, so quantized nets are cheaper on both the
+//! MAC and the data-movement term (the Fig. 8 energy axis under
+//! `ExecMode::NativeQ8`).
+
+use crate::config::{NpuConfig, Precision};
 
 use super::cost::MlpCost;
 
@@ -21,9 +26,15 @@ impl EnergyModel {
         EnergyModel { cfg }
     }
 
-    /// Energy of one MLP inference on the NPU (pJ): MACs + bus traffic.
+    /// Energy of one MLP inference on the NPU (pJ): MACs + bus traffic,
+    /// at the cost's datapath precision.
     pub fn mlp(&self, cost: &MlpCost) -> f64 {
-        cost.macs as f64 * self.cfg.e_mac_pj + cost.bus_words as f64 * self.cfg.e_bus_word_pj
+        let e_mac = match cost.precision {
+            Precision::F32 => self.cfg.e_mac_pj,
+            Precision::Int8 => self.cfg.e_mac_q8_pj,
+        };
+        let words = (cost.bus_words as f64 / cost.precision.values_per_word() as f64).ceil();
+        cost.macs as f64 * e_mac + words * self.cfg.e_bus_word_pj
     }
 
     /// Energy of refilling `cycles`-worth of weights from cache (pJ).
@@ -58,5 +69,23 @@ mod tests {
         let small = mlp_cost(&cfg, &[2, 4, 1]);
         let big = mlp_cost(&cfg, &[64, 16, 64]);
         assert!(e.mlp(&big) > e.mlp(&small));
+    }
+
+    #[test]
+    fn int8_inference_cheaper_than_f32() {
+        use crate::config::Precision;
+        use crate::npu::cost::mlp_cost_prec;
+        let cfg = NpuConfig::default();
+        let e = EnergyModel::new(cfg);
+        for topo in [vec![6, 8, 1], vec![18, 32, 16, 2]] {
+            let f = mlp_cost_prec(&cfg, &topo, Precision::F32);
+            let q = mlp_cost_prec(&cfg, &topo, Precision::Int8);
+            assert!(
+                e.mlp(&q) < e.mlp(&f),
+                "{topo:?}: int8 {} !< f32 {}",
+                e.mlp(&q),
+                e.mlp(&f)
+            );
+        }
     }
 }

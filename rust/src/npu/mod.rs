@@ -17,10 +17,10 @@
 pub mod cost;
 pub mod energy;
 
-pub use cost::{mlp_cost, LayerCost, MlpCost};
+pub use cost::{mlp_cost, mlp_cost_prec, LayerCost, MlpCost};
 pub use energy::EnergyModel;
 
-use crate::config::NpuConfig;
+use crate::config::{NpuConfig, Precision};
 use crate::coordinator::{BufferCase, Route, WeightCache};
 
 /// Result of simulating one routed trace.
@@ -72,6 +72,10 @@ pub struct NpuSim {
     pub approx_costs: Vec<MlpCost>,
     /// Precise CPU cycles per sample for this benchmark.
     pub cpu_cycles: u64,
+    /// MAC datapath precision the per-net costs were derived for.
+    pub precision: Precision,
+    clf_topology: Vec<usize>,
+    approx_topologies: Vec<Vec<usize>>,
     energy: EnergyModel,
 }
 
@@ -85,13 +89,43 @@ impl NpuSim {
         let clf_cost = mlp_cost(&cfg, clf_topology);
         let approx_costs = approx_topologies.iter().map(|t| mlp_cost(&cfg, t)).collect();
         let energy = EnergyModel::new(cfg);
-        NpuSim { cfg, clf_cost, approx_costs, cpu_cycles, energy }
+        NpuSim {
+            cfg,
+            clf_cost,
+            approx_costs,
+            cpu_cycles,
+            precision: Precision::F32,
+            clf_topology: clf_topology.to_vec(),
+            approx_topologies: approx_topologies.to_vec(),
+            energy,
+        }
+    }
+
+    /// Re-derive every per-net cost for `prec` (int8 MACs are faster and
+    /// cheaper; quantized weights pack 4 per word, so more approximators
+    /// fit resident and refills stream 4x faster).
+    pub fn with_precision(mut self, prec: Precision) -> Self {
+        self.precision = prec;
+        self.clf_cost = mlp_cost_prec(&self.cfg, &self.clf_topology, prec);
+        self.approx_costs = self
+            .approx_topologies
+            .iter()
+            .map(|t| mlp_cost_prec(&self.cfg, t, prec))
+            .collect();
+        self
     }
 
     /// Simulate a routed trace in arrival order.  `force_case` overrides
     /// the weight-buffer residency classification (ablations).
     pub fn simulate(&self, routes: &[Route], force_case: Option<BufferCase>) -> SimResult {
-        let words: Vec<usize> = self.approx_costs.iter().map(|c| c.weight_words).collect();
+        // Buffer residency and refill cost are charged in f32-word units:
+        // int8 weights occupy a quarter word each.
+        let vpw = self.precision.values_per_word() as usize;
+        let words: Vec<usize> = self
+            .approx_costs
+            .iter()
+            .map(|c| c.weight_words.div_ceil(vpw))
+            .collect();
         let mut wc = WeightCache::new(&self.cfg, words);
         if let Some(case) = force_case {
             wc.force_case(case);
@@ -196,6 +230,42 @@ mod tests {
         let forced = s.simulate(&trace, Some(BufferCase::AllResident));
         assert_eq!(forced.weight_switches, 0);
         assert!(forced.cycles < r.cycles);
+    }
+
+    /// Int8 precision never worsens the simulated pipeline: cycles and
+    /// energy both drop (or tie) for the same routing trace, so fig8-style
+    /// numbers reflect quantization.
+    #[test]
+    fn int8_precision_improves_speedup_and_energy() {
+        let s32 = sim();
+        let s8 = sim().with_precision(Precision::Int8);
+        let trace = routes(700, 300);
+        let r32 = s32.simulate(&trace, None);
+        let r8 = s8.simulate(&trace, None);
+        assert!(r8.cycles <= r32.cycles, "int8 {} > f32 {}", r8.cycles, r32.cycles);
+        assert!(r8.energy_pj < r32.energy_pj, "int8 {} !< f32 {}", r8.energy_pj, r32.energy_pj);
+        assert!(r8.speedup_vs_cpu() >= r32.speedup_vs_cpu());
+        assert!(r8.energy_reduction_vs_cpu() > r32.energy_reduction_vs_cpu());
+        // CPU-only baseline is precision-independent.
+        assert_eq!(r8.cycles_cpu_only, r32.cycles_cpu_only);
+        assert_eq!(r8.energy_cpu_only_pj, r32.energy_cpu_only_pj);
+    }
+
+    /// Quartered weight residency can flip §III.D Case 3 into Case 1:
+    /// a buffer that holds only one f32 approximator holds all of their
+    /// int8 twins.
+    #[test]
+    fn int8_residency_flips_case3_to_case1() {
+        let cfg = NpuConfig { weight_buffer_words: 80, pes_per_tile: 1, ..Default::default() };
+        // Two approximators of 71 weight words each: f32 -> only one fits
+        // (Case 3: 71 <= 80 < 142); int8 -> ceil(71/4)=18 words each, both
+        // fit (Case 1).
+        let s = NpuSim::new(cfg, &[6, 8, 2], &[vec![8, 7, 1], vec![8, 7, 1]], 2000);
+        let trace: Vec<Route> = (0..50).map(|i| Route::Approx(i % 2)).collect();
+        let f32_run = s.simulate(&trace, None);
+        assert!(f32_run.weight_switches > 0, "expected Case-3 switches at f32");
+        let q8_run = s.with_precision(Precision::Int8).simulate(&trace, None);
+        assert_eq!(q8_run.weight_switches, 0, "int8 twins should be all-resident");
     }
 
     #[test]

@@ -6,7 +6,7 @@ use std::path::Path;
 
 use crate::config::Method;
 use crate::formats::{BenchManifest, Manifest, WeightsFile};
-use crate::nn::{Mlp, PackedMlp};
+use crate::nn::{Mlp, PackedMlp, PackedMlpQ8};
 
 use super::{LoadedForward, Runtime, WeightSet};
 
@@ -44,22 +44,34 @@ pub struct ModelBank {
     /// Keyed by (method, is_approx, index) so hot-path lookups allocate
     /// nothing; Clf2/ClfN share the classifier slot like `host_mlp`.
     packed: HashMap<(Method, bool, usize), PackedMlp>,
+    /// Int8 quantized twins of every host net (`nn::qgemm`), same keying —
+    /// the `ExecMode::NativeQ8` engine.  Packed once alongside `packed`.
+    packed_q8: HashMap<(Method, bool, usize), PackedMlpQ8>,
 }
 
+type PackedMaps = (
+    HashMap<(Method, bool, usize), PackedMlp>,
+    HashMap<(Method, bool, usize), PackedMlpQ8>,
+);
+
 /// Pack every host net reachable through a known [`Method`] for the tiled
-/// native engine. Runs once at bank construction.
-fn pack_host(host: &WeightsFile) -> HashMap<(Method, bool, usize), PackedMlp> {
+/// native engines — an f32 packed net and its int8 quantized twin.  Runs
+/// once at bank construction.
+fn pack_host(host: &WeightsFile) -> PackedMaps {
     let mut packed = HashMap::new();
+    let mut packed_q8 = HashMap::new();
     for m in Method::ALL {
         let Some(mw) = host.methods.get(m.key()) else { continue };
         for (i, net) in mw.approximators.iter().enumerate() {
             packed.insert((m, true, i), PackedMlp::from_mlp(net));
+            packed_q8.insert((m, true, i), PackedMlpQ8::from_mlp(net));
         }
         for (i, net) in mw.classifiers.iter().enumerate() {
             packed.insert((m, false, i), PackedMlp::from_mlp(net));
+            packed_q8.insert((m, false, i), PackedMlpQ8::from_mlp(net));
         }
     }
-    packed
+    (packed, packed_q8)
 }
 
 impl ModelBank {
@@ -91,8 +103,15 @@ impl ModelBank {
         let mut weights = HashMap::new();
 
         let Some(rt) = rt else {
-            let packed = pack_host(&host);
-            return Ok(ModelBank { bench: bench.name.clone(), exes, weights, host, packed });
+            let (packed, packed_q8) = pack_host(&host);
+            return Ok(ModelBank {
+                bench: bench.name.clone(),
+                exes,
+                weights,
+                host,
+                packed,
+                packed_q8,
+            });
         };
 
         let need_clf2 = methods.iter().any(|m| !m.is_mcma());
@@ -143,21 +162,22 @@ impl ModelBank {
             }
         }
 
-        let packed = pack_host(&host);
-        Ok(ModelBank { bench: bench.name.clone(), exes, weights, host, packed })
+        let (packed, packed_q8) = pack_host(&host);
+        Ok(ModelBank { bench: bench.name.clone(), exes, weights, host, packed, packed_q8 })
     }
 
     /// Build a native-only bank straight from host weights (no files, no
     /// PJRT) — lets unit tests craft classifiers/approximators with known
     /// behaviour and exercise the coordinator's routing semantics.
     pub fn from_host(bench: &str, host: WeightsFile) -> Self {
-        let packed = pack_host(&host);
+        let (packed, packed_q8) = pack_host(&host);
         ModelBank {
             bench: bench.to_string(),
             exes: HashMap::new(),
             weights: HashMap::new(),
             host,
             packed,
+            packed_q8,
         }
     }
 
@@ -214,6 +234,19 @@ impl ModelBank {
         self.packed
             .get(&(m, is_approx, idx))
             .ok_or_else(|| anyhow::anyhow!("no packed host net for {m:?}/{role:?}[{idx}]"))
+    }
+
+    /// Int8 quantized twin of a host net (the `NativeQ8` hot path).
+    pub fn host_packed_q8(
+        &self,
+        m: Method,
+        role: Role,
+        idx: usize,
+    ) -> crate::Result<&PackedMlpQ8> {
+        let is_approx = role == Role::Approx;
+        self.packed_q8
+            .get(&(m, is_approx, idx))
+            .ok_or_else(|| anyhow::anyhow!("no quantized host net for {m:?}/{role:?}[{idx}]"))
     }
 
     /// Number of approximators available for `m`.

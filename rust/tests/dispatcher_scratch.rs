@@ -157,6 +157,102 @@ fn steady_state_process_batch_stops_allocating() {
     }
 }
 
+/// The int8 engine runs through the same arena path with the same
+/// guarantees: wrapper-vs-arena bitwise equality and a zero-allocation
+/// steady state (the quantized panel buffer included).
+#[test]
+fn q8_process_batch_into_matches_wrapper_and_stops_allocating() {
+    let man = manifest();
+    let mut rng = Rng::new(0xA8C8);
+    let bank = bank(&mut rng);
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::NativeQ8).unwrap();
+
+    let mut plan = RoutePlan::default();
+    let mut y = Vec::new();
+    let mut scratch = Scratch::new();
+    for n in [1usize, 7, 64, 256] {
+        let batch = random_batch(&mut rng, n);
+        let (plan_alloc, y_alloc) = d.process_batch(&batch).unwrap();
+        d.process_batch_into(&batch, &mut plan, &mut y, &mut scratch).unwrap();
+        assert_eq!(plan.routes, plan_alloc.routes, "n={n} q8 routes diverge");
+        assert_eq!(y, y_alloc, "n={n} q8 served outputs diverge");
+    }
+
+    let batches = [random_batch(&mut rng, 256), random_batch(&mut rng, 256)];
+    for i in 0..4 {
+        d.process_batch_into(&batches[i % 2], &mut plan, &mut y, &mut scratch).unwrap();
+    }
+    let warm_caps = scratch.capacity_signature();
+    for i in 0..10 {
+        d.process_batch_into(&batches[i % 2], &mut plan, &mut y, &mut scratch).unwrap();
+        assert_eq!(scratch.capacity_signature(), warm_caps, "q8 scratch grew");
+    }
+}
+
+/// The quantized engine serves outputs close to the f32 engine (routing
+/// may legitimately differ near argmax ties, so compare forwards, not
+/// plans): int8 quantization error on these small nets stays well under
+/// a generous absolute envelope.
+#[test]
+fn q8_forward_close_to_f32_forward() {
+    let man = manifest();
+    let mut rng = Rng::new(0xD16);
+    let bank = bank(&mut rng);
+    let d32 = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let d8 = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::NativeQ8).unwrap();
+
+    let n = 64;
+    let x: Vec<f32> = (0..n * 9).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let f = d32.forward(mcma::runtime::Role::Approx, 0, &x, n).unwrap();
+    let q = d8.forward(mcma::runtime::Role::Approx, 0, &x, n).unwrap();
+    assert_eq!(f.len(), q.len());
+    for (i, (a, b)) in f.iter().zip(&q).enumerate() {
+        assert!((a - b).abs() < 0.3, "sample {i}: f32 {a} vs int8 {b}");
+    }
+}
+
+/// Route-sorted accounting only reorders the weight-switch trace: served
+/// outputs and routes are identical, switches can only go down.
+#[test]
+fn route_sorted_only_changes_switch_accounting() {
+    let man = manifest();
+    let mut rng = Rng::new(0x50FA);
+    let bank = bank(&mut rng);
+    let ds = mcma::formats::Dataset {
+        n: 300,
+        d_in: 9,
+        d_out: 1,
+        x_raw: (0..300 * 9).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+        y_norm: (0..300).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
+    };
+    // Force §III.D Case 3 on these tiny nets: one approximator fits the
+    // buffer (89 <= 96 words), all three do not.
+    let npu = mcma::config::NpuConfig {
+        weight_buffer_words: 12,
+        ..Default::default()
+    };
+
+    let mut d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    d.npu_cfg = npu;
+    let unsorted = d.run_dataset(&ds).unwrap();
+    let mut d_sorted = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native)
+        .unwrap()
+        .with_route_sorted(true);
+    d_sorted.npu_cfg = npu;
+    let sorted = d_sorted.run_dataset(&ds).unwrap();
+
+    assert_eq!(unsorted.plan.routes, sorted.plan.routes);
+    assert_eq!(unsorted.y_served, sorted.y_served);
+    assert!(
+        sorted.metrics.weight_switches <= unsorted.metrics.weight_switches,
+        "sorting increased switches: {} > {}",
+        sorted.metrics.weight_switches,
+        unsorted.metrics.weight_switches
+    );
+    // Class-sorted Case-3 refills: at most one per approximator.
+    assert!(sorted.metrics.weight_switches <= 3);
+}
+
 #[test]
 fn forward_native_agrees_with_scalar_reference() {
     let man = manifest();

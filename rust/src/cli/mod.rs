@@ -1,5 +1,11 @@
 //! Minimal CLI argument parser (clap substitute): subcommand + positional
-//! arguments + `--key value` options + `--flag` booleans.
+//! arguments + `--key value` / `--key=value` options + `--flag` booleans.
+//!
+//! Every option must be REGISTERED (in [`VALUE_KEYS`] or [`FLAG_KEYS`]):
+//! an unknown `--key` is a hard error.  Previously an unknown value option
+//! was silently treated as a flag and its value leaked into the
+//! positionals — `mcma eval --samplse 100` would quietly evaluate the full
+//! test set with a stray positional `100`.
 
 use std::collections::HashMap;
 
@@ -12,11 +18,17 @@ pub struct Args {
     pub flags: Vec<String>,
 }
 
-/// Which option keys take a value (everything else after `--` is a flag).
-const VALUE_KEYS: [&str; 10] = [
+/// Option keys that take a value.
+const VALUE_KEYS: [&str; 17] = [
+    // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
+    // train
+    "k", "rounds", "epochs", "lr", "bound", "out", "threads",
 ];
+
+/// Boolean flags (present/absent, no value).
+const FLAG_KEYS: [&str; 3] = ["verbose", "help", "force"];
 
 impl Args {
     /// Parse `std::env::args()`-style tokens (without argv[0]).
@@ -25,13 +37,22 @@ impl Args {
         let mut it = tokens.into_iter().peekable();
         while let Some(tok) = it.next() {
             if let Some(key) = tok.strip_prefix("--") {
-                if VALUE_KEYS.contains(&key) {
+                // `--key=value` form.
+                if let Some((k, v)) = key.split_once('=') {
+                    anyhow::ensure!(
+                        VALUE_KEYS.contains(&k),
+                        "unknown option --{k} (run `mcma help` for usage)"
+                    );
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if VALUE_KEYS.contains(&key) {
                     let val = it
                         .next()
                         .ok_or_else(|| anyhow::anyhow!("--{key} expects a value"))?;
                     args.options.insert(key.to_string(), val);
-                } else {
+                } else if FLAG_KEYS.contains(&key) {
                     args.flags.push(key.to_string());
+                } else {
+                    anyhow::bail!("unknown option --{key} (run `mcma help` for usage)");
                 }
             } else if args.subcommand.is_none() {
                 args.subcommand = Some(tok);
@@ -59,6 +80,15 @@ impl Args {
         }
     }
 
+    pub fn opt_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -75,10 +105,17 @@ SUBCOMMANDS:
   figure <7a|7b|7c|8a|8b|9|10|11|all>
                                   regenerate a paper figure as a table
   summary                         §IV.B headline numbers vs the paper
+                                  (+ Rust-vs-Python training comparison when
+                                  `weights_rust.bin` artifacts exist)
   report                          full evaluation as JSON (plotting / CI)
   eval   --bench B --method M     run one (benchmark, method) evaluation
   serve  --bench B --method M     run the online serving pipeline demo
          [--requests N] [--batch N] [--wait-us U]
+  train  --bench B [--k K]        co-train K approximators + multiclass
+         [--samples N] [--rounds R]  classifier natively (no Python) and
+         [--epochs E] [--lr X]       export MCMW/MCQW artifacts ModelBank
+         [--bound B] [--seed S]      serves; also trains a K=1 baseline
+         [--out DIR] [--threads T]   under the same budget for comparison
   npu-sim --bench B --method M    NPU cycle simulation + buffer-case ablation
          [--case 1|2|3]
 
@@ -131,5 +168,46 @@ mod tests {
     fn bad_integer_is_error() {
         let a = parse("eval --samples abc");
         assert!(a.opt_usize("samples", 0).is_err());
+    }
+
+    /// The old parser silently turned a misspelled value option into a
+    /// flag and let its value leak into the positionals; now any
+    /// unregistered `--key` is a hard error.
+    #[test]
+    fn unknown_option_is_hard_error() {
+        let e = Args::parse(["eval".into(), "--samplse".into(), "100".into()]);
+        assert!(e.is_err());
+        assert!(e.unwrap_err().to_string().contains("--samplse"));
+        assert!(Args::parse(["train".into(), "--bogus=3".into()]).is_err());
+    }
+
+    #[test]
+    fn train_options_registered() {
+        let a = parse(
+            "train --bench bessel --k 4 --samples 2000 --rounds 5 --epochs 10 \
+             --lr 0.02 --bound 0.04 --out /tmp/x --threads 2 --seed 9",
+        );
+        assert_eq!(a.opt_usize("k", 1).unwrap(), 4);
+        assert_eq!(a.opt_usize("rounds", 0).unwrap(), 5);
+        assert_eq!(a.opt_usize("epochs", 0).unwrap(), 10);
+        assert!((a.opt_f64("lr", 0.0).unwrap() - 0.02).abs() < 1e-12);
+        assert!((a.opt_f64("bound", 0.0).unwrap() - 0.04).abs() < 1e-12);
+        assert_eq!(a.opt("out"), Some("/tmp/x"));
+        assert_eq!(a.opt_usize("threads", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = parse("train --bench=fft --k=3");
+        assert_eq!(a.opt("bench"), Some("fft"));
+        assert_eq!(a.opt_usize("k", 1).unwrap(), 3);
+    }
+
+    #[test]
+    fn opt_f64_default_and_error() {
+        let a = parse("train --bench fft");
+        assert_eq!(a.opt_f64("lr", 0.5).unwrap(), 0.5);
+        let b = parse("train --lr nope");
+        assert!(b.opt_f64("lr", 0.0).is_err());
     }
 }

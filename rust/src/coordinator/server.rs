@@ -98,6 +98,25 @@ enum BatchMsg {
     Stop,
 }
 
+/// Counts the responses a dispatch worker still OWES for the batch in
+/// flight.  Dropped with a non-zero count — an error `?`-return or a panic
+/// unwinding through `process_batch_into` — the shortfall lands in the
+/// shared `lost` counter, so `shutdown`'s drain stops waiting for
+/// responses that can never arrive (the same drop-guard discipline
+/// `util::threadpool::PendingGuard` uses for its pending count).
+struct LostGuard<'a> {
+    lost: &'a AtomicU64,
+    remaining: u64,
+}
+
+impl Drop for LostGuard<'_> {
+    fn drop(&mut self) {
+        if self.remaining > 0 {
+            self.lost.fetch_add(self.remaining, Ordering::Release);
+        }
+    }
+}
+
 /// Handle to the running pipeline.
 pub struct Server {
     ingress: mpsc::Sender<Option<Request>>,
@@ -106,9 +125,12 @@ pub struct Server {
     worker_threads: Vec<thread::JoinHandle<crate::Result<u64>>>,
     started: Instant,
     /// Requests accepted so far; `shutdown` drains exactly
-    /// `submitted - already_collected` responses instead of spinning on a
-    /// fixed timeout after the last one.
+    /// `submitted - already_collected - lost` responses instead of
+    /// spinning on a fixed timeout after the last one.
     submitted: AtomicU64,
+    /// Responses workers failed to deliver (panic or error mid-batch),
+    /// maintained by [`LostGuard`] so the drain never waits for them.
+    lost: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -173,6 +195,7 @@ impl Server {
                 }
             })?;
 
+        let lost = Arc::new(AtomicU64::new(0));
         let mut worker_threads = Vec::new();
         for w in 0..cfg.workers.max(1) {
             let man = Arc::clone(&man);
@@ -180,6 +203,7 @@ impl Server {
             let batch_rx = Arc::clone(&batch_rx);
             let out_tx = out_tx.clone();
             let stop_tx = stop_tx.clone();
+            let lost = Arc::clone(&lost);
             let cfg = cfg.clone();
             worker_threads.push(
                 thread::Builder::new()
@@ -214,6 +238,14 @@ impl Server {
                             match msg {
                                 Ok(BatchMsg::Work(batch)) => {
                                     batches += 1;
+                                    // Every id in this batch is owed a
+                                    // response; whatever is still unsent
+                                    // when the guard drops (error return,
+                                    // panic unwind) is counted as lost.
+                                    let mut guard = LostGuard {
+                                        lost: &lost,
+                                        remaining: batch.ids.len() as u64,
+                                    };
                                     dispatcher.process_batch_into(
                                         &batch,
                                         &mut plan,
@@ -231,7 +263,9 @@ impl Server {
                                                 .as_secs_f64()
                                                 * 1e6,
                                         });
+                                        guard.remaining -= 1;
                                     }
+                                    debug_assert_eq!(guard.remaining, 0);
                                 }
                                 Ok(BatchMsg::Stop) | Err(_) => {
                                     let _ = stop_tx.send(BatchMsg::Stop);
@@ -250,6 +284,7 @@ impl Server {
             worker_threads,
             started: Instant::now(),
             submitted: AtomicU64::new(0),
+            lost,
         })
     }
 
@@ -270,20 +305,35 @@ impl Server {
     /// Stop accepting, drain, join, and report.
     pub fn shutdown(mut self, mut collected: Vec<Response>) -> crate::Result<ServerReport> {
         let _ = self.ingress.send(None);
-        // Drain exactly the outstanding responses (submitted minus already
-        // received): the drain stops the moment the count hits zero rather
-        // than paying a full recv timeout after the last response.  The
-        // timeout stays only as a safety net against responses lost to a
-        // worker error, so a healthy shutdown never stalls on it.
+        // Drain exactly the outstanding responses: submitted minus already
+        // received minus the ones workers reported lost (drop-guard on an
+        // error return or panic mid-batch, see `LostGuard`).  `lost` is
+        // re-read every iteration so a worker failing DURING the drain
+        // releases it immediately instead of stranding it on the timeout.
+        // The 2 s budget stays only as a last-resort net for responses
+        // that vanish without being counted (e.g. a worker wedged before
+        // its batch was guarded); it resets on progress, so a healthy
+        // shutdown never waits on it.
         let submitted = self.submitted.load(Ordering::Relaxed);
-        let mut outstanding = submitted.saturating_sub(collected.len() as u64);
-        while outstanding > 0 {
-            match self.egress.recv_timeout(Duration::from_millis(2000)) {
+        let mut deadline = Instant::now() + Duration::from_millis(2000);
+        loop {
+            let lost = self.lost.load(Ordering::Acquire);
+            let outstanding =
+                submitted.saturating_sub(collected.len() as u64).saturating_sub(lost);
+            if outstanding == 0 {
+                break;
+            }
+            match self.egress.recv_timeout(Duration::from_millis(50)) {
                 Ok(r) => {
                     collected.push(r);
-                    outstanding -= 1;
+                    deadline = Instant::now() + Duration::from_millis(2000);
                 }
-                Err(_) => break,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if Instant::now() >= deadline {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
         let (full, timeout) = self
@@ -319,5 +369,43 @@ impl Server {
             flushes_timeout: timeout,
             batches,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The guard releases exactly the unsent remainder — on normal drop,
+    /// on early drop (error-return path), and on panic unwind — and
+    /// releases nothing once every response was sent.
+    #[test]
+    fn lost_guard_accounts_unsent_responses() {
+        let lost = AtomicU64::new(0);
+
+        // Fully-sent batch: no loss.
+        {
+            let mut g = LostGuard { lost: &lost, remaining: 3 };
+            for _ in 0..3 {
+                g.remaining -= 1;
+            }
+        }
+        assert_eq!(lost.load(Ordering::Acquire), 0);
+
+        // Error return after 1 of 4 responses: 3 lost.
+        {
+            let mut g = LostGuard { lost: &lost, remaining: 4 };
+            g.remaining -= 1;
+        }
+        assert_eq!(lost.load(Ordering::Acquire), 3);
+
+        // Panic unwind mid-batch still releases the count.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut g = LostGuard { lost: &lost, remaining: 5 };
+            g.remaining -= 2;
+            panic!("worker panic (expected in test)");
+        }));
+        assert!(r.is_err());
+        assert_eq!(lost.load(Ordering::Acquire), 6);
     }
 }

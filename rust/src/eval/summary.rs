@@ -1,13 +1,17 @@
 //! §IV.B headline numbers: MCMA's mean invocation gain / error reduction
 //! over one-pass and the mean speedup / energy-reduction ratios (paper:
-//! +27% invocation, -10% error, ~1.23x speedup, ~1.15x energy) — plus the
-//! quantization scenario axis: per-benchmark invocation-rate deltas
-//! between the f32 native engine and its int8 twin.
+//! +27% invocation, -10% error, ~1.23x speedup, ~1.15x energy) — plus two
+//! scenario axes: the quantization axis (per-benchmark invocation-rate
+//! deltas between the f32 native engine and its int8 twin) and the
+//! training-provenance axis (Python-trained `weights.bin` vs the native
+//! trainer's `weights_rust.bin`, both measured through the same serving
+//! dispatcher).
 
 use crate::bench_harness::{pct, Table};
 use crate::config::{ExecMode, Method, Precision};
 use crate::coordinator::Dispatcher;
 use crate::npu::NpuSim;
+use crate::runtime::ModelBank;
 
 use super::{fig7, fig8, Context};
 
@@ -105,6 +109,106 @@ pub fn quantized_table(rows: &[QuantRow]) -> Table {
             format!("{:.2}", r.rmse_over_bound_q8),
             format!("{:.3}x", r.energy_reduction_f32),
             format!("{:.3}x", r.energy_reduction_q8),
+        ]);
+    }
+    t
+}
+
+/// One benchmark's Python-trained vs Rust-trained serving comparison.
+pub struct RustTrainRow {
+    pub bench: String,
+    pub method: Method,
+    /// `None` when that provenance's weights lack the method.
+    pub invocation_py: Option<f64>,
+    pub invocation_rust: f64,
+    pub rmse_over_bound_py: Option<f64>,
+    pub rmse_over_bound_rust: f64,
+}
+
+/// Training-provenance axis: every benchmark with a `weights_rust.bin`
+/// (written by `mcma train`) is served through the SAME native dispatcher
+/// twice — once from the Python-trained `weights.bin`, once from the
+/// Rust-trained artifact — and the invocation rates are compared head to
+/// head.  Empty when no Rust-trained artifacts exist.
+pub fn rust_trained_deltas(ctx: &Context) -> crate::Result<Vec<RustTrainRow>> {
+    let mut rows = Vec::new();
+    for name in ctx.man.bench_names_ordered() {
+        let rust_path = ctx.man.rust_weights_path(&name);
+        if !rust_path.exists() {
+            continue;
+        }
+        let bench = ctx.man.bench(&name)?.clone();
+        let ds = ctx.dataset(&name)?;
+        // Host-only banks (rt = None): this comparison always runs the
+        // native engine regardless of the session's --exec, so it works
+        // in PJRT-less environments too.
+        let bank_rust =
+            ModelBank::load_with_weights(None, &ctx.man, &bench, &[], &[], &rust_path)?;
+        let method = [Method::McmaCompetitive, Method::McmaComplementary, Method::OnePass]
+            .into_iter()
+            .find(|m| bank_rust.has_method(*m));
+        let Some(method) = method else { continue };
+        let out_rust = Dispatcher::new(&bench, &bank_rust, method, ExecMode::Native)?
+            .run_dataset(&ds)?;
+
+        let py_path = ctx.man.weights_path(&name);
+        // In a standalone Rust-built tree the trainer copies its own
+        // weights to weights.bin to make the tree servable — byte-identical
+        // files mean there is no Python-trained net to compare against, so
+        // the py column stays "-" instead of faking a Δ 0.0pp match.
+        let genuinely_python = py_path.exists()
+            && std::fs::read(&py_path).ok() != std::fs::read(&rust_path).ok();
+        let (invocation_py, rmse_over_bound_py) = if genuinely_python {
+            let bank_py =
+                ModelBank::load_with_weights(None, &ctx.man, &bench, &[], &[], &py_path)?;
+            if bank_py.has_method(method) {
+                let out_py = Dispatcher::new(&bench, &bank_py, method, ExecMode::Native)?
+                    .run_dataset(&ds)?;
+                (Some(out_py.metrics.invocation()), Some(out_py.metrics.rmse_over_bound))
+            } else {
+                (None, None)
+            }
+        } else {
+            (None, None)
+        };
+
+        rows.push(RustTrainRow {
+            bench: name.clone(),
+            method,
+            invocation_py,
+            invocation_rust: out_rust.metrics.invocation(),
+            rmse_over_bound_py,
+            rmse_over_bound_rust: out_rust.metrics.rmse_over_bound,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render [`rust_trained_deltas`] as a paper-style table.
+pub fn rust_trained_table(rows: &[RustTrainRow]) -> Table {
+    let mut t = Table::new(
+        "Training provenance: Python-trained vs Rust-trained, per benchmark",
+        &["benchmark", "method", "inv py", "inv rust", "Δ inv",
+          "rmse/bound py", "rmse/bound rust"],
+    );
+    for r in rows {
+        let (inv_py, delta) = match r.invocation_py {
+            Some(p) => (
+                pct(p),
+                format!("{:+.1}pp", 100.0 * (r.invocation_rust - p)),
+            ),
+            None => ("-".into(), "-".into()),
+        };
+        t.row(vec![
+            r.bench.clone(),
+            r.method.label().into(),
+            inv_py,
+            pct(r.invocation_rust),
+            delta,
+            r.rmse_over_bound_py
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "-".into()),
+            format!("{:.2}", r.rmse_over_bound_rust),
         ]);
     }
     t

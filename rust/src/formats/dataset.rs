@@ -1,4 +1,6 @@
-//! `dataset.bin` reader (magic `MCMD`, v1) — held-out test workloads.
+//! `dataset.bin` reader + writer (magic `MCMD`, v1) — held-out test
+//! workloads.  The write path lets the native trainer (`crate::train`)
+//! export a `test.bin` the eval drivers load unchanged.
 
 use std::io::{BufReader, Read};
 use std::path::Path;
@@ -8,7 +10,7 @@ use super::{read_f32s, read_u32};
 /// A test dataset: raw (un-normalised) inputs plus normalised precise
 /// outputs.  The runtime normalises inputs itself using the manifest's
 /// static bounds; the raw inputs also feed the precise-CPU fallback path.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Dataset {
     pub n: usize,
     pub d_in: usize,
@@ -52,6 +54,30 @@ impl Dataset {
     /// Normalised precise output row `i`.
     pub fn y_row(&self, i: usize) -> &[f32] {
         &self.y_norm[i * self.d_out..(i + 1) * self.d_out]
+    }
+
+    /// Serialise to the MCMD v1 byte layout `load` parses.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        assert_eq!(self.x_raw.len(), self.n * self.d_in, "x_raw size mismatch");
+        assert_eq!(self.y_norm.len(), self.n * self.d_out, "y_norm size mismatch");
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(b"MCMD");
+        buf.extend(1u32.to_le_bytes());
+        buf.extend((self.n as u32).to_le_bytes());
+        buf.extend((self.d_in as u32).to_le_bytes());
+        buf.extend((self.d_out as u32).to_le_bytes());
+        for v in &self.x_raw {
+            buf.extend(v.to_le_bytes());
+        }
+        for v in &self.y_norm {
+            buf.extend(v.to_le_bytes());
+        }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
     }
 
     /// A view restricted to the first `n` samples (for quick runs).
@@ -102,6 +128,26 @@ mod tests {
         let t = ds.truncated(2);
         assert_eq!(t.n, 2);
         assert_eq!(t.x_raw.len(), 4);
+    }
+
+    /// The write path round-trips through the reader, including the
+    /// exact-EOF check.
+    #[test]
+    fn write_path_roundtrips() {
+        let dir = std::env::temp_dir().join("mcma_dstest_write");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("w_{}.bin", std::process::id()));
+        let ds = Dataset {
+            n: 3,
+            d_in: 2,
+            d_out: 1,
+            x_raw: vec![0.5, -1.25, 2.0, 3.5, -0.75, 8.0],
+            y_norm: vec![0.1, 0.9, 0.5],
+        };
+        ds.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(ds, back, "dataset did not round-trip bitwise");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,5 +1,8 @@
-//! `manifest.json` — the contract between the Python build and this runtime:
-//! topologies, normalisation bounds, error bounds, file layout.
+//! `manifest.json` — the contract between the artifact build and this
+//! runtime: topologies, normalisation bounds, error bounds, file layout.
+//! Historically written only by the Python build; the write path below lets
+//! the native trainer (`crate::train`) create or extend an artifact tree
+//! with no Python anywhere in the loop.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -42,6 +45,36 @@ impl BenchManifest {
         for i in 0..self.n_out {
             out[i] = ((raw[i] - self.y_lo[i] as f64) / (self.y_hi[i] - self.y_lo[i]) as f64) as f32;
         }
+    }
+
+    /// Serialise to the JSON object shape `parse_bench` reads back.
+    pub fn to_json(&self) -> Value {
+        let usizes = |xs: &[usize]| {
+            Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+        };
+        let f32s = |xs: &[f32]| {
+            Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+        };
+        json::obj(vec![
+            ("domain", Value::Str(self.domain.clone())),
+            ("n_in", Value::Num(self.n_in as f64)),
+            ("n_out", Value::Num(self.n_out as f64)),
+            ("approx_topology", usizes(&self.approx_topology)),
+            ("clf2_topology", usizes(&self.clf2_topology)),
+            ("clfN_topology", usizes(&self.clfn_topology)),
+            ("x_lo", f32s(&self.x_lo)),
+            ("x_hi", f32s(&self.x_hi)),
+            ("y_lo", f32s(&self.y_lo)),
+            ("y_hi", f32s(&self.y_hi)),
+            ("error_bound", Value::Num(self.error_bound)),
+            ("train_n", Value::Num(self.train_n as f64)),
+            ("test_n", Value::Num(self.test_n as f64)),
+            (
+                "methods",
+                Value::Arr(self.methods.iter().map(|m| Value::Str(m.clone())).collect()),
+            ),
+            ("mcca_pairs", Value::Num(self.mcca_pairs as f64)),
+        ])
     }
 }
 
@@ -98,6 +131,48 @@ impl Manifest {
 
     pub fn hlo_path(&self, bench: &str, role: &str, batch: usize) -> PathBuf {
         self.root.join(bench).join(format!("{role}_b{batch}.hlo.txt"))
+    }
+
+    /// Rust-trained weights variant written by `mcma train` alongside the
+    /// Python-trained `weights.bin` (consumed by the `mcma summary`
+    /// Python-vs-Rust comparison).
+    pub fn rust_weights_path(&self, bench: &str) -> PathBuf {
+        self.root.join(bench).join("weights_rust.bin")
+    }
+
+    /// Serialise to the JSON document shape `load` reads back.  Benchmarks
+    /// are emitted in the Fig. 6 display order so output is deterministic.
+    pub fn to_json(&self) -> Value {
+        let benches: Vec<(String, Value)> = self
+            .bench_names_ordered()
+            .into_iter()
+            .map(|name| {
+                let b = self.benchmarks[&name].to_json();
+                (name, b)
+            })
+            .collect();
+        Value::Obj(vec![
+            ("version".to_string(), Value::Num(1.0)),
+            ("n_approx".to_string(), Value::Num(self.n_approx as f64)),
+            (
+                "batch_sizes".to_string(),
+                Value::Arr(self.batch_sizes.iter().map(|&b| Value::Num(b as f64)).collect()),
+            ),
+            ("benchmarks".to_string(), Value::Obj(benches)),
+        ])
+    }
+
+    /// Write `manifest.json` under `dir` (usually the artifact root).
+    pub fn save_to(&self, dir: &Path) -> crate::Result<()> {
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, json::write(&self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+
+    /// Insert or replace one benchmark entry (the trainer's export path:
+    /// load-or-create a manifest, upsert, save).
+    pub fn upsert_bench(&mut self, bench: BenchManifest) {
+        self.benchmarks.insert(bench.name.clone(), bench);
     }
 }
 
@@ -177,6 +252,52 @@ mod tests {
         assert_eq!(b.mcca_pairs, 2);
         assert!(m.bench("nope").is_err());
         assert!(m.hlo_path("sobel", "approx", 256).ends_with("sobel/approx_b256.hlo.txt"));
+    }
+
+    /// The manifest write path round-trips: every field `load` validates
+    /// survives save -> load.
+    #[test]
+    fn write_path_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("mcma_mantest_w_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let mut m = Manifest::load(&dir).unwrap();
+
+        // Upsert a second benchmark the way the trainer does.
+        let extra = BenchManifest {
+            name: "bessel".into(),
+            domain: "Scientific".into(),
+            n_in: 2,
+            n_out: 1,
+            approx_topology: vec![2, 8, 8, 1],
+            clf2_topology: vec![2, 8, 2],
+            clfn_topology: vec![2, 16, 5],
+            x_lo: vec![0.0, 0.5],
+            x_hi: vec![4.0, 20.0],
+            y_lo: vec![-0.5],
+            y_hi: vec![1.0],
+            error_bound: 0.025,
+            train_n: 4000,
+            test_n: 1000,
+            methods: vec!["one_pass".into(), "mcma_competitive".into()],
+            mcca_pairs: 0,
+        };
+        m.upsert_bench(extra.clone());
+        m.save_to(&dir).unwrap();
+
+        let back = Manifest::load(&dir).unwrap();
+        assert_eq!(back.n_approx, m.n_approx);
+        assert_eq!(back.batch_sizes, m.batch_sizes);
+        assert_eq!(back.benchmarks.len(), 2);
+        let b = back.bench("bessel").unwrap();
+        assert_eq!(b.approx_topology, extra.approx_topology);
+        assert_eq!(b.clfn_topology, extra.clfn_topology);
+        assert_eq!(b.x_hi, extra.x_hi);
+        assert!((b.error_bound - extra.error_bound).abs() < 1e-12);
+        assert_eq!(b.methods, extra.methods);
+        // The original entry survives the rewrite.
+        assert_eq!(back.bench("sobel").unwrap().clfn_topology, vec![9, 8, 4]);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

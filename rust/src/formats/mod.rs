@@ -1,9 +1,12 @@
-//! Readers for the binary + JSON artifacts written by the Python build path
-//! (`python/compile/formats.py`, `python/compile/aot.py`).
+//! Readers AND writers for the binary + JSON artifacts (`weights.bin`
+//! MCMW, `test.bin` MCMD, quantized MCQW, `manifest.json`).  Historically
+//! the Python build path (`python/compile/formats.py`) was the only
+//! producer; the write paths here let the native trainer (`crate::train`)
+//! emit the same formats, so either side can build an artifact tree.
 //!
 //! Byte-level specs live in the Python module docstring and DESIGN.md
 //! §Artifact formats; the pytest round-trip tests pin the Python side and
-//! the integration tests here pin the Rust side against real artifacts.
+//! the round-trip tests here pin the Rust side.
 
 pub mod dataset;
 pub mod manifest;

@@ -1,6 +1,9 @@
-//! `weights.bin` reader (magic `MCMW`, v1) — trained nets for every method —
-//! plus the per-tensor symmetric int8 quantizer and the quantized weight
-//! format (magic `MCQW`, v1) consumed by the `nn::qgemm` engine.
+//! `weights.bin` reader AND writer (magic `MCMW`, v1) — trained nets for
+//! every method — plus the per-tensor symmetric int8 quantizer and the
+//! quantized weight format (magic `MCQW`, v1) consumed by the `nn::qgemm`
+//! engine.  The write path serialises the exact byte layout the reader
+//! parses (and `python/compile/formats.py` emits), so the native trainer
+//! (`crate::train`) exports artifacts `ModelBank` loads unchanged.
 
 use std::collections::HashMap;
 use std::io::{BufReader, Read};
@@ -11,7 +14,7 @@ use crate::nn::{Layer, Matrix, Mlp};
 use super::{read_f32s, read_i8s, read_string, read_u32, read_u8};
 
 /// One training method's nets: classifier(s) + approximator(s).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MethodWeights {
     pub method: String,
     /// MCCA stores one binary classifier per cascade pair.
@@ -31,7 +34,7 @@ impl MethodWeights {
 }
 
 /// Parsed `weights.bin`: method name -> nets.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct WeightsFile {
     pub methods: HashMap<String, MethodWeights>,
 }
@@ -73,6 +76,53 @@ impl WeightsFile {
         self.methods
             .get(method)
             .ok_or_else(|| anyhow::anyhow!("method {method:?} not in weights file"))
+    }
+
+    /// Serialise to the MCMW v1 byte layout `load` parses.  Methods are
+    /// written in sorted name order so the output is deterministic.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend(b"MCMW");
+        buf.extend(1u32.to_le_bytes());
+        buf.extend((self.methods.len() as u32).to_le_bytes());
+        let mut names: Vec<&String> = self.methods.keys().collect();
+        names.sort();
+        for name in names {
+            let mw = &self.methods[name];
+            buf.extend((name.len() as u32).to_le_bytes());
+            buf.extend(name.as_bytes());
+            buf.push(mw.cascade as u8);
+            buf.extend((mw.clf_classes as u32).to_le_bytes());
+            buf.extend((mw.classifiers.len() as u32).to_le_bytes());
+            for m in &mw.classifiers {
+                write_mlp(&mut buf, m);
+            }
+            buf.extend((mw.approximators.len() as u32).to_le_bytes());
+            for m in &mw.approximators {
+                write_mlp(&mut buf, m);
+            }
+        }
+        buf
+    }
+
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+fn write_mlp(buf: &mut Vec<u8>, mlp: &Mlp) {
+    buf.extend((mlp.layers.len() as u32).to_le_bytes());
+    for l in &mlp.layers {
+        buf.extend((l.w.rows as u32).to_le_bytes());
+        buf.extend((l.w.cols as u32).to_le_bytes());
+        for v in &l.w.data {
+            buf.extend(v.to_le_bytes());
+        }
+        buf.extend((l.b.len() as u32).to_le_bytes());
+        for v in &l.b {
+            buf.extend(v.to_le_bytes());
+        }
     }
 }
 
@@ -312,6 +362,57 @@ mod tests {
         assert_eq!(m.approximators[0].layers[0].w.at(0, 0), 7.0);
         assert_eq!(m.approximators[0].layers[0].b[0], 9.0);
         assert!(wf.get("nope").is_err());
+    }
+
+    /// The MCMW write path round-trips through the reader: nets, cascade
+    /// flags and class counts all survive save -> load bit-for-bit (f32
+    /// little-endian both ways), including a multi-method file.
+    #[test]
+    fn weights_write_path_roundtrips() {
+        use crate::util::{prop, rng::Rng};
+        let dir = std::env::temp_dir().join("mcma_wtest_write");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("w_{}.bin", std::process::id()));
+
+        let mut r = Rng::new(0x77E1);
+        let mut methods = HashMap::new();
+        methods.insert(
+            "one_pass".to_string(),
+            MethodWeights {
+                method: "one_pass".into(),
+                cascade: false,
+                clf_classes: 2,
+                classifiers: vec![prop::gens::mlp(&mut r, &[6, 8, 2], 1.5, 0.5)],
+                approximators: vec![prop::gens::mlp(&mut r, &[6, 8, 1], 1.5, 0.5)],
+            },
+        );
+        methods.insert(
+            "mcma_competitive".to_string(),
+            MethodWeights {
+                method: "mcma_competitive".into(),
+                cascade: false,
+                clf_classes: 4,
+                classifiers: vec![prop::gens::mlp(&mut r, &[6, 8, 4], 1.5, 0.5)],
+                approximators: (0..3)
+                    .map(|_| prop::gens::mlp(&mut r, &[6, 8, 1], 1.5, 0.5))
+                    .collect(),
+            },
+        );
+        let wf = WeightsFile { methods };
+        wf.save(&path).unwrap();
+        let back = WeightsFile::load(&path).unwrap();
+        // `method` field is reconstructed from the file key on load.
+        assert_eq!(back.methods.len(), 2);
+        for (name, mw) in &wf.methods {
+            let b = back.get(name).unwrap();
+            assert_eq!(b.cascade, mw.cascade);
+            assert_eq!(b.clf_classes, mw.clf_classes);
+            assert_eq!(b.classifiers, mw.classifiers, "{name} classifiers");
+            assert_eq!(b.approximators, mw.approximators, "{name} approximators");
+        }
+        // Deterministic bytes: two serialisations are identical.
+        assert_eq!(wf.to_bytes(), back.to_bytes());
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -25,6 +25,9 @@
 //!   batcher, multiclass router, MCCA cascade, weight-switch cache,
 //!   dispatcher, threaded pipeline server, metrics.
 //! * [`npu`] — cycle-level NPU simulator + energy model (Fig. 8).
+//! * [`train`] — native co-training: minibatch backprop through the packed
+//!   GEMM kernels, the paper's partition-refinement loop, and MCMW/MCQW/
+//!   MCMD artifact export — no Python anywhere in the train loop either.
 //! * [`eval`] — one driver per paper figure.
 //! * [`bench_harness`] — timing harness for `cargo bench` (criterion
 //!   substitute).
@@ -48,6 +51,7 @@ pub mod formats;
 pub mod nn;
 pub mod npu;
 pub mod runtime;
+pub mod train;
 pub mod util;
 
 /// Crate-wide result type.

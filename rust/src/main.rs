@@ -49,10 +49,17 @@ fn run(args: Args) -> mcma::Result<()> {
             eval::summary::run(&ctx)?.table().print();
             let rows = eval::summary::quantized_deltas(&ctx)?;
             eval::summary::quantized_table(&rows).print();
+            // Python-trained vs Rust-trained comparison (only when `mcma
+            // train` has written weights_rust.bin artifacts).
+            let rust_rows = eval::summary::rust_trained_deltas(&ctx)?;
+            if !rust_rows.is_empty() {
+                eval::summary::rust_trained_table(&rust_rows).print();
+            }
             Ok(())
         }
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("train") => train_cmd(&args),
         Some("npu-sim") => npu_sim_cmd(&args),
         Some("report") => report_cmd(&args),
         Some(other) => anyhow::bail!("unknown subcommand {other:?}\n\n{USAGE}"),
@@ -248,6 +255,41 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     println!("latency p50/p95/p99 : {:.0} / {:.0} / {:.0} µs",
              report.latency.p50(), report.latency.p95(), report.latency.p99());
     anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
+    Ok(())
+}
+
+/// Co-train a benchmark natively (`mcma train --bench B --k K`) and export
+/// MCMW/MCQW artifacts `ModelBank` serves; prints the K-vs-baseline
+/// held-out invocation comparison and the round trajectory.
+fn train_cmd(args: &Args) -> mcma::Result<()> {
+    let bench = args
+        .opt("bench")
+        .ok_or_else(|| anyhow::anyhow!("--bench required"))?;
+    let opts = mcma::train::TrainOptions {
+        bench: bench.to_string(),
+        k: args.opt_usize("k", 4)?,
+        samples: args.opt_usize("samples", 4000)?,
+        rounds: args.opt_usize("rounds", 6)?,
+        epochs: args.opt_usize("epochs", 20)?,
+        seed: args.opt_usize("seed", 7)? as u64,
+        lr: args.opt_f64("lr", 0.01)?,
+        error_bound: args
+            .opt("bound")
+            .map(|v| {
+                v.parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("--bound expects a number, got {v:?}"))
+            })
+            .transpose()?,
+        out_dir: args
+            .opt("out")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(mcma::artifacts_dir),
+        threads: args.opt_usize("threads", 0)?,
+    };
+    let t0 = Instant::now();
+    let report = mcma::train::train_bench(&opts)?;
+    report.print();
+    println!("wall time        : {:.1} s", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

@@ -48,14 +48,14 @@ impl Matrix {
 }
 
 /// One dense layer: `y = act(x W + b)`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Layer {
     pub w: Matrix,       // (fan_in, fan_out)
     pub b: Vec<f32>,     // (fan_out,)
 }
 
 /// Multilayer perceptron with sigmoid hidden layers and linear output.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Mlp {
     pub layers: Vec<Layer>,
 }

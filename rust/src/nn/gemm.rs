@@ -57,19 +57,34 @@ impl PackedLayer {
     fn pack(w: &super::Matrix, b: &[f32], sig: bool) -> Self {
         let (fan_in, fan_out) = (w.rows, w.cols);
         let n_tiles = fan_out.div_ceil(NR);
-        let mut packed = vec![0.0f32; n_tiles * fan_in * NR];
-        for t in 0..n_tiles {
+        let mut layer = PackedLayer {
+            fan_in,
+            fan_out,
+            n_tiles,
+            w: vec![0.0f32; n_tiles * fan_in * NR],
+            b: vec![0.0f32; n_tiles * NR],
+            sigmoid: sig,
+        };
+        layer.repack_from(w, b);
+        layer
+    }
+
+    /// Re-copy `w`/`b` into the existing packed buffers (same shape) —
+    /// no allocation.  The trainer calls this after every optimizer step.
+    fn repack_from(&mut self, w: &super::Matrix, b: &[f32]) {
+        assert_eq!((w.rows, w.cols), (self.fan_in, self.fan_out), "repack shape mismatch");
+        assert_eq!(b.len(), self.fan_out, "repack bias length mismatch");
+        let (fan_in, fan_out) = (self.fan_in, self.fan_out);
+        for t in 0..self.n_tiles {
             let c0 = t * NR;
             let width = NR.min(fan_out - c0);
             for k in 0..fan_in {
                 let src = &w.data[k * fan_out + c0..k * fan_out + c0 + width];
-                let dst = &mut packed[(t * fan_in + k) * NR..(t * fan_in + k) * NR + width];
+                let dst = &mut self.w[(t * fan_in + k) * NR..(t * fan_in + k) * NR + width];
                 dst.copy_from_slice(src);
             }
         }
-        let mut bias = vec![0.0f32; n_tiles * NR];
-        bias[..fan_out].copy_from_slice(b);
-        PackedLayer { fan_in, fan_out, n_tiles, w: packed, b: bias, sigmoid: sig }
+        self.b[..fan_out].copy_from_slice(b);
     }
 }
 
@@ -201,6 +216,39 @@ impl PackedMlp {
         self.forward_batch_to(x, n, &mut scratch, &mut out);
         out
     }
+
+    /// Re-pack from `mlp` (same topology) into the existing buffers — no
+    /// allocation.  Lets the backprop trainer keep routing its minibatch
+    /// forward passes through this tiled kernel while the weights change
+    /// every optimizer step.
+    pub fn repack_from(&mut self, mlp: &Mlp) {
+        assert_eq!(self.layers.len(), mlp.layers.len(), "repack layer count mismatch");
+        for (pl, l) in self.layers.iter_mut().zip(&mlp.layers) {
+            pl.repack_from(&l.w, &l.b);
+        }
+    }
+
+    /// Forward a `(n, n_in)` panel, storing EVERY layer's post-activation
+    /// output panel in `acts` (`acts[l]` is `(n, fan_out_l)`) — the
+    /// activation cache backprop consumes.  Buffers in `acts` are resized
+    /// in place and reused across calls.
+    pub fn forward_collect(&self, x: &[f32], n: usize, acts: &mut Vec<Vec<f32>>) {
+        assert!(!self.layers.is_empty(), "forward_collect needs >= 1 layer");
+        assert_eq!(x.len(), n * self.n_in, "batch buffer size mismatch");
+        acts.resize_with(self.layers.len(), Vec::new);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let len = n * layer.fan_out;
+            if acts[i].len() != len {
+                acts[i].resize(len, 0.0);
+            }
+        }
+        for i in 0..self.layers.len() {
+            // Split-borrow: the source panel is the previous entry (or x).
+            let (done, rest) = acts.split_at_mut(i);
+            let src: &[f32] = if i == 0 { x } else { &done[i - 1] };
+            layer_forward(&self.layers[i], src, n, &mut rest[0], self.kernel);
+        }
+    }
 }
 
 /// One packed layer over a whole activation panel:
@@ -303,6 +351,34 @@ mod tests {
             p2.forward_batch_to(&x2, n, &mut scratch, &mut out2);
             prop::assert_close(&out2, &m2.forward_batch(&x2, n), 1e-5, 1e-5).unwrap();
         }
+    }
+
+    /// `repack_from` reuses buffers and produces a net forwarding bitwise
+    /// identically to a fresh pack of the same weights; `forward_collect`'s
+    /// final panel is bitwise the plain forward.
+    #[test]
+    fn repack_and_collect_match_fresh_pack() {
+        let mut r = Rng::new(0x7217);
+        let m1 = random_mlp(&mut r, &[5, 7, 6, 2]);
+        let m2 = random_mlp(&mut r, &[5, 7, 6, 2]);
+        let mut packed = PackedMlp::from_mlp(&m1);
+        packed.repack_from(&m2);
+        let fresh = PackedMlp::from_mlp(&m2).with_kernel(packed.kernel());
+        let x = prop::gens::vec_f32(&mut r, 9 * 5, -2.0, 2.0);
+        assert_eq!(packed.forward_batch(&x, 9), fresh.forward_batch(&x, 9));
+
+        let mut acts: Vec<Vec<f32>> = Vec::new();
+        packed.forward_collect(&x, 9, &mut acts);
+        assert_eq!(acts.len(), 3);
+        assert_eq!(acts[0].len(), 9 * 7);
+        assert_eq!(acts[1].len(), 9 * 6);
+        assert_eq!(acts[2], packed.forward_batch(&x, 9), "final panel diverges");
+        // Hidden panels are post-sigmoid: inside [0, 1] (f32 saturates the
+        // open interval's endpoints for |z| beyond ~17).
+        assert!(acts[0].iter().chain(&acts[1]).all(|&v| (0.0..=1.0).contains(&v)));
+        // Reuse with a smaller batch resizes in place and stays correct.
+        packed.forward_collect(&x[..2 * 5], 2, &mut acts);
+        assert_eq!(acts[2], packed.forward_batch(&x[..2 * 5], 2));
     }
 
     /// Kernel parity: every SIMD variant runnable on this CPU agrees with

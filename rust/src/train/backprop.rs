@@ -1,0 +1,486 @@
+//! Minibatch backprop trainer for the crate's MLP topology (sigmoid hidden
+//! layers, linear output — the NPU PE activation scheme `nn` serves).
+//!
+//! The forward pass of every minibatch runs through the tiled packed-GEMM
+//! kernel (`nn::gemm::PackedMlp`): the trainer re-packs the current weights
+//! into the packed net's existing buffers after each optimizer step
+//! (`PackedMlp::repack_from`, no allocation) and collects per-layer
+//! activation panels with `forward_collect` — the same register-blocked
+//! micro-kernels the serving path uses, so training throughput rides the
+//! SIMD dispatch for free.  The backward pass is the classic dense chain:
+//!
+//! ```text
+//! δ_L = ∂loss/∂z_L                    (MSE: 2(a-y)/(nk); CE: softmax(a)-y)
+//! δ_l = (δ_{l+1} W_{l+1}ᵀ) ⊙ a_l(1-a_l)        (sigmoid derivative)
+//! ∂W_l = a_{l-1}ᵀ δ_l      ∂b_l = Σ_rows δ_l
+//! ```
+//!
+//! with Adam (bias-corrected) updates.  Both losses drive the same
+//! machinery: `Mse` trains approximators on normalised targets,
+//! `SoftmaxCrossEntropy` trains the multiclass classifier on one-hot
+//! labels (linear logits at serve time match: routing argmaxes raw logits,
+//! and softmax is monotone in them).
+
+use crate::nn::{Layer, Matrix, Mlp, PackedMlp};
+use crate::util::rng::Rng;
+
+/// Training objective.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Mean squared error over all outputs (approximators).
+    Mse,
+    /// Softmax cross-entropy against one-hot rows (the classifier).
+    SoftmaxCrossEntropy,
+}
+
+/// Optimizer + minibatch hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainConfig {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// L2 weight decay added to the weight gradient (not biases).
+    pub l2: f32,
+    pub batch: usize,
+    pub loss: Loss,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            lr: 0.01,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            l2: 0.0,
+            batch: 32,
+            loss: Loss::Mse,
+        }
+    }
+}
+
+/// Xavier/Glorot-uniform MLP init over `topo = [in, hidden..., out]`.
+pub fn xavier_mlp(topo: &[usize], rng: &mut Rng) -> Mlp {
+    assert!(topo.len() >= 2, "topology needs at least in+out");
+    let layers: Vec<Layer> = topo
+        .windows(2)
+        .map(|w| {
+            let (fi, fo) = (w[0], w[1]);
+            let amp = (6.0 / (fi + fo) as f64).sqrt();
+            Layer {
+                w: Matrix::new(
+                    fi,
+                    fo,
+                    (0..fi * fo).map(|_| rng.uniform(-amp, amp) as f32).collect(),
+                ),
+                b: vec![0.0; fo],
+            }
+        })
+        .collect();
+    Mlp::new(layers)
+}
+
+/// Write one-hot rows for `labels` (values in `0..k`) into `out`
+/// (`(n, k)` row-major, resized in place).
+pub fn one_hot_into(labels: &[usize], k: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(labels.len() * k, 0.0);
+    for (i, &c) in labels.iter().enumerate() {
+        assert!(c < k, "label {c} out of range for {k} classes");
+        out[i * k + c] = 1.0;
+    }
+}
+
+/// Adam-optimised minibatch trainer owning one [`Mlp`].
+#[derive(Clone, Debug)]
+pub struct Trainer {
+    pub mlp: Mlp,
+    pub cfg: TrainConfig,
+    /// Packed twin of `mlp` — re-packed (no allocation) after every step;
+    /// all batch forwards go through its tiled kernel.
+    packed: PackedMlp,
+    /// Adam first/second moments, per layer, laid out `[w..., b...]`.
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Adam timestep.
+    t: u64,
+    /// Per-layer gradient buffers, same `[w..., b...]` layout (reused).
+    g: Vec<Vec<f32>>,
+    /// Per-layer post-activation panels from the last forward (reused).
+    acts: Vec<Vec<f32>>,
+    /// Backprop delta ping-pong panels (reused).
+    delta: Vec<f32>,
+    delta_prev: Vec<f32>,
+    /// Minibatch gather buffers for `train_epoch` (reused).
+    bx: Vec<f32>,
+    by: Vec<f32>,
+    order: Vec<usize>,
+}
+
+impl Trainer {
+    pub fn new(topo: &[usize], cfg: TrainConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Self::from_mlp(xavier_mlp(topo, &mut rng), cfg)
+    }
+
+    pub fn from_mlp(mlp: Mlp, cfg: TrainConfig) -> Self {
+        let shapes: Vec<usize> =
+            mlp.layers.iter().map(|l| l.w.data.len() + l.b.len()).collect();
+        let zeros = |s: &[usize]| s.iter().map(|&n| vec![0.0f32; n]).collect::<Vec<_>>();
+        let packed = PackedMlp::from_mlp(&mlp);
+        Trainer {
+            packed,
+            m: zeros(&shapes),
+            v: zeros(&shapes),
+            g: zeros(&shapes),
+            t: 0,
+            acts: Vec::new(),
+            delta: Vec::new(),
+            delta_prev: Vec::new(),
+            bx: Vec::new(),
+            by: Vec::new(),
+            order: Vec::new(),
+            mlp,
+            cfg,
+        }
+    }
+
+    pub fn n_in(&self) -> usize {
+        self.mlp.n_in()
+    }
+
+    pub fn n_out(&self) -> usize {
+        self.mlp.n_out()
+    }
+
+    /// Forward `(n, n_in)` through the packed kernel and return the loss
+    /// against `y` (`(n, n_out)`); no gradient, no update.
+    pub fn loss_of(&mut self, x: &[f32], y: &[f32], n: usize) -> f64 {
+        self.packed.repack_from(&self.mlp);
+        self.packed.forward_collect(x, n, &mut self.acts);
+        let out = self.acts.last().expect("mlp has layers");
+        loss_value(self.cfg.loss, out, y, n, self.mlp.n_out())
+    }
+
+    /// One minibatch step: forward (packed kernel), backward, Adam update.
+    /// Returns the pre-update loss.
+    pub fn train_step(&mut self, x: &[f32], y: &[f32], n: usize) -> f64 {
+        let loss = self.grads(x, y, n);
+        self.adam_apply();
+        loss
+    }
+
+    /// One epoch over the rows of `x`/`y` selected by `idx`, in a freshly
+    /// shuffled order, chunked into `cfg.batch`-row minibatches.  Returns
+    /// the mean minibatch loss.
+    pub fn train_epoch(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        d_in: usize,
+        d_out: usize,
+        idx: &[usize],
+        rng: &mut Rng,
+    ) -> f64 {
+        assert_eq!(d_in, self.n_in());
+        assert_eq!(d_out, self.n_out());
+        if idx.is_empty() {
+            return 0.0;
+        }
+        self.order.clear();
+        self.order.extend_from_slice(idx);
+        let mut order = std::mem::take(&mut self.order);
+        rng.shuffle(&mut order);
+        let bsz = self.cfg.batch.max(1);
+        let mut loss_sum = 0.0;
+        let mut batches = 0.0;
+        for chunk in order.chunks(bsz) {
+            let mut bx = std::mem::take(&mut self.bx);
+            let mut by = std::mem::take(&mut self.by);
+            bx.clear();
+            by.clear();
+            for &i in chunk {
+                bx.extend_from_slice(&x[i * d_in..(i + 1) * d_in]);
+                by.extend_from_slice(&y[i * d_out..(i + 1) * d_out]);
+            }
+            loss_sum += self.train_step(&bx, &by, chunk.len());
+            batches += 1.0;
+            self.bx = bx;
+            self.by = by;
+        }
+        self.order = order;
+        loss_sum / batches
+    }
+
+    /// Forward + backward: fills `self.g` with per-layer gradients in the
+    /// `[w..., b...]` layout and returns the loss.  No parameter update.
+    fn grads(&mut self, x: &[f32], y: &[f32], n: usize) -> f64 {
+        let d_out = self.mlp.n_out();
+        assert_eq!(x.len(), n * self.mlp.n_in(), "x size mismatch");
+        assert_eq!(y.len(), n * d_out, "y size mismatch");
+        self.packed.repack_from(&self.mlp);
+        self.packed.forward_collect(x, n, &mut self.acts);
+        let last = self.mlp.layers.len() - 1;
+        let out = &self.acts[last];
+        let loss = loss_value(self.cfg.loss, out, y, n, d_out);
+
+        // Output delta = ∂loss/∂z_L (linear output layer: z = a).
+        self.delta.clear();
+        self.delta.resize(n * d_out, 0.0);
+        match self.cfg.loss {
+            Loss::Mse => {
+                let scale = 2.0 / (n * d_out) as f32;
+                for (d, (&a, &t)) in self.delta.iter_mut().zip(out.iter().zip(y)) {
+                    *d = scale * (a - t);
+                }
+            }
+            Loss::SoftmaxCrossEntropy => {
+                let inv_n = 1.0 / n as f32;
+                for i in 0..n {
+                    let row = &out[i * d_out..(i + 1) * d_out];
+                    let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                    let denom: f32 = row.iter().map(|&v| (v - max).exp()).sum();
+                    for c in 0..d_out {
+                        let p = (row[c] - max).exp() / denom;
+                        self.delta[i * d_out + c] = (p - y[i * d_out + c]) * inv_n;
+                    }
+                }
+            }
+        }
+
+        for l in (0..self.mlp.layers.len()).rev() {
+            let layer = &self.mlp.layers[l];
+            let (fi, fo) = (layer.w.rows, layer.w.cols);
+            let a_prev: &[f32] = if l == 0 { x } else { &self.acts[l - 1] };
+            let g = &mut self.g[l];
+            g.fill(0.0);
+            let (gw, gb) = g.split_at_mut(fi * fo);
+            // ∂W = a_prevᵀ δ  (inner loop contiguous over fan-out),
+            // ∂b = column sums of δ.
+            for i in 0..n {
+                let drow = &self.delta[i * fo..(i + 1) * fo];
+                for r in 0..fi {
+                    let av = a_prev[i * fi + r];
+                    if av != 0.0 {
+                        let grow = &mut gw[r * fo..(r + 1) * fo];
+                        for c in 0..fo {
+                            grow[c] += av * drow[c];
+                        }
+                    }
+                }
+                for c in 0..fo {
+                    gb[c] += drow[c];
+                }
+            }
+            if self.cfg.l2 > 0.0 {
+                for (gv, &wv) in gw.iter_mut().zip(&layer.w.data) {
+                    *gv += self.cfg.l2 * wv;
+                }
+            }
+            // δ_{l-1} = (δ Wᵀ) ⊙ σ'(a_{l-1}), using the pre-update W.
+            if l > 0 {
+                self.delta_prev.clear();
+                self.delta_prev.resize(n * fi, 0.0);
+                for i in 0..n {
+                    let drow = &self.delta[i * fo..(i + 1) * fo];
+                    let prow = &mut self.delta_prev[i * fi..(i + 1) * fi];
+                    for r in 0..fi {
+                        let wrow = &layer.w.data[r * fo..(r + 1) * fo];
+                        let mut s = 0.0f32;
+                        for c in 0..fo {
+                            s += drow[c] * wrow[c];
+                        }
+                        let a = a_prev[i * fi + r];
+                        prow[r] = s * a * (1.0 - a);
+                    }
+                }
+                std::mem::swap(&mut self.delta, &mut self.delta_prev);
+            }
+        }
+        loss
+    }
+
+    /// Bias-corrected Adam over every layer's `[w..., b...]` vector.
+    fn adam_apply(&mut self) {
+        self.t += 1;
+        let TrainConfig { lr, beta1, beta2, eps, .. } = self.cfg;
+        let corr1 = 1.0 - beta1.powi(self.t.min(1 << 30) as i32);
+        let corr2 = 1.0 - beta2.powi(self.t.min(1 << 30) as i32);
+        let step = lr * corr2.sqrt() / corr1;
+        for (l, layer) in self.mlp.layers.iter_mut().enumerate() {
+            let g = &self.g[l];
+            let m = &mut self.m[l];
+            let v = &mut self.v[l];
+            let params = layer.w.data.iter_mut().chain(layer.b.iter_mut());
+            for (j, p) in params.enumerate() {
+                let gj = g[j];
+                m[j] = beta1 * m[j] + (1.0 - beta1) * gj;
+                v[j] = beta2 * v[j] + (1.0 - beta2) * gj * gj;
+                *p -= step * m[j] / (v[j].sqrt() + eps);
+            }
+        }
+    }
+}
+
+/// Loss over an output panel (f64 accumulation).
+fn loss_value(loss: Loss, out: &[f32], y: &[f32], n: usize, k: usize) -> f64 {
+    match loss {
+        Loss::Mse => {
+            let mut s = 0.0f64;
+            for (&a, &t) in out.iter().zip(y) {
+                let d = (a - t) as f64;
+                s += d * d;
+            }
+            s / (n * k) as f64
+        }
+        Loss::SoftmaxCrossEntropy => {
+            let mut s = 0.0f64;
+            for i in 0..n {
+                let row = &out[i * k..(i + 1) * k];
+                let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) as f64;
+                let lse: f64 =
+                    max + row.iter().map(|&v| ((v as f64) - max).exp()).sum::<f64>().ln();
+                let dot: f64 = row
+                    .iter()
+                    .zip(&y[i * k..(i + 1) * k])
+                    .map(|(&a, &t)| a as f64 * t as f64)
+                    .sum();
+                s += lse - dot;
+            }
+            s / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fd_data(loss: Loss) -> (Trainer, Vec<f32>, Vec<f32>, usize) {
+        let mut rng = Rng::new(0x6E4D);
+        let topo = [2usize, 3, 2];
+        let t = Trainer::new(&topo, TrainConfig { loss, l2: 0.0, ..Default::default() }, 42);
+        let n = 6usize;
+        let x: Vec<f32> = (0..n * 2).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+        let y: Vec<f32> = match loss {
+            Loss::Mse => (0..n * 2).map(|_| rng.uniform(-1.0, 1.0) as f32).collect(),
+            Loss::SoftmaxCrossEntropy => {
+                let labels: Vec<usize> = (0..n).map(|_| rng.below(2) as usize).collect();
+                let mut oh = Vec::new();
+                one_hot_into(&labels, 2, &mut oh);
+                oh
+            }
+        };
+        (t, x, y, n)
+    }
+
+    /// Analytic gradients match central finite differences of the loss for
+    /// BOTH objectives, on every weight and bias of a tiny MLP.
+    #[test]
+    fn gradients_match_finite_differences() {
+        for loss in [Loss::Mse, Loss::SoftmaxCrossEntropy] {
+            let (mut t, x, y, n) = fd_data(loss);
+            let _ = t.grads(&x, &y, n);
+            let analytic = t.g.clone();
+            let eps = 5e-3f32;
+            for l in 0..t.mlp.layers.len() {
+                let nw = t.mlp.layers[l].w.data.len();
+                let nparam = nw + t.mlp.layers[l].b.len();
+                for j in 0..nparam {
+                    let read = |t: &Trainer| {
+                        let layer = &t.mlp.layers[l];
+                        if j < nw { layer.w.data[j] } else { layer.b[j - nw] }
+                    };
+                    let write = |t: &mut Trainer, v: f32| {
+                        let layer = &mut t.mlp.layers[l];
+                        if j < nw {
+                            layer.w.data[j] = v;
+                        } else {
+                            layer.b[j - nw] = v;
+                        }
+                    };
+                    let orig = read(&t);
+                    write(&mut t, orig + eps);
+                    let hi = t.loss_of(&x, &y, n);
+                    write(&mut t, orig - eps);
+                    let lo = t.loss_of(&x, &y, n);
+                    write(&mut t, orig);
+                    let fd = ((hi - lo) / (2.0 * eps as f64)) as f32;
+                    let an = analytic[l][j];
+                    assert!(
+                        (fd - an).abs() <= 2e-3 + 0.03 * an.abs(),
+                        "{loss:?} layer {l} param {j}: fd {fd} vs analytic {an}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Adam on a pure linear layer recovers a linear map almost exactly.
+    #[test]
+    fn linear_regression_converges() {
+        let mut rng = Rng::new(0x11EA);
+        let n = 64usize;
+        let x: Vec<f32> = (0..n * 2).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let y: Vec<f32> =
+            (0..n).map(|i| 0.3 * x[i * 2] - 0.2 * x[i * 2 + 1] + 0.1).collect();
+        let mut t = Trainer::new(
+            &[2, 1],
+            TrainConfig { lr: 0.05, batch: 16, ..Default::default() },
+            3,
+        );
+        let idx: Vec<usize> = (0..n).collect();
+        let first = t.loss_of(&x, &y, n);
+        for _ in 0..300 {
+            t.train_epoch(&x, &y, 2, 1, &idx, &mut rng);
+        }
+        let last = t.loss_of(&x, &y, n);
+        assert!(last < 1e-4, "did not converge: {first} -> {last}");
+        assert!((t.mlp.layers[0].w.data[0] - 0.3).abs() < 0.02);
+        assert!((t.mlp.layers[0].b[0] - 0.1).abs() < 0.02);
+    }
+
+    /// Cross-entropy training separates a trivially separable 2-class set
+    /// (argmax accuracy, the serving-time routing rule).
+    #[test]
+    fn classifier_learns_separable_classes() {
+        let mut rng = Rng::new(0xC1A5);
+        let n = 200usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let labels: Vec<usize> = x.iter().map(|&v| usize::from(v > 0.0)).collect();
+        let mut y = Vec::new();
+        one_hot_into(&labels, 2, &mut y);
+        let mut t = Trainer::new(
+            &[1, 8, 2],
+            TrainConfig { loss: Loss::SoftmaxCrossEntropy, lr: 0.05, ..Default::default() },
+            9,
+        );
+        let idx: Vec<usize> = (0..n).collect();
+        for _ in 0..60 {
+            t.train_epoch(&x, &y, 1, 2, &idx, &mut rng);
+        }
+        let pred = t.mlp.classify_batch(&x, n);
+        let acc =
+            pred.iter().zip(&labels).filter(|(p, l)| p == l).count() as f64 / n as f64;
+        assert!(acc > 0.95, "classifier accuracy {acc}");
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let mut out = Vec::new();
+        one_hot_into(&[1, 0, 2], 3, &mut out);
+        assert_eq!(out, vec![0.0, 1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn xavier_topology_and_scale() {
+        let mut rng = Rng::new(5);
+        let m = xavier_mlp(&[4, 7, 2], &mut rng);
+        assert_eq!(m.topology(), vec![4, 7, 2]);
+        let amp = (6.0f64 / 11.0).sqrt() as f32;
+        assert!(m.layers[0].w.data.iter().all(|w| w.abs() <= amp + 1e-6));
+        assert!(m.layers[0].b.iter().all(|&b| b == 0.0));
+    }
+}

@@ -1,0 +1,434 @@
+//! The paper's co-training method (§III.C, Fig. 9), natively.
+//!
+//! ```text
+//!            ┌───────────────── warmup: one base approximator ────────────────┐
+//!            │                                                                │
+//!            ▼                                                                │
+//!   error-driven seed partition (quantiles of base error)                     │
+//!            │                                                                │
+//!   ┌────────┴─ round r ──────────────────────────────────────────────────┐   │
+//!   │ 1. each A_k trains `approx_epochs` on its partition  (threadpool)   │   │
+//!   │ 2. error matrix E[k][i] over the WHOLE set (packed GEMM forwards)   │   │
+//!   │ 3. sample i -> argmin_k E[k][i]; bound violated -> reject class nC  │   │
+//!   │ 4. multiclass classifier retrains on the refined labels             │   │
+//!   │ 5. measured invocation; |Δ| < tol twice -> converged                │   │
+//!   └──────────────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Competitive allocation: approximators bid with their own error, samples
+//! move to whichever approximator serves them best, and the classifier
+//! chases the refined partition — invocation climbs until the partition
+//! stabilises.  `k = 1` degenerates to the paper's iterative single-
+//! approximator method (safe/unsafe relabelling each round), which is
+//! exactly the baseline the acceptance comparison wants.
+
+use crate::nn::{self, Mlp, PackedMlp};
+use crate::util::rng::Rng;
+use crate::util::threadpool;
+
+use super::backprop::{one_hot_into, Loss, TrainConfig, Trainer};
+use super::data::TrainData;
+
+/// Co-training hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct CotrainConfig {
+    /// Number of approximators (classifier gets `k + 1` classes).
+    pub k: usize,
+    /// Maximum partition-refinement rounds.
+    pub rounds: usize,
+    /// Epochs for the warmup base approximator.
+    pub warmup_epochs: usize,
+    /// Epochs per approximator per round.
+    pub approx_epochs: usize,
+    /// Classifier epochs per round.
+    pub clf_epochs: usize,
+    /// Error bound defining the reject class.
+    pub error_bound: f64,
+    pub seed: u64,
+    /// Worker threads for per-approximator round work (0 = all cores).
+    pub threads: usize,
+    /// Approximator trainer hyperparameters (loss forced to MSE).
+    pub approx: TrainConfig,
+    /// Classifier trainer hyperparameters (loss forced to cross-entropy).
+    pub clf: TrainConfig,
+    /// Convergence tolerance on round-over-round invocation delta.
+    pub tol: f64,
+}
+
+impl Default for CotrainConfig {
+    fn default() -> Self {
+        CotrainConfig {
+            k: 4,
+            rounds: 6,
+            warmup_epochs: 20,
+            approx_epochs: 20,
+            clf_epochs: 20,
+            error_bound: 0.05,
+            seed: 7,
+            threads: 0,
+            approx: TrainConfig::default(),
+            clf: TrainConfig { loss: Loss::SoftmaxCrossEntropy, ..TrainConfig::default() },
+            tol: 0.005,
+        }
+    }
+}
+
+/// Per-round trajectory (the native analogue of Fig. 9's series).
+#[derive(Clone, Copy, Debug)]
+pub struct RoundStats {
+    pub round: usize,
+    /// Fraction of samples whose BEST approximator meets the bound (the
+    /// partition's potential invocation).
+    pub assign_invocation: f64,
+    /// Fraction the trained classifier actually routes to an approximator
+    /// (the measured invocation the paper reports).
+    pub clf_invocation: f64,
+    /// Mean of the per-sample minimum error.
+    pub mean_min_err: f64,
+    /// Samples whose argmin approximator changed this round.
+    pub reassigned: usize,
+}
+
+/// Co-training result: nets in the exact shape `MethodWeights` stores.
+#[derive(Clone, Debug)]
+pub struct Cotrained {
+    pub classifier: Mlp,
+    pub approximators: Vec<Mlp>,
+    pub clf_classes: usize,
+    pub history: Vec<RoundStats>,
+}
+
+/// Per-sample RMSE of `mlp` over the whole set, through the packed kernel.
+fn per_sample_err(mlp: &Mlp, data: &TrainData) -> Vec<f64> {
+    let packed = PackedMlp::from_mlp(mlp);
+    let pred = packed.forward_batch(&data.x_norm, data.n);
+    nn::per_sample_rmse(&pred, &data.y_norm, data.n, data.d_out)
+}
+
+/// Add small uniform noise to every weight — breaks the symmetry of the
+/// cloned warmup net so the K seeds specialise apart.
+fn jitter(mlp: &mut Mlp, rng: &mut Rng, amp: f64) {
+    for l in &mut mlp.layers {
+        for w in &mut l.w.data {
+            *w += rng.uniform(-amp, amp) as f32;
+        }
+    }
+}
+
+/// Run the co-training loop over `data`.  `approx_topo` shapes every
+/// approximator (topology-identical, as the paper trains them);
+/// `clf_topo`'s final width must be `cfg.k + 1`.
+pub fn cotrain(
+    data: &TrainData,
+    approx_topo: &[usize],
+    clf_topo: &[usize],
+    cfg: &CotrainConfig,
+) -> Cotrained {
+    assert!(cfg.k >= 1, "need at least one approximator");
+    assert_eq!(
+        *clf_topo.last().unwrap(),
+        cfg.k + 1,
+        "classifier output width must be k+1"
+    );
+    assert_eq!(approx_topo[0], data.d_in);
+    assert_eq!(*approx_topo.last().unwrap(), data.d_out);
+    let threads = if cfg.threads == 0 {
+        threadpool::default_parallelism()
+    } else {
+        cfg.threads
+    };
+    let approx_cfg = TrainConfig { loss: Loss::Mse, ..cfg.approx };
+    let clf_cfg = TrainConfig { loss: Loss::SoftmaxCrossEntropy, ..cfg.clf };
+    let (x, y, n) = (&data.x_norm[..], &data.y_norm[..], data.n);
+    let all: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(cfg.seed);
+
+    // Warmup: one base approximator over everything.
+    let mut base = Trainer::new(approx_topo, approx_cfg, cfg.seed ^ 0xBA5E);
+    for _ in 0..cfg.warmup_epochs {
+        base.train_epoch(x, y, data.d_in, data.d_out, &all, &mut rng);
+    }
+
+    // Error-driven seed partition: samples sorted by the base net's error,
+    // split into K quantile groups — each seed approximator starts from
+    // the warmup weights (jittered) and owns one difficulty band.
+    let base_err = per_sample_err(&base.mlp, data);
+    let mut order = all.clone();
+    order.sort_by(|&a, &b| base_err[a].partial_cmp(&base_err[b]).unwrap());
+    let group_sz = n.div_ceil(cfg.k);
+    let mut groups: Vec<Vec<usize>> =
+        order.chunks(group_sz.max(1)).map(|c| c.to_vec()).collect();
+    groups.resize(cfg.k, Vec::new());
+
+    let mut trainers: Vec<Trainer> = (0..cfg.k)
+        .map(|kk| {
+            let mut t = base.clone();
+            if kk > 0 {
+                jitter(&mut t.mlp, &mut Rng::new(cfg.seed ^ (0x117E + kk as u64)), 0.05);
+            }
+            t
+        })
+        .collect();
+    let mut clf = Trainer::new(clf_topo, clf_cfg, cfg.seed ^ 0xC1F);
+
+    let mut labels = vec![cfg.k; n];
+    let mut onehot: Vec<f32> = Vec::new();
+    let mut history: Vec<RoundStats> = Vec::new();
+    let mut prev_inv = f64::NAN;
+    // Consecutive sub-tolerance invocation deltas; converged at 2 (a
+    // single calm round can be coincidence while the partition churns).
+    let mut calm = 0usize;
+
+    for round in 0..cfg.rounds.max(1) {
+        // 1+2. Train each approximator on its partition, then score it on
+        // the WHOLE set (packed forwards) — sharded across the pool.  Each
+        // job carries its own epoch-shuffle seed so the result is
+        // deterministic regardless of thread count.
+        let jobs: Vec<(Trainer, Vec<usize>, u64)> = trainers
+            .into_iter()
+            .zip(groups.iter())
+            .map(|(t, g)| (t, g.clone(), rng.next_u64()))
+            .collect();
+        let results: Vec<(Trainer, Vec<f64>)> =
+            threadpool::parallel_map(&jobs, threads, |(t, idx, epoch_seed)| {
+                let mut t = t.clone();
+                let mut r = Rng::new(*epoch_seed);
+                for _ in 0..cfg.approx_epochs {
+                    t.train_epoch(x, y, data.d_in, data.d_out, idx, &mut r);
+                }
+                let errs = per_sample_err(&t.mlp, data);
+                (t, errs)
+            });
+        let mut errmat: Vec<Vec<f64>> = Vec::with_capacity(cfg.k);
+        trainers = results
+            .into_iter()
+            .map(|(t, errs)| {
+                errmat.push(errs);
+                t
+            })
+            .collect();
+
+        // 3. Reassign every sample to its argmin-error approximator;
+        // bound violations become the reject class nC.
+        let mut reassigned = 0usize;
+        let mut under_bound = 0usize;
+        let mut err_sum = 0.0f64;
+        for i in 0..n {
+            let (mut bk, mut be) = (0usize, errmat[0][i]);
+            for (kk, row) in errmat.iter().enumerate().skip(1) {
+                if row[i] < be {
+                    be = row[i];
+                    bk = kk;
+                }
+            }
+            err_sum += be;
+            let c = if be <= cfg.error_bound {
+                under_bound += 1;
+                bk
+            } else {
+                cfg.k
+            };
+            if labels[i] != c {
+                reassigned += 1;
+            }
+            labels[i] = c;
+        }
+        for g in &mut groups {
+            g.clear();
+        }
+        for (i, &c) in labels.iter().enumerate() {
+            if c < cfg.k {
+                groups[c].push(i);
+            }
+        }
+        // Rescue starved approximators: hand an empty group the hardest
+        // samples (largest min-error) so its capacity attacks the
+        // uncovered region instead of idling.
+        let starving: Vec<usize> =
+            (0..cfg.k).filter(|&kk| groups[kk].is_empty()).collect();
+        if !starving.is_empty() {
+            let mut hardest = all.clone();
+            hardest.sort_by(|&a, &b| {
+                let ea = errmat.iter().map(|r| r[a]).fold(f64::INFINITY, f64::min);
+                let eb = errmat.iter().map(|r| r[b]).fold(f64::INFINITY, f64::min);
+                eb.partial_cmp(&ea).unwrap()
+            });
+            let share = (n / (4 * cfg.k)).max(8).min(n);
+            for (j, kk) in starving.into_iter().enumerate() {
+                let lo = (j * share).min(n);
+                let hi = ((j + 1) * share).min(n);
+                groups[kk] = hardest[lo..hi].to_vec();
+            }
+        }
+
+        // 4. Classifier chases the refined labels.
+        one_hot_into(&labels, cfg.k + 1, &mut onehot);
+        for _ in 0..cfg.clf_epochs {
+            clf.train_epoch(x, &onehot, data.d_in, cfg.k + 1, &all, &mut rng);
+        }
+
+        // 5. Measured invocation under the trained classifier.
+        let clf_packed = PackedMlp::from_mlp(&clf.mlp);
+        let logits = clf_packed.forward_batch(x, n);
+        let pred = nn::argmax_rows(&logits, n, cfg.k + 1);
+        let clf_invocation =
+            pred.iter().filter(|&&c| c < cfg.k).count() as f64 / n.max(1) as f64;
+
+        let stats = RoundStats {
+            round,
+            assign_invocation: under_bound as f64 / n.max(1) as f64,
+            clf_invocation,
+            mean_min_err: err_sum / n.max(1) as f64,
+            reassigned,
+        };
+        history.push(stats);
+        if round >= 1 && (clf_invocation - prev_inv).abs() < cfg.tol {
+            calm += 1;
+            if calm >= 2 {
+                break;
+            }
+        } else {
+            calm = 0;
+        }
+        prev_inv = clf_invocation;
+    }
+
+    Cotrained {
+        classifier: clf.mlp,
+        approximators: trainers.into_iter().map(|t| t.mlp).collect(),
+        clf_classes: cfg.k + 1,
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic two-cluster workload: the output slope in x1 FLIPS sign
+    /// across the x0 = 0.5 boundary, so one tiny approximator struggles to
+    /// cover both clusters while two specialised ones cover them exactly.
+    fn two_cluster_data(n: usize, seed: u64) -> TrainData {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::with_capacity(n * 2);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let x0 = rng.uniform(0.0, 1.0) as f32;
+            let x1 = rng.uniform(0.0, 1.0) as f32;
+            let v = if x0 < 0.5 { 0.15 + 0.3 * x1 } else { 0.85 - 0.3 * x1 };
+            x.push(x0);
+            x.push(x1);
+            y.push(v);
+        }
+        TrainData { n, d_in: 2, d_out: 1, x_raw: x.clone(), x_norm: x, y_norm: y }
+    }
+
+    fn cfg(k: usize) -> CotrainConfig {
+        CotrainConfig {
+            k,
+            rounds: 5,
+            warmup_epochs: 30,
+            approx_epochs: 30,
+            clf_epochs: 30,
+            error_bound: 0.06,
+            seed: 0x2C,
+            threads: 2,
+            approx: TrainConfig { lr: 0.02, batch: 32, ..TrainConfig::default() },
+            clf: TrainConfig {
+                lr: 0.02,
+                batch: 32,
+                loss: Loss::SoftmaxCrossEntropy,
+                ..TrainConfig::default()
+            },
+            tol: 0.004,
+        }
+    }
+
+    /// Partition refinement converges on the 2-cluster function: K=2
+    /// reaches a high-invocation stable partition, at least matching the
+    /// K=1 baseline under the identical epoch budget, and the amount of
+    /// reassignment shrinks as the partition settles.
+    #[test]
+    fn two_cluster_partition_refinement_converges() {
+        let data = two_cluster_data(600, 0xDA7A);
+        let k2 = cotrain(&data, &[2, 4, 1], &[2, 8, 3], &cfg(2));
+        let k1 = cotrain(&data, &[2, 4, 1], &[2, 8, 2], &cfg(1));
+
+        assert_eq!(k2.approximators.len(), 2);
+        assert_eq!(k2.clf_classes, 3);
+        assert!(!k2.history.is_empty() && k2.history.len() <= 5);
+
+        let last2 = k2.history.last().unwrap();
+        let last1 = k1.history.last().unwrap();
+        for h in k2.history.iter().chain(&k1.history) {
+            assert!((0.0..=1.0).contains(&h.assign_invocation));
+            assert!((0.0..=1.0).contains(&h.clf_invocation));
+            assert!(h.mean_min_err.is_finite());
+        }
+        // Two specialised approximators cover (nearly) everything…
+        assert!(
+            last2.assign_invocation >= 0.75,
+            "K=2 assignment invocation too low: {}",
+            last2.assign_invocation
+        );
+        // …and never lose to the single-net baseline (same budget).
+        assert!(
+            last2.assign_invocation >= last1.assign_invocation - 0.05,
+            "K=2 ({}) fell behind K=1 ({})",
+            last2.assign_invocation,
+            last1.assign_invocation
+        );
+        // The classifier tracks the partition (boundary is a single axis
+        // split — easily learnable).
+        assert!(
+            last2.clf_invocation >= 0.5,
+            "classifier invocation too low: {}",
+            last2.clf_invocation
+        );
+        // Refinement settles: the last round moves fewer samples than the
+        // first post-seed round did.
+        let first = &k2.history[0];
+        assert!(
+            last2.reassigned <= first.reassigned,
+            "partition still churning: {} -> {}",
+            first.reassigned,
+            last2.reassigned
+        );
+    }
+
+    /// Thread count must not change the result: per-job RNG streams make
+    /// the round loop deterministic, so 1-thread and 4-thread runs agree.
+    #[test]
+    fn cotrain_deterministic_across_thread_counts() {
+        let data = two_cluster_data(200, 0x5EED);
+        let mut a_cfg = cfg(2);
+        a_cfg.rounds = 2;
+        a_cfg.warmup_epochs = 5;
+        a_cfg.approx_epochs = 5;
+        a_cfg.clf_epochs = 5;
+        let mut b_cfg = a_cfg;
+        a_cfg.threads = 1;
+        b_cfg.threads = 4;
+        let a = cotrain(&data, &[2, 4, 1], &[2, 6, 3], &a_cfg);
+        let b = cotrain(&data, &[2, 4, 1], &[2, 6, 3], &b_cfg);
+        assert_eq!(a.classifier, b.classifier, "classifier depends on thread count");
+        assert_eq!(a.approximators, b.approximators, "approximators depend on thread count");
+        assert_eq!(a.history.len(), b.history.len());
+    }
+
+    /// `k = 1` degenerates to the iterative safe/unsafe method: a binary
+    /// classifier and exactly one approximator, in `MethodWeights` shape.
+    #[test]
+    fn k1_is_binary_baseline() {
+        let data = two_cluster_data(150, 3);
+        let mut c = cfg(1);
+        c.rounds = 2;
+        c.warmup_epochs = 5;
+        c.approx_epochs = 5;
+        c.clf_epochs = 5;
+        let out = cotrain(&data, &[2, 4, 1], &[2, 6, 2], &c);
+        assert_eq!(out.approximators.len(), 1);
+        assert_eq!(out.clf_classes, 2);
+        assert_eq!(out.classifier.n_out(), 2);
+    }
+}

@@ -1,0 +1,321 @@
+//! Native co-training subsystem — the paper's *training* contribution,
+//! in-repo (no Python side-channel).
+//!
+//! `python/compile/train.py` used to be the only way to produce the MCMW
+//! weight artifacts this crate serves; that capped scenario diversity at
+//! whatever was pre-exported.  This module closes the loop:
+//!
+//! * [`backprop`] — minibatch SGD/Adam backprop for the crate's MLP
+//!   topology, with every batch forward routed through the tiled packed
+//!   GEMM kernel (`nn::gemm`);
+//! * [`cotrain`] — the paper's co-training loop: seed K topology-identical
+//!   approximators on an error-driven partition, reassign each sample to
+//!   its argmin-error approximator every round, retrain the multiclass
+//!   classifier on the refined labels until invocation converges;
+//! * [`data`] — workload synthesis straight from the precise benchmark
+//!   functions, including manifest derivation when no Python-built
+//!   artifact tree exists;
+//! * [`train_bench`] — the `mcma train` entrypoint: co-train K
+//!   approximators AND a K=1 baseline under the same epoch budget, measure
+//!   both through the real serving dispatcher on a held-out set, and
+//!   export MCMW/MCQW/MCMD artifacts plus a manifest that `ModelBank` and
+//!   every eval driver load unchanged.
+
+pub mod backprop;
+pub mod cotrain;
+pub mod data;
+
+pub use backprop::{one_hot_into, xavier_mlp, Loss, TrainConfig, Trainer};
+pub use cotrain::{cotrain, Cotrained, CotrainConfig, RoundStats};
+pub use data::{derive_bench_manifest, sample_data, TrainData};
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::bench_harness::{pct, Table};
+use crate::config::{ExecMode, Method};
+use crate::coordinator::Dispatcher;
+use crate::formats::weights::MethodWeights;
+use crate::formats::{Manifest, QuantizedMlpFile, WeightsFile};
+use crate::runtime::ModelBank;
+
+/// `mcma train` options (CLI surface).
+#[derive(Clone, Debug)]
+pub struct TrainOptions {
+    pub bench: String,
+    /// Number of approximators for the MCMA net (K=1 baseline always runs
+    /// alongside under the same budget).
+    pub k: usize,
+    /// Training samples to synthesise (held-out test set is samples/4).
+    pub samples: usize,
+    /// Maximum co-training rounds.
+    pub rounds: usize,
+    /// Epochs per net per round (and for the warmup).
+    pub epochs: usize,
+    pub seed: u64,
+    pub lr: f64,
+    /// Override the manifest/default error bound.
+    pub error_bound: Option<f64>,
+    /// Artifact tree to write into (created if absent).
+    pub out_dir: PathBuf,
+    /// Threads for per-approximator round work (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            bench: String::new(),
+            k: 4,
+            samples: 4000,
+            rounds: 6,
+            epochs: 20,
+            seed: 7,
+            lr: 0.01,
+            error_bound: None,
+            out_dir: crate::artifacts_dir(),
+            threads: 0,
+        }
+    }
+}
+
+/// What `train_bench` measured and wrote.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub bench: String,
+    pub k: usize,
+    pub error_bound: f64,
+    /// Serving invocation of the K-approximator MCMA net on held-out data
+    /// (measured through the real `Dispatcher`, native engine).
+    pub invocation_k: f64,
+    /// Same measurement for the K=1 baseline trained under the identical
+    /// epoch budget.
+    pub invocation_base: f64,
+    pub rmse_over_bound_k: f64,
+    pub rmse_over_bound_base: f64,
+    pub history: Vec<RoundStats>,
+    pub out_dir: PathBuf,
+    /// Files written, relative to `out_dir`.
+    pub wrote: Vec<String>,
+}
+
+impl TrainReport {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!(
+                "Rust co-training: {} (bound {:.3}, held-out serving measurement)",
+                self.bench, self.error_bound
+            ),
+            &["method", "invocation", "rmse/bound"],
+        );
+        t.row(vec![
+            format!("MCMA K={}", self.k),
+            pct(self.invocation_k),
+            format!("{:.2}", self.rmse_over_bound_k),
+        ]);
+        t.row(vec![
+            "one-pass K=1".into(),
+            pct(self.invocation_base),
+            format!("{:.2}", self.rmse_over_bound_base),
+        ]);
+        t
+    }
+
+    pub fn print(&self) {
+        self.table().print();
+        println!("\nco-training trajectory (Fig. 9 analogue):");
+        for h in &self.history {
+            println!(
+                "  round {}: invocation {} (partition potential {}), mean min-err {:.4}, {} reassigned",
+                h.round,
+                pct(h.clf_invocation),
+                pct(h.assign_invocation),
+                h.mean_min_err,
+                h.reassigned
+            );
+        }
+        println!(
+            "\ninvocation gain over K=1 baseline: {:+.1} pp",
+            100.0 * (self.invocation_k - self.invocation_base)
+        );
+        for f in &self.wrote {
+            println!("wrote {}", self.out_dir.join(f).display());
+        }
+    }
+}
+
+/// Classifier topology for `k` approximators: the manifest's classifier
+/// hidden sizes with the output width forced to `k + 1` (2 = the binary
+/// baseline shape).
+fn clf_topo(bench: &crate::formats::BenchManifest, k: usize) -> Vec<usize> {
+    let mut t = if k == 1 {
+        bench.clf2_topology.clone()
+    } else {
+        bench.clfn_topology.clone()
+    };
+    *t.last_mut().expect("classifier topology non-empty") = k + 1;
+    t
+}
+
+/// Co-train benchmark `opts.bench` natively and export a servable artifact
+/// tree.  See the module docs for the full pipeline.
+pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
+    anyhow::ensure!(opts.k >= 1, "--k must be >= 1");
+    anyhow::ensure!(opts.samples >= 64, "--samples must be >= 64");
+    let benchfn = crate::benchmarks::by_name(&opts.bench)?;
+
+    // Benchmark spec: reuse an existing manifest entry (out dir first, then
+    // the ambient artifact tree) or derive one from the generator.
+    let existing = Manifest::load(&opts.out_dir)
+        .ok()
+        .or_else(|| Manifest::load(&crate::artifacts_dir()).ok());
+    let mut bench = existing
+        .as_ref()
+        .and_then(|m| m.bench(&opts.bench).ok().cloned())
+        .unwrap_or_else(|| {
+            data::derive_bench_manifest(
+                benchfn.as_ref(),
+                opts.k,
+                opts.error_bound.unwrap_or(0.05),
+                2000,
+                opts.seed,
+            )
+        });
+    if let Some(b) = opts.error_bound {
+        bench.error_bound = b;
+    }
+
+    // Classifier topologies: K+1 outputs for MCMA, 2 for the baseline.
+    let clf_topo_k = clf_topo(&bench, opts.k);
+    let clf_topo_1 = clf_topo(&bench, 1);
+
+    let train = data::sample_data(benchfn.as_ref(), &bench, opts.samples, opts.seed ^ 0x7EA1);
+    let test = data::sample_data(
+        benchfn.as_ref(),
+        &bench,
+        (opts.samples / 4).max(64),
+        opts.seed ^ 0x7E57,
+    );
+
+    let cfg_for = |k: usize| CotrainConfig {
+        k,
+        rounds: opts.rounds,
+        warmup_epochs: opts.epochs,
+        approx_epochs: opts.epochs,
+        clf_epochs: opts.epochs,
+        error_bound: bench.error_bound,
+        seed: opts.seed,
+        threads: opts.threads,
+        approx: TrainConfig { lr: opts.lr as f32, ..TrainConfig::default() },
+        clf: TrainConfig {
+            lr: opts.lr as f32,
+            loss: Loss::SoftmaxCrossEntropy,
+            ..TrainConfig::default()
+        },
+        tol: 0.005,
+    };
+    let multi = cotrain::cotrain(&train, &bench.approx_topology, &clf_topo_k, &cfg_for(opts.k));
+    let single = cotrain::cotrain(&train, &bench.approx_topology, &clf_topo_1, &cfg_for(1));
+
+    let mut methods = HashMap::new();
+    methods.insert(
+        "one_pass".to_string(),
+        MethodWeights {
+            method: "one_pass".into(),
+            cascade: false,
+            clf_classes: 2,
+            classifiers: vec![single.classifier.clone()],
+            approximators: single.approximators.clone(),
+        },
+    );
+    methods.insert(
+        "mcma_competitive".to_string(),
+        MethodWeights {
+            method: "mcma_competitive".into(),
+            cascade: false,
+            clf_classes: opts.k + 1,
+            classifiers: vec![multi.classifier.clone()],
+            approximators: multi.approximators.clone(),
+        },
+    );
+    let wf = WeightsFile { methods };
+
+    // Measure both nets through the REAL serving path (native engine) on
+    // held-out data — the invocation number the paper reports.
+    let test_ds = test.to_dataset();
+    let bank = ModelBank::from_host(&bench.name, wf.clone());
+    let out_k = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::Native)?
+        .run_dataset(&test_ds)?;
+    let out_1 = Dispatcher::new(&bench, &bank, Method::OnePass, ExecMode::Native)?
+        .run_dataset(&test_ds)?;
+
+    // Export the artifact tree.
+    let bench_dir = opts.out_dir.join(&bench.name);
+    std::fs::create_dir_all(&bench_dir)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", bench_dir.display()))?;
+    let mut wrote = Vec::new();
+
+    wf.save(&bench_dir.join("weights_rust.bin"))?;
+    wrote.push(format!("{}/weights_rust.bin", bench.name));
+    if !bench_dir.join("weights.bin").exists() {
+        // Standalone tree (no Python build): make it directly servable.
+        wf.save(&bench_dir.join("weights.bin"))?;
+        wrote.push(format!("{}/weights.bin", bench.name));
+    }
+    if !bench_dir.join("test.bin").exists() {
+        test_ds.save(&bench_dir.join("test.bin"))?;
+        wrote.push(format!("{}/test.bin", bench.name));
+    }
+    for (i, a) in multi.approximators.iter().enumerate() {
+        let name = format!("approx_rust_k{}_{i}.mcqw", opts.k);
+        QuantizedMlpFile::from_mlp(a).save(&bench_dir.join(&name))?;
+        wrote.push(format!("{}/{name}", bench.name));
+    }
+
+    let mut man = Manifest::load(&opts.out_dir).unwrap_or_else(|_| Manifest {
+        n_approx: opts.k,
+        batch_sizes: vec![1, 256],
+        benchmarks: HashMap::new(),
+        root: opts.out_dir.clone(),
+    });
+    if let Some(entry) = man.benchmarks.get_mut(&bench.name) {
+        // The tree already describes this benchmark (e.g. a Python-built
+        // manifest whose topologies/bounds still describe weights.bin and
+        // the compiled HLO) — do NOT rewrite its shared fields, only record
+        // that the trained methods exist.  The Rust-trained nets carry
+        // their own shapes inside weights_rust.bin; the native serving
+        // path never consults the manifest topologies.
+        for m in ["one_pass", "mcma_competitive"] {
+            if !entry.methods.iter().any(|k| k == m) {
+                entry.methods.push(m.to_string());
+            }
+        }
+    } else {
+        bench.train_n = train.n;
+        bench.test_n = test.n;
+        if opts.k > 1 {
+            bench.clfn_topology = clf_topo_k;
+        }
+        for m in ["one_pass", "mcma_competitive"] {
+            if !bench.methods.iter().any(|k| k == m) {
+                bench.methods.push(m.to_string());
+            }
+        }
+        man.upsert_bench(bench.clone());
+    }
+    man.save_to(&opts.out_dir)?;
+    wrote.push("manifest.json".into());
+
+    Ok(TrainReport {
+        bench: bench.name,
+        k: opts.k,
+        error_bound: bench.error_bound,
+        invocation_k: out_k.metrics.invocation(),
+        invocation_base: out_1.metrics.invocation(),
+        rmse_over_bound_k: out_k.metrics.rmse_over_bound,
+        rmse_over_bound_base: out_1.metrics.rmse_over_bound,
+        history: multi.history,
+        out_dir: opts.out_dir.clone(),
+        wrote,
+    })
+}

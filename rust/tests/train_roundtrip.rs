@@ -1,0 +1,113 @@
+//! End-to-end native training round trip, artifact-free: `train_bench` on
+//! a real benchmark with a tiny budget must (1) export an MCMW/MCQW/MCMD
+//! artifact tree, (2) produce a manifest `Manifest::load` accepts, (3)
+//! yield weights `ModelBank` loads and the `Dispatcher` serves, and (4)
+//! round-trip the weight bytes exactly.  Budget is deliberately tiny —
+//! quality is covered by `train::cotrain`'s unit tests; this pins the
+//! plumbing.
+
+use mcma::config::{ExecMode, Method};
+use mcma::coordinator::Dispatcher;
+use mcma::formats::{Dataset, Manifest, QuantizedMlpFile, WeightsFile};
+use mcma::runtime::ModelBank;
+use mcma::train::{train_bench, TrainOptions};
+
+fn tmp_out(tag: &str) -> std::path::PathBuf {
+    // Tests in one binary share a process: key the dir by test tag too.
+    let dir = std::env::temp_dir().join(format!("mcma_train_rt_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn train_export_serves_through_model_bank() {
+    let out_dir = tmp_out("serve");
+    let opts = TrainOptions {
+        bench: "blackscholes".into(),
+        k: 2,
+        samples: 400,
+        rounds: 2,
+        epochs: 3,
+        seed: 11,
+        out_dir: out_dir.clone(),
+        threads: 2,
+        ..TrainOptions::default()
+    };
+    let report = train_bench(&opts).unwrap();
+    assert_eq!(report.k, 2);
+    assert!((0.0..=1.0).contains(&report.invocation_k));
+    assert!((0.0..=1.0).contains(&report.invocation_base));
+    assert!(!report.history.is_empty());
+
+    // (1) every promised artifact exists.
+    let bdir = out_dir.join("blackscholes");
+    for f in ["weights_rust.bin", "weights.bin", "test.bin"] {
+        assert!(bdir.join(f).exists(), "{f} missing");
+    }
+    assert!(out_dir.join("manifest.json").exists());
+
+    // (2) the manifest loads and validates.
+    let man = Manifest::load(&out_dir).unwrap();
+    let bench = man.bench("blackscholes").unwrap().clone();
+    assert_eq!(*bench.clfn_topology.last().unwrap(), 3, "clfN must have k+1 classes");
+    assert!(bench.methods.iter().any(|m| m == "mcma_competitive"));
+
+    // (3) the exported weights serve through the real bank + dispatcher.
+    let bank = ModelBank::load(None, &man, &bench, &[Method::McmaCompetitive], &[]).unwrap();
+    assert_eq!(bank.n_approx(Method::McmaCompetitive), 2);
+    assert!(bank.has_method(Method::OnePass));
+    let ds = Dataset::load(&man.dataset_path("blackscholes")).unwrap();
+    let d = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let out = d.run_dataset(&ds).unwrap();
+    assert_eq!(out.plan.routes.len(), ds.n);
+    assert!((out.metrics.invocation() - report.invocation_k).abs() < 1e-9,
+        "served invocation drifted from the training report");
+
+    // The int8 twins pack straight from the exported nets, so the
+    // quantized engine serves the same tree.
+    let d8 = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::NativeQ8).unwrap();
+    let out8 = d8.run_dataset(&ds).unwrap();
+    assert_eq!(out8.plan.routes.len(), ds.n);
+
+    // (4) weight bytes round-trip exactly, and the MCQW sidecars load.
+    let wf = WeightsFile::load(&bdir.join("weights_rust.bin")).unwrap();
+    let reloaded = WeightsFile::load(&bdir.join("weights.bin")).unwrap();
+    assert_eq!(wf.to_bytes(), reloaded.to_bytes());
+    for i in 0..2 {
+        let q = QuantizedMlpFile::load(&bdir.join(format!("approx_rust_k2_{i}.mcqw"))).unwrap();
+        let twin = q.to_mlp();
+        assert_eq!(
+            twin.topology(),
+            wf.get("mcma_competitive").unwrap().approximators[i].topology()
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+/// Re-training into an EXISTING tree must reuse its manifest entry and not
+/// clobber unrelated benchmarks.
+#[test]
+fn train_merges_into_existing_tree() {
+    let out_dir = tmp_out("merge");
+    let mk = |bench: &str, seed: u64| TrainOptions {
+        bench: bench.into(),
+        k: 2,
+        samples: 256,
+        rounds: 1,
+        epochs: 2,
+        seed,
+        out_dir: out_dir.clone(),
+        threads: 1,
+        ..TrainOptions::default()
+    };
+    train_bench(&mk("sobel", 1)).unwrap();
+    train_bench(&mk("kmeans", 2)).unwrap();
+    let man = Manifest::load(&out_dir).unwrap();
+    assert!(man.bench("sobel").is_ok());
+    assert!(man.bench("kmeans").is_ok());
+    assert!(out_dir.join("sobel/weights_rust.bin").exists());
+    assert!(out_dir.join("kmeans/weights_rust.bin").exists());
+    let _ = std::fs::remove_dir_all(&out_dir);
+}

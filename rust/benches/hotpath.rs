@@ -56,7 +56,53 @@ fn main() -> mcma::Result<()> {
         synthetic_suite(&mut rec, b)?;
     }
 
+    // QoS control plane overhead (artifact-independent): the per-request
+    // hot-path cost is ONE hash pick; observe/tick/publish run off-path
+    // on the controller thread, but their cost bounds how fast the loop
+    // can react, so it is tracked here too.
+    qos_benches(&mut rec, b);
+
     rec.write_json("hotpath", &bench_json_path("BENCH_hotpath.json"))
+}
+
+/// Overhead of the QoS subsystem pieces (see `rust/src/qos/`).
+fn qos_benches(rec: &mut Recorder, budget: Duration) {
+    use mcma::qos::{Controller, QosConfig, ShadowSampler};
+    println!("--- QoS control plane ---");
+    let sampler = ShadowSampler::new(0x5AD0, 0.05);
+    let mut picks = 0u64;
+    rec.bench_rows("qos shadow-sampler pick x256", budget, 256, || {
+        for id in 0..256u64 {
+            picks += sampler.pick(id) as u64;
+        }
+        std::hint::black_box(picks);
+    });
+
+    // A controller with warm windows: 64 observations + one control tick,
+    // the unit of work the mcma-qos thread performs per tick interval.
+    let mut ctrl = Controller::new(
+        QosConfig { window: 256, tick_every: 64, ..QosConfig::default() },
+        4,
+    );
+    let mut e = 0.01f64;
+    rec.bench("qos controller observe x64 + tick (K=4, win 256)", budget, || {
+        for i in 0..64usize {
+            e = if e > 0.2 { 0.01 } else { e + 1e-4 };
+            ctrl.observe(i % 4, e);
+        }
+        ctrl.tick();
+        std::hint::black_box(ctrl.ticks());
+    });
+
+    // Controller-side margin snapshot (what the mcma-qos thread does
+    // after a tick before publishing).  The worker-side read is 4
+    // relaxed atomic loads + from_bits, private to the server — strictly
+    // cheaper than this copy.
+    let mut margins: Vec<f32> = Vec::new();
+    rec.bench("qos controller margins_into (K=4)", budget, || {
+        ctrl.margins_into(&mut margins);
+        std::hint::black_box(&margins);
+    });
 }
 
 /// The full suite over real artifacts (blackscholes, MCMA-competitive).

@@ -19,12 +19,14 @@ pub struct Args {
 }
 
 /// Option keys that take a value.
-const VALUE_KEYS: [&str; 17] = [
+const VALUE_KEYS: [&str; 22] = [
     // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
     // train
     "k", "rounds", "epochs", "lr", "bound", "out", "threads",
+    // serve/summary QoS loop
+    "qos-target", "qos-quantile", "qos-shadow", "qos-window", "qos-seed",
 ];
 
 /// Boolean flags (present/absent, no value).
@@ -111,6 +113,11 @@ SUBCOMMANDS:
   eval   --bench B --method M     run one (benchmark, method) evaluation
   serve  --bench B --method M     run the online serving pipeline demo
          [--requests N] [--batch N] [--wait-us U]
+         [--qos-target T]            enable the online QoS loop: hold the
+         [--qos-quantile Q=0.95]     per-class Q-quantile of the shadow-
+         [--qos-shadow R=0.05]       observed error at or below T by
+         [--qos-window N=256]        adapting per-class margins (circuit
+         [--qos-seed S]              breaker on sustained violation)
   train  --bench B [--k K]        co-train K approximators + multiclass
          [--samples N] [--rounds R]  classifier natively (no Python) and
          [--epochs E] [--lr X]       export MCMW/MCQW artifacts ModelBank
@@ -194,6 +201,20 @@ mod tests {
         assert!((a.opt_f64("bound", 0.0).unwrap() - 0.04).abs() < 1e-12);
         assert_eq!(a.opt("out"), Some("/tmp/x"));
         assert_eq!(a.opt_usize("threads", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn qos_options_registered() {
+        let a = parse(
+            "serve --bench fft --qos-target 0.1 --qos-quantile 0.9 \
+             --qos-shadow 0.25 --qos-window 128 --qos-seed 99",
+        );
+        assert!((a.opt_f64("qos-target", 0.0).unwrap() - 0.1).abs() < 1e-12);
+        assert!((a.opt_f64("qos-quantile", 0.0).unwrap() - 0.9).abs() < 1e-12);
+        assert!((a.opt_f64("qos-shadow", 0.0).unwrap() - 0.25).abs() < 1e-12);
+        assert_eq!(a.opt_usize("qos-window", 0).unwrap(), 128);
+        assert_eq!(a.opt_usize("qos-seed", 0).unwrap(), 99);
+        assert!(Args::parse(["serve".into(), "--qos-tgt".into(), "1".into()]).is_err());
     }
 
     #[test]

@@ -286,8 +286,30 @@ impl<'a> Dispatcher<'a> {
         plan: &mut RoutePlan,
         scratch: &mut Scratch,
     ) -> crate::Result<()> {
+        self.plan_with_margins_into(x_norm, n, None, plan, scratch)
+    }
+
+    /// [`Self::plan_into`] with optional per-class confidence margins —
+    /// the QoS controller's entry into routing.  `margins[k]` is the
+    /// minimum softmax confidence approximator `k` requires
+    /// (`router::apply_margins`); `None` (or all zeros) is the paper's
+    /// pure-argmax routing.  Margins compose with the static
+    /// `RouterPolicy::Confidence` threshold: a sample must clear both.
+    pub fn plan_with_margins_into(
+        &self,
+        x_norm: &[f32],
+        n: usize,
+        margins: Option<&[f32]>,
+        plan: &mut RoutePlan,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
         match self.method {
             Method::Mcca => {
+                anyhow::ensure!(
+                    margins.is_none(),
+                    "per-class QoS margins are confidence-based and do not \
+                     apply to the MCCA cascade"
+                );
                 *plan = self.plan_cascade(x_norm, n)?;
                 Ok(())
             }
@@ -306,11 +328,14 @@ impl<'a> Dispatcher<'a> {
                     for (i, c) in classes.iter_mut().enumerate() {
                         if *c < n_approx {
                             let row = &logits[i * n_classes..(i + 1) * n_classes];
-                            if softmax_prob(row, *c) < tau {
+                            if router::softmax_prob(row, *c) < tau {
                                 *c = n_approx; // nC
                             }
                         }
                     }
+                }
+                if let Some(margins) = margins {
+                    router::apply_margins(logits, n_classes, n_approx, margins, classes);
                 }
                 router::plan_routes_into(classes, n_approx, plan);
                 Ok(())
@@ -557,11 +582,26 @@ impl<'a> Dispatcher<'a> {
         y: &mut Vec<f32>,
         scratch: &mut Scratch,
     ) -> crate::Result<()> {
+        self.process_batch_with_margins_into(batch, None, plan, y, scratch)
+    }
+
+    /// [`Self::process_batch_into`] with per-class QoS margin overrides
+    /// (see [`Self::plan_with_margins_into`]).  Same zero-allocation
+    /// steady state — the margins slice is caller-owned and only read.
+    pub fn process_batch_with_margins_into(
+        &self,
+        batch: &Batch,
+        margins: Option<&[f32]>,
+        plan: &mut RoutePlan,
+        y: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
         // Take the normalised panel out of the arena so `scratch` can be
         // reborrowed by the stages below; put it back even on error.
         let mut x_norm = std::mem::take(&mut scratch.x_norm);
         self.normalize_into(&batch.x_raw, batch.n, &mut x_norm);
-        let mut result = self.plan_into(&x_norm, batch.n, plan, scratch);
+        let mut result =
+            self.plan_with_margins_into(&x_norm, batch.n, margins, plan, scratch);
         if result.is_ok() {
             result =
                 self.execute_plan_into(plan, &x_norm, &batch.x_raw, batch.n, y, scratch);
@@ -650,28 +690,5 @@ fn forward_native_parallel_q8(
     );
 }
 
-/// Softmax probability of class `c` for one logit row.
-fn softmax_prob(logits: &[f32], c: usize) -> f32 {
-    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-    let denom: f32 = logits.iter().map(|&v| (v - max).exp()).sum();
-    (logits[c] - max).exp() / denom
-}
-
-#[cfg(test)]
-mod tests {
-    use super::softmax_prob;
-
-    #[test]
-    fn softmax_prob_basic() {
-        let p0 = softmax_prob(&[2.0, 0.0], 0);
-        let p1 = softmax_prob(&[2.0, 0.0], 1);
-        assert!((p0 + p1 - 1.0).abs() < 1e-6);
-        assert!(p0 > 0.85 && p0 < 0.9); // sigmoid(2) ~ 0.8808
-    }
-
-    #[test]
-    fn softmax_prob_stable_for_large_logits() {
-        let p = softmax_prob(&[1000.0, 999.0, -1000.0], 0);
-        assert!(p.is_finite() && p > 0.7);
-    }
-}
+// `softmax_prob` lives in `router` (shared with the QoS margin actuator);
+// its unit tests moved there with it.

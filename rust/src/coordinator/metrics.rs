@@ -8,9 +8,11 @@
 //! * **true invocation** — invoked AND actually under the bound (the "AC"
 //!   true positives of Fig. 11).
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 use crate::util::stats;
 
-use super::router::Route;
+use super::router::{Route, RoutePlan};
 
 /// Confusion-style quadrant counts of Fig. 11 (A = actually safe,
 /// C = classifier accepts).
@@ -128,6 +130,123 @@ impl RunMetrics {
     }
 }
 
+/// Live per-route counters shared across the server's dispatch workers
+/// and the QoS thread (lock-free; relaxed adds once per batch, not per
+/// sample).  `invoked[k]` counts samples served by approximator `k`,
+/// `cpu` the precise-path rejects, `shadow[k]` the shadow observations
+/// the QoS controller ingested for class `k`.  Snapshots feed both
+/// `ServerReport`'s per-route section and the controller's own report.
+#[derive(Debug)]
+pub struct ClassCounters {
+    invoked: Vec<AtomicU64>,
+    cpu: AtomicU64,
+    shadow: Vec<AtomicU64>,
+    /// Shadow-selected observations dropped because the bounded
+    /// observation queue was full (the estimator saw a thinner sample,
+    /// not a biased one — drops are backpressure, not selection).
+    shadow_dropped: AtomicU64,
+}
+
+impl ClassCounters {
+    pub fn new(n_approx: usize) -> Self {
+        ClassCounters {
+            invoked: (0..n_approx).map(|_| AtomicU64::new(0)).collect(),
+            cpu: AtomicU64::new(0),
+            shadow: (0..n_approx).map(|_| AtomicU64::new(0)).collect(),
+            shadow_dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn n_approx(&self) -> usize {
+        self.invoked.len()
+    }
+
+    /// Account one routed batch (a handful of adds per batch, off the
+    /// per-sample path).
+    pub fn record_plan(&self, plan: &RoutePlan) {
+        for (k, g) in plan.groups.iter().enumerate() {
+            if !g.is_empty() {
+                if let Some(c) = self.invoked.get(k) {
+                    c.fetch_add(g.len() as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        if !plan.cpu.is_empty() {
+            self.cpu.fetch_add(plan.cpu.len() as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Account one shadow observation for class `k`.
+    pub fn record_shadow(&self, k: usize) {
+        if let Some(c) = self.shadow.get(k) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Account one shadow observation lost to queue backpressure.
+    pub fn record_shadow_dropped(&self) {
+        self.shadow_dropped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shadow_dropped(&self) -> u64 {
+        self.shadow_dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot_invoked(&self) -> Vec<u64> {
+        self.invoked.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn snapshot_shadow(&self) -> Vec<u64> {
+        self.shadow.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn cpu(&self) -> u64 {
+        self.cpu.load(Ordering::Relaxed)
+    }
+}
+
+/// One route destination's share of a serving run: response count +
+/// latency distribution.
+#[derive(Clone, Debug, Default)]
+pub struct RouteClassStats {
+    pub count: u64,
+    pub latency: LatencyStats,
+}
+
+/// Per-route (per-approximator-class + CPU) breakdown of a serving run,
+/// aggregated into `ServerReport` at shutdown — the per-class view the
+/// global `served`/`invoked` numbers hide.
+#[derive(Clone, Debug, Default)]
+pub struct PerRouteReport {
+    /// Indexed by approximator class; grown on demand.
+    pub classes: Vec<RouteClassStats>,
+    pub cpu: RouteClassStats,
+}
+
+impl PerRouteReport {
+    pub fn push(&mut self, route: Route, latency_us: f64) {
+        let slot = match route {
+            Route::Approx(k) => {
+                if self.classes.len() <= k {
+                    self.classes.resize_with(k + 1, RouteClassStats::default);
+                }
+                &mut self.classes[k]
+            }
+            Route::Cpu => &mut self.cpu,
+        };
+        slot.count += 1;
+        slot.latency.push(latency_us);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.cpu.count + self.classes.iter().map(|c| c.count).sum::<u64>()
+    }
+
+    pub fn invoked(&self) -> u64 {
+        self.classes.iter().map(|c| c.count).sum()
+    }
+}
+
 /// Latency aggregates for the online server (microseconds).
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
@@ -181,6 +300,41 @@ mod tests {
         let m = RunMetrics::from_routes("b", "m", &[], &[], &[], 0.05, 1);
         assert_eq!(m.invocation(), 0.0);
         assert_eq!(m.rmse_invoked, 0.0);
+    }
+
+    #[test]
+    fn class_counters_record_plans_and_shadows() {
+        let c = ClassCounters::new(2);
+        let plan = super::super::router::plan_routes(&[0, 1, 2, 0, 1, 1], 2);
+        c.record_plan(&plan);
+        c.record_plan(&plan);
+        assert_eq!(c.snapshot_invoked(), vec![4, 6]);
+        assert_eq!(c.cpu(), 2);
+        c.record_shadow(1);
+        c.record_shadow(1);
+        c.record_shadow(9); // out of range: ignored, not a panic
+        assert_eq!(c.snapshot_shadow(), vec![0, 2]);
+        assert_eq!(c.n_approx(), 2);
+        assert_eq!(c.shadow_dropped(), 0);
+        c.record_shadow_dropped();
+        assert_eq!(c.shadow_dropped(), 1);
+    }
+
+    #[test]
+    fn per_route_report_partitions_responses() {
+        let mut r = PerRouteReport::default();
+        r.push(Route::Approx(0), 10.0);
+        r.push(Route::Approx(2), 20.0); // grows past the gap
+        r.push(Route::Cpu, 30.0);
+        r.push(Route::Approx(0), 40.0);
+        assert_eq!(r.classes.len(), 3);
+        assert_eq!(r.classes[0].count, 2);
+        assert_eq!(r.classes[1].count, 0);
+        assert_eq!(r.classes[2].count, 1);
+        assert_eq!(r.cpu.count, 1);
+        assert_eq!(r.total(), 4);
+        assert_eq!(r.invoked(), 3);
+        assert!((r.classes[0].latency.mean() - 25.0).abs() < 1e-9);
     }
 
     #[test]

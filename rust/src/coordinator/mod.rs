@@ -23,7 +23,7 @@ pub mod weight_cache;
 
 pub use batcher::{Batch, Batcher};
 pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy, Scratch};
-pub use metrics::{LatencyStats, RunMetrics};
+pub use metrics::{ClassCounters, LatencyStats, PerRouteReport, RouteClassStats, RunMetrics};
 pub use router::{plan_routes, Route, RoutePlan};
 pub use server::{Server, ServerConfig, ServerReport};
 pub use weight_cache::{BufferCase, WeightCache};

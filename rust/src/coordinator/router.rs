@@ -95,6 +95,47 @@ pub fn plan_routes_into(classes: &[usize], n_approx: usize, plan: &mut RoutePlan
     }
 }
 
+/// Softmax probability of class `c` for one logit row (max-subtracted for
+/// stability).  Shared by the confidence policy, the per-class QoS
+/// margins, and the offline QoS replay.
+pub fn softmax_prob(logits: &[f32], c: usize) -> f32 {
+    let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let denom: f32 = logits.iter().map(|&v| (v - max).exp()).sum();
+    (logits[c] - max).exp() / denom
+}
+
+/// Per-class margin overrides (the QoS controller's actuator): a sample
+/// currently classed `c < n_approx` is demoted to the reject class
+/// `n_approx` (precise CPU) when its softmax confidence for `c` falls
+/// below `margins[c]`.  Margin 0 keeps the paper's pure-argmax routing
+/// for that class; a margin no probability can reach
+/// (`qos::MARGIN_PRECISE`) forces the whole class precise.  Demotion is
+/// monotone: raising any margin can only shrink the invoked set.
+pub fn apply_margins(
+    logits: &[f32],
+    n_classes: usize,
+    n_approx: usize,
+    margins: &[f32],
+    classes: &mut [usize],
+) {
+    assert!(
+        margins.len() >= n_approx,
+        "need a margin per approximator class ({} < {n_approx})",
+        margins.len()
+    );
+    for (i, c) in classes.iter_mut().enumerate() {
+        if *c < n_approx {
+            let m = margins[*c];
+            if m > 0.0 {
+                let row = &logits[i * n_classes..(i + 1) * n_classes];
+                if softmax_prob(row, *c) < m {
+                    *c = n_approx;
+                }
+            }
+        }
+    }
+}
+
 /// Merge a cascade stage's accept decisions into an existing plan:
 /// `remaining` holds the sample indices this stage saw (in order), `accept`
 /// their binary outcomes; accepted samples are routed to approximator
@@ -149,6 +190,95 @@ mod tests {
     fn binary_convention_class0_safe() {
         let plan = plan_routes(&[0, 1, 0], 1);
         assert_eq!(plan.routes, vec![Route::Approx(0), Route::Cpu, Route::Approx(0)]);
+    }
+
+    #[test]
+    fn softmax_prob_basic() {
+        let p0 = softmax_prob(&[2.0, 0.0], 0);
+        let p1 = softmax_prob(&[2.0, 0.0], 1);
+        assert!((p0 + p1 - 1.0).abs() < 1e-6);
+        assert!(p0 > 0.85 && p0 < 0.9); // sigmoid(2) ~ 0.8808
+    }
+
+    #[test]
+    fn softmax_prob_stable_for_large_logits() {
+        let p = softmax_prob(&[1000.0, 999.0, -1000.0], 0);
+        assert!(p.is_finite() && p > 0.7);
+    }
+
+    /// Per-class margins demote exactly the low-confidence accepts of the
+    /// classes whose margin they fail, leave other classes alone, and a
+    /// zero margin is a no-op.
+    #[test]
+    fn margins_demote_per_class() {
+        // 3 classes (2 approximators + reject), 4 samples.
+        // Sample confidences for their argmax class:
+        //   s0 -> class 0 with ~0.88, s1 -> class 1 with ~0.88,
+        //   s2 -> class 0 with ~0.58, s3 -> reject already.
+        let logits = [
+            2.0, 0.0, 0.0, //
+            0.0, 2.0, 0.0, //
+            0.5, 0.0, 0.2, //
+            0.0, 0.0, 3.0, //
+        ];
+        let base = crate::nn::argmax_rows(&logits, 4, 3);
+        assert_eq!(base, vec![0, 1, 0, 2]);
+
+        let mut classes = base.clone();
+        apply_margins(&logits, 3, 2, &[0.0, 0.0], &mut classes);
+        assert_eq!(classes, base, "zero margins change nothing");
+
+        // Class 0 requires 0.7 confidence: s2 (0.58) demotes, s0 stays.
+        let mut classes = base.clone();
+        apply_margins(&logits, 3, 2, &[0.7, 0.0], &mut classes);
+        assert_eq!(classes, vec![0, 1, 2, 2]);
+
+        // An unreachable margin forces class 1 fully precise.
+        let mut classes = base.clone();
+        apply_margins(&logits, 3, 2, &[0.0, 2.0], &mut classes);
+        assert_eq!(classes, vec![0, 2, 0, 2]);
+    }
+
+    /// Property: margin demotion is monotone — pointwise-higher margins
+    /// never invoke a sample the lower margins rejected.
+    #[test]
+    fn prop_margins_monotone() {
+        prop::check(
+            "margins-monotone",
+            200,
+            0x9A61,
+            |r: &mut Rng| {
+                let n = 1 + r.below(60) as usize;
+                let n_approx = 1 + r.below(3) as usize;
+                let n_classes = n_approx + 1;
+                let logits: Vec<f32> =
+                    (0..n * n_classes).map(|_| r.uniform(-3.0, 3.0) as f32).collect();
+                let lo: Vec<f32> =
+                    (0..n_approx).map(|_| r.uniform(0.0, 0.9) as f32).collect();
+                let hi: Vec<f32> =
+                    lo.iter().map(|&m| m + r.uniform(0.0, 0.5) as f32).collect();
+                (logits, n_approx, lo, hi)
+            },
+            |(logits, n_approx, lo, hi)| {
+                let n_classes = n_approx + 1;
+                let n = logits.len() / n_classes;
+                let base = crate::nn::argmax_rows(logits, n, n_classes);
+                let mut c_lo = base.clone();
+                let mut c_hi = base.clone();
+                apply_margins(logits, n_classes, *n_approx, lo, &mut c_lo);
+                apply_margins(logits, n_classes, *n_approx, hi, &mut c_hi);
+                for i in 0..n {
+                    let inv_lo = c_lo[i] < *n_approx;
+                    let inv_hi = c_hi[i] < *n_approx;
+                    if inv_hi && !inv_lo {
+                        return Err(format!(
+                            "sample {i} invoked under tighter margins only"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     /// Property: the class-sorted execution trace is a permutation of the

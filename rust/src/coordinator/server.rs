@@ -11,20 +11,34 @@
 //! Responses carry per-request latency; `ServerReport` aggregates
 //! throughput, latency percentiles and routing statistics.  This is the
 //! end-to-end driver `examples/serve_pipeline.rs` exercises.
+//!
+//! ## Online QoS (optional, `ServerConfig::qos`)
+//!
+//! With a [`QosConfig`], the server closes the quality loop at serve time:
+//! workers shadow-select approximated responses by deterministic id hash
+//! and hand them to a dedicated `mcma-qos` thread, which re-runs the
+//! precise `BenchFn`, feeds per-class error windows, and runs the adaptive
+//! margin controller ([`crate::qos::Controller`]).  Updated per-class
+//! margins are published as relaxed atomic f32 bits; workers re-read them
+//! once per batch — the request hot path itself never computes errors,
+//! never locks, and stays zero-allocation apart from the (rate-limited)
+//! shadow payload copies, which are of the same nature as the response
+//! payloads.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::config::{BatchPolicy, ExecMode, Method};
-use crate::formats::{BenchManifest, Manifest};
+use crate::formats::{BenchManifest, Manifest, WeightsFile};
+use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler};
 use crate::runtime::{ModelBank, Runtime};
 
 use super::batcher::Batcher;
 use super::dispatcher::Dispatcher;
-use super::metrics::LatencyStats;
+use super::metrics::{ClassCounters, LatencyStats, PerRouteReport};
 use super::router::Route;
 
 /// A request into the pipeline.
@@ -54,11 +68,19 @@ pub struct ServerConfig {
     /// bank (PJRT handles are thread-local by construction here), pulling
     /// batches from a shared queue — scale-out for multi-core boxes.
     pub workers: usize,
+    /// Online quality control (`None` = the classic fixed-routing server).
+    pub qos: Option<QosConfig>,
 }
 
 impl ServerConfig {
     pub fn new(policy: BatchPolicy, method: Method, exec: ExecMode) -> Self {
-        ServerConfig { policy, method, exec, workers: 1 }
+        ServerConfig { policy, method, exec, workers: 1, qos: None }
+    }
+
+    /// Builder-style QoS enablement.
+    pub fn with_qos(mut self, qos: QosConfig) -> Self {
+        self.qos = Some(qos);
+        self
     }
 }
 
@@ -73,6 +95,10 @@ pub struct ServerReport {
     pub flushes_full: u64,
     pub flushes_timeout: u64,
     pub batches: u64,
+    /// Per-approximator-class (and CPU) response counts + latency.
+    pub per_route: PerRouteReport,
+    /// QoS controller outcome (present iff `ServerConfig::qos` was set).
+    pub qos: Option<QosReport>,
 }
 
 impl ServerReport {
@@ -117,12 +143,62 @@ impl Drop for LostGuard<'_> {
     }
 }
 
+/// Bound on queued shadow observations.  The QoS thread re-runs the
+/// PRECISE function per observation; when it falls behind, workers drop
+/// further observations (counted in `ClassCounters::shadow_dropped`)
+/// instead of queueing unbounded memory or ever blocking dispatch.
+const SHADOW_QUEUE_CAP: usize = 1024;
+
+/// How long the QoS thread waits for an observation before checking
+/// whether an open circuit breaker needs a wall-clock cooldown tick
+/// (forced-precise classes generate no observations, so their recovery
+/// cannot be observation-driven).
+const BREAKER_IDLE_TICK: Duration = Duration::from_millis(50);
+
+/// One shadow-selected response on its way to the QoS thread: everything
+/// needed to score the served value against the precise function.
+struct ShadowObs {
+    class: usize,
+    x_raw: Vec<f32>,
+    y_served: Vec<f32>,
+}
+
+/// Margins published by the QoS thread, read by every dispatch worker
+/// once per batch.  f32 bit patterns in relaxed atomics: the controller
+/// is the only writer, readers tolerate tearing-free staleness of one
+/// batch, and the hot path never locks.
+struct QosShared {
+    margins: Vec<AtomicU32>,
+}
+
+impl QosShared {
+    fn new(n_approx: usize) -> Self {
+        QosShared {
+            margins: (0..n_approx).map(|_| AtomicU32::new(0.0f32.to_bits())).collect(),
+        }
+    }
+
+    fn publish(&self, margins: &[f32]) {
+        for (slot, m) in self.margins.iter().zip(margins) {
+            slot.store(m.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    fn load_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend(self.margins.iter().map(|s| f32::from_bits(s.load(Ordering::Relaxed))));
+    }
+}
+
 /// Handle to the running pipeline.
 pub struct Server {
     ingress: mpsc::Sender<Option<Request>>,
     egress: mpsc::Receiver<Response>,
     batcher_thread: Option<thread::JoinHandle<(u64, u64)>>,
     worker_threads: Vec<thread::JoinHandle<crate::Result<u64>>>,
+    /// QoS controller thread (spawned iff `ServerConfig::qos`); joined
+    /// after the workers so the observation channel is closed by then.
+    qos_thread: Option<thread::JoinHandle<crate::Result<QosReport>>>,
     started: Instant,
     /// Requests accepted so far; `shutdown` drains exactly
     /// `submitted - already_collected - lost` responses instead of
@@ -195,6 +271,42 @@ impl Server {
                 }
             })?;
 
+        // QoS plumbing (only built when enabled — the classic server
+        // pays nothing): shared margin atomics, the per-class counter
+        // block shared by workers (routing) and the QoS thread (shadow
+        // accounting), the BOUNDED shadow-observation channel, and the
+        // stateless per-worker sampler.  The approximator count comes
+        // from the same weights file the workers' model banks load.
+        let (qos_shared, counters, sampler, obs_tx, obs_rx, n_approx) = match &cfg.qos {
+            Some(q) => {
+                q.validate()?;
+                anyhow::ensure!(
+                    cfg.method != Method::Mcca,
+                    "QoS margins are confidence-based and do not apply to \
+                     the MCCA cascade"
+                );
+                let n_approx = WeightsFile::load(&man.weights_path(&bench.name))?
+                    .get(cfg.method.key())?
+                    .approximators
+                    .len();
+                // Bounded: the consumer re-runs the PRECISE function per
+                // observation, which can be far slower than serving.  On
+                // backlog the workers drop the observation (counted) —
+                // the estimator sees a thinner sample, never a stalled
+                // dispatch thread or unbounded memory.
+                let (tx, rx) = mpsc::sync_channel::<ShadowObs>(SHADOW_QUEUE_CAP);
+                (
+                    Some(Arc::new(QosShared::new(n_approx))),
+                    Some(Arc::new(ClassCounters::new(n_approx))),
+                    Some(ShadowSampler::new(q.seed, q.shadow_rate)),
+                    Some(tx),
+                    Some(rx),
+                    n_approx,
+                )
+            }
+            None => (None, None, None, None, None, 0),
+        };
+
         let lost = Arc::new(AtomicU64::new(0));
         let mut worker_threads = Vec::new();
         for w in 0..cfg.workers.max(1) {
@@ -204,6 +316,9 @@ impl Server {
             let out_tx = out_tx.clone();
             let stop_tx = stop_tx.clone();
             let lost = Arc::clone(&lost);
+            let counters = counters.clone();
+            let qos_shared = qos_shared.clone();
+            let obs_tx = obs_tx.clone();
             let cfg = cfg.clone();
             worker_threads.push(
                 thread::Builder::new()
@@ -225,6 +340,7 @@ impl Server {
                         let dispatcher =
                             Dispatcher::new(&bench, &bank, cfg.method, cfg.exec)?;
                         let mut batches = 0u64;
+                        let d_in = bench.n_in;
                         let d_out = bench.n_out;
                         // Worker-owned hot-path arena: plan, outputs and
                         // every intermediate buffer are reused across
@@ -233,6 +349,9 @@ impl Server {
                         let mut scratch = super::dispatcher::Scratch::new();
                         let mut plan = super::router::RoutePlan::default();
                         let mut y: Vec<f32> = Vec::new();
+                        // Per-batch snapshot of the published QoS margins
+                        // (reused buffer; one relaxed load per class).
+                        let mut margins: Vec<f32> = Vec::new();
                         loop {
                             let msg = { batch_rx.lock().unwrap().recv() };
                             match msg {
@@ -246,8 +365,16 @@ impl Server {
                                         lost: &lost,
                                         remaining: batch.ids.len() as u64,
                                     };
-                                    dispatcher.process_batch_into(
+                                    let margin_view = match &qos_shared {
+                                        Some(sh) => {
+                                            sh.load_into(&mut margins);
+                                            Some(margins.as_slice())
+                                        }
+                                        None => None,
+                                    };
+                                    dispatcher.process_batch_with_margins_into(
                                         &batch,
+                                        margin_view,
                                         &mut plan,
                                         &mut y,
                                         &mut scratch,
@@ -266,6 +393,37 @@ impl Server {
                                         guard.remaining -= 1;
                                     }
                                     debug_assert_eq!(guard.remaining, 0);
+                                    if let Some(c) = &counters {
+                                        c.record_plan(&plan);
+                                    }
+                                    // Shadow selection AFTER the responses
+                                    // left: the id-hash pick is the only
+                                    // per-sample QoS cost on this thread.
+                                    // `try_send` never blocks dispatch; a
+                                    // full queue drops the observation
+                                    // (counted).
+                                    if let (Some(tx), Some(s), Some(c)) =
+                                        (&obs_tx, &sampler, &counters)
+                                    {
+                                        for (j, &id) in batch.ids.iter().enumerate() {
+                                            if let Route::Approx(k) = plan.routes[j] {
+                                                if s.pick(id) {
+                                                    let obs = ShadowObs {
+                                                        class: k,
+                                                        x_raw: batch.x_raw
+                                                            [j * d_in..(j + 1) * d_in]
+                                                            .to_vec(),
+                                                        y_served: y
+                                                            [j * d_out..(j + 1) * d_out]
+                                                            .to_vec(),
+                                                    };
+                                                    if tx.try_send(obs).is_err() {
+                                                        c.record_shadow_dropped();
+                                                    }
+                                                }
+                                            }
+                                        }
+                                    }
                                 }
                                 Ok(BatchMsg::Stop) | Err(_) => {
                                     let _ = stop_tx.send(BatchMsg::Stop);
@@ -277,11 +435,77 @@ impl Server {
             );
         }
 
+        // Only workers hold observation senders now, so the QoS thread's
+        // recv loop ends exactly when the last worker exits.
+        drop(obs_tx);
+
+        // The QoS thread: precise re-execution, error estimation and the
+        // control law all live here — never on a dispatch worker.
+        let qos_thread = match (cfg.qos, obs_rx, &qos_shared, &counters) {
+            (Some(q), Some(obs_rx), Some(shared), Some(counters)) => {
+                let bench = Arc::clone(&bench);
+                let shared = Arc::clone(shared);
+                let counters = Arc::clone(counters);
+                Some(
+                    thread::Builder::new()
+                        .name("mcma-qos".into())
+                        .spawn(move || -> crate::Result<QosReport> {
+                            let benchfn = crate::benchmarks::by_name(&bench.name)?;
+                            let mut ctrl = Controller::new(q, n_approx);
+                            let mut raw = vec![0.0f64; bench.n_out];
+                            let mut y_precise = vec![0.0f32; bench.n_out];
+                            let mut margins: Vec<f32> = Vec::new();
+                            loop {
+                                match obs_rx.recv_timeout(BREAKER_IDLE_TICK) {
+                                    Ok(obs) => {
+                                        benchfn.eval(&obs.x_raw, &mut raw);
+                                        bench.normalize_y_into(&raw, &mut y_precise);
+                                        let err =
+                                            crate::qos::row_rmse(&obs.y_served, &y_precise);
+                                        counters.record_shadow(obs.class);
+                                        ctrl.observe(obs.class, err);
+                                        if ctrl.maybe_tick() {
+                                            ctrl.margins_into(&mut margins);
+                                            shared.publish(&margins);
+                                        }
+                                    }
+                                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                                        // An open breaker suppresses the very
+                                        // observations that drive ticks (its
+                                        // class is forced precise), so its
+                                        // cooldown must elapse on wall-clock
+                                        // or it would stay open forever.
+                                        // Idle ticks judge only classes with
+                                        // fresh observations; with none in
+                                        // flight they purely advance breaker
+                                        // cooldowns.
+                                        if ctrl.any_breaker_open() {
+                                            ctrl.tick();
+                                            ctrl.margins_into(&mut margins);
+                                            shared.publish(&margins);
+                                        }
+                                    }
+                                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                                }
+                            }
+                            let mut report = ctrl.report(
+                                Some(&counters.snapshot_shadow()),
+                                Some(&counters.snapshot_invoked()),
+                            );
+                            report.shadow_dropped = counters.shadow_dropped();
+                            Ok(report)
+                        })?,
+                )
+            }
+            _ => None,
+        };
+
         Ok(Server {
             ingress: in_tx,
             egress: out_rx,
             batcher_thread: Some(batcher_thread),
             worker_threads,
+            qos_thread,
             started: Instant::now(),
             submitted: AtomicU64::new(0),
             lost,
@@ -348,26 +572,34 @@ impl Server {
                 .join()
                 .map_err(|_| anyhow::anyhow!("dispatch thread panicked"))??;
         }
+        // Workers have exited, so every shadow-observation sender is gone
+        // and the QoS thread's recv loop has drained; join it for the
+        // controller's final report.
+        let qos = match self.qos_thread.take() {
+            Some(h) => Some(
+                h.join()
+                    .map_err(|_| anyhow::anyhow!("qos thread panicked"))??,
+            ),
+            None => None,
+        };
         let wall = self.started.elapsed();
         let mut latency = LatencyStats::default();
-        let mut invoked = 0u64;
-        let mut cpu = 0u64;
+        let mut per_route = PerRouteReport::default();
         for r in &collected {
             latency.push(r.latency_us);
-            match r.route {
-                Route::Approx(_) => invoked += 1,
-                Route::Cpu => cpu += 1,
-            }
+            per_route.push(r.route, r.latency_us);
         }
         Ok(ServerReport {
             served: collected.len() as u64,
-            invoked,
-            cpu,
+            invoked: per_route.invoked(),
+            cpu: per_route.cpu.count,
             wall,
             latency,
             flushes_full: full,
             flushes_timeout: timeout,
             batches,
+            per_route,
+            qos,
         })
     }
 }

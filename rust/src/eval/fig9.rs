@@ -1,6 +1,12 @@
 //! Fig. 9: invocation per training iteration, complementary vs competitive
-//! (Bessel) — read from the build-time trajectories the Python trainer
-//! records in `train_stats.json`.
+//! (Bessel).
+//!
+//! Primary source: the build-time trajectories the Python trainer records
+//! in `train_stats.json`.  Fallback: when that file is absent (a
+//! standalone Rust-built tree), the native trainer's `RoundStats`
+//! trajectory — written by `mcma train` to `train_stats_rust.json` in the
+//! same `{bench: {method: [{invocation: ...}, ...]}}` schema — is read
+//! instead, so the figure renders from either provenance.
 
 use crate::bench_harness::{pct, Table};
 use crate::util::json;
@@ -11,10 +17,37 @@ pub struct Fig9 {
     /// method -> per-iteration invocation.
     pub series: Vec<(String, Vec<f64>)>,
     pub bench: String,
+    /// Which stats file the series came from.
+    pub source: &'static str,
 }
 
+/// Stats files probed in order; both use the same schema.
+const SOURCES: [(&str, &str); 2] = [
+    ("train_stats.json", "python"),
+    ("train_stats_rust.json", "native RoundStats"),
+];
+
 pub fn run(ctx: &Context, bench: &str) -> crate::Result<Fig9> {
-    let v = json::parse_file(&ctx.man.root.join("train_stats.json"))?;
+    let mut errors = Vec::new();
+    for (file, source) in SOURCES {
+        match from_stats_file(ctx, bench, file, source) {
+            Ok(f) => return Ok(f),
+            Err(e) => errors.push(format!("{e:#}")),
+        }
+    }
+    // Both probes failed; report both causes (the python file existing
+    // but lacking the bench is the informative one — don't mask it with
+    // the expected absence of the fallback file).
+    anyhow::bail!("no fig9 trajectory for {bench}: {}", errors.join("; "))
+}
+
+fn from_stats_file(
+    ctx: &Context,
+    bench: &str,
+    file: &str,
+    source: &'static str,
+) -> crate::Result<Fig9> {
+    let v = json::parse_file(&ctx.man.root.join(file))?;
     let b = v.req(bench)?;
     let mut series = Vec::new();
     for key in ["mcma_complementary", "mcma_competitive"] {
@@ -26,8 +59,8 @@ pub fn run(ctx: &Context, bench: &str) -> crate::Result<Fig9> {
             series.push((key.to_string(), invs));
         }
     }
-    anyhow::ensure!(!series.is_empty(), "no MCMA trajectories for {bench}");
-    Ok(Fig9 { series, bench: bench.to_string() })
+    anyhow::ensure!(!series.is_empty(), "no MCMA trajectories for {bench} in {file}");
+    Ok(Fig9 { series, bench: bench.to_string(), source })
 }
 
 impl Fig9 {
@@ -36,7 +69,10 @@ impl Fig9 {
         let mut header = vec!["method".to_string()];
         header.extend((0..iters).map(|i| format!("iter {i}")));
         let mut t = Table::new(
-            &format!("Fig 9: invocation per training iteration ({})", self.bench),
+            &format!(
+                "Fig 9: invocation per training iteration ({}, {})",
+                self.bench, self.source
+            ),
             &header.iter().map(String::as_str).collect::<Vec<_>>(),
         );
         for (name, s) in &self.series {

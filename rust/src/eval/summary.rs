@@ -114,6 +114,93 @@ pub fn quantized_table(rows: &[QuantRow]) -> Table {
     t
 }
 
+/// One benchmark's fixed-threshold vs adaptive-margin QoS comparison.
+pub struct QosDeltaRow {
+    pub bench: String,
+    pub method: Method,
+    /// Quality target the controller held (the offline error bound).
+    pub target: f64,
+    pub invocation_argmax: f64,
+    pub invocation_fixed: f64,
+    pub invocation_adaptive: f64,
+    /// The single conservative threshold the fixed baseline needs
+    /// (`>= 2` means a breaker trip forced it fully precise).
+    pub global_margin: f32,
+    pub violations: u64,
+    pub trips: u64,
+}
+
+/// Runtime-QoS scenario axis: replay the online quality loop
+/// (`qos::simulate`) over every benchmark's held-out set at the OFFLINE
+/// quality target (the manifest error bound), and compare the invocation
+/// a single conservative global confidence threshold achieves against
+/// adaptive per-class margins holding the same target.  The adaptive
+/// column is >= the fixed column by construction (see `qos::sim`); the
+/// gap is the per-class headroom the paper's nonuniform-error
+/// observation predicts.
+pub fn qos_deltas(ctx: &Context) -> crate::Result<Vec<QosDeltaRow>> {
+    let mut rows = Vec::new();
+    for name in ctx.man.bench_names_ordered() {
+        let bench = ctx.man.bench(&name)?.clone();
+        let method = [
+            Method::McmaCompetitive,
+            Method::McmaComplementary,
+            Method::OnePass,
+        ]
+        .into_iter()
+        .find(|m| bench.methods.iter().any(|k| k == m.key()));
+        let Some(method) = method else { continue };
+        let bank = ctx.bank(&bench, &[method])?;
+        let ds = ctx.dataset(&name)?;
+        // Offline runs can afford a dense shadow rate; target = the
+        // benchmark's own error bound (the paper's quality guarantee).
+        let qos = crate::qos::QosConfig {
+            target: bench.error_bound,
+            shadow_rate: 0.25,
+            ..crate::qos::QosConfig::default()
+        };
+        let d = Dispatcher::new(&bench, &bank, method, ExecMode::Native)?;
+        let sim = crate::qos::simulate(&d, &ds, &qos, 256)?;
+        rows.push(QosDeltaRow {
+            bench: name.clone(),
+            method,
+            target: qos.target,
+            invocation_argmax: sim.invocation_argmax,
+            invocation_fixed: sim.invocation_fixed,
+            invocation_adaptive: sim.invocation_adaptive,
+            global_margin: sim.global_margin,
+            violations: sim.report.total_violations(),
+            trips: sim.report.total_trips(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render [`qos_deltas`] as a paper-style table.
+pub fn qos_table(rows: &[QosDeltaRow]) -> Table {
+    let mut t = Table::new(
+        "Runtime QoS axis: fixed global threshold vs adaptive per-class \
+         margins (target = error bound, p95)",
+        &["benchmark", "method", "target", "inv argmax", "global τ", "inv fixed τ",
+          "inv adaptive", "Δ adp-fix", "violations", "trips"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.bench.clone(),
+            r.method.label().into(),
+            format!("{:.3}", r.target),
+            pct(r.invocation_argmax),
+            if r.global_margin >= 2.0 { "precise".into() } else { format!("{:.3}", r.global_margin) },
+            pct(r.invocation_fixed),
+            pct(r.invocation_adaptive),
+            format!("{:+.1}pp", 100.0 * (r.invocation_adaptive - r.invocation_fixed)),
+            r.violations.to_string(),
+            r.trips.to_string(),
+        ]);
+    }
+    t
+}
+
 /// One benchmark's Python-trained vs Rust-trained serving comparison.
 pub struct RustTrainRow {
     pub bench: String,

@@ -25,6 +25,11 @@
 //!   batcher, multiclass router, MCCA cascade, weight-switch cache,
 //!   dispatcher, threaded pipeline server, metrics.
 //! * [`npu`] — cycle-level NPU simulator + energy model (Fig. 8).
+//! * [`qos`] — online quality control: deterministic shadow sampling of
+//!   approximated requests against the precise function, per-class
+//!   windowed error estimation, and an adaptive per-class invocation
+//!   controller (margins + hysteresis + circuit breaker) the server
+//!   hosts at serve time.
 //! * [`train`] — native co-training: minibatch backprop through the packed
 //!   GEMM kernels, the paper's partition-refinement loop, and MCMW/MCQW/
 //!   MCMD artifact export — no Python anywhere in the train loop either.
@@ -50,6 +55,7 @@ pub mod eval;
 pub mod formats;
 pub mod nn;
 pub mod npu;
+pub mod qos;
 pub mod runtime;
 pub mod train;
 pub mod util;

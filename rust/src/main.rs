@@ -49,6 +49,9 @@ fn run(args: Args) -> mcma::Result<()> {
             eval::summary::run(&ctx)?.table().print();
             let rows = eval::summary::quantized_deltas(&ctx)?;
             eval::summary::quantized_table(&rows).print();
+            // Fixed-vs-adaptive invocation under the online QoS loop.
+            let qos_rows = eval::summary::qos_deltas(&ctx)?;
+            eval::summary::qos_table(&qos_rows).print();
             // Python-trained vs Rust-trained comparison (only when `mcma
             // train` has written weights_rust.bin artifacts).
             let rust_rows = eval::summary::rust_trained_deltas(&ctx)?;
@@ -165,7 +168,9 @@ fn figure(args: &Args) -> mcma::Result<()> {
         eval::fig7c::run(&ctx)?.table().print();
     }
     if wants("9") {
-        eval::fig9::run(&ctx, "bessel")?.table().print();
+        // Default to the paper's Bessel run; `--bench` retargets (e.g. at
+        // a standalone Rust-trained tree with a different benchmark).
+        eval::fig9::run(&ctx, &args.opt_or("bench", "bessel"))?.table().print();
     }
     if wants("10") {
         let f10 = eval::fig10::run(&ctx, Method::McmaCompetitive)?;
@@ -214,6 +219,25 @@ fn eval_cmd(args: &Args) -> mcma::Result<()> {
     Ok(())
 }
 
+/// `--qos-*` flags -> controller config (`None` without `--qos-target`).
+fn qos_config(args: &Args) -> mcma::Result<Option<mcma::qos::QosConfig>> {
+    let Some(target) = args.opt("qos-target") else { return Ok(None) };
+    let target: f64 = target
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--qos-target expects a number, got {target:?}"))?;
+    let defaults = mcma::qos::QosConfig::default();
+    let qos = mcma::qos::QosConfig {
+        target,
+        quantile: args.opt_f64("qos-quantile", defaults.quantile)?,
+        shadow_rate: args.opt_f64("qos-shadow", defaults.shadow_rate)?,
+        window: args.opt_usize("qos-window", defaults.window)?,
+        seed: args.opt_usize("qos-seed", defaults.seed as usize)? as u64,
+        ..defaults
+    };
+    qos.validate()?;
+    Ok(Some(qos))
+}
+
 fn serve_cmd(args: &Args) -> mcma::Result<()> {
     let bench_name = args
         .opt("bench")
@@ -221,6 +245,7 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     let method = Method::from_str(&args.opt_or("method", "mcma_competitive"))?;
     let n_requests = args.opt_usize("requests", 5_000)?;
     let cfg = run_config(args)?;
+    let qos = qos_config(args)?;
     let policy = BatchPolicy {
         max_batch: args.opt_usize("batch", 256)?,
         max_wait_us: args.opt_usize("wait-us", 2_000)? as u64,
@@ -236,6 +261,7 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         {
             let mut sc = ServerConfig::new(policy, method, cfg.exec);
             sc.workers = args.opt_usize("n", 1)?;
+            sc.qos = qos;
             sc
         },
     )?;
@@ -254,6 +280,36 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
              report.batches, report.flushes_full, report.flushes_timeout);
     println!("latency p50/p95/p99 : {:.0} / {:.0} / {:.0} µs",
              report.latency.p50(), report.latency.p95(), report.latency.p99());
+    // Per-route breakdown (per-class invocation + latency counters).
+    let mut rt = Table::new(
+        "Per-route counters",
+        &["route", "served", "share", "latency p50 µs", "p95 µs"],
+    );
+    for (k, c) in report.per_route.classes.iter().enumerate() {
+        rt.row(vec![
+            format!("A{k}"),
+            c.count.to_string(),
+            pct(c.count as f64 / report.served.max(1) as f64),
+            format!("{:.0}", c.latency.p50()),
+            format!("{:.0}", c.latency.p95()),
+        ]);
+    }
+    rt.row(vec![
+        "cpu".into(),
+        report.per_route.cpu.count.to_string(),
+        pct(report.per_route.cpu.count as f64 / report.served.max(1) as f64),
+        format!("{:.0}", report.per_route.cpu.latency.p50()),
+        format!("{:.0}", report.per_route.cpu.latency.p95()),
+    ]);
+    rt.print();
+    if let Some(q) = &report.qos {
+        q.table().print();
+        println!("qos shadow samples : {} ({} dropped to backpressure)",
+                 q.total_shadow(), q.shadow_dropped);
+        println!("qos ticks          : {}", q.ticks);
+        println!("qos violations     : {} (breaker trips {})",
+                 q.total_violations(), q.total_trips());
+    }
     anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
     Ok(())
 }

@@ -1,0 +1,177 @@
+//! Online per-class error estimation: a fixed-capacity sliding window of
+//! the most recent shadow-observed errors, plus an EWMA for a smoothed
+//! central tendency.
+//!
+//! The window (not a lifetime accumulator) is what makes the controller
+//! drift-aware: if the input distribution moves and an approximator's
+//! error regime changes, old observations age out after `capacity` more
+//! arrivals and the quantile reflects the new regime.  Quantiles are
+//! computed on demand (controller tick, off the request hot path) by
+//! sorting into a reused scratch buffer — no allocation in steady state.
+
+use crate::util::stats;
+
+/// Sliding window of recent error observations for ONE class.
+#[derive(Clone, Debug)]
+pub struct ErrorWindow {
+    buf: Vec<f64>,
+    capacity: usize,
+    head: usize,
+    len: usize,
+    /// Lifetime observation count (never resets on `clear`).
+    total: u64,
+    ewma: f64,
+    alpha: f64,
+    /// Reused by `quantile` so ticks allocate nothing once warm.
+    scratch: Vec<f64>,
+}
+
+impl ErrorWindow {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1);
+        ErrorWindow {
+            buf: Vec::with_capacity(capacity),
+            capacity,
+            head: 0,
+            len: 0,
+            total: 0,
+            ewma: 0.0,
+            // ~window-length memory for the smoothed mean.
+            alpha: 2.0 / (capacity as f64 + 1.0),
+            scratch: Vec::with_capacity(capacity),
+        }
+    }
+
+    pub fn push(&mut self, err: f64) {
+        if self.buf.len() < self.capacity {
+            self.buf.push(err);
+        } else {
+            self.buf[self.head] = err;
+        }
+        self.head = (self.head + 1) % self.capacity;
+        self.len = (self.len + 1).min(self.capacity);
+        self.ewma = if self.total == 0 {
+            err
+        } else {
+            self.ewma + self.alpha * (err - self.ewma)
+        };
+        self.total += 1;
+    }
+
+    /// Observations currently in the window.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Lifetime observations (survives `clear`).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn ewma(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Linear-interpolated quantile of the CURRENT window, `q` in [0, 1].
+    /// 0 for an empty window.  `&mut` only for the reused sort scratch.
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.buf[..self.len]);
+        self.scratch
+            .sort_by(|a, b| a.partial_cmp(b).expect("error observations are finite"));
+        stats::percentile_sorted(&self.scratch, q * 100.0)
+    }
+
+    /// Drop the windowed contents (breaker recovery starts from fresh
+    /// evidence); the lifetime `total` and EWMA survive.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_matches_batch_percentile() {
+        let mut w = ErrorWindow::new(128);
+        let xs: Vec<f64> = (0..100).map(|i| ((i * 37) % 100) as f64 / 100.0).collect();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.quantile(0.95) - stats::percentile(&xs, 95.0)).abs() < 1e-12);
+        assert!((w.quantile(0.5) - stats::percentile(&xs, 50.0)).abs() < 1e-12);
+        assert_eq!(w.len(), 100);
+        assert_eq!(w.total(), 100);
+    }
+
+    /// Old observations age out: after `capacity` pushes from a new
+    /// regime, the quantile reflects ONLY the new regime.
+    #[test]
+    fn window_evicts_old_regime() {
+        let mut w = ErrorWindow::new(16);
+        for _ in 0..16 {
+            w.push(1.0);
+        }
+        assert!(w.quantile(0.95) > 0.99);
+        for _ in 0..16 {
+            w.push(0.01);
+        }
+        assert!(w.quantile(0.95) < 0.02, "old regime still visible");
+        assert_eq!(w.len(), 16);
+        assert_eq!(w.total(), 32);
+    }
+
+    #[test]
+    fn partial_fill_ring_wrap() {
+        let mut w = ErrorWindow::new(4);
+        assert_eq!(w.quantile(0.5), 0.0);
+        w.push(3.0);
+        assert_eq!(w.quantile(0.5), 3.0);
+        for x in [1.0, 2.0, 4.0, 5.0, 6.0] {
+            w.push(x);
+        }
+        // Window now holds the last 4: {2, 4, 5, 6}.
+        assert_eq!(w.len(), 4);
+        assert_eq!(w.quantile(0.0), 2.0);
+        assert_eq!(w.quantile(1.0), 6.0);
+    }
+
+    #[test]
+    fn ewma_tracks_level() {
+        let mut w = ErrorWindow::new(32);
+        for _ in 0..200 {
+            w.push(0.5);
+        }
+        assert!((w.ewma() - 0.5).abs() < 1e-9);
+        for _ in 0..200 {
+            w.push(1.5);
+        }
+        assert!((w.ewma() - 1.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn clear_keeps_lifetime_total() {
+        let mut w = ErrorWindow::new(8);
+        for _ in 0..5 {
+            w.push(1.0);
+        }
+        w.clear();
+        assert_eq!(w.len(), 0);
+        assert_eq!(w.total(), 5);
+        assert_eq!(w.quantile(0.95), 0.0);
+        w.push(2.0);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w.total(), 6);
+    }
+}

@@ -1,0 +1,186 @@
+//! Online QoS subsystem — closes the quality loop at serve time.
+//!
+//! The paper's guarantee ("maximize invocation subject to an error bound")
+//! is enforced offline: the classifier's routing is frozen at train time
+//! and the serving pipeline never observes the quality it actually
+//! delivers.  This module adds the missing control plane over the existing
+//! data plane:
+//!
+//! ```text
+//!                 requests ──► Batcher ──► Dispatcher (margins m_k) ──► responses
+//!                                              │ invoked samples
+//!                       ShadowSampler.pick(id) │ (deterministic id hash)
+//!                                              ▼
+//!                   precise BenchFn ──► per-class ErrorWindow (quantile/EWMA)
+//!                                              │ every tick_every obs
+//!                                              ▼
+//!        Controller: q_k > target  ⇒ m_k += step   (tighten, count violation)
+//!                    q_k < 0.7·tgt ⇒ m_k -= step/2 (relax; hysteresis band holds)
+//!                    sustained violation ⇒ circuit breaker ⇒ class k precise
+//!                                              │
+//!                                              ▼ publish (atomic f32 bits)
+//!                              per-class margin overrides read by the router
+//! ```
+//!
+//! * [`shadow`] — stateless, seeded hash sampler: whether request `id` is
+//!   shadow-verified is a pure function of `(seed, id)`, so the sampled
+//!   set is bit-identical across worker counts and batch shapes;
+//! * [`estimator`] — per-class windowed error statistics (ring-buffer
+//!   quantile + EWMA) so drift ages out of the estimate;
+//! * [`controller`] — the adaptive invocation controller: per-class
+//!   confidence margins with hysteresis and a trip/half-open/closed
+//!   circuit breaker, published to the hot path as relaxed atomics;
+//! * [`sim`] — offline replay of the whole loop over a
+//!   `formats::Dataset`, powering the `mcma summary` fixed-vs-adaptive
+//!   table and the determinism/monotonicity tests.
+//!
+//! Errors are per-sample RMSE in normalised output space — the same
+//! metric `coordinator::metrics` scores offline runs with, so `--qos-target`
+//! is directly comparable to the manifest's `error_bound`.
+
+pub mod controller;
+pub mod estimator;
+pub mod shadow;
+pub mod sim;
+
+pub use controller::{Controller, QosReport, MARGIN_PRECISE};
+pub use estimator::ErrorWindow;
+pub use shadow::ShadowSampler;
+pub use sim::{simulate, QosSimResult};
+
+/// Configuration of the online QoS loop (`mcma serve --qos-*`).
+#[derive(Clone, Copy, Debug)]
+pub struct QosConfig {
+    /// Quality target: the controller holds the per-class error quantile
+    /// at or below this value (same normalised-RMSE scale as the
+    /// manifest's `error_bound`).
+    pub target: f64,
+    /// Which quantile of the shadow-observed error is controlled
+    /// (0.95 = "p95 rel-err ≤ target").
+    pub quantile: f64,
+    /// Fraction of *approximated* requests re-run through the precise
+    /// `BenchFn` for ground truth (off the request hot path).
+    pub shadow_rate: f64,
+    /// Seed of the deterministic shadow sampler.
+    pub seed: u64,
+    /// Per-class sliding window length for the error estimator.
+    pub window: usize,
+    /// Minimum shadow observations in a class's window before the
+    /// controller adjusts that class (no evidence, no movement).
+    pub min_obs: usize,
+    /// Shadow observations between control ticks.
+    pub tick_every: u64,
+    /// Margin increment on a violating tick; relaxation uses `step / 2`
+    /// so the controller backs off slower than it tightens.
+    pub step: f32,
+    /// Relax only when the observed quantile falls below
+    /// `relax_frac * target`; between that and `target` the margin holds
+    /// (the hysteresis dead band).
+    pub relax_frac: f64,
+    /// Consecutive violating ticks before the circuit breaker trips the
+    /// class to the precise path.
+    pub breaker_trip: u32,
+    /// Ticks a tripped class stays forced-precise before a half-open
+    /// retry at `margin_max`.
+    pub breaker_cooldown: u32,
+    /// Margin ceiling while the breaker is closed.  A class pinned at
+    /// the ceiling that keeps violating still accrues consecutive
+    /// violations and trips the breaker after `breaker_trip` ticks.
+    pub margin_max: f32,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            target: 0.1,
+            quantile: 0.95,
+            shadow_rate: 0.05,
+            seed: 0x5AD0,
+            window: 256,
+            min_obs: 32,
+            tick_every: 64,
+            step: 0.05,
+            relax_frac: 0.7,
+            breaker_trip: 4,
+            breaker_cooldown: 8,
+            margin_max: 0.98,
+        }
+    }
+}
+
+impl QosConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.target > 0.0, "--qos-target must be > 0");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.quantile),
+            "--qos-quantile must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.shadow_rate),
+            "--qos-shadow must be in [0, 1]"
+        );
+        anyhow::ensure!(self.window >= 2, "--qos-window must be >= 2");
+        anyhow::ensure!(self.min_obs >= 1, "qos min_obs must be >= 1");
+        anyhow::ensure!(self.tick_every >= 1, "qos tick_every must be >= 1");
+        anyhow::ensure!(self.step > 0.0, "qos step must be > 0");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.relax_frac),
+            "qos relax_frac must be in [0, 1)"
+        );
+        anyhow::ensure!(self.breaker_trip >= 1, "qos breaker_trip must be >= 1");
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.margin_max),
+            "qos margin_max must be in [0, 1)"
+        );
+        Ok(())
+    }
+}
+
+/// Per-sample RMSE between two normalised output rows (the quality metric
+/// shadow observations are scored with; allocation-free).
+pub fn row_rmse(served: &[f32], precise: &[f32]) -> f64 {
+    debug_assert_eq!(served.len(), precise.len());
+    if served.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (a, b) in served.iter().zip(precise) {
+        let d = *a as f64 - *b as f64;
+        acc += d * d;
+    }
+    (acc / served.len() as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_validates() {
+        QosConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = QosConfig { target: 0.0, ..QosConfig::default() };
+        assert!(c.validate().is_err());
+        c = QosConfig { quantile: 1.5, ..QosConfig::default() };
+        assert!(c.validate().is_err());
+        c = QosConfig { shadow_rate: -0.1, ..QosConfig::default() };
+        assert!(c.validate().is_err());
+        c = QosConfig { margin_max: 1.0, ..QosConfig::default() };
+        assert!(c.validate().is_err());
+        c = QosConfig { window: 1, ..QosConfig::default() };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn row_rmse_matches_hand_calc() {
+        assert_eq!(row_rmse(&[], &[]), 0.0);
+        let e = row_rmse(&[1.0, 2.0], &[1.0, 0.0]);
+        assert!((e - (4.0f64 / 2.0).sqrt()).abs() < 1e-12);
+        // Agrees with the batch metric used offline.
+        let batch = crate::nn::per_sample_rmse(&[1.0, 2.0], &[1.0, 0.0], 1, 2);
+        assert!((e - batch[0]).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,114 @@
+//! Deterministic shadow sampling: which approximated requests get
+//! re-verified against the precise function.
+//!
+//! The decision is a pure function of `(seed, request id)` — a SplitMix64
+//! finalizer hashed against a rate threshold — NOT a stateful RNG stream.
+//! That makes the sampled set bit-identical no matter how requests are
+//! batched, which dispatch worker handles them, or in what order they
+//! arrive: the determinism the QoS acceptance tests pin across thread
+//! counts.  It is also unbiased per request (each id is an independent
+//! Bernoulli draw at `rate`), so the per-class error estimate is an
+//! unbiased sample of the errors actually served.
+
+/// Stateless seeded sampler; `Copy` so every dispatch worker carries its
+/// own by value (no sharing, no locks).
+#[derive(Clone, Copy, Debug)]
+pub struct ShadowSampler {
+    seed: u64,
+    /// `pick` iff `hash(seed, id) < threshold`; `u64::MAX` means "always"
+    /// (the `rate >= 1.0` case is handled exactly via `all`).
+    threshold: u64,
+    all: bool,
+}
+
+use crate::util::rng::splitmix64;
+
+impl ShadowSampler {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        let rate = rate.clamp(0.0, 1.0);
+        ShadowSampler {
+            seed,
+            // f64 -> u64 `as` saturates, so rate = 1.0 maps to u64::MAX;
+            // the `all` flag closes the one-in-2^64 gap exactly.
+            threshold: (rate * u64::MAX as f64) as u64,
+            all: rate >= 1.0,
+        }
+    }
+
+    /// Should request `id` be shadow-verified?  Pure in `(seed, id)`.
+    #[inline]
+    pub fn pick(&self, id: u64) -> bool {
+        self.all
+            || splitmix64(self.seed ^ id.wrapping_mul(0xA24B_AED4_963E_E407))
+                < self.threshold
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_id() {
+        let a = ShadowSampler::new(7, 0.1);
+        let b = ShadowSampler::new(7, 0.1);
+        for id in 0..10_000 {
+            assert_eq!(a.pick(id), b.pick(id));
+        }
+    }
+
+    /// The sampled set is a function of ids only — partitioning the id
+    /// space across any number of workers, in any order, yields the same
+    /// picks (the thread-count determinism the server relies on).
+    #[test]
+    fn order_and_partition_invariant() {
+        let s = ShadowSampler::new(0x5AD0, 0.2);
+        let forward: Vec<u64> = (0..4096).filter(|&id| s.pick(id)).collect();
+        // "Two workers": evens then odds, reversed.
+        let mut interleaved: Vec<u64> = (0..4096)
+            .rev()
+            .filter(|id| id % 2 == 0)
+            .chain((0..4096).rev().filter(|id| id % 2 == 1))
+            .filter(|&id| s.pick(id))
+            .collect();
+        interleaved.sort_unstable();
+        assert_eq!(forward, interleaved);
+    }
+
+    #[test]
+    fn rate_is_approximately_honoured() {
+        for &rate in &[0.01, 0.05, 0.25, 0.5] {
+            let s = ShadowSampler::new(42, rate);
+            let n = 100_000u64;
+            let hits = (0..n).filter(|&id| s.pick(id)).count() as f64;
+            let got = hits / n as f64;
+            assert!(
+                (got - rate).abs() < 0.01,
+                "rate {rate}: sampled {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_rates() {
+        let never = ShadowSampler::new(1, 0.0);
+        let always = ShadowSampler::new(1, 1.0);
+        for id in 0..1000 {
+            assert!(!never.pick(id));
+            assert!(always.pick(id));
+        }
+    }
+
+    #[test]
+    fn different_seeds_sample_different_sets() {
+        let a = ShadowSampler::new(1, 0.5);
+        let b = ShadowSampler::new(2, 0.5);
+        let pa: Vec<bool> = (0..64).map(|id| a.pick(id)).collect();
+        let pb: Vec<bool> = (0..64).map(|id| b.pick(id)).collect();
+        assert_ne!(pa, pb);
+    }
+}

@@ -1,0 +1,155 @@
+//! Offline replay of the QoS loop — the whole shadow-sample → estimate →
+//! adapt cycle run over a held-out [`Dataset`] in arrival-order batches.
+//!
+//! This is how the fixed-vs-adaptive question is answered measurably
+//! (`mcma summary`): stream the test set through the dispatcher with the
+//! controller adapting per-class margins, then evaluate two fixed
+//! baselines on the identical data:
+//!
+//! * **argmax** — the paper's routing, margins all zero;
+//! * **fixed global threshold** — ONE conservative confidence threshold,
+//!   set to the tightest margin ANY class needed at ANY point of the
+//!   adaptive run (what a single static knob must use to protect the
+//!   worst class).
+//!
+//! Because the per-sample argmax class and confidence do not depend on
+//! margins (margins only demote to the precise path), every sample the
+//! adaptive run demotes is also demoted under the global threshold —
+//! so `invocation_adaptive >= invocation_fixed` holds structurally, and
+//! the gap IS the per-class headroom the paper's nonuniform-error
+//! observation predicts.
+//!
+//! The whole replay is bit-deterministic for a fixed seed across thread
+//! counts: batches are processed sequentially, the f32 native forward is
+//! chunking-exact, and shadow selection is a pure id hash.
+
+use crate::coordinator::{Dispatcher, Route, RoutePlan, Scratch};
+use crate::formats::Dataset;
+
+use super::controller::{Controller, QosReport};
+use super::shadow::ShadowSampler;
+use super::{row_rmse, QosConfig};
+
+/// Outcome of one adaptive replay plus its fixed baselines.
+#[derive(Clone, Debug)]
+pub struct QosSimResult {
+    pub bench: String,
+    pub method: String,
+    pub n: usize,
+    pub batch: usize,
+    /// Invocation under pure argmax routing (margins all zero).
+    pub invocation_argmax: f64,
+    /// Invocation under the single conservative global threshold.
+    pub invocation_fixed: f64,
+    /// Invocation actually achieved by the adaptive controller over the
+    /// stream (including its cold start and any breaker excursions).
+    pub invocation_adaptive: f64,
+    /// The global threshold the fixed baseline had to use: the peak
+    /// effective margin any class reached during the adaptive run
+    /// ([`super::MARGIN_PRECISE`] if a breaker ever tripped).
+    pub global_margin: f32,
+    pub final_margins: Vec<f32>,
+    pub report: QosReport,
+}
+
+impl QosSimResult {
+    /// Adaptive-minus-fixed invocation gap (≥ 0 by construction).
+    pub fn headroom(&self) -> f64 {
+        self.invocation_adaptive - self.invocation_fixed
+    }
+}
+
+/// Whole-set invocation under one (possibly margin-overridden) plan.
+fn plan_invocation(
+    d: &Dispatcher,
+    x_norm: &[f32],
+    n: usize,
+    margins: Option<&[f32]>,
+) -> crate::Result<f64> {
+    let mut plan = RoutePlan::default();
+    let mut scratch = Scratch::new();
+    d.plan_with_margins_into(x_norm, n, margins, &mut plan, &mut scratch)?;
+    Ok(plan.invocation())
+}
+
+/// Replay the QoS loop over `ds` through `d` in `batch`-row arrival-order
+/// batches (see module docs).
+pub fn simulate(
+    d: &Dispatcher,
+    ds: &Dataset,
+    qos: &QosConfig,
+    batch: usize,
+) -> crate::Result<QosSimResult> {
+    qos.validate()?;
+    anyhow::ensure!(batch >= 1, "qos sim batch must be >= 1");
+    anyhow::ensure!(ds.n > 0, "qos sim needs a non-empty dataset");
+
+    let (d_in, d_out) = (d.bench.n_in, d.bench.n_out);
+    let n_approx = d.n_approx();
+    let x_norm = d.normalize(&ds.x_raw, ds.n);
+
+    let sampler = ShadowSampler::new(qos.seed, qos.shadow_rate);
+    let mut ctrl = Controller::new(*qos, n_approx);
+    let mut margins: Vec<f32> = Vec::new();
+    ctrl.margins_into(&mut margins);
+    let mut peak = margins.clone();
+
+    let mut plan = RoutePlan::default();
+    let mut scratch = Scratch::new();
+    let mut y: Vec<f32> = Vec::new();
+    let mut invoked = 0u64;
+    let mut invoked_per_class = vec![0u64; n_approx];
+
+    let mut i = 0usize;
+    while i < ds.n {
+        let bn = batch.min(ds.n - i);
+        let xb = &x_norm[i * d_in..(i + bn) * d_in];
+        let rawb = &ds.x_raw[i * d_in..(i + bn) * d_in];
+        d.plan_with_margins_into(xb, bn, Some(&margins), &mut plan, &mut scratch)?;
+        d.execute_plan_into(&plan, xb, rawb, bn, &mut y, &mut scratch)?;
+        for (j, r) in plan.routes.iter().enumerate() {
+            if let Route::Approx(k) = r {
+                invoked += 1;
+                invoked_per_class[*k] += 1;
+                // The global sample index doubles as the request id, so
+                // the shadow set is identical no matter the batch size.
+                if sampler.pick((i + j) as u64) {
+                    let err =
+                        row_rmse(&y[j * d_out..(j + 1) * d_out], ds.y_row(i + j));
+                    ctrl.observe(*k, err);
+                }
+            }
+        }
+        if ctrl.maybe_tick() {
+            ctrl.margins_into(&mut margins);
+            for (p, m) in peak.iter_mut().zip(&margins) {
+                *p = p.max(*m);
+            }
+        }
+        i += bn;
+    }
+
+    let global_margin = peak.iter().copied().fold(0.0f32, f32::max);
+
+    // Fixed baselines over the identical data, whole-set plans.
+    let invocation_argmax = plan_invocation(d, &x_norm, ds.n, None)?;
+    let fixed = vec![global_margin; n_approx];
+    let invocation_fixed = plan_invocation(d, &x_norm, ds.n, Some(&fixed))?;
+
+    let mut final_margins = Vec::new();
+    ctrl.margins_into(&mut final_margins);
+    Ok(QosSimResult {
+        bench: d.bench.name.clone(),
+        method: d.method.key().to_string(),
+        n: ds.n,
+        batch,
+        invocation_argmax,
+        invocation_fixed,
+        invocation_adaptive: invoked as f64 / ds.n as f64,
+        global_margin,
+        final_margins,
+        // Shadow counts fall back to the window's lifetime totals (the
+        // sim ingests single-threaded, so they are exact).
+        report: ctrl.report(None, Some(&invoked_per_class)),
+    })
+}

@@ -144,6 +144,57 @@ impl TrainReport {
     }
 }
 
+/// Serialise round trajectories into `train_stats_rust.json` at the tree
+/// root — the native analogue of the Python trainer's `train_stats.json`,
+/// same `{bench: {method: [{invocation: ...}, ...]}}` schema, which
+/// `mcma figure 9` falls back to when the Python file is absent.
+/// Existing entries for OTHER benchmarks are preserved (merge-upsert).
+fn save_round_stats(
+    out_dir: &std::path::Path,
+    bench: &str,
+    histories: &[(&str, &[RoundStats])],
+) -> crate::Result<()> {
+    use crate::util::json::{self, Value};
+    let path = out_dir.join("train_stats_rust.json");
+    let mut doc = match json::parse_file(&path) {
+        Ok(Value::Obj(kvs)) => kvs,
+        _ => Vec::new(),
+    };
+    let entry = Value::Obj(
+        histories
+            .iter()
+            .map(|(method, hist)| {
+                (
+                    method.to_string(),
+                    Value::Arr(
+                        hist.iter()
+                            .map(|h| {
+                                Value::Obj(vec![
+                                    ("round".into(), Value::Num(h.round as f64)),
+                                    ("invocation".into(), Value::Num(h.clf_invocation)),
+                                    (
+                                        "assign_invocation".into(),
+                                        Value::Num(h.assign_invocation),
+                                    ),
+                                    ("mean_min_err".into(), Value::Num(h.mean_min_err)),
+                                    ("reassigned".into(), Value::Num(h.reassigned as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                )
+            })
+            .collect(),
+    );
+    match doc.iter_mut().find(|(k, _)| k == bench) {
+        Some(slot) => slot.1 = entry,
+        None => doc.push((bench.to_string(), entry)),
+    }
+    std::fs::write(&path, json::write(&Value::Obj(doc)))
+        .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
+    Ok(())
+}
+
 /// Classifier topology for `k` approximators: the manifest's classifier
 /// hidden sizes with the output width forced to `k + 1` (2 = the binary
 /// baseline shape).
@@ -305,6 +356,17 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     }
     man.save_to(&opts.out_dir)?;
     wrote.push("manifest.json".into());
+
+    // Native Fig. 9 trajectory (the `mcma figure 9` fallback source).
+    save_round_stats(
+        &opts.out_dir,
+        &bench.name,
+        &[
+            ("mcma_competitive", multi.history.as_slice()),
+            ("one_pass", single.history.as_slice()),
+        ],
+    )?;
+    wrote.push("train_stats_rust.json".into());
 
     Ok(TrainReport {
         bench: bench.name,

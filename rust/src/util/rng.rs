@@ -5,6 +5,15 @@
 //! (<https://prng.di.unimi.it/>); SplitMix64 expands a 64-bit seed into the
 //! 256-bit xoshiro state so nearby seeds give unrelated streams.
 
+/// One SplitMix64 step: advance-by-golden-gamma + finalizer.  Also used
+/// standalone as a stateless hash (`qos::ShadowSampler`).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
 /// xoshiro256** generator.
 #[derive(Clone, Debug)]
 pub struct Rng {
@@ -14,13 +23,14 @@ pub struct Rng {
 impl Rng {
     /// Create from a 64-bit seed via SplitMix64 expansion.
     pub fn new(seed: u64) -> Self {
+        // Stream-identical to the classic "advance then finalize" form:
+        // splitmix64(x) = finalize(x + gamma), so hashing the CURRENT
+        // state and then advancing yields the same outputs.
         let mut sm = seed;
         let mut next_sm = || {
+            let z = splitmix64(sm);
             sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
-            let mut z = sm;
-            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
-            z ^ (z >> 31)
+            z
         };
         let s = [next_sm(), next_sm(), next_sm(), next_sm()];
         Rng { s }
@@ -102,6 +112,14 @@ impl Rng {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn splitmix64_is_pure_and_mixes() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_ne!(splitmix64(0), splitmix64(1));
+        // The finalizer must not fix zero (a common weak-hash failure).
+        assert_ne!(splitmix64(0), 0);
+    }
 
     #[test]
     fn deterministic_per_seed() {

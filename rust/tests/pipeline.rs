@@ -140,6 +140,7 @@ fn server_round_trip_no_losses() {
             method: Method::McmaCompetitive,
             exec: ExecMode::Native,
             workers: 2, // exercise the multi-worker shared-queue path
+            qos: None,
         },
     )
     .unwrap();
@@ -154,6 +155,11 @@ fn server_round_trip_no_losses() {
     assert_eq!(report.served, n, "requests lost");
     assert!(report.latency.p50() > 0.0);
     assert!(report.batches >= (n as usize / 64) as u64);
+    // Per-route counters partition the served set; no QoS was configured.
+    assert_eq!(report.per_route.total(), report.served);
+    assert_eq!(report.per_route.invoked(), report.invoked);
+    assert_eq!(report.per_route.cpu.count, report.cpu);
+    assert!(report.qos.is_none());
 }
 
 #[test]

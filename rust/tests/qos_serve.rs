@@ -1,0 +1,369 @@
+//! End-to-end tests for the online QoS subsystem: offline-replay
+//! determinism, margin monotonicity (tighter target ⇒ invocation never
+//! increases), circuit-breaker behaviour against a genuinely bad
+//! approximator set, and the serve-with-QoS pipeline next to
+//! `tests/train_roundtrip.rs`.  Synthetic banks keep everything
+//! artifact-free; the serve test trains a tiny real tree first.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mcma::config::{BatchPolicy, ExecMode, Method};
+use mcma::coordinator::{Dispatcher, Route, RoutePlan, Scratch, Server, ServerConfig};
+use mcma::formats::weights::{MethodWeights, WeightsFile};
+use mcma::formats::{BenchManifest, Dataset};
+use mcma::qos::{self, Controller, QosConfig, MARGIN_PRECISE};
+use mcma::runtime::ModelBank;
+use mcma::train::{train_bench, TrainOptions};
+use mcma::util::prop::gens;
+use mcma::util::rng::Rng;
+
+const K: usize = 3;
+
+/// Blackscholes-shaped synthetic manifest (mirrors `benches/hotpath.rs`).
+fn synthetic_manifest() -> BenchManifest {
+    BenchManifest {
+        name: "blackscholes".into(),
+        domain: "synthetic".into(),
+        n_in: 6,
+        n_out: 1,
+        approx_topology: vec![6, 8, 8, 1],
+        clf2_topology: vec![6, 8, 2],
+        clfn_topology: vec![6, 8, K + 1],
+        x_lo: vec![0.0; 6],
+        x_hi: vec![1.0; 6],
+        y_lo: vec![0.0],
+        y_hi: vec![1.0],
+        error_bound: 0.05,
+        train_n: 0,
+        test_n: 0,
+        methods: vec!["mcma_competitive".into()],
+        mcca_pairs: 0,
+    }
+}
+
+fn synthetic_bank(rng: &mut Rng) -> ModelBank {
+    let mw = MethodWeights {
+        method: "mcma_competitive".into(),
+        cascade: false,
+        clf_classes: K + 1,
+        classifiers: vec![gens::mlp(rng, &[6, 8, K + 1], 1.0, 0.5)],
+        approximators: (0..K).map(|_| gens::mlp(rng, &[6, 8, 8, 1], 1.0, 0.5)).collect(),
+    };
+    let mut methods = HashMap::new();
+    methods.insert("mcma_competitive".to_string(), mw);
+    ModelBank::from_host("blackscholes", WeightsFile { methods })
+}
+
+/// Pick a synthetic-net seed whose random classifier actually spreads
+/// traffic onto the approximators (a degenerate draw could argmax every
+/// sample into one class or straight to reject).  Deterministic: the
+/// first qualifying seed of a fixed candidate list.
+fn spread_seed(man: &BenchManifest, ds: &Dataset) -> u64 {
+    for seed in [0xB00C, 7, 99, 12345, 0xACE5, 31337] {
+        let mut rng = Rng::new(seed);
+        let bank = synthetic_bank(&mut rng);
+        let d =
+            Dispatcher::new(man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+        let x = d.normalize(&ds.x_raw, ds.n);
+        let mut plan = RoutePlan::default();
+        let mut scratch = Scratch::new();
+        d.plan_into(&x, ds.n, &mut plan, &mut scratch).unwrap();
+        if plan.invocation() > 0.2 {
+            return seed;
+        }
+    }
+    panic!("no synthetic seed routes traffic to the approximators");
+}
+
+/// Dataset with ground truth from the real precise function, inputs from
+/// its generator.
+fn synthetic_dataset(man: &BenchManifest, n: usize, seed: u64) -> Dataset {
+    let benchfn = mcma::benchmarks::by_name(&man.name).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut x_raw = vec![0.0f32; n * man.n_in];
+    for row in x_raw.chunks_exact_mut(man.n_in) {
+        benchfn.gen_into(&mut rng, row);
+    }
+    let y_norm = mcma::benchmarks::eval_batch_normalized(benchfn.as_ref(), man, &x_raw, n);
+    Dataset { n, d_in: man.n_in, d_out: man.n_out, x_raw, y_norm }
+}
+
+/// The offline replay is deterministic for a fixed seed: identical
+/// margins, invocations and counters on every run, and the headroom
+/// inequality `invocation_adaptive >= invocation_fixed` holds (it is the
+/// `mcma summary` acceptance row).  The dataset is tall enough that the
+/// baseline plans take the sharded parallel forward, so this also pins
+/// the replay against the machine's thread count.
+#[test]
+fn sim_deterministic_and_adaptive_beats_fixed() {
+    let man = synthetic_manifest();
+    let ds = synthetic_dataset(&man, 4096, 0x7E57);
+    let bank = synthetic_bank(&mut Rng::new(spread_seed(&man, &ds)));
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let qos = QosConfig {
+        target: 0.2,
+        shadow_rate: 0.5,
+        window: 64,
+        min_obs: 16,
+        tick_every: 32,
+        ..QosConfig::default()
+    };
+    let a = qos::simulate(&d, &ds, &qos, 256).unwrap();
+    let b = qos::simulate(&d, &ds, &qos, 256).unwrap();
+    assert_eq!(a.final_margins, b.final_margins, "margins must be bit-identical");
+    assert_eq!(a.invocation_adaptive, b.invocation_adaptive);
+    assert_eq!(a.invocation_fixed, b.invocation_fixed);
+    assert_eq!(a.invocation_argmax, b.invocation_argmax);
+    assert_eq!(a.report.ticks, b.report.ticks);
+    assert_eq!(a.report.total_shadow(), b.report.total_shadow());
+    assert_eq!(a.report.total_violations(), b.report.total_violations());
+
+    assert!(a.report.total_shadow() > 0, "shadow sampling never fired");
+    assert!(
+        a.invocation_adaptive >= a.invocation_fixed,
+        "adaptive {} must be >= fixed {}",
+        a.invocation_adaptive,
+        a.invocation_fixed
+    );
+    assert!(a.invocation_argmax >= a.invocation_fixed);
+    // Per-class invoked counters in the report partition the invoked set.
+    let invoked: u64 = a.report.classes.iter().map(|c| c.invoked).sum();
+    assert_eq!(invoked as f64 / ds.n as f64, a.invocation_adaptive);
+}
+
+/// Margin monotonicity end to end: feed the SAME shadow-observation
+/// stream (from one argmax pass) to controllers at tightening targets,
+/// then apply each controller's final margins to the same dataset — the
+/// invocation must never increase as the target tightens.
+#[test]
+fn tighter_target_never_increases_invocation() {
+    let man = synthetic_manifest();
+    let ds = synthetic_dataset(&man, 1500, 0x51EE);
+    let bank = synthetic_bank(&mut Rng::new(spread_seed(&man, &ds)));
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+
+    // One argmax pass gives the (class, served-error) stream.
+    let out = d.run_dataset(&ds).unwrap();
+    let stream: Vec<(usize, f64)> = out
+        .plan
+        .routes
+        .iter()
+        .zip(&out.err)
+        .filter_map(|(r, &e)| match r {
+            Route::Approx(k) => Some((*k, e)),
+            Route::Cpu => None,
+        })
+        .collect();
+    assert!(stream.len() > 100, "synthetic classifier rejects everything");
+
+    let x_norm = d.normalize(&ds.x_raw, ds.n);
+    let mut invocations = Vec::new();
+    // Ascending targets = loosening; breaker disabled so the shared
+    // stream keeps both controllers' evidence identical (see the
+    // controller's open-loop monotonicity unit test).
+    // The last target is unreachably loose (random-net errors are O(1)),
+    // so its controller must never move a margin.
+    for target in [0.005, 0.02, 0.1, 0.5, 1e9] {
+        let mut ctrl = Controller::new(
+            QosConfig {
+                target,
+                window: 64,
+                min_obs: 8,
+                tick_every: 16,
+                breaker_trip: u32::MAX,
+                ..QosConfig::default()
+            },
+            K,
+        );
+        for &(k, e) in &stream {
+            ctrl.observe(k, e);
+            ctrl.maybe_tick();
+        }
+        let mut margins = Vec::new();
+        ctrl.margins_into(&mut margins);
+        let mut plan = RoutePlan::default();
+        let mut scratch = Scratch::new();
+        d.plan_with_margins_into(&x_norm, ds.n, Some(&margins), &mut plan, &mut scratch)
+            .unwrap();
+        invocations.push(plan.invocation());
+    }
+    for w in invocations.windows(2) {
+        assert!(
+            w[0] <= w[1] + 1e-12,
+            "tighter target increased invocation: {invocations:?}"
+        );
+    }
+    // The loosest target must reduce to pure argmax routing.
+    let argmax_inv = out.plan.invocation();
+    assert!((invocations.last().unwrap() - argmax_inv).abs() < 1e-12);
+}
+
+/// A hopeless approximator set under a tight target must trip the
+/// circuit breaker: sustained violation forces classes precise, adaptive
+/// invocation collapses below argmax, and the conservative global
+/// threshold goes fully precise.
+#[test]
+fn breaker_trips_on_hopeless_approximators() {
+    let man = synthetic_manifest();
+    let ds = synthetic_dataset(&man, 2000, 0xFEED);
+    // Random nets: served error is O(1), hopeless under a 1e-4 target.
+    let bank = synthetic_bank(&mut Rng::new(spread_seed(&man, &ds)));
+    let d = Dispatcher::new(&man, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    let qos = QosConfig {
+        target: 1e-4, // unreachable for a random net
+        shadow_rate: 1.0,
+        window: 64,
+        min_obs: 8,
+        tick_every: 16,
+        breaker_trip: 2,
+        breaker_cooldown: 2,
+        ..QosConfig::default()
+    };
+    let sim = qos::simulate(&d, &ds, &qos, 128).unwrap();
+    assert!(sim.report.total_violations() > 0);
+    assert!(sim.report.total_trips() > 0, "breaker never tripped");
+    assert!(
+        sim.global_margin >= MARGIN_PRECISE,
+        "a tripped class must force the global threshold precise"
+    );
+    assert_eq!(sim.invocation_fixed, 0.0);
+    assert!(
+        sim.invocation_adaptive < sim.invocation_argmax,
+        "sustained violation must shed invocation"
+    );
+    assert!(sim.invocation_adaptive >= sim.invocation_fixed);
+}
+
+fn tmp_out(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mcma_qos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Serve-with-QoS end to end: train a tiny real tree, run the threaded
+/// pipeline with the QoS loop enabled at a loose target, and check the
+/// report's per-class QoS counters.  With a loose target margins stay at
+/// zero, routing is per-sample deterministic on the f32 engine, and the
+/// shadow pick is a pure id hash — so invocation AND the shadow count
+/// must be identical across worker counts.
+#[test]
+fn serve_with_qos_end_to_end() {
+    let out_dir = tmp_out("serve");
+    train_bench(&TrainOptions {
+        bench: "blackscholes".into(),
+        k: 2,
+        samples: 400,
+        rounds: 2,
+        epochs: 3,
+        seed: 11,
+        out_dir: out_dir.clone(),
+        threads: 2,
+        ..TrainOptions::default()
+    })
+    .unwrap();
+
+    let man = Arc::new(mcma::formats::Manifest::load(&out_dir).unwrap());
+    let bench = Arc::new(man.bench("blackscholes").unwrap().clone());
+    let benchfn = mcma::benchmarks::by_name("blackscholes").unwrap();
+    let qos = QosConfig {
+        target: 10.0, // generous: the trained workload must show 0 violations
+        shadow_rate: 0.5,
+        window: 64,
+        min_obs: 8,
+        tick_every: 16,
+        ..QosConfig::default()
+    };
+
+    let run = |workers: usize| {
+        let server = Server::spawn(
+            Arc::clone(&man),
+            Arc::clone(&bench),
+            ServerConfig {
+                policy: BatchPolicy { max_batch: 64, max_wait_us: 500 },
+                method: Method::McmaCompetitive,
+                exec: ExecMode::Native,
+                workers,
+                qos: Some(qos),
+            },
+        )
+        .unwrap();
+        let mut rng = Rng::new(42);
+        let mut x = vec![0.0f32; bench.n_in];
+        let n = 600u64;
+        for id in 0..n {
+            benchfn.gen_into(&mut rng, &mut x);
+            server.submit(id, x.clone()).unwrap();
+        }
+        let report = server.shutdown(Vec::new()).unwrap();
+        assert_eq!(report.served, n, "requests lost (workers={workers})");
+        report
+    };
+
+    let r1 = run(1);
+    let q1 = r1.qos.as_ref().expect("qos report missing");
+    assert_eq!(q1.classes.len(), 2, "one QoS row per approximator class");
+    assert_eq!(q1.total_violations(), 0, "loose target must show zero violations");
+    assert_eq!(q1.total_trips(), 0);
+    // The controller's per-class invoked counters agree with the
+    // per-route report aggregated from the responses.
+    for c in &q1.classes {
+        assert_eq!(
+            c.invoked,
+            r1.per_route.classes.get(c.class).map(|s| s.count).unwrap_or(0),
+            "class {} counter drift",
+            c.class
+        );
+        assert!(c.shadow_n <= c.invoked, "shadowed more than served");
+        assert!(c.margin == 0.0, "loose target must not move margins");
+    }
+    assert_eq!(r1.per_route.total(), r1.served);
+    assert_eq!(r1.per_route.invoked(), r1.invoked);
+
+    // Thread-count determinism of routing + shadow selection.
+    let r2 = run(2);
+    let q2 = r2.qos.as_ref().unwrap();
+    assert_eq!(r1.invoked, r2.invoked, "routing drifted across worker counts");
+    assert_eq!(
+        q1.total_shadow(),
+        q2.total_shadow(),
+        "shadow sampling drifted across worker counts"
+    );
+    let _ = std::fs::remove_dir_all(&out_dir);
+}
+
+/// The native trainer's trajectory file round-trips through the fig9
+/// fallback schema (ROADMAP open item: fig9 from native history).
+#[test]
+fn fig9_reads_native_round_stats() {
+    let out_dir = tmp_out("fig9");
+    train_bench(&TrainOptions {
+        bench: "sobel".into(),
+        k: 2,
+        samples: 256,
+        rounds: 2,
+        epochs: 2,
+        seed: 3,
+        out_dir: out_dir.clone(),
+        threads: 1,
+        ..TrainOptions::default()
+    })
+    .unwrap();
+    let stats = out_dir.join("train_stats_rust.json");
+    assert!(stats.exists(), "trainer must write train_stats_rust.json");
+    let v = mcma::util::json::parse_file(&stats).unwrap();
+    let hist = v
+        .req("sobel")
+        .unwrap()
+        .req("mcma_competitive")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert!(!hist.is_empty());
+    for it in hist {
+        let inv = it.req("invocation").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&inv));
+    }
+    let _ = std::fs::remove_dir_all(&out_dir);
+}

@@ -274,6 +274,8 @@ fn synthetic_manifest() -> BenchManifest {
     BenchManifest {
         name: "blackscholes".into(),
         domain: "synthetic".into(),
+        kind: mcma::formats::WorkloadKind::Synthetic,
+        source_digest: String::new(),
         n_in: 6,
         n_out: 1,
         approx_topology: vec![6, 8, 8, 1],

@@ -1,0 +1,29 @@
+#!/usr/bin/env bash
+# Generate a small synthetic CSV workload for the workload-smoke CI job
+# (and local experiments): two input columns, one label column whose
+# slope in x1 flips sign across x0 = 0.5 — a function one tiny net
+# struggles with but two specialised approximators cover, i.e. the
+# smallest workload where MCMA visibly wins.
+#
+# Usage: gen_workload_csv.sh OUT.csv [ROWS=1500] [SEED=7]
+#
+# awk's srand(SEED) stream is implementation-defined but stable within a
+# runner image; nothing downstream depends on the exact rows, only on the
+# CSV contract (header + finite numeric cells).
+set -euo pipefail
+
+out="${1:?usage: gen_workload_csv.sh OUT.csv [ROWS] [SEED]}"
+rows="${2:-1500}"
+seed="${3:-7}"
+
+awk -v n="$rows" -v seed="$seed" 'BEGIN {
+    srand(seed)
+    print "x0,x1,y"
+    for (i = 0; i < n; i++) {
+        x0 = rand(); x1 = rand()
+        y = (x0 < 0.5) ? 0.15 + 0.3 * x1 : 0.85 - 0.3 * x1
+        printf "%.6f,%.6f,%.6f\n", x0, x1, y
+    }
+}' > "$out"
+
+echo "wrote $rows rows to $out" >&2

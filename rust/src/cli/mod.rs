@@ -19,18 +19,20 @@ pub struct Args {
 }
 
 /// Option keys that take a value.
-const VALUE_KEYS: [&str; 22] = [
+const VALUE_KEYS: [&str; 27] = [
     // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
     // train
     "k", "rounds", "epochs", "lr", "bound", "out", "threads",
+    // data-defined (table) workloads
+    "data", "d-out", "holdout", "scheme", "precise-fallback",
     // serve/summary QoS loop
     "qos-target", "qos-quantile", "qos-shadow", "qos-window", "qos-seed",
 ];
 
 /// Boolean flags (present/absent, no value).
-const FLAG_KEYS: [&str; 3] = ["verbose", "help", "force"];
+const FLAG_KEYS: [&str; 4] = ["verbose", "help", "force", "qos-warm"];
 
 impl Args {
     /// Parse `std::env::args()`-style tokens (without argv[0]).
@@ -118,11 +120,23 @@ SUBCOMMANDS:
          [--qos-shadow R=0.05]       observed error at or below T by
          [--qos-window N=256]        adapting per-class margins (circuit
          [--qos-seed S]              breaker on sustained violation)
-  train  --bench B [--k K]        co-train K approximators + multiclass
-         [--samples N] [--rounds R]  classifier natively (no Python) and
-         [--epochs E] [--lr X]       export MCMW/MCQW artifacts ModelBank
-         [--bound B] [--seed S]      serves; also trains a K=1 baseline
-         [--out DIR] [--threads T]   under the same budget for comparison
+         [--qos-warm]                seed margins from an offline replay of
+                                     the held-out set (no argmax cold start)
+         [--precise-fallback lookup|reject]
+                                     table workloads only: serve rejected
+                                     requests from the nearest held-out
+                                     record (default) or fail them
+  train  --bench B | --data F.csv co-train K approximators + multiclass
+         [--d-out N] [--holdout H]   classifier natively (no Python) and
+         [--k K] [--scheme S]        export MCMW/MCQW artifacts ModelBank
+         [--samples N] [--rounds R]  serves; also trains a K=1 baseline
+         [--epochs E] [--lr X]       under the same budget for comparison.
+         [--bound B] [--seed S]      --data opens an arbitrary CSV/TSV
+         [--out DIR] [--threads T]   workload: the last --d-out columns are
+                                     labels, --holdout (0.25) rows are held
+                                     out for eval + oracle-less QoS.
+                                     --scheme competitive|complementary
+                                     picks the co-training allocation
   npu-sim --bench B --method M    NPU cycle simulation + buffer-case ablation
          [--case 1|2|3]
 
@@ -215,6 +229,21 @@ mod tests {
         assert_eq!(a.opt_usize("qos-window", 0).unwrap(), 128);
         assert_eq!(a.opt_usize("qos-seed", 0).unwrap(), 99);
         assert!(Args::parse(["serve".into(), "--qos-tgt".into(), "1".into()]).is_err());
+    }
+
+    #[test]
+    fn table_workload_options_registered() {
+        let a = parse(
+            "train --data /tmp/w.csv --d-out 2 --holdout 0.3 --scheme complementary",
+        );
+        assert_eq!(a.opt("data"), Some("/tmp/w.csv"));
+        assert_eq!(a.opt_usize("d-out", 0).unwrap(), 2);
+        assert!((a.opt_f64("holdout", 0.0).unwrap() - 0.3).abs() < 1e-12);
+        assert_eq!(a.opt("scheme"), Some("complementary"));
+        let b = parse("serve --bench w --precise-fallback reject --qos-warm");
+        assert_eq!(b.opt("precise-fallback"), Some("reject"));
+        assert!(b.has_flag("qos-warm"));
+        assert!(Args::parse(["train".into(), "--dout".into(), "2".into()]).is_err());
     }
 
     #[test]

@@ -18,12 +18,12 @@
 //! (`nn::gemm::PackedMlp`), and whole-dataset native batches shard across
 //! cores via `util::threadpool::parallel_map`.
 
-use crate::benchmarks::{self, BenchFn};
 use crate::config::{ExecMode, Method};
 use crate::formats::{BenchManifest, Dataset};
 use crate::nn::{self, GemmScratch, PackedMlp, PackedMlpQ8, QGemmScratch};
 use crate::runtime::{ModelBank, Role};
 use crate::util::threadpool;
+use crate::workload::PreciseProxy;
 
 use super::batcher::Batch;
 use super::metrics::RunMetrics;
@@ -116,7 +116,11 @@ impl Scratch {
 pub struct Dispatcher<'a> {
     pub bench: &'a BenchManifest,
     pub bank: &'a ModelBank,
-    pub benchfn: Box<dyn BenchFn>,
+    /// The precise path: the registered benchmark function for synthetic
+    /// workloads; a held-out nearest-record lookup or reject-with-error
+    /// for table workloads (no oracle exists at runtime — see
+    /// `crate::workload::PreciseProxy`).
+    pub precise: PreciseProxy,
     pub method: Method,
     pub exec: ExecMode,
     pub npu_cfg: crate::config::NpuConfig,
@@ -145,7 +149,7 @@ impl<'a> Dispatcher<'a> {
         Ok(Dispatcher {
             bench,
             bank,
-            benchfn: benchmarks::by_name(&bench.name)?,
+            precise: PreciseProxy::for_bench(bench)?,
             method,
             exec,
             npu_cfg: crate::config::NpuConfig::default(),
@@ -158,6 +162,22 @@ impl<'a> Dispatcher<'a> {
     pub fn with_policy(mut self, policy: RouterPolicy) -> Self {
         self.policy = policy;
         self
+    }
+
+    /// Builder-style precise-path override — how a table workload's
+    /// server installs the held-out lookup proxy (or keeps the default
+    /// reject-with-error).
+    pub fn with_precise_proxy(mut self, proxy: PreciseProxy) -> Self {
+        self.precise = proxy;
+        self
+    }
+
+    /// Does this dispatcher have a real runtime oracle (a registered
+    /// precise function or an installed lookup store)?  `false` means any
+    /// precise-routed sample is a hard error until a proxy is installed;
+    /// whole-dataset paths substitute the dataset's own labels instead.
+    pub fn has_runtime_oracle(&self) -> bool {
+        !self.precise.is_reject()
     }
 
     /// Builder-style route-sorted execution toggle (see `route_sorted`).
@@ -421,6 +441,25 @@ impl<'a> Dispatcher<'a> {
         y: &mut Vec<f32>,
         scratch: &mut Scratch,
     ) -> crate::Result<()> {
+        self.execute_plan_with_proxy_into(plan, x_norm, x_raw, n, None, y, scratch)
+    }
+
+    /// [`Self::execute_plan_into`] with a precise-proxy override for the
+    /// CPU path (`None` = this dispatcher's own proxy).  Whole-dataset
+    /// callers that hold ground-truth labels (offline eval, the QoS
+    /// replay) use this to serve rejected samples from the dataset itself
+    /// when the workload has no runtime oracle.
+    pub fn execute_plan_with_proxy_into(
+        &self,
+        plan: &RoutePlan,
+        x_norm: &[f32],
+        x_raw: &[f32],
+        n: usize,
+        proxy: Option<&PreciseProxy>,
+        y: &mut Vec<f32>,
+        scratch: &mut Scratch,
+    ) -> crate::Result<()> {
+        let precise = proxy.unwrap_or(&self.precise);
         let d_in = self.bench.n_in;
         let d_out = self.bench.n_out;
         y.clear();
@@ -443,13 +482,17 @@ impl<'a> Dispatcher<'a> {
             }
         }
 
-        // Precise CPU path for rejected samples.
+        // Precise CPU path for rejected samples (through the proxy: the
+        // registered function, a held-out lookup, or a hard reject).
         raw_out.clear();
         raw_out.resize(d_out, 0.0);
         for &i in &plan.cpu {
-            self.benchfn.eval(&x_raw[i * d_in..(i + 1) * d_in], raw_out);
-            self.bench
-                .normalize_y_into(raw_out, &mut y[i * d_out..(i + 1) * d_out]);
+            precise.serve_norm_into(
+                self.bench,
+                &x_raw[i * d_in..(i + 1) * d_in],
+                raw_out,
+                &mut y[i * d_out..(i + 1) * d_out],
+            )?;
         }
         Ok(())
     }
@@ -503,8 +546,27 @@ impl<'a> Dispatcher<'a> {
         } else {
             self.plan_into(&x_norm, ds.n, &mut plan, &mut scratch)?;
         }
+        // Oracle-less workloads serve rejected samples from the dataset's
+        // own labels (a nearest-record lookup over `ds` is exact on its
+        // own rows) — the same "CPU-served is precise by construction"
+        // semantics the registered functions give.
+        let lookup;
+        let proxy = if self.has_runtime_oracle() {
+            None
+        } else {
+            lookup = PreciseProxy::lookup_from(self.bench, ds);
+            Some(&lookup)
+        };
         let mut y_served = Vec::new();
-        self.execute_plan_into(&plan, &x_norm, &ds.x_raw, ds.n, &mut y_served, &mut scratch)?;
+        self.execute_plan_with_proxy_into(
+            &plan,
+            &x_norm,
+            &ds.x_raw,
+            ds.n,
+            proxy,
+            &mut y_served,
+            &mut scratch,
+        )?;
 
         // Errors of served values; CPU-served are exact by construction
         // (same precise function), so their served error is 0.

@@ -25,5 +25,5 @@ pub use batcher::{Batch, Batcher};
 pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy, Scratch};
 pub use metrics::{ClassCounters, LatencyStats, PerRouteReport, RouteClassStats, RunMetrics};
 pub use router::{plan_routes, Route, RoutePlan};
-pub use server::{Server, ServerConfig, ServerReport};
+pub use server::{Server, ServerConfig, ServerReport, TableFallback};
 pub use weight_cache::{BufferCase, WeightCache};

@@ -32,9 +32,10 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::config::{BatchPolicy, ExecMode, Method};
-use crate::formats::{BenchManifest, Manifest, WeightsFile};
+use crate::formats::{BenchManifest, Dataset, Manifest, WeightsFile, WorkloadKind};
 use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler};
 use crate::runtime::{ModelBank, Runtime};
+use crate::workload::{NearestLookup, PreciseProxy};
 
 use super::batcher::Batcher;
 use super::dispatcher::Dispatcher;
@@ -59,6 +60,35 @@ pub struct Response {
     pub latency_us: f64,
 }
 
+/// What a TABLE workload's dispatch workers do when the classifier
+/// rejects a request to the precise path — no oracle exists at runtime
+/// (`mcma serve --precise-fallback`).  Ignored for synthetic workloads,
+/// whose precise function is always available.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TableFallback {
+    /// Serve the label of the nearest held-out record (the default: every
+    /// request gets an answer; rejected ones are nearest-neighbour
+    /// interpolations instead of NN outputs).
+    #[default]
+    Lookup,
+    /// Reject-with-error: fail the batch rather than serve an
+    /// interpolated answer (the strict mode; undelivered responses are
+    /// accounted as lost, see `LostGuard`).
+    Reject,
+}
+
+impl std::str::FromStr for TableFallback {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "lookup" => Ok(TableFallback::Lookup),
+            "reject" => Ok(TableFallback::Reject),
+            _ => anyhow::bail!("unknown precise fallback {s:?} (lookup|reject)"),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub policy: BatchPolicy,
@@ -70,11 +100,20 @@ pub struct ServerConfig {
     pub workers: usize,
     /// Online quality control (`None` = the classic fixed-routing server).
     pub qos: Option<QosConfig>,
+    /// Precise-path behaviour for oracle-less table workloads.
+    pub table_fallback: TableFallback,
 }
 
 impl ServerConfig {
     pub fn new(policy: BatchPolicy, method: Method, exec: ExecMode) -> Self {
-        ServerConfig { policy, method, exec, workers: 1, qos: None }
+        ServerConfig {
+            policy,
+            method,
+            exec,
+            workers: 1,
+            qos: None,
+            table_fallback: TableFallback::default(),
+        }
     }
 
     /// Builder-style QoS enablement.
@@ -307,6 +346,20 @@ impl Server {
             None => (None, None, None, None, None, 0),
         };
 
+        // Table workloads: the held-out store backs the precise fallback,
+        // the QoS shadow verifier and the warm-start replay — load it
+        // ONCE and share it; workers clone an `Arc`, not the data.
+        let table_store: Option<(Arc<Dataset>, Arc<NearestLookup>)> = match bench.kind {
+            WorkloadKind::Table
+                if cfg.table_fallback == TableFallback::Lookup || cfg.qos.is_some() =>
+            {
+                let ds = Arc::new(Dataset::load(&man.dataset_path(&bench.name))?);
+                let lookup = Arc::new(NearestLookup::from_dataset(&bench, &ds));
+                Some((ds, lookup))
+            }
+            _ => None,
+        };
+
         let lost = Arc::new(AtomicU64::new(0));
         let mut worker_threads = Vec::new();
         for w in 0..cfg.workers.max(1) {
@@ -319,6 +372,7 @@ impl Server {
             let counters = counters.clone();
             let qos_shared = qos_shared.clone();
             let obs_tx = obs_tx.clone();
+            let table_lookup = table_store.as_ref().map(|(_, l)| Arc::clone(l));
             let cfg = cfg.clone();
             worker_threads.push(
                 thread::Builder::new()
@@ -339,6 +393,16 @@ impl Server {
                         )?;
                         let dispatcher =
                             Dispatcher::new(&bench, &bank, cfg.method, cfg.exec)?;
+                        // Oracle-less table workloads: install the
+                        // configured precise fallback — the shared
+                        // held-out nearest-record lookup (default) or
+                        // keep the hard reject.  Synthetic workloads
+                        // already carry their registered function.
+                        let dispatcher = match (&table_lookup, cfg.table_fallback) {
+                            (Some(lookup), TableFallback::Lookup) => dispatcher
+                                .with_precise_proxy(PreciseProxy::Lookup(Arc::clone(lookup))),
+                            _ => dispatcher,
+                        };
                         let mut batches = 0u64;
                         let d_in = bench.n_in;
                         let d_out = bench.n_out;
@@ -439,27 +503,75 @@ impl Server {
         // recv loop ends exactly when the last worker exits.
         drop(obs_tx);
 
-        // The QoS thread: precise re-execution, error estimation and the
-        // control law all live here — never on a dispatch worker.
+        // The QoS thread: ground-truth verification, error estimation and
+        // the control law all live here — never on a dispatch worker.
         let qos_thread = match (cfg.qos, obs_rx, &qos_shared, &counters) {
             (Some(q), Some(obs_rx), Some(shared), Some(counters)) => {
+                let man = Arc::clone(&man);
                 let bench = Arc::clone(&bench);
                 let shared = Arc::clone(shared);
                 let counters = Arc::clone(counters);
+                let method = cfg.method;
+                let table_store = table_store.clone();
                 Some(
                     thread::Builder::new()
                         .name("mcma-qos".into())
                         .spawn(move || -> crate::Result<QosReport> {
-                            let benchfn = crate::benchmarks::by_name(&bench.name)?;
+                            // Ground truth for shadow verification: the
+                            // registered precise function for synthetic
+                            // workloads; for table workloads (no oracle
+                            // at runtime) the HELD-OUT labels — traffic
+                            // drawn from the held-out set verifies
+                            // against its own recorded labels, unseen
+                            // inputs against their nearest held-out
+                            // record (shared store, loaded once at
+                            // spawn).  Breaker semantics are unchanged.
+                            let proxy = match &table_store {
+                                Some((_, lookup)) => {
+                                    PreciseProxy::Lookup(Arc::clone(lookup))
+                                }
+                                None => PreciseProxy::Function(
+                                    crate::benchmarks::by_name(&bench.name)?,
+                                ),
+                            };
                             let mut ctrl = Controller::new(q, n_approx);
+                            let mut margins: Vec<f32> = Vec::new();
+                            if q.warm_start {
+                                // Seed margins from the offline replay of
+                                // the held-out set instead of cold-starting
+                                // at argmax.  Best-effort: a tree without
+                                // test.bin (or a failed replay) falls back
+                                // to the cold start it replaces.
+                                let held_out =
+                                    table_store.as_ref().map(|(ds, _)| ds.as_ref());
+                                match warm_start_margins(&man, &bench, method, &q, held_out)
+                                {
+                                    Ok(Some(m)) => {
+                                        ctrl.seed_margins(&m);
+                                        ctrl.margins_into(&mut margins);
+                                        shared.publish(&margins);
+                                    }
+                                    Ok(None) => eprintln!(
+                                        "mcma-qos: no held-out test.bin — \
+                                         cold-starting margins"
+                                    ),
+                                    Err(e) => eprintln!(
+                                        "mcma-qos: warm-start replay failed \
+                                         ({e:#}) — cold-starting margins"
+                                    ),
+                                }
+                            }
                             let mut raw = vec![0.0f64; bench.n_out];
                             let mut y_precise = vec![0.0f32; bench.n_out];
-                            let mut margins: Vec<f32> = Vec::new();
                             loop {
                                 match obs_rx.recv_timeout(BREAKER_IDLE_TICK) {
                                     Ok(obs) => {
-                                        benchfn.eval(&obs.x_raw, &mut raw);
-                                        bench.normalize_y_into(&raw, &mut y_precise);
+                                        proxy.serve_norm_into(
+                                            &bench,
+                                            &obs.x_raw,
+                                            &mut raw,
+                                            &mut y_precise,
+                                        )?;
                                         let err =
                                             crate::qos::row_rmse(&obs.y_served, &y_precise);
                                         counters.record_shadow(obs.class);
@@ -602,6 +714,40 @@ impl Server {
             qos,
         })
     }
+}
+
+/// Offline replay for `--qos-warm`: run the full QoS loop over the tree's
+/// held-out `test.bin` through a native-engine dispatcher and return the
+/// replay's final per-class margins.  `held_out` reuses an
+/// already-loaded dataset (the table store); otherwise `test.bin` is
+/// read from disk.  `Ok(None)` when the tree has no held-out set to
+/// replay.  Always native (host weights are always loaded), so it works
+/// under any serving `--exec`.
+fn warm_start_margins(
+    man: &Manifest,
+    bench: &BenchManifest,
+    method: Method,
+    qos: &QosConfig,
+    held_out: Option<&Dataset>,
+) -> crate::Result<Option<Vec<f32>>> {
+    let loaded;
+    let ds = match held_out {
+        Some(ds) => ds,
+        None => {
+            let path = man.dataset_path(&bench.name);
+            if !path.exists() {
+                return Ok(None);
+            }
+            loaded = Dataset::load(&path)?;
+            &loaded
+        }
+    };
+    let bank = ModelBank::load(None, man, bench, &[], &[])?;
+    let d = Dispatcher::new(bench, &bank, method, ExecMode::Native)?;
+    let mut replay_cfg = *qos;
+    replay_cfg.warm_start = false;
+    let sim = crate::qos::simulate(&d, ds, &replay_cfg, 256)?;
+    Ok(Some(sim.final_margins))
 }
 
 #[cfg(test)]

@@ -87,7 +87,6 @@ pub fn simulate(
     method: Method,
     out: &EvalOutput,
 ) -> crate::Result<SimResult> {
-    let benchfn = crate::benchmarks::by_name(&bench.name)?;
     let clf_topo = if method.is_mcma() {
         bench.clfn_topology.clone()
     } else {
@@ -98,9 +97,16 @@ pub fn simulate(
         (0..n_approx).map(|_| bench.approx_topology.clone()).collect();
     // The cost model charges the datapath precision the execution engine
     // models, so fig8-style speedup/energy reflect quantization under
-    // `--exec native-q8`.
-    let sim = NpuSim::new(ctx.cfg.npu, &clf_topo, &approx_topos, benchfn.cpu_cycles())
-        .with_precision(ctx.cfg.exec.precision());
+    // `--exec native-q8`.  CPU-path cost comes from the workload's actual
+    // precise implementation: the registered function's op counts, or the
+    // held-out lookup scan for oracle-less table workloads.
+    let sim = NpuSim::new(
+        ctx.cfg.npu,
+        &clf_topo,
+        &approx_topos,
+        crate::workload::precise_cost_cycles(bench),
+    )
+    .with_precision(ctx.cfg.exec.precision());
     Ok(sim.simulate(&out.plan.routes, None))
 }
 

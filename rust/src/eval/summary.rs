@@ -5,7 +5,11 @@
 //! deltas between the f32 native engine and its int8 twin) and the
 //! training-provenance axis (Python-trained `weights.bin` vs the native
 //! trainer's `weights_rust.bin`, both measured through the same serving
-//! dispatcher).
+//! dispatcher).  Every table iterates the manifest in Fig. 6 order with
+//! unknown names last, so custom `--data` (table-kind) workloads report
+//! alongside the paper eight — their precise-path cost is the held-out
+//! lookup scan and their rejected samples are served from held-out
+//! labels (`workload::precise_cost_cycles`, `Dispatcher::run_dataset`).
 
 use crate::bench_harness::{pct, Table};
 use crate::config::{ExecMode, Method, Precision};
@@ -65,12 +69,16 @@ pub fn quantized_deltas(ctx: &Context) -> crate::Result<Vec<QuantRow>> {
         let o32 = Dispatcher::new(&bench, &bank, method, ExecMode::Native)?.run_dataset(&ds)?;
         let o8 = Dispatcher::new(&bench, &bank, method, ExecMode::NativeQ8)?.run_dataset(&ds)?;
 
-        let benchfn = crate::benchmarks::by_name(&name)?;
         let clf_topo =
             if method.is_mcma() { &bench.clfn_topology } else { &bench.clf2_topology };
         let approx_topos: Vec<Vec<usize>> =
             (0..bank.n_approx(method)).map(|_| bench.approx_topology.clone()).collect();
-        let sim = NpuSim::new(ctx.cfg.npu, clf_topo, &approx_topos, benchfn.cpu_cycles());
+        let sim = NpuSim::new(
+            ctx.cfg.npu,
+            clf_topo,
+            &approx_topos,
+            crate::workload::precise_cost_cycles(&bench),
+        );
         let e32 = sim.simulate(&o32.plan.routes, None).energy_reduction_vs_cpu();
         let e8 = sim
             .with_precision(Precision::Int8)

@@ -9,11 +9,55 @@ use std::path::{Path, PathBuf};
 
 use crate::util::json::{self, Value};
 
+/// Where a workload's ground truth comes from.
+///
+/// * `Synthetic` — a registered precise [`crate::benchmarks::BenchFn`]
+///   exists at runtime: the CPU fallback and QoS shadow verification can
+///   re-execute the oracle on demand (the paper's eight benchmarks).
+/// * `Table` — the workload was defined purely by a data file
+///   (`mcma train --data`): no closed-form oracle exists at runtime, so
+///   the precise path must route through a
+///   [`crate::workload::PreciseProxy`] (held-out nearest-record lookup or
+///   reject-with-error) and shadow verification scores against held-out
+///   labels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WorkloadKind {
+    #[default]
+    Synthetic,
+    Table,
+}
+
+impl WorkloadKind {
+    /// Manifest key (`"kind"` field, v2).
+    pub fn key(self) -> &'static str {
+        match self {
+            WorkloadKind::Synthetic => "synthetic",
+            WorkloadKind::Table => "table",
+        }
+    }
+
+    pub fn from_key(s: &str) -> crate::Result<Self> {
+        match s {
+            "synthetic" => Ok(WorkloadKind::Synthetic),
+            "table" => Ok(WorkloadKind::Table),
+            _ => anyhow::bail!("unknown workload kind {s:?} (synthetic|table)"),
+        }
+    }
+}
+
 /// Per-benchmark manifest entry.
 #[derive(Clone, Debug)]
 pub struct BenchManifest {
     pub name: String,
     pub domain: String,
+    /// v2: where ground truth comes from (absent in v1 manifests, which
+    /// only ever described the registered paper benchmarks — defaults to
+    /// [`WorkloadKind::Synthetic`]).
+    pub kind: WorkloadKind,
+    /// v2: content digest of the source data file (hex FNV-1a 64) for
+    /// `Table` workloads, so a retrain against changed data is detected;
+    /// empty for synthetic workloads.
+    pub source_digest: String,
     pub n_in: usize,
     pub n_out: usize,
     pub approx_topology: Vec<usize>,
@@ -57,6 +101,8 @@ impl BenchManifest {
         };
         json::obj(vec![
             ("domain", Value::Str(self.domain.clone())),
+            ("kind", Value::Str(self.kind.key().to_string())),
+            ("source_digest", Value::Str(self.source_digest.clone())),
             ("n_in", Value::Num(self.n_in as f64)),
             ("n_out", Value::Num(self.n_out as f64)),
             ("approx_topology", usizes(&self.approx_topology)),
@@ -152,7 +198,9 @@ impl Manifest {
             })
             .collect();
         Value::Obj(vec![
-            ("version".to_string(), Value::Num(1.0)),
+            // v2 adds per-benchmark `kind` + `source_digest`; both are
+            // optional on read, so v1 trees keep loading unchanged.
+            ("version".to_string(), Value::Num(2.0)),
             ("n_approx".to_string(), Value::Num(self.n_approx as f64)),
             (
                 "batch_sizes".to_string(),
@@ -190,6 +238,16 @@ fn parse_bench(name: &str, v: &Value) -> crate::Result<BenchManifest> {
     let m = BenchManifest {
         name: name.to_string(),
         domain: v.req("domain")?.as_str().unwrap_or("").to_string(),
+        kind: match v.get("kind").and_then(Value::as_str) {
+            Some(k) => WorkloadKind::from_key(k)
+                .map_err(|e| anyhow::anyhow!("{name}: {e}"))?,
+            None => WorkloadKind::Synthetic, // v1 manifests
+        },
+        source_digest: v
+            .get("source_digest")
+            .and_then(Value::as_str)
+            .unwrap_or("")
+            .to_string(),
         n_in: v.req("n_in")?.as_usize().unwrap_or(0),
         n_out: v.req("n_out")?.as_usize().unwrap_or(0),
         approx_topology: topo("approx_topology")?,
@@ -267,6 +325,8 @@ mod tests {
         let extra = BenchManifest {
             name: "bessel".into(),
             domain: "Scientific".into(),
+            kind: WorkloadKind::Table,
+            source_digest: "deadbeefcafef00d".into(),
             n_in: 2,
             n_out: 1,
             approx_topology: vec![2, 8, 8, 1],
@@ -295,15 +355,23 @@ mod tests {
         assert_eq!(b.x_hi, extra.x_hi);
         assert!((b.error_bound - extra.error_bound).abs() < 1e-12);
         assert_eq!(b.methods, extra.methods);
-        // The original entry survives the rewrite.
+        // v2 fields round-trip (kind + source digest).
+        assert_eq!(b.kind, WorkloadKind::Table);
+        assert_eq!(b.source_digest, "deadbeefcafef00d");
+        // The original v1-parsed entry survives the rewrite and defaults
+        // to the synthetic kind.
         assert_eq!(back.bench("sobel").unwrap().clfn_topology, vec![9, 8, 4]);
+        assert_eq!(back.bench("sobel").unwrap().kind, WorkloadKind::Synthetic);
+        assert_eq!(back.bench("sobel").unwrap().source_digest, "");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn normalize_x_matches_formula() {
         let b = BenchManifest {
-            name: "t".into(), domain: String::new(), n_in: 2, n_out: 1,
+            name: "t".into(), domain: String::new(),
+            kind: WorkloadKind::Synthetic, source_digest: String::new(),
+            n_in: 2, n_out: 1,
             approx_topology: vec![2, 1], clf2_topology: vec![2, 2],
             clfn_topology: vec![2, 4],
             x_lo: vec![0.0, -1.0], x_hi: vec![2.0, 1.0],

@@ -13,7 +13,7 @@ pub mod manifest;
 pub mod weights;
 
 pub use dataset::Dataset;
-pub use manifest::{BenchManifest, Manifest};
+pub use manifest::{BenchManifest, Manifest, WorkloadKind};
 pub use weights::{MethodWeights, QuantizedMlpFile, QuantizedTensor, WeightsFile};
 
 use std::io::Read;

@@ -31,8 +31,15 @@
 //!   controller (margins + hysteresis + circuit breaker) the server
 //!   hosts at serve time.
 //! * [`train`] — native co-training: minibatch backprop through the packed
-//!   GEMM kernels, the paper's partition-refinement loop, and MCMW/MCQW/
-//!   MCMD artifact export — no Python anywhere in the train loop either.
+//!   GEMM kernels, the paper's partition-refinement loop (competitive AND
+//!   complementary allocation), and MCMW/MCQW/MCMD artifact export — no
+//!   Python anywhere in the train loop either.
+//! * [`workload`] — workload sources as first-class objects: the
+//!   registered synthetic benchmarks, user-supplied CSV/TSV tables
+//!   (schema inference + deterministic train/held-out split), and the
+//!   oracle-less precise proxy (held-out nearest-record lookup / reject)
+//!   that lets table workloads train, serve and QoS-verify with no
+//!   precise function at runtime.
 //! * [`eval`] — one driver per paper figure.
 //! * [`bench_harness`] — timing harness for `cargo bench` (criterion
 //!   substitute).
@@ -59,6 +66,7 @@ pub mod qos;
 pub mod runtime;
 pub mod train;
 pub mod util;
+pub mod workload;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

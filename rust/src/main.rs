@@ -118,8 +118,8 @@ fn report_cmd(args: &Args) -> mcma::Result<()> {
 fn list_benchmarks(args: &Args) -> mcma::Result<()> {
     let ctx = Context::load(RunConfig { exec: ExecMode::Native, ..run_config(args)? })?;
     let mut t = Table::new(
-        "Benchmark suite (paper Fig. 6)",
-        &["#", "benchmark", "domain", "test n", "approximator", "classifier", "bound"],
+        "Benchmark suite (paper Fig. 6 + custom workloads)",
+        &["#", "benchmark", "domain", "kind", "test n", "approximator", "classifier", "bound"],
     );
     for (i, name) in ctx.man.bench_names_ordered().iter().enumerate() {
         let b = ctx.man.bench(name)?;
@@ -127,6 +127,7 @@ fn list_benchmarks(args: &Args) -> mcma::Result<()> {
             (i + 1).to_string(),
             b.name.clone(),
             b.domain.clone(),
+            b.kind.key().to_string(),
             b.test_n.to_string(),
             topo(&b.approx_topology),
             format!("{} ({})", topo(&b.clf2_topology), topo(&b.clfn_topology)),
@@ -232,6 +233,7 @@ fn qos_config(args: &Args) -> mcma::Result<Option<mcma::qos::QosConfig>> {
         shadow_rate: args.opt_f64("qos-shadow", defaults.shadow_rate)?,
         window: args.opt_usize("qos-window", defaults.window)?,
         seed: args.opt_usize("qos-seed", defaults.seed as usize)? as u64,
+        warm_start: args.has_flag("qos-warm"),
         ..defaults
     };
     qos.validate()?;
@@ -253,7 +255,20 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
 
     let man = Arc::new(mcma::formats::Manifest::load(&mcma::artifacts_dir())?);
     let bench = Arc::new(man.bench(bench_name)?.clone());
-    let benchfn = mcma::benchmarks::by_name(bench_name)?;
+    // Traffic source: synthetic workloads draw from the registered input
+    // generator; table workloads have none, so traffic replays random
+    // rows of the held-out set (whose labels the QoS shadow loop then
+    // verifies against).
+    let benchfn = match bench.kind {
+        mcma::formats::WorkloadKind::Synthetic => Some(mcma::benchmarks::by_name(bench_name)?),
+        mcma::formats::WorkloadKind::Table => None,
+    };
+    let rows = match bench.kind {
+        mcma::formats::WorkloadKind::Table => {
+            Some(mcma::formats::Dataset::load(&man.dataset_path(bench_name))?)
+        }
+        _ => None,
+    };
 
     let server = Server::spawn(
         Arc::clone(&man),
@@ -262,6 +277,9 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
             let mut sc = ServerConfig::new(policy, method, cfg.exec);
             sc.workers = args.opt_usize("n", 1)?;
             sc.qos = qos;
+            sc.table_fallback = mcma::coordinator::TableFallback::from_str(
+                &args.opt_or("precise-fallback", "lookup"),
+            )?;
             sc
         },
     )?;
@@ -269,7 +287,13 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     let mut rng = Rng::new(42);
     let mut x = vec![0.0f32; bench.n_in];
     for id in 0..n_requests as u64 {
-        benchfn.gen_into(&mut rng, &mut x);
+        match (&benchfn, &rows) {
+            (Some(g), _) => g.gen_into(&mut rng, &mut x),
+            (None, Some(ds)) => {
+                x.copy_from_slice(ds.x_row(rng.below(ds.n as u64) as usize))
+            }
+            (None, None) => unreachable!("table workload without a held-out set"),
+        }
         server.submit(id, x.clone())?;
     }
     let report = server.shutdown(Vec::new())?;
@@ -304,6 +328,9 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     rt.print();
     if let Some(q) = &report.qos {
         q.table().print();
+        println!("qos margins        : {}",
+                 if q.warm_started { "warm-started from offline replay" }
+                 else { "cold start (argmax)" });
         println!("qos shadow samples : {} ({} dropped to backpressure)",
                  q.total_shadow(), q.shadow_dropped);
         println!("qos ticks          : {}", q.ticks);
@@ -314,15 +341,24 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     Ok(())
 }
 
-/// Co-train a benchmark natively (`mcma train --bench B --k K`) and export
-/// MCMW/MCQW artifacts `ModelBank` serves; prints the K-vs-baseline
-/// held-out invocation comparison and the round trajectory.
+/// Co-train a workload natively (`mcma train --bench B --k K` for a
+/// registered benchmark, `mcma train --data foo.csv --d-out N --k K` for
+/// an arbitrary CSV/TSV workload) and export MCMW/MCQW artifacts
+/// `ModelBank` serves; prints the K-vs-baseline held-out invocation
+/// comparison and the round trajectory.
 fn train_cmd(args: &Args) -> mcma::Result<()> {
-    let bench = args
-        .opt("bench")
-        .ok_or_else(|| anyhow::anyhow!("--bench required"))?;
+    let bench = args.opt("bench");
+    let data = args.opt("data");
+    anyhow::ensure!(
+        bench.is_some() || data.is_some(),
+        "either --bench B or --data FILE is required"
+    );
     let opts = mcma::train::TrainOptions {
-        bench: bench.to_string(),
+        bench: bench.unwrap_or("").to_string(),
+        data: data.map(std::path::PathBuf::from),
+        d_out: args.opt_usize("d-out", 0)?,
+        holdout: args.opt_f64("holdout", 0.25)?,
+        scheme: mcma::train::Scheme::from_str(&args.opt_or("scheme", "competitive"))?,
         k: args.opt_usize("k", 4)?,
         samples: args.opt_usize("samples", 4000)?,
         rounds: args.opt_usize("rounds", 6)?,
@@ -366,11 +402,15 @@ fn npu_sim_cmd(args: &Args) -> mcma::Result<()> {
         Some(other) => anyhow::bail!("--case must be 1|2|3, got {other}"),
         None => None,
     };
-    let benchfn = mcma::benchmarks::by_name(bench_name)?;
     let clf_topo = if method.is_mcma() { &bench.clfn_topology } else { &bench.clf2_topology };
     let approx_topos: Vec<Vec<usize>> =
         (0..bank.n_approx(method)).map(|_| bench.approx_topology.clone()).collect();
-    let sim = mcma::npu::NpuSim::new(ctx.cfg.npu, clf_topo, &approx_topos, benchfn.cpu_cycles());
+    let sim = mcma::npu::NpuSim::new(
+        ctx.cfg.npu,
+        clf_topo,
+        &approx_topos,
+        mcma::workload::precise_cost_cycles(&bench),
+    );
     let r = sim.simulate(&e.out.plan.routes, force);
 
     println!("benchmark / method : {} / {}", bench_name, method.label());

@@ -93,6 +93,9 @@ pub struct QosReport {
     /// observation queue was full — the server fills this in; 0 for the
     /// offline replay.
     pub shadow_dropped: u64,
+    /// Margins were seeded from an offline held-out replay
+    /// ([`Controller::seed_margins`]) instead of cold-starting at argmax.
+    pub warm_started: bool,
     pub classes: Vec<ClassQos>,
 }
 
@@ -147,6 +150,7 @@ pub struct Controller {
     classes: Vec<ClassState>,
     obs_since_tick: u64,
     ticks: u64,
+    warm_started: bool,
 }
 
 impl Controller {
@@ -163,7 +167,25 @@ impl Controller {
                 fresh_obs: 0,
             })
             .collect();
-        Controller { cfg, classes, obs_since_tick: 0, ticks: 0 }
+        Controller { cfg, classes, obs_since_tick: 0, ticks: 0, warm_started: false }
+    }
+
+    /// Seed per-class margins from an offline replay's final margins
+    /// (`mcma serve --qos-warm`): the controller starts where the
+    /// held-out data says it would end up, instead of at pure argmax.
+    /// A replay margin of [`MARGIN_PRECISE`] (its breaker tripped) seeds
+    /// at `margin_max` — breaker state is live-evidence-only, so the
+    /// trip/half-open/closed semantics are unchanged; margins keep
+    /// adapting from the seeded point exactly as from a cold start.
+    pub fn seed_margins(&mut self, margins: &[f32]) {
+        for (c, &m) in self.classes.iter_mut().zip(margins) {
+            c.margin = if m >= MARGIN_PRECISE {
+                self.cfg.margin_max
+            } else {
+                m.clamp(0.0, self.cfg.margin_max)
+            };
+        }
+        self.warm_started = true;
     }
 
     pub fn n_classes(&self) -> usize {
@@ -318,7 +340,15 @@ impl Controller {
                 breaker_open: matches!(c.breaker, Breaker::Open { .. }),
             })
             .collect();
-        QosReport { target, quantile, shadow_rate, ticks: self.ticks, shadow_dropped: 0, classes }
+        QosReport {
+            target,
+            quantile,
+            shadow_rate,
+            ticks: self.ticks,
+            shadow_dropped: 0,
+            warm_started: self.warm_started,
+            classes,
+        }
     }
 }
 
@@ -509,6 +539,28 @@ mod tests {
         assert_eq!(r.classes[0].violations, 1, "stale window was re-judged");
         assert_eq!(r.classes[0].trips, 0);
         assert_eq!(ctrl.margin(0), m, "margin moved on no new evidence");
+    }
+
+    /// Warm-started margins are clamped into [0, margin_max], a tripped
+    /// replay class seeds at margin_max (never with an open breaker), the
+    /// report records the warm start, and the control law keeps adapting
+    /// from the seeded point.
+    #[test]
+    fn seed_margins_warm_start() {
+        let mut ctrl = Controller::new(cfg(), 3);
+        ctrl.seed_margins(&[0.3, MARGIN_PRECISE, 5.0]);
+        assert!((ctrl.margin(0) - 0.3).abs() < 1e-6);
+        assert!((ctrl.margin(1) - 0.9).abs() < 1e-6, "tripped class seeds at margin_max");
+        assert!((ctrl.margin(2) - 0.9).abs() < 1e-6, "overshoot clamps to margin_max");
+        let r = ctrl.report(None, None);
+        assert!(r.warm_started);
+        assert!(!r.classes.iter().any(|c| c.breaker_open), "seeding never opens a breaker");
+        // Clean evidence relaxes from the seeded point at the normal rate.
+        feed(&mut ctrl, 0, 0.01, 16);
+        ctrl.tick();
+        assert!((ctrl.margin(0) - 0.25).abs() < 1e-6);
+        // A cold controller reports warm_started = false.
+        assert!(!Controller::new(cfg(), 1).report(None, None).warm_started);
     }
 
     #[test]

@@ -37,6 +37,15 @@
 //! Errors are per-sample RMSE in normalised output space — the same
 //! metric `coordinator::metrics` scores offline runs with, so `--qos-target`
 //! is directly comparable to the manifest's `error_bound`.
+//!
+//! The "precise BenchFn" box generalises to a
+//! [`crate::workload::PreciseProxy`]: for data-defined (table) workloads
+//! no precise function exists at runtime, so shadow verification scores
+//! against the HELD-OUT labels (nearest-record proxy over `test.bin`) —
+//! margins, hysteresis and breaker semantics are unchanged.  Margins can
+//! also be warm-started from an offline replay of the held-out set
+//! (`QosConfig::warm_start`, `mcma serve --qos-warm`) instead of
+//! cold-starting at argmax.
 
 pub mod controller;
 pub mod estimator;
@@ -87,6 +96,12 @@ pub struct QosConfig {
     /// the ceiling that keeps violating still accrues consecutive
     /// violations and trips the breaker after `breaker_trip` ticks.
     pub margin_max: f32,
+    /// Warm-start per-class margins from an offline replay of the
+    /// held-out set ([`sim::simulate`]) when the server spawns, instead
+    /// of cold-starting every margin at 0 (pure argmax) and spending the
+    /// first live ticks re-learning what the held-out data already shows
+    /// (`mcma serve --qos-warm`).
+    pub warm_start: bool,
 }
 
 impl Default for QosConfig {
@@ -104,6 +119,7 @@ impl Default for QosConfig {
             breaker_trip: 4,
             breaker_cooldown: 8,
             margin_max: 0.98,
+            warm_start: false,
         }
     }
 }

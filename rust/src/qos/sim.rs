@@ -25,6 +25,7 @@
 
 use crate::coordinator::{Dispatcher, Route, RoutePlan, Scratch};
 use crate::formats::Dataset;
+use crate::workload::PreciseProxy;
 
 use super::controller::{Controller, QosReport};
 use super::shadow::ShadowSampler;
@@ -88,6 +89,18 @@ pub fn simulate(
     let n_approx = d.n_approx();
     let x_norm = d.normalize(&ds.x_raw, ds.n);
 
+    // Oracle-less workloads: rejected samples are served from the
+    // dataset's own labels (exact on held-out replay), mirroring
+    // `run_dataset` — shadow errors are scored against `ds.y_row`
+    // either way, so the replay never needs a precise function.
+    let lookup;
+    let proxy = if d.has_runtime_oracle() {
+        None
+    } else {
+        lookup = PreciseProxy::lookup_from(d.bench, ds);
+        Some(&lookup)
+    };
+
     let sampler = ShadowSampler::new(qos.seed, qos.shadow_rate);
     let mut ctrl = Controller::new(*qos, n_approx);
     let mut margins: Vec<f32> = Vec::new();
@@ -106,7 +119,7 @@ pub fn simulate(
         let xb = &x_norm[i * d_in..(i + bn) * d_in];
         let rawb = &ds.x_raw[i * d_in..(i + bn) * d_in];
         d.plan_with_margins_into(xb, bn, Some(&margins), &mut plan, &mut scratch)?;
-        d.execute_plan_into(&plan, xb, rawb, bn, &mut y, &mut scratch)?;
+        d.execute_plan_with_proxy_into(&plan, xb, rawb, bn, proxy, &mut y, &mut scratch)?;
         for (j, r) in plan.routes.iter().enumerate() {
             if let Route::Approx(k) = r {
                 invoked += 1;

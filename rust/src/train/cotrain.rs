@@ -15,12 +15,22 @@
 //!   └──────────────────────────────────────────────────────────────────────┘
 //! ```
 //!
-//! Competitive allocation: approximators bid with their own error, samples
-//! move to whichever approximator serves them best, and the classifier
-//! chases the refined partition — invocation climbs until the partition
-//! stabilises.  `k = 1` degenerates to the paper's iterative single-
-//! approximator method (safe/unsafe relabelling each round), which is
-//! exactly the baseline the acceptance comparison wants.
+//! Two allocation schemes (paper §III.C):
+//!
+//! * **Competitive** — approximators bid with their own error, samples
+//!   move to whichever approximator serves them best (argmin-error
+//!   auction), and the classifier chases the refined partition —
+//!   invocation climbs until the partition stabilises.
+//! * **Complementary** — a hand-down chain: `A_0` trains on everything;
+//!   the samples it fails (error above the bound) are handed to `A_1`,
+//!   whose rejects go to `A_2`, and so on — each approximator specialises
+//!   on exactly the region its predecessors could not cover.  Labels are
+//!   first-fit along the chain (lowest `k` meeting the bound; none ⇒ the
+//!   reject class), exported under the paper's `mcma_complementary` key.
+//!
+//! `k = 1` degenerates to the paper's iterative single-approximator
+//! method (safe/unsafe relabelling each round) under either scheme, which
+//! is exactly the baseline the acceptance comparison wants.
 
 use crate::nn::{self, Mlp, PackedMlp};
 use crate::util::rng::Rng;
@@ -29,11 +39,47 @@ use crate::util::threadpool;
 use super::backprop::{one_hot_into, Loss, TrainConfig, Trainer};
 use super::data::TrainData;
 
+/// How rejected samples are (re)allocated across approximators each
+/// round (see the module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Scheme {
+    /// Argmin-error auction (the paper's `mcma_competitive`).
+    #[default]
+    Competitive,
+    /// Hand-down chain: each approximator trains on its predecessors'
+    /// rejects (the paper's `mcma_complementary`).
+    Complementary,
+}
+
+impl Scheme {
+    /// Artifact method key this scheme's nets are exported under.
+    pub fn method_key(self) -> &'static str {
+        match self {
+            Scheme::Competitive => "mcma_competitive",
+            Scheme::Complementary => "mcma_complementary",
+        }
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "competitive" | "mcma_competitive" => Ok(Scheme::Competitive),
+            "complementary" | "mcma_complementary" => Ok(Scheme::Complementary),
+            _ => anyhow::bail!("unknown scheme {s:?} (competitive|complementary)"),
+        }
+    }
+}
+
 /// Co-training hyperparameters.
 #[derive(Clone, Copy, Debug)]
 pub struct CotrainConfig {
     /// Number of approximators (classifier gets `k + 1` classes).
     pub k: usize,
+    /// Allocation scheme (competitive auction vs complementary chain).
+    pub scheme: Scheme,
     /// Maximum partition-refinement rounds.
     pub rounds: usize,
     /// Epochs for the warmup base approximator.
@@ -59,6 +105,7 @@ impl Default for CotrainConfig {
     fn default() -> Self {
         CotrainConfig {
             k: 4,
+            scheme: Scheme::Competitive,
             rounds: 6,
             warmup_epochs: 20,
             approx_epochs: 20,
@@ -149,16 +196,33 @@ pub fn cotrain(
         base.train_epoch(x, y, data.d_in, data.d_out, &all, &mut rng);
     }
 
-    // Error-driven seed partition: samples sorted by the base net's error,
-    // split into K quantile groups — each seed approximator starts from
-    // the warmup weights (jittered) and owns one difficulty band.
+    // Error-driven seeding from the base net's per-sample error:
+    // * competitive — K quantile bands, each seed approximator owns one
+    //   difficulty band;
+    // * complementary — a hand-down chain from the start: A_0 keeps
+    //   everything, A_k starts from the hardest (K-k)/K suffix (the
+    //   samples its predecessors are least likely to cover).
     let base_err = per_sample_err(&base.mlp, data);
     let mut order = all.clone();
     order.sort_by(|&a, &b| base_err[a].partial_cmp(&base_err[b]).unwrap());
-    let group_sz = n.div_ceil(cfg.k);
-    let mut groups: Vec<Vec<usize>> =
-        order.chunks(group_sz.max(1)).map(|c| c.to_vec()).collect();
-    groups.resize(cfg.k, Vec::new());
+    let mut groups: Vec<Vec<usize>> = match cfg.scheme {
+        Scheme::Competitive => {
+            let group_sz = n.div_ceil(cfg.k);
+            let mut g: Vec<Vec<usize>> =
+                order.chunks(group_sz.max(1)).map(|c| c.to_vec()).collect();
+            g.resize(cfg.k, Vec::new());
+            g
+        }
+        Scheme::Complementary => (0..cfg.k)
+            .map(|kk| {
+                if kk == 0 {
+                    all.clone()
+                } else {
+                    order[n * kk / cfg.k..].to_vec()
+                }
+            })
+            .collect(),
+    };
 
     let mut trainers: Vec<Trainer> = (0..cfg.k)
         .map(|kk| {
@@ -208,8 +272,10 @@ pub fn cotrain(
             })
             .collect();
 
-        // 3. Reassign every sample to its argmin-error approximator;
-        // bound violations become the reject class nC.
+        // 3. Relabel every sample — competitive: argmin-error auction;
+        // complementary: first approximator along the chain that meets
+        // the bound.  Either way a sample nobody covers becomes the
+        // reject class nC, and min-error stats track the same quantity.
         let mut reassigned = 0usize;
         let mut under_bound = 0usize;
         let mut err_sum = 0.0f64;
@@ -222,42 +288,67 @@ pub fn cotrain(
                 }
             }
             err_sum += be;
-            let c = if be <= cfg.error_bound {
+            let covered = be <= cfg.error_bound;
+            if covered {
                 under_bound += 1;
-                bk
-            } else {
-                cfg.k
+            }
+            let c = match (cfg.scheme, covered) {
+                (_, false) => cfg.k,
+                (Scheme::Competitive, true) => bk,
+                (Scheme::Complementary, true) => (0..cfg.k)
+                    .find(|&kk| errmat[kk][i] <= cfg.error_bound)
+                    .unwrap_or(cfg.k),
             };
             if labels[i] != c {
                 reassigned += 1;
             }
             labels[i] = c;
         }
-        for g in &mut groups {
-            g.clear();
-        }
-        for (i, &c) in labels.iter().enumerate() {
-            if c < cfg.k {
-                groups[c].push(i);
+        match cfg.scheme {
+            Scheme::Competitive => {
+                // Groups follow the refined labels 1:1.
+                for g in &mut groups {
+                    g.clear();
+                }
+                for (i, &c) in labels.iter().enumerate() {
+                    if c < cfg.k {
+                        groups[c].push(i);
+                    }
+                }
+                // Rescue starved approximators: hand an empty group the
+                // hardest samples (largest min-error) so its capacity
+                // attacks the uncovered region instead of idling.
+                let starving: Vec<usize> =
+                    (0..cfg.k).filter(|&kk| groups[kk].is_empty()).collect();
+                if !starving.is_empty() {
+                    let mut hardest = all.clone();
+                    hardest.sort_by(|&a, &b| {
+                        let ea =
+                            errmat.iter().map(|r| r[a]).fold(f64::INFINITY, f64::min);
+                        let eb =
+                            errmat.iter().map(|r| r[b]).fold(f64::INFINITY, f64::min);
+                        eb.partial_cmp(&ea).unwrap()
+                    });
+                    let share = (n / (4 * cfg.k)).max(8).min(n);
+                    for (j, kk) in starving.into_iter().enumerate() {
+                        let lo = (j * share).min(n);
+                        let hi = ((j + 1) * share).min(n);
+                        groups[kk] = hardest[lo..hi].to_vec();
+                    }
+                }
             }
-        }
-        // Rescue starved approximators: hand an empty group the hardest
-        // samples (largest min-error) so its capacity attacks the
-        // uncovered region instead of idling.
-        let starving: Vec<usize> =
-            (0..cfg.k).filter(|&kk| groups[kk].is_empty()).collect();
-        if !starving.is_empty() {
-            let mut hardest = all.clone();
-            hardest.sort_by(|&a, &b| {
-                let ea = errmat.iter().map(|r| r[a]).fold(f64::INFINITY, f64::min);
-                let eb = errmat.iter().map(|r| r[b]).fold(f64::INFINITY, f64::min);
-                eb.partial_cmp(&ea).unwrap()
-            });
-            let share = (n / (4 * cfg.k)).max(8).min(n);
-            for (j, kk) in starving.into_iter().enumerate() {
-                let lo = (j * share).min(n);
-                let hi = ((j + 1) * share).min(n);
-                groups[kk] = hardest[lo..hi].to_vec();
+            Scheme::Complementary => {
+                // Hand-down chain: A_0 keeps everything; A_{k+1} trains on
+                // exactly the samples A_0..A_k all fail.  Uncovered
+                // samples stay in every later group — they keep being
+                // handed down, which is what grows coverage round over
+                // round.  No starvation rescue: an empty tail group means
+                // the chain already covers everything upstream of it.
+                let mut rejected = all.clone();
+                for kk in 0..cfg.k {
+                    groups[kk] = rejected.clone();
+                    rejected.retain(|&i| errmat[kk][i] > cfg.error_bound);
+                }
             }
         }
 
@@ -326,6 +417,7 @@ mod tests {
     fn cfg(k: usize) -> CotrainConfig {
         CotrainConfig {
             k,
+            scheme: Scheme::Competitive,
             rounds: 5,
             warmup_epochs: 30,
             approx_epochs: 30,
@@ -414,6 +506,78 @@ mod tests {
         assert_eq!(a.classifier, b.classifier, "classifier depends on thread count");
         assert_eq!(a.approximators, b.approximators, "approximators depend on thread count");
         assert_eq!(a.history.len(), b.history.len());
+    }
+
+    /// Complementary K=2 convergence on the two-cluster workload: the
+    /// chain (A_0 on everything, A_1 on A_0's rejects) reaches a
+    /// high-coverage stable allocation, the classifier tracks the
+    /// first-fit labels, and churn settles.
+    #[test]
+    fn complementary_chain_converges_k2() {
+        let data = two_cluster_data(600, 0xDA7A);
+        let mut c = cfg(2);
+        c.scheme = Scheme::Complementary;
+        let out = cotrain(&data, &[2, 4, 1], &[2, 8, 3], &c);
+        assert_eq!(out.approximators.len(), 2);
+        assert_eq!(out.clf_classes, 3);
+        assert!(!out.history.is_empty() && out.history.len() <= 5);
+        for h in &out.history {
+            assert!((0.0..=1.0).contains(&h.assign_invocation));
+            assert!((0.0..=1.0).contains(&h.clf_invocation));
+            assert!(h.mean_min_err.is_finite());
+        }
+        let last = out.history.last().unwrap();
+        assert!(
+            last.assign_invocation >= 0.75,
+            "complementary chain coverage too low: {}",
+            last.assign_invocation
+        );
+        assert!(
+            last.clf_invocation >= 0.5,
+            "classifier lost the chain labels: {}",
+            last.clf_invocation
+        );
+        let first = &out.history[0];
+        assert!(
+            last.reassigned <= first.reassigned,
+            "chain allocation still churning: {} -> {}",
+            first.reassigned,
+            last.reassigned
+        );
+    }
+
+    /// The complementary loop is thread-count deterministic too (same
+    /// per-job RNG stream discipline as the competitive scheme).
+    #[test]
+    fn complementary_deterministic_across_thread_counts() {
+        let data = two_cluster_data(200, 0x5EED);
+        let mut a_cfg = cfg(2);
+        a_cfg.scheme = Scheme::Complementary;
+        a_cfg.rounds = 2;
+        a_cfg.warmup_epochs = 5;
+        a_cfg.approx_epochs = 5;
+        a_cfg.clf_epochs = 5;
+        let mut b_cfg = a_cfg;
+        a_cfg.threads = 1;
+        b_cfg.threads = 4;
+        let a = cotrain(&data, &[2, 4, 1], &[2, 6, 3], &a_cfg);
+        let b = cotrain(&data, &[2, 4, 1], &[2, 6, 3], &b_cfg);
+        assert_eq!(a.classifier, b.classifier);
+        assert_eq!(a.approximators, b.approximators);
+    }
+
+    #[test]
+    fn scheme_keys_and_parse() {
+        use std::str::FromStr;
+        assert_eq!(Scheme::Competitive.method_key(), "mcma_competitive");
+        assert_eq!(Scheme::Complementary.method_key(), "mcma_complementary");
+        assert_eq!(Scheme::from_str("competitive").unwrap(), Scheme::Competitive);
+        assert_eq!(
+            Scheme::from_str("mcma_complementary").unwrap(),
+            Scheme::Complementary
+        );
+        assert!(Scheme::from_str("auction").is_err());
+        assert_eq!(Scheme::default(), Scheme::Competitive);
     }
 
     /// `k = 1` degenerates to the iterative safe/unsafe method: a binary

@@ -9,24 +9,27 @@
 //!   topology, with every batch forward routed through the tiled packed
 //!   GEMM kernel (`nn::gemm`);
 //! * [`cotrain`] — the paper's co-training loop: seed K topology-identical
-//!   approximators on an error-driven partition, reassign each sample to
-//!   its argmin-error approximator every round, retrain the multiclass
-//!   classifier on the refined labels until invocation converges;
-//! * [`data`] — workload synthesis straight from the precise benchmark
-//!   functions, including manifest derivation when no Python-built
-//!   artifact tree exists;
+//!   approximators on an error-driven partition, reallocate samples every
+//!   round (competitive argmin auction or the complementary hand-down
+//!   chain), retrain the multiclass classifier on the refined labels
+//!   until invocation converges;
+//! * [`data`] — re-exports of the workload-source synthesis
+//!   (`crate::workload`): registered benchmark generators AND
+//!   user-supplied CSV/TSV tables, including manifest derivation when no
+//!   Python-built artifact tree exists;
 //! * [`train_bench`] — the `mcma train` entrypoint: co-train K
 //!   approximators AND a K=1 baseline under the same epoch budget, measure
 //!   both through the real serving dispatcher on a held-out set, and
 //!   export MCMW/MCQW/MCMD artifacts plus a manifest that `ModelBank` and
-//!   every eval driver load unchanged.
+//!   every eval driver load unchanged — from a registered benchmark
+//!   (`--bench`) or from nothing but a data file (`--data foo.csv`).
 
 pub mod backprop;
 pub mod cotrain;
 pub mod data;
 
 pub use backprop::{one_hot_into, xavier_mlp, Loss, TrainConfig, Trainer};
-pub use cotrain::{cotrain, Cotrained, CotrainConfig, RoundStats};
+pub use cotrain::{cotrain, Cotrained, CotrainConfig, RoundStats, Scheme};
 pub use data::{derive_bench_manifest, sample_data, TrainData};
 
 use std::collections::HashMap;
@@ -36,17 +39,32 @@ use crate::bench_harness::{pct, Table};
 use crate::config::{ExecMode, Method};
 use crate::coordinator::Dispatcher;
 use crate::formats::weights::MethodWeights;
-use crate::formats::{Manifest, QuantizedMlpFile, WeightsFile};
+use crate::formats::{Manifest, QuantizedMlpFile, WeightsFile, WorkloadKind};
 use crate::runtime::ModelBank;
+use crate::workload::{SyntheticSource, TableSource, WorkloadSource};
 
 /// `mcma train` options (CLI surface).
 #[derive(Clone, Debug)]
 pub struct TrainOptions {
+    /// Registered benchmark to train (`--bench`); empty when `data` is
+    /// set.
     pub bench: String,
+    /// CSV/TSV file defining a table workload (`--data`); mutually
+    /// exclusive with `bench`.
+    pub data: Option<PathBuf>,
+    /// Trailing label columns of the data file (`--d-out`; required with
+    /// `data`).
+    pub d_out: usize,
+    /// Held-out fraction of table rows (`--holdout`), the split the
+    /// oracle-less eval/QoS paths verify against.
+    pub holdout: f64,
+    /// Co-training allocation scheme (`--scheme competitive|complementary`).
+    pub scheme: Scheme,
     /// Number of approximators for the MCMA net (K=1 baseline always runs
     /// alongside under the same budget).
     pub k: usize,
-    /// Training samples to synthesise (held-out test set is samples/4).
+    /// Training samples to synthesise (held-out test set is samples/4);
+    /// for table workloads, a cap on the rows actually used.
     pub samples: usize,
     /// Maximum co-training rounds.
     pub rounds: usize,
@@ -66,6 +84,10 @@ impl Default for TrainOptions {
     fn default() -> Self {
         TrainOptions {
             bench: String::new(),
+            data: None,
+            d_out: 0,
+            holdout: 0.25,
+            scheme: Scheme::Competitive,
             k: 4,
             samples: 4000,
             rounds: 6,
@@ -79,11 +101,48 @@ impl Default for TrainOptions {
     }
 }
 
+impl TrainOptions {
+    /// Build the workload source these options describe: a registered
+    /// benchmark (`--bench`) or a CSV/TSV table (`--data`).
+    pub fn source(&self) -> crate::Result<Box<dyn WorkloadSource>> {
+        match &self.data {
+            Some(path) => {
+                anyhow::ensure!(
+                    self.bench.is_empty(),
+                    "--bench and --data are mutually exclusive"
+                );
+                anyhow::ensure!(
+                    self.d_out >= 1,
+                    "--data requires --d-out N (the trailing label columns)"
+                );
+                let src = TableSource::load(path, self.d_out, self.holdout)?;
+                anyhow::ensure!(
+                    crate::benchmarks::by_name(src.name()).is_err(),
+                    "workload name {:?} collides with a registered benchmark — \
+                     rename the data file",
+                    src.name()
+                );
+                Ok(Box::new(src))
+            }
+            None => {
+                anyhow::ensure!(
+                    !self.bench.is_empty(),
+                    "either --bench or --data is required"
+                );
+                Ok(Box::new(SyntheticSource::by_name(&self.bench)?))
+            }
+        }
+    }
+}
+
 /// What `train_bench` measured and wrote.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
     pub bench: String,
     pub k: usize,
+    /// The MCMA method trained (`mcma_competitive` or
+    /// `mcma_complementary`, per `TrainOptions::scheme`).
+    pub method: Method,
     pub error_bound: f64,
     /// Serving invocation of the K-approximator MCMA net on held-out data
     /// (measured through the real `Dispatcher`, native engine).
@@ -109,7 +168,7 @@ impl TrainReport {
             &["method", "invocation", "rmse/bound"],
         );
         t.row(vec![
-            format!("MCMA K={}", self.k),
+            format!("{} K={}", self.method.label(), self.k),
             pct(self.invocation_k),
             format!("{:.2}", self.rmse_over_bound_k),
         ]);
@@ -195,6 +254,19 @@ fn save_round_stats(
     Ok(())
 }
 
+/// Method keys of a weights file, in `Method::ALL` display order
+/// (unknown keys last) — the manifest's servable-method list.
+fn method_keys(wf: &WeightsFile) -> Vec<String> {
+    let mut keys: Vec<String> = wf.methods.keys().cloned().collect();
+    keys.sort_by_key(|k| {
+        Method::ALL
+            .iter()
+            .position(|m| m.key() == k.as_str())
+            .unwrap_or(Method::ALL.len())
+    });
+    keys
+}
+
 /// Classifier topology for `k` approximators: the manifest's classifier
 /// hidden sizes with the output width forced to `k + 1` (2 = the binary
 /// baseline shape).
@@ -208,30 +280,42 @@ fn clf_topo(bench: &crate::formats::BenchManifest, k: usize) -> Vec<usize> {
     t
 }
 
-/// Co-train benchmark `opts.bench` natively and export a servable artifact
-/// tree.  See the module docs for the full pipeline.
+/// Co-train a workload natively (registered benchmark via `--bench`, data
+/// file via `--data`) and export a servable artifact tree.  See the
+/// module docs for the full pipeline.
 pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     anyhow::ensure!(opts.k >= 1, "--k must be >= 1");
     anyhow::ensure!(opts.samples >= 64, "--samples must be >= 64");
-    let benchfn = crate::benchmarks::by_name(&opts.bench)?;
+    let source = opts.source()?;
+    let name = source.name().to_string();
+    let is_table = source.kind() == WorkloadKind::Table;
+    let mcma_key = opts.scheme.method_key();
+    let mcma_method = match opts.scheme {
+        Scheme::Competitive => Method::McmaCompetitive,
+        Scheme::Complementary => Method::McmaComplementary,
+    };
 
-    // Benchmark spec: reuse an existing manifest entry (out dir first, then
-    // the ambient artifact tree) or derive one from the generator.
+    // Benchmark spec: reuse an existing manifest entry (out dir first,
+    // then the ambient artifact tree) or derive one from the source
+    // itself.  A table entry is only reusable while its source digest
+    // matches — retraining from a changed data file re-derives bounds and
+    // rebuilds the tree (the old nets no longer describe the data).
     let existing = Manifest::load(&opts.out_dir)
         .ok()
         .or_else(|| Manifest::load(&crate::artifacts_dir()).ok());
-    let mut bench = existing
-        .as_ref()
-        .and_then(|m| m.bench(&opts.bench).ok().cloned())
-        .unwrap_or_else(|| {
-            data::derive_bench_manifest(
-                benchfn.as_ref(),
-                opts.k,
-                opts.error_bound.unwrap_or(0.05),
-                2000,
-                opts.seed,
-            )
-        });
+    let existing_entry = existing.as_ref().and_then(|m| m.bench(&name).ok().cloned());
+    // Dimensions must match too: the same CSV re-trained with a different
+    // `--d-out` is a different workload shape, and a stale entry's
+    // normalisation bounds would index out of range.
+    let reusable = existing_entry.filter(|e| {
+        e.kind == source.kind()
+            && e.n_in == source.d_in()
+            && e.n_out == source.d_out()
+            && (!is_table || e.source_digest == source.digest())
+    });
+    let reused_entry = reusable.is_some();
+    let mut bench = reusable
+        .unwrap_or_else(|| source.derive_manifest(opts.k, opts.error_bound, opts.seed));
     if let Some(b) = opts.error_bound {
         bench.error_bound = b;
     }
@@ -240,16 +324,19 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     let clf_topo_k = clf_topo(&bench, opts.k);
     let clf_topo_1 = clf_topo(&bench, 1);
 
-    let train = data::sample_data(benchfn.as_ref(), &bench, opts.samples, opts.seed ^ 0x7EA1);
-    let test = data::sample_data(
-        benchfn.as_ref(),
-        &bench,
-        (opts.samples / 4).max(64),
-        opts.seed ^ 0x7E57,
+    let (train, test) =
+        source.datasets(&bench, opts.samples, (opts.samples / 4).max(64), opts.seed)?;
+    anyhow::ensure!(
+        train.n >= 8 && test.n >= 1,
+        "workload too small after the train/held-out split: {} train / {} \
+         held-out rows",
+        train.n,
+        test.n
     );
 
-    let cfg_for = |k: usize| CotrainConfig {
+    let cfg_for = |k: usize, scheme: Scheme| CotrainConfig {
         k,
+        scheme,
         rounds: opts.rounds,
         warmup_epochs: opts.epochs,
         approx_epochs: opts.epochs,
@@ -265,8 +352,20 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         },
         tol: 0.005,
     };
-    let multi = cotrain::cotrain(&train, &bench.approx_topology, &clf_topo_k, &cfg_for(opts.k));
-    let single = cotrain::cotrain(&train, &bench.approx_topology, &clf_topo_1, &cfg_for(1));
+    let multi = cotrain::cotrain(
+        &train,
+        &bench.approx_topology,
+        &clf_topo_k,
+        &cfg_for(opts.k, opts.scheme),
+    );
+    // The K=1 baseline is the paper's one-pass method; the allocation
+    // scheme only matters for K >= 2, so it always runs competitive.
+    let single = cotrain::cotrain(
+        &train,
+        &bench.approx_topology,
+        &clf_topo_1,
+        &cfg_for(1, Scheme::Competitive),
+    );
 
     let mut methods = HashMap::new();
     methods.insert(
@@ -280,9 +379,9 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         },
     );
     methods.insert(
-        "mcma_competitive".to_string(),
+        mcma_key.to_string(),
         MethodWeights {
-            method: "mcma_competitive".into(),
+            method: mcma_key.into(),
             cascade: false,
             clf_classes: opts.k + 1,
             classifiers: vec![multi.classifier.clone()],
@@ -292,11 +391,13 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     let wf = WeightsFile { methods };
 
     // Measure both nets through the REAL serving path (native engine) on
-    // held-out data — the invocation number the paper reports.
+    // held-out data — the invocation number the paper reports.  Table
+    // workloads have no runtime oracle; `run_dataset` serves their
+    // rejected samples from the held-out labels themselves.
     let test_ds = test.to_dataset();
     let bank = ModelBank::from_host(&bench.name, wf.clone());
-    let out_k = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::Native)?
-        .run_dataset(&test_ds)?;
+    let out_k =
+        Dispatcher::new(&bench, &bank, mcma_method, ExecMode::Native)?.run_dataset(&test_ds)?;
     let out_1 = Dispatcher::new(&bench, &bank, Method::OnePass, ExecMode::Native)?
         .run_dataset(&test_ds)?;
 
@@ -308,20 +409,39 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
 
     wf.save(&bench_dir.join("weights_rust.bin"))?;
     wrote.push(format!("{}/weights_rust.bin", bench.name));
-    if !bench_dir.join("weights.bin").exists() {
-        // Standalone tree (no Python build): make it directly servable.
+    // Standalone tree (no Python build): make it directly servable.  A
+    // table tree is ALWAYS rust-native — there is no Python provenance to
+    // preserve, and a digest change means the old nets/labels are stale —
+    // so its weights.bin and test.bin are rewritten unconditionally.
+    let wrote_weights = is_table || !bench_dir.join("weights.bin").exists();
+    if wrote_weights {
         wf.save(&bench_dir.join("weights.bin"))?;
         wrote.push(format!("{}/weights.bin", bench.name));
     }
-    if !bench_dir.join("test.bin").exists() {
+    if is_table || !bench_dir.join("test.bin").exists() {
         test_ds.save(&bench_dir.join("test.bin"))?;
         wrote.push(format!("{}/test.bin", bench.name));
     }
     for (i, a) in multi.approximators.iter().enumerate() {
-        let name = format!("approx_rust_k{}_{i}.mcqw", opts.k);
-        QuantizedMlpFile::from_mlp(a).save(&bench_dir.join(&name))?;
-        wrote.push(format!("{}/{name}", bench.name));
+        let fname = format!("approx_rust_k{}_{i}.mcqw", opts.k);
+        QuantizedMlpFile::from_mlp(a).save(&bench_dir.join(&fname))?;
+        wrote.push(format!("{}/{fname}", bench.name));
     }
+
+    // The entry's `methods` list is what eval/summary pick serving
+    // methods from, so it must describe what the tree's weights.bin
+    // ACTUALLY contains — not merely which schemes were ever trained.
+    // If this run rewrote weights.bin the answer is `wf`'s keys; if an
+    // existing weights.bin was preserved (Python or earlier Rust tree),
+    // re-read its method set (this run's nets live only in
+    // weights_rust.bin, which `mcma summary` compares separately).
+    let servable_methods: Vec<String> = if wrote_weights {
+        method_keys(&wf)
+    } else {
+        WeightsFile::load(&bench_dir.join("weights.bin"))
+            .map(|w| method_keys(&w))
+            .unwrap_or_else(|_| method_keys(&wf))
+    };
 
     let mut man = Manifest::load(&opts.out_dir).unwrap_or_else(|_| Manifest {
         n_approx: opts.k,
@@ -329,30 +449,26 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         benchmarks: HashMap::new(),
         root: opts.out_dir.clone(),
     });
-    if let Some(entry) = man.benchmarks.get_mut(&bench.name) {
-        // The tree already describes this benchmark (e.g. a Python-built
-        // manifest whose topologies/bounds still describe weights.bin and
-        // the compiled HLO) — do NOT rewrite its shared fields, only record
-        // that the trained methods exist.  The Rust-trained nets carry
-        // their own shapes inside weights_rust.bin; the native serving
-        // path never consults the manifest topologies.
-        for m in ["one_pass", "mcma_competitive"] {
-            if !entry.methods.iter().any(|k| k == m) {
-                entry.methods.push(m.to_string());
+    match man.benchmarks.get_mut(&bench.name) {
+        Some(entry) if !is_table && reused_entry => {
+            // The tree already describes this benchmark (e.g. a
+            // Python-built manifest whose topologies/bounds still describe
+            // weights.bin and the compiled HLO) — do NOT rewrite its
+            // shared fields, only reconcile the servable-method list.
+            // The Rust-trained nets carry their own shapes inside
+            // weights_rust.bin; the native serving path never consults the
+            // manifest topologies.
+            entry.methods = servable_methods;
+        }
+        _ => {
+            bench.train_n = train.n;
+            bench.test_n = test.n;
+            if opts.k > 1 {
+                bench.clfn_topology = clf_topo_k;
             }
+            bench.methods = servable_methods;
+            man.upsert_bench(bench.clone());
         }
-    } else {
-        bench.train_n = train.n;
-        bench.test_n = test.n;
-        if opts.k > 1 {
-            bench.clfn_topology = clf_topo_k;
-        }
-        for m in ["one_pass", "mcma_competitive"] {
-            if !bench.methods.iter().any(|k| k == m) {
-                bench.methods.push(m.to_string());
-            }
-        }
-        man.upsert_bench(bench.clone());
     }
     man.save_to(&opts.out_dir)?;
     wrote.push("manifest.json".into());
@@ -362,7 +478,7 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         &opts.out_dir,
         &bench.name,
         &[
-            ("mcma_competitive", multi.history.as_slice()),
+            (mcma_key, multi.history.as_slice()),
             ("one_pass", single.history.as_slice()),
         ],
     )?;
@@ -371,6 +487,7 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     Ok(TrainReport {
         bench: bench.name,
         k: opts.k,
+        method: mcma_method,
         error_bound: bench.error_bound,
         invocation_k: out_k.metrics.invocation(),
         invocation_base: out_1.metrics.invocation(),

@@ -1,0 +1,166 @@
+//! Workload-source subsystem — "a workload" as a first-class object.
+//!
+//! The paper's MCMA architecture is workload-agnostic: any function with a
+//! tolerable quality loss can be partitioned across multiple approximators.
+//! Historically this reproduction could only open the eight registered
+//! [`crate::benchmarks::BenchFn`]s; this module abstracts where training
+//! data and ground truth come from, so `mcma train --data foo.csv` opens
+//! an arbitrary CSV/TSV-defined workload through the exact same pipeline
+//! (co-train → MCMW/MCQW/MCMD export → `ModelBank` → `Dispatcher` →
+//! `Server`) as a paper benchmark.
+//!
+//! * [`WorkloadSource`] — the trait: dimensions, manifest derivation
+//!   (normalisation bounds, topology heuristics, error bound) and the
+//!   deterministic train/held-out split;
+//! * [`SyntheticSource`] — wraps a registered precise benchmark function
+//!   (the `train::data` synthesis moved behind it, stream-compatible);
+//! * [`TableSource`] — a dependency-free CSV/TSV reader with schema
+//!   inference, header handling and NaN/ragged-row diagnostics;
+//! * [`PreciseProxy`] — the oracle-less serving story: for `Table`
+//!   workloads no precise function exists at runtime, so the dispatcher's
+//!   precise fallback routes through a held-out nearest-record lookup
+//!   ([`NearestLookup`]) or a configurable reject-with-error, and the QoS
+//!   shadow loop verifies against held-out labels instead of re-executing
+//!   the precise function.
+
+pub mod proxy;
+pub mod synthetic;
+pub mod table;
+
+pub use proxy::{NearestLookup, PreciseProxy};
+pub use synthetic::{derive_bench_manifest, sample_data, SyntheticSource};
+pub use table::{TableData, TableSource};
+
+use crate::formats::{BenchManifest, Dataset, WorkloadKind};
+
+/// One sampled (or sliced) training/test set, kept in both raw and
+/// normalised space: raw feeds the precise-CPU path and `test.bin` export,
+/// normalised feeds the trainers.
+#[derive(Clone, Debug)]
+pub struct TrainData {
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Row-major `(n, d_in)` raw inputs.
+    pub x_raw: Vec<f32>,
+    /// Row-major `(n, d_in)` normalised inputs.
+    pub x_norm: Vec<f32>,
+    /// Row-major `(n, d_out)` normalised precise outputs.
+    pub y_norm: Vec<f32>,
+}
+
+impl TrainData {
+    /// Convert to the on-disk dataset shape (`test.bin` export, eval
+    /// drivers).
+    pub fn to_dataset(&self) -> Dataset {
+        Dataset {
+            n: self.n,
+            d_in: self.d_in,
+            d_out: self.d_out,
+            x_raw: self.x_raw.clone(),
+            y_norm: self.y_norm.clone(),
+        }
+    }
+}
+
+/// Where a trainable workload's samples and ground truth come from.
+///
+/// Implementations must be deterministic in `seed`: the same source +
+/// seed always yields bit-identical datasets, regardless of thread count
+/// or machine.
+pub trait WorkloadSource: Send + Sync {
+    /// Workload name — the manifest key and artifact directory name.
+    fn name(&self) -> &str;
+
+    fn kind(&self) -> WorkloadKind;
+
+    fn d_in(&self) -> usize;
+
+    fn d_out(&self) -> usize;
+
+    /// Content digest of the source (hex FNV-1a 64 of the data file for
+    /// tables; empty for synthetic generators).
+    fn digest(&self) -> String;
+
+    /// Derive a manifest entry from the source itself: normalisation
+    /// bounds, default topologies sized to the workload's width, and —
+    /// when `error_bound` is `None` — an error bound derived from the
+    /// data.
+    fn derive_manifest(&self, k: usize, error_bound: Option<f64>, seed: u64) -> BenchManifest;
+
+    /// Produce the training set (≤ `n_train` rows) and the held-out test
+    /// set (≤ `n_test` rows).  For table sources the two are DISJOINT
+    /// row subsets under a deterministic seeded split; for synthetic
+    /// sources they are independent generator draws.
+    fn datasets(
+        &self,
+        man: &BenchManifest,
+        n_train: usize,
+        n_test: usize,
+        seed: u64,
+    ) -> crate::Result<(TrainData, TrainData)>;
+}
+
+/// Estimated CPU cost (cycles) of one precise evaluation for the NPU
+/// speedup/energy model.  Registered synthetic benchmarks report their
+/// derived op counts; table workloads have no closed-form function, so the
+/// precise path is modelled as its actual runtime implementation — a
+/// nearest-record scan over the held-out store (`test_n` records x `n_in`
+/// lanes, 4-wide SIMD) plus dispatch overhead.
+pub fn precise_cost_cycles(bench: &BenchManifest) -> u64 {
+    if bench.kind == WorkloadKind::Synthetic {
+        if let Ok(f) = crate::benchmarks::by_name(&bench.name) {
+            return f.cpu_cycles();
+        }
+    }
+    let records = bench.test_n.max(64) as u64;
+    let per_record = (bench.n_in as u64 + 2).div_ceil(4);
+    500 + records * per_record
+}
+
+/// Shared bound-padding helper: widen a probed `[lo, hi]` range by 1% so
+/// fresh draws stay inside, with a degenerate-dimension fallback that
+/// keeps `(v - lo) / (hi - lo)` finite.
+pub(crate) fn pad_bounds(lo: f32, hi: f32) -> (f32, f32) {
+    let range = hi - lo;
+    if range > 0.0 {
+        (lo - 0.01 * range, hi + 0.01 * range)
+    } else {
+        (lo - 0.5, lo + 0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precise_cost_registered_vs_table() {
+        let man = crate::workload::synthetic::SyntheticSource::by_name("sobel")
+            .unwrap()
+            .derive_manifest(2, None, 1);
+        let registered = precise_cost_cycles(&man);
+        assert_eq!(
+            registered,
+            crate::benchmarks::by_name("sobel").unwrap().cpu_cycles()
+        );
+
+        let mut table_man = man.clone();
+        table_man.kind = WorkloadKind::Table;
+        table_man.test_n = 1000;
+        let scan = precise_cost_cycles(&table_man);
+        // 9 inputs -> ceil(11/4) = 3 lanes-cycles per record.
+        assert_eq!(scan, 500 + 1000 * 3);
+        // More records => costlier precise path.
+        table_man.test_n = 4000;
+        assert!(precise_cost_cycles(&table_man) > scan);
+    }
+
+    #[test]
+    fn pad_bounds_widens_and_handles_degenerate() {
+        let (lo, hi) = pad_bounds(0.0, 1.0);
+        assert!(lo < 0.0 && hi > 1.0);
+        let (lo, hi) = pad_bounds(3.0, 3.0);
+        assert!(hi - lo > 0.5, "degenerate dim must widen");
+    }
+}

@@ -1,0 +1,254 @@
+//! The precise-path proxy — what the dispatcher's CPU fallback and the
+//! QoS shadow verifier call when a "precise" answer is needed.
+//!
+//! For the paper's registered benchmarks the proxy IS the precise
+//! function.  For table workloads no closed-form oracle exists at
+//! runtime, so the proxy is either a nearest-record lookup over the
+//! held-out store ([`NearestLookup`]) — exact on held-out replay (eval,
+//! QoS shadow verification), nearest-neighbour interpolation on unseen
+//! inputs — or a configurable reject-with-error for serving setups that
+//! would rather fail a request than serve an interpolated answer.
+
+use std::sync::Arc;
+
+use crate::benchmarks::{self, BenchFn};
+use crate::formats::{BenchManifest, Dataset, WorkloadKind};
+
+/// Nearest-record store: raw input rows with their normalised labels.
+/// Distance is squared L2 in NORMALISED input space (per-dimension
+/// `1/(hi-lo)` scaling), so wide raw columns don't dominate the metric.
+pub struct NearestLookup {
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    x_raw: Vec<f32>,
+    y_norm: Vec<f32>,
+    inv_scale: Vec<f32>,
+}
+
+impl NearestLookup {
+    pub fn from_dataset(bench: &BenchManifest, ds: &Dataset) -> Self {
+        assert_eq!(ds.d_in, bench.n_in, "lookup store/bench input dims disagree");
+        assert_eq!(ds.d_out, bench.n_out);
+        assert!(ds.n > 0, "lookup store must be non-empty");
+        let inv_scale = (0..bench.n_in)
+            .map(|d| {
+                let r = bench.x_hi[d] - bench.x_lo[d];
+                if r > 0.0 { 1.0 / r } else { 0.0 }
+            })
+            .collect();
+        NearestLookup {
+            n: ds.n,
+            d_in: ds.d_in,
+            d_out: ds.d_out,
+            x_raw: ds.x_raw.clone(),
+            y_norm: ds.y_norm.clone(),
+            inv_scale,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Copy the label of the nearest stored record into `out`
+    /// (normalised space).  Linear scan — allocation-free, O(n · d_in);
+    /// the store is a held-out set (hundreds–thousands of rows), and the
+    /// cost model charges the precise path accordingly
+    /// ([`super::precise_cost_cycles`]).
+    pub fn lookup_into(&self, x_raw: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x_raw.len(), self.d_in);
+        debug_assert_eq!(out.len(), self.d_out);
+        let (mut best_i, mut best_d) = (0usize, f64::INFINITY);
+        for i in 0..self.n {
+            let row = &self.x_raw[i * self.d_in..(i + 1) * self.d_in];
+            let mut dist = 0.0f64;
+            for d in 0..self.d_in {
+                let diff = ((x_raw[d] - row[d]) * self.inv_scale[d]) as f64;
+                dist += diff * diff;
+                if dist >= best_d {
+                    break; // early-out: already worse than the best
+                }
+            }
+            if dist < best_d {
+                best_d = dist;
+                best_i = i;
+            }
+        }
+        out.copy_from_slice(&self.y_norm[best_i * self.d_out..(best_i + 1) * self.d_out]);
+    }
+}
+
+/// The precise path behind the dispatcher and the QoS shadow verifier.
+pub enum PreciseProxy {
+    /// A registered precise benchmark function (synthetic workloads).
+    Function(Box<dyn BenchFn>),
+    /// Held-out nearest-record lookup (table workloads: eval and the
+    /// default serve fallback).  `Arc` so a multi-worker server shares
+    /// ONE store instead of one copy per dispatch thread.
+    Lookup(Arc<NearestLookup>),
+    /// No oracle configured: any precise-path sample is a hard error
+    /// (table workloads served with `--precise-fallback reject`).
+    Reject,
+}
+
+impl PreciseProxy {
+    /// The default proxy for a manifest entry: the registered function
+    /// for synthetic workloads (unknown names are an error, as before),
+    /// `Reject` for table workloads until the caller installs a lookup.
+    pub fn for_bench(bench: &BenchManifest) -> crate::Result<Self> {
+        match bench.kind {
+            WorkloadKind::Synthetic => {
+                Ok(PreciseProxy::Function(benchmarks::by_name(&bench.name)?))
+            }
+            WorkloadKind::Table => Ok(PreciseProxy::Reject),
+        }
+    }
+
+    /// Held-out lookup proxy over a dataset (table workloads).
+    pub fn lookup_from(bench: &BenchManifest, ds: &Dataset) -> Self {
+        PreciseProxy::Lookup(Arc::new(NearestLookup::from_dataset(bench, ds)))
+    }
+
+    pub fn is_reject(&self) -> bool {
+        matches!(self, PreciseProxy::Reject)
+    }
+
+    /// Produce the precise answer for one raw input row, in NORMALISED
+    /// output space.  `raw_scratch` is a caller-owned `d_out`-sized f64
+    /// buffer (kept out of the hot path's allocations).
+    pub fn serve_norm_into(
+        &self,
+        bench: &BenchManifest,
+        x_raw: &[f32],
+        raw_scratch: &mut [f64],
+        out: &mut [f32],
+    ) -> crate::Result<()> {
+        match self {
+            PreciseProxy::Function(f) => {
+                f.eval(x_raw, raw_scratch);
+                bench.normalize_y_into(raw_scratch, out);
+                Ok(())
+            }
+            PreciseProxy::Lookup(l) => {
+                l.lookup_into(x_raw, out);
+                Ok(())
+            }
+            PreciseProxy::Reject => anyhow::bail!(
+                "workload {:?} has no runtime oracle: a request was routed to \
+                 the precise path but the precise fallback is configured to \
+                 reject (serve with the held-out lookup proxy, or tighten \
+                 training so the classifier stops rejecting)",
+                bench.name
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::WorkloadKind;
+
+    fn bench(kind: WorkloadKind) -> BenchManifest {
+        BenchManifest {
+            name: "t".into(),
+            domain: "test".into(),
+            kind,
+            source_digest: String::new(),
+            n_in: 2,
+            n_out: 1,
+            approx_topology: vec![2, 4, 1],
+            clf2_topology: vec![2, 4, 2],
+            clfn_topology: vec![2, 4, 3],
+            x_lo: vec![0.0, 0.0],
+            x_hi: vec![1.0, 10.0],
+            y_lo: vec![0.0],
+            y_hi: vec![1.0],
+            error_bound: 0.05,
+            train_n: 0,
+            test_n: 0,
+            methods: vec![],
+            mcca_pairs: 0,
+        }
+    }
+
+    fn store() -> Dataset {
+        Dataset {
+            n: 3,
+            d_in: 2,
+            d_out: 1,
+            x_raw: vec![0.0, 0.0, 0.5, 5.0, 1.0, 10.0],
+            y_norm: vec![0.1, 0.5, 0.9],
+        }
+    }
+
+    #[test]
+    fn lookup_exact_and_nearest() {
+        let b = bench(WorkloadKind::Table);
+        let l = NearestLookup::from_dataset(&b, &store());
+        assert_eq!(l.len(), 3);
+        let mut out = [0.0f32; 1];
+        // Exact record hit.
+        l.lookup_into(&[0.5, 5.0], &mut out);
+        assert_eq!(out, [0.5]);
+        // Nearest record under scaled distance: (0.9, 9.0) is closest to
+        // the third row.
+        l.lookup_into(&[0.9, 9.0], &mut out);
+        assert_eq!(out, [0.9]);
+        // Scaling matters: raw distance would make the second dimension
+        // dominate; with 1/(hi-lo) scaling, (0.05, 4.9) sits next to the
+        // middle record, not the first.
+        l.lookup_into(&[0.45, 4.0], &mut out);
+        assert_eq!(out, [0.5]);
+    }
+
+    #[test]
+    fn for_bench_kind_dispatch() {
+        let syn = bench(WorkloadKind::Synthetic);
+        // Unknown synthetic name stays a hard error (old behaviour).
+        assert!(PreciseProxy::for_bench(&syn).is_err());
+        let mut real = syn.clone();
+        real.name = "sobel".into();
+        real.n_in = 9;
+        real.x_lo = vec![0.0; 9];
+        real.x_hi = vec![1.0; 9];
+        assert!(matches!(
+            PreciseProxy::for_bench(&real).unwrap(),
+            PreciseProxy::Function(_)
+        ));
+        let tab = bench(WorkloadKind::Table);
+        assert!(PreciseProxy::for_bench(&tab).unwrap().is_reject());
+    }
+
+    #[test]
+    fn reject_is_a_hard_error_with_workload_name() {
+        let b = bench(WorkloadKind::Table);
+        let p = PreciseProxy::Reject;
+        let mut raw = [0.0f64; 1];
+        let mut out = [0.0f32; 1];
+        let e = p
+            .serve_norm_into(&b, &[0.0, 0.0], &mut raw, &mut out)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("no runtime oracle"), "{e}");
+        assert!(e.contains("\"t\""), "error must name the workload: {e}");
+    }
+
+    #[test]
+    fn lookup_proxy_serves_held_out_labels() {
+        let b = bench(WorkloadKind::Table);
+        let ds = store();
+        let p = PreciseProxy::lookup_from(&b, &ds);
+        let mut raw = [0.0f64; 1];
+        let mut out = [0.0f32; 1];
+        for i in 0..ds.n {
+            p.serve_norm_into(&b, ds.x_row(i), &mut raw, &mut out).unwrap();
+            assert_eq!(out[0], ds.y_norm[i], "held-out replay must be exact");
+        }
+    }
+}

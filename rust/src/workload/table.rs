@@ -1,0 +1,565 @@
+//! Table workload source — a dependency-free CSV/TSV reader with schema
+//! inference, plus the deterministic train/held-out split that makes a
+//! data file trainable.
+//!
+//! ## File contract (see `rust/README.md` "Bring your own workload")
+//!
+//! * Delimiter: inferred from the first data line — tab ⇒ TSV, else CSV.
+//! * Header: if any cell of the first non-comment line fails numeric
+//!   parsing the line is treated as a header; otherwise it is data.
+//! * Empty lines and lines starting with `#` are skipped.
+//! * Every row must have the same column count; the LAST `d_out` columns
+//!   are the outputs (labels), the rest are inputs.
+//! * Every cell must parse as a finite number — NaN/inf and ragged rows
+//!   are hard errors diagnosed with their 1-based line (and column)
+//!   numbers.
+//!
+//! The split into train/held-out rows is a seeded Fisher–Yates shuffle
+//! over row indices (`util::rng` stream, salted) — a pure function of
+//! `(file contents, holdout fraction, seed)`, independent of thread count
+//! and machine, so re-training is reproducible and the held-out labels
+//! the oracle-less QoS loop verifies against never leak into training.
+
+use std::path::Path;
+
+use crate::formats::{BenchManifest, WorkloadKind};
+use crate::util::rng::Rng;
+
+use super::{pad_bounds, TrainData, WorkloadSource};
+
+/// Seed salt for the train/held-out split stream (distinct from every
+/// trainer stream so reordering rows never aliases an epoch shuffle).
+const SPLIT_SALT: u64 = 0x5B17_7AB1;
+
+/// Minimum training rows the split must leave (matches the trainer's own
+/// floor in `train::train_bench`): fewer make minibatch SGD meaningless.
+const MIN_TRAIN_ROWS: usize = 8;
+
+/// Rows held out of `n` at fraction `holdout` (at least 1, never all).
+fn holdout_count(n: usize, holdout: f64) -> usize {
+    ((n as f64 * holdout).ceil() as usize).clamp(1, n - 1)
+}
+
+/// A parsed numeric table: raw inputs and raw outputs, row-aligned.
+#[derive(Clone, Debug)]
+pub struct TableData {
+    /// Workload name (file stem, sanitised to `[A-Za-z0-9_-]`).
+    pub name: String,
+    pub n: usize,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Row-major `(n, d_in)` raw inputs.
+    pub x_raw: Vec<f32>,
+    /// Row-major `(n, d_out)` RAW outputs (normalisation happens against
+    /// the derived manifest bounds, exactly like the synthetic path).
+    pub y_raw: Vec<f32>,
+    /// Hex FNV-1a 64 digest of the source bytes (manifest `source_digest`).
+    pub digest: String,
+    /// Column names from the header row (synthesised `c0..` without one).
+    pub columns: Vec<String>,
+    pub had_header: bool,
+    pub delimiter: char,
+}
+
+/// FNV-1a 64 over raw bytes, rendered as lowercase hex.
+pub fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    format!("{h:016x}")
+}
+
+/// File stem reduced to manifest-safe characters.
+fn sanitize_name(path: &Path) -> String {
+    let stem = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "workload".into());
+    let cleaned: String = stem
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+        .collect();
+    if cleaned.is_empty() { "workload".into() } else { cleaned }
+}
+
+impl TableData {
+    /// Read + parse a CSV/TSV file; the trailing `d_out` columns are the
+    /// labels.
+    pub fn load(path: &Path, d_out: usize) -> crate::Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let text = String::from_utf8(bytes.clone())
+            .map_err(|_| anyhow::anyhow!("{}: not valid UTF-8", path.display()))?;
+        let origin = path.display().to_string();
+        let mut t = Self::parse(&text, d_out, &origin)?;
+        t.name = sanitize_name(path);
+        t.digest = fnv1a_hex(&bytes);
+        Ok(t)
+    }
+
+    /// Parse table text (`origin` labels diagnostics, e.g. the file path).
+    pub fn parse(text: &str, d_out: usize, origin: &str) -> crate::Result<Self> {
+        anyhow::ensure!(d_out >= 1, "--d-out must be >= 1");
+
+        // 1-based line numbers over PHYSICAL lines so diagnostics point at
+        // the row the user sees in an editor.
+        let mut rows: Vec<(usize, &str)> = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim_end_matches('\r');
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') {
+                continue;
+            }
+            rows.push((i + 1, line));
+        }
+        anyhow::ensure!(!rows.is_empty(), "{origin}: no data rows");
+
+        let delimiter = if rows[0].1.contains('\t') { '\t' } else { ',' };
+        let split = |line: &str| -> Vec<String> {
+            line.split(delimiter).map(|c| c.trim().to_string()).collect()
+        };
+
+        // Header inference: any non-numeric cell on the first line makes
+        // it a header (a fully-numeric header row is indistinguishable
+        // from data and is treated as data).
+        let first_cells = split(rows[0].1);
+        let n_cols = first_cells.len();
+        anyhow::ensure!(
+            n_cols > d_out,
+            "{origin}: {n_cols} column(s) but --d-out {d_out} — need at \
+             least one input column"
+        );
+        let had_header = first_cells.iter().any(|c| c.parse::<f32>().is_err());
+        let columns = if had_header {
+            first_cells
+        } else {
+            (0..n_cols).map(|i| format!("c{i}")).collect()
+        };
+        let data_rows = if had_header { &rows[1..] } else { &rows[..] };
+
+        let d_in = n_cols - d_out;
+        let mut x_raw = Vec::with_capacity(data_rows.len() * d_in);
+        let mut y_raw = Vec::with_capacity(data_rows.len() * d_out);
+        for &(lineno, line) in data_rows {
+            let cells = split(line);
+            anyhow::ensure!(
+                cells.len() == n_cols,
+                "{origin}:{lineno}: expected {n_cols} columns, got {} (ragged row)",
+                cells.len()
+            );
+            for (col, cell) in cells.iter().enumerate() {
+                let v: f32 = cell.parse().map_err(|_| {
+                    anyhow::anyhow!(
+                        "{origin}:{lineno}, column {}: cannot parse {cell:?} as a number",
+                        col + 1
+                    )
+                })?;
+                anyhow::ensure!(
+                    v.is_finite(),
+                    "{origin}:{lineno}, column {}: non-finite value {cell:?}",
+                    col + 1
+                );
+                if col < d_in {
+                    x_raw.push(v);
+                } else {
+                    y_raw.push(v);
+                }
+            }
+        }
+        let n = data_rows.len();
+        anyhow::ensure!(
+            n >= 8,
+            "{origin}: only {n} data row(s) — need at least 8 (and enough \
+             to leave {MIN_TRAIN_ROWS} training rows after the held-out \
+             split)"
+        );
+
+        Ok(TableData {
+            name: "workload".into(),
+            n,
+            d_in,
+            d_out,
+            x_raw,
+            y_raw,
+            digest: fnv1a_hex(text.as_bytes()),
+            columns,
+            had_header,
+            delimiter,
+        })
+    }
+
+    fn x_row(&self, i: usize) -> &[f32] {
+        &self.x_raw[i * self.d_in..(i + 1) * self.d_in]
+    }
+
+    fn y_row(&self, i: usize) -> &[f32] {
+        &self.y_raw[i * self.d_out..(i + 1) * self.d_out]
+    }
+}
+
+/// A trainable workload defined entirely by a data file.
+pub struct TableSource {
+    data: TableData,
+    /// Fraction of rows held out for evaluation/QoS verification.
+    holdout: f64,
+}
+
+impl TableSource {
+    pub fn load(path: &Path, d_out: usize, holdout: f64) -> crate::Result<Self> {
+        Self::from_data(TableData::load(path, d_out)?, holdout)
+    }
+
+    pub fn from_data(data: TableData, holdout: f64) -> crate::Result<Self> {
+        anyhow::ensure!(
+            (0.05..=0.5).contains(&holdout),
+            "--holdout must be in [0.05, 0.5], got {holdout}"
+        );
+        // Validate the split up front with an actionable minimum, instead
+        // of letting the trainer fail later with a bare row count.
+        let n_train = data.n - holdout_count(data.n, holdout);
+        anyhow::ensure!(
+            n_train >= MIN_TRAIN_ROWS,
+            "{}: {} data row(s) leave only {n_train} training row(s) after \
+             the {:.0}% held-out split — need at least {} training rows \
+             (add rows or lower --holdout)",
+            data.name,
+            data.n,
+            holdout * 100.0,
+            MIN_TRAIN_ROWS
+        );
+        Ok(TableSource { data, holdout })
+    }
+
+    pub fn table(&self) -> &TableData {
+        &self.data
+    }
+
+    /// The deterministic row split: `(train_indices, held_out_indices)`,
+    /// disjoint and covering every row.  A pure function of
+    /// `(n, holdout, seed)` — thread count and machine never enter.
+    pub fn split_indices(&self, seed: u64) -> (Vec<usize>, Vec<usize>) {
+        let n = self.data.n;
+        let mut order: Vec<usize> = (0..n).collect();
+        Rng::new(seed ^ SPLIT_SALT).shuffle(&mut order);
+        let n_hold = holdout_count(n, self.holdout);
+        let held = order[..n_hold].to_vec();
+        let train = order[n_hold..].to_vec();
+        (train, held)
+    }
+
+    /// Build a [`TrainData`] from a row-index slice, normalised via `man`.
+    fn slice(&self, man: &BenchManifest, idx: &[usize]) -> TrainData {
+        let (d_in, d_out) = (self.data.d_in, self.data.d_out);
+        let n = idx.len();
+        let mut x_raw = Vec::with_capacity(n * d_in);
+        let mut x_norm = vec![0.0f32; n * d_in];
+        let mut y_norm = vec![0.0f32; n * d_out];
+        let mut y_f64 = vec![0.0f64; d_out];
+        for (j, &i) in idx.iter().enumerate() {
+            let xr = self.data.x_row(i);
+            x_raw.extend_from_slice(xr);
+            man.normalize_x_into(xr, &mut x_norm[j * d_in..(j + 1) * d_in]);
+            for (d, &v) in self.data.y_row(i).iter().enumerate() {
+                y_f64[d] = v as f64;
+            }
+            man.normalize_y_into(&y_f64, &mut y_norm[j * d_out..(j + 1) * d_out]);
+        }
+        TrainData { n, d_in, d_out, x_raw, x_norm, y_norm }
+    }
+
+    /// Data-derived default error bound: a twentieth of the mean
+    /// normalised output interquartile range, clamped to [0.01, 0.1].
+    /// Wide-spread outputs earn a looser bound than near-constant ones —
+    /// the analogue of the paper's per-benchmark hand-chosen bounds —
+    /// while `--bound` still overrides.
+    fn derive_error_bound(&self, y_lo: &[f32], y_hi: &[f32]) -> f64 {
+        let (n, d_out) = (self.data.n, self.data.d_out);
+        let mut iqr_sum = 0.0f64;
+        let mut vals = vec![0.0f32; n];
+        for d in 0..d_out {
+            let scale = y_hi[d] - y_lo[d];
+            for i in 0..n {
+                vals[i] = (self.data.y_raw[i * d_out + d] - y_lo[d]) / scale;
+            }
+            vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let q = |p: f64| vals[((n - 1) as f64 * p).round() as usize] as f64;
+            iqr_sum += q(0.75) - q(0.25);
+        }
+        (0.05 * iqr_sum / d_out as f64).clamp(0.01, 0.1)
+    }
+}
+
+impl WorkloadSource for TableSource {
+    fn name(&self) -> &str {
+        &self.data.name
+    }
+
+    fn kind(&self) -> WorkloadKind {
+        WorkloadKind::Table
+    }
+
+    fn d_in(&self) -> usize {
+        self.data.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.data.d_out
+    }
+
+    fn digest(&self) -> String {
+        self.data.digest.clone()
+    }
+
+    fn derive_manifest(&self, k: usize, error_bound: Option<f64>, _seed: u64) -> BenchManifest {
+        let (d_in, d_out) = (self.data.d_in, self.data.d_out);
+        // Normalisation bounds come from the data itself: per-column
+        // min/max over every row, padded like the synthetic probe.
+        let mut x_lo = vec![f32::INFINITY; d_in];
+        let mut x_hi = vec![f32::NEG_INFINITY; d_in];
+        let mut y_lo = vec![f32::INFINITY; d_out];
+        let mut y_hi = vec![f32::NEG_INFINITY; d_out];
+        for i in 0..self.data.n {
+            for (d, &v) in self.data.x_row(i).iter().enumerate() {
+                x_lo[d] = x_lo[d].min(v);
+                x_hi[d] = x_hi[d].max(v);
+            }
+            for (d, &v) in self.data.y_row(i).iter().enumerate() {
+                y_lo[d] = y_lo[d].min(v);
+                y_hi[d] = y_hi[d].max(v);
+            }
+        }
+        for d in 0..d_in {
+            let (lo, hi) = pad_bounds(x_lo[d], x_hi[d]);
+            x_lo[d] = lo;
+            x_hi[d] = hi;
+        }
+        for d in 0..d_out {
+            let (lo, hi) = pad_bounds(y_lo[d], y_hi[d]);
+            y_lo[d] = lo;
+            y_hi[d] = hi;
+        }
+        let error_bound = error_bound.unwrap_or_else(|| self.derive_error_bound(&y_lo, &y_hi));
+
+        // Topology heuristic: hidden width grows with the input width
+        // (clamped to the paper's Fig. 6 envelope) so wide tables get
+        // proportionally more capacity than the 2-input benchmarks.
+        let h = (2 * d_in).clamp(8, 32);
+        BenchManifest {
+            name: self.data.name.clone(),
+            domain: "user-table".to_string(),
+            kind: WorkloadKind::Table,
+            source_digest: self.data.digest.clone(),
+            n_in: d_in,
+            n_out: d_out,
+            approx_topology: vec![d_in, h, h, d_out],
+            clf2_topology: vec![d_in, h, 2],
+            clfn_topology: vec![d_in, (2 * h).min(48), k + 1],
+            x_lo,
+            x_hi,
+            y_lo,
+            y_hi,
+            error_bound,
+            train_n: 0,
+            test_n: 0,
+            methods: Vec::new(),
+            mcca_pairs: 0,
+        }
+    }
+
+    fn datasets(
+        &self,
+        man: &BenchManifest,
+        n_train: usize,
+        n_test: usize,
+        seed: u64,
+    ) -> crate::Result<(TrainData, TrainData)> {
+        let (mut train_idx, mut held_idx) = self.split_indices(seed);
+        // Caps keep tiny-budget runs tiny; the split itself is fixed, so
+        // the held-out rows never migrate into training across budgets.
+        train_idx.truncate(n_train.max(1));
+        held_idx.truncate(n_test.max(1));
+        Ok((self.slice(man, &train_idx), self.slice(man, &held_idx)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CSV_HEADER: &str = "\
+x0,x1,y
+0.0,0.0,0.10
+0.1,0.5,0.25
+0.2,1.0,0.40
+0.9,0.0,0.85
+1.0,0.5,0.70
+0.8,1.0,0.55
+0.4,0.2,0.21
+0.6,0.8,0.61
+0.3,0.3,0.28
+0.7,0.7,0.64
+0.5,0.1,0.48
+0.2,0.6,0.33
+";
+
+    #[test]
+    fn parses_header_csv() {
+        let t = TableData::parse(CSV_HEADER, 1, "mem.csv").unwrap();
+        assert!(t.had_header);
+        assert_eq!(t.delimiter, ',');
+        assert_eq!((t.n, t.d_in, t.d_out), (12, 2, 1));
+        assert_eq!(t.columns, vec!["x0", "x1", "y"]);
+        assert_eq!(t.x_row(1), &[0.1, 0.5]);
+        assert_eq!(t.y_row(1), &[0.25]);
+        assert_eq!(t.digest.len(), 16, "digest must be 16 hex chars");
+    }
+
+    #[test]
+    fn parses_headerless_and_comments() {
+        let text = "# a comment\n1,2,3\n\n4,5,6\n7,8,9\n1,1,1\n2,2,2\n3,3,3\n4,4,4\n5,5,5\n";
+        let t = TableData::parse(text, 1, "mem.csv").unwrap();
+        assert!(!t.had_header);
+        assert_eq!(t.columns, vec!["c0", "c1", "c2"]);
+        assert_eq!((t.n, t.d_in, t.d_out), (8, 2, 1));
+        assert_eq!(t.x_row(0), &[1.0, 2.0]);
+        assert_eq!(t.y_row(0), &[3.0]);
+    }
+
+    #[test]
+    fn infers_tsv_and_d_out_split() {
+        let text = "a\tb\tc\td\n1\t2\t3\t4\n5\t6\t7\t8\n1\t1\t1\t1\n2\t2\t2\t2\n\
+                    3\t3\t3\t3\n4\t4\t4\t4\n5\t5\t5\t5\n6\t6\t6\t6\n";
+        let t = TableData::parse(text, 2, "mem.tsv").unwrap();
+        assert_eq!(t.delimiter, '\t');
+        assert_eq!((t.d_in, t.d_out), (2, 2));
+        assert_eq!(t.y_row(0), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn ragged_row_diagnosed_with_line_number() {
+        let mut text = String::from(CSV_HEADER);
+        text.push_str("0.5,0.5\n"); // line 14: one column short
+        let e = TableData::parse(&text, 1, "bad.csv").unwrap_err().to_string();
+        assert!(e.contains("bad.csv:14"), "missing line number: {e}");
+        assert!(e.contains("ragged"), "missing ragged diagnosis: {e}");
+    }
+
+    #[test]
+    fn non_numeric_cell_diagnosed_with_line_and_column() {
+        let mut text = String::from(CSV_HEADER);
+        text.push_str("0.5,oops,0.5\n");
+        let e = TableData::parse(&text, 1, "bad.csv").unwrap_err().to_string();
+        assert!(e.contains("bad.csv:14, column 2"), "bad location: {e}");
+        assert!(e.contains("oops"), "must quote the cell: {e}");
+    }
+
+    #[test]
+    fn non_finite_cell_rejected() {
+        let mut text = String::from(CSV_HEADER);
+        text.push_str("0.5,NaN,0.5\n");
+        let e = TableData::parse(&text, 1, "bad.csv").unwrap_err().to_string();
+        assert!(e.contains("non-finite"), "{e}");
+        assert!(e.contains(":14"), "{e}");
+        let mut text2 = String::from(CSV_HEADER);
+        text2.push_str("inf,0.5,0.5\n");
+        assert!(TableData::parse(&text2, 1, "bad.csv").is_err());
+    }
+
+    #[test]
+    fn too_few_rows_and_bad_d_out_rejected() {
+        let e = TableData::parse("1,2\n3,4\n", 1, "tiny.csv").unwrap_err().to_string();
+        assert!(e.contains("at least 8"), "{e}");
+        let e = TableData::parse(CSV_HEADER, 3, "mem.csv").unwrap_err().to_string();
+        assert!(e.contains("--d-out"), "{e}");
+        assert!(TableData::parse(CSV_HEADER, 0, "mem.csv").is_err());
+    }
+
+    #[test]
+    fn digest_tracks_content() {
+        let a = TableData::parse(CSV_HEADER, 1, "a.csv").unwrap();
+        let b = TableData::parse(CSV_HEADER, 1, "b.csv").unwrap();
+        assert_eq!(a.digest, b.digest, "digest is content-only");
+        let mut text = String::from(CSV_HEADER);
+        text.push_str("0.5,0.5,0.5\n");
+        let c = TableData::parse(&text, 1, "a.csv").unwrap();
+        assert_ne!(a.digest, c.digest);
+    }
+
+    fn source() -> TableSource {
+        TableSource::from_data(TableData::parse(CSV_HEADER, 1, "mem.csv").unwrap(), 0.25)
+            .unwrap()
+    }
+
+    #[test]
+    fn split_is_deterministic_disjoint_and_covering() {
+        let s = source();
+        let (tr1, te1) = s.split_indices(9);
+        let (tr2, te2) = s.split_indices(9);
+        assert_eq!(tr1, tr2, "split must be a pure function of the seed");
+        assert_eq!(te1, te2);
+        let (tr3, _) = s.split_indices(10);
+        assert_ne!(tr1, tr3, "different seeds should split differently");
+
+        let mut all: Vec<usize> = tr1.iter().chain(&te1).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..12).collect::<Vec<_>>(), "split must partition rows");
+        assert_eq!(te1.len(), 3, "ceil(12 * 0.25) held out");
+    }
+
+    /// The split minimum is enforced at load time with an actionable
+    /// message — not deferred to a bare row-count error in the trainer.
+    #[test]
+    fn too_few_training_rows_after_split_rejected() {
+        // 9 rows at 25% holdout leave 6 training rows (< 8).
+        let text = "1,2,3\n4,5,6\n7,8,9\n1,1,1\n2,2,2\n3,3,3\n4,4,4\n5,5,5\n6,6,6\n";
+        let data = TableData::parse(text, 1, "mem.csv").unwrap();
+        let e = TableSource::from_data(data.clone(), 0.25).unwrap_err().to_string();
+        assert!(e.contains("training row"), "{e}");
+        assert!(e.contains("--holdout"), "must suggest the fix: {e}");
+        // A smaller holdout on the same data is fine (ceil(9*0.1)=1 held).
+        assert!(TableSource::from_data(data, 0.1).is_ok());
+    }
+
+    #[test]
+    fn derived_manifest_normalises_data_into_unit_box() {
+        let s = source();
+        let man = s.derive_manifest(2, None, 1);
+        assert_eq!(man.kind, WorkloadKind::Table);
+        assert_eq!(man.source_digest, s.digest());
+        assert_eq!(man.approx_topology, vec![2, 8, 8, 1]);
+        assert_eq!(*man.clfn_topology.last().unwrap(), 3);
+        assert!((0.01..=0.1).contains(&man.error_bound), "{}", man.error_bound);
+
+        let (train, test) = s.datasets(&man, 100, 100, 7).unwrap();
+        assert_eq!(train.n + test.n, 12);
+        for v in train.x_norm.iter().chain(&train.y_norm).chain(&test.y_norm) {
+            assert!((0.0..=1.0).contains(v), "normalised value {v} out of range");
+        }
+        // Explicit bound overrides the data-derived one.
+        let man2 = s.derive_manifest(2, Some(0.42), 1);
+        assert_eq!(man2.error_bound, 0.42);
+    }
+
+    #[test]
+    fn dataset_caps_respect_split() {
+        let s = source();
+        let man = s.derive_manifest(2, None, 1);
+        let (full_train, full_test) = s.datasets(&man, 100, 100, 3).unwrap();
+        let (capped_train, capped_test) = s.datasets(&man, 4, 2, 3).unwrap();
+        assert_eq!(capped_train.n, 4);
+        assert_eq!(capped_test.n, 2);
+        // Caps are a prefix of the same split — held-out rows never
+        // migrate into training across budgets.
+        assert_eq!(&full_train.x_raw[..4 * 2], &capped_train.x_raw[..]);
+        assert_eq!(&full_test.x_raw[..2 * 2], &capped_test.x_raw[..]);
+    }
+
+    #[test]
+    fn fnv_digest_known_vector() {
+        // FNV-1a 64 of the empty string is the offset basis.
+        assert_eq!(fnv1a_hex(b""), "cbf29ce484222325");
+        assert_eq!(fnv1a_hex(b"a"), "af63dc4c8601ec8c");
+    }
+}

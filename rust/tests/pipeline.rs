@@ -141,6 +141,7 @@ fn server_round_trip_no_losses() {
             exec: ExecMode::Native,
             workers: 2, // exercise the multi-worker shared-queue path
             qos: None,
+            table_fallback: Default::default(),
         },
     )
     .unwrap();

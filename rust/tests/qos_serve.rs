@@ -25,6 +25,8 @@ fn synthetic_manifest() -> BenchManifest {
     BenchManifest {
         name: "blackscholes".into(),
         domain: "synthetic".into(),
+        kind: mcma::formats::WorkloadKind::Synthetic,
+        source_digest: String::new(),
         n_in: 6,
         n_out: 1,
         approx_topology: vec![6, 8, 8, 1],
@@ -286,6 +288,7 @@ fn serve_with_qos_end_to_end() {
                 exec: ExecMode::Native,
                 workers,
                 qos: Some(qos),
+                table_fallback: Default::default(),
             },
         )
         .unwrap();

@@ -17,6 +17,8 @@ fn manifest() -> BenchManifest {
     BenchManifest {
         name: "sobel".into(),
         domain: "test".into(),
+        kind: mcma::formats::WorkloadKind::Synthetic,
+        source_digest: String::new(),
         n_in: 9,
         n_out: 1,
         approx_topology: vec![9, 1],

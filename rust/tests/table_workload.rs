@@ -1,0 +1,302 @@
+//! End-to-end tests for data-defined (table) workloads: train from a CSV
+//! with no registered precise function, export a servable artifact tree,
+//! load it through `ModelBank`, serve it through the `Dispatcher` (f32 AND
+//! int8) and the threaded `Server` (held-out lookup fallback + oracle-less
+//! QoS with warm-started margins), and pin the determinism of the
+//! train/held-out split across thread counts.
+
+use std::sync::Arc;
+
+use mcma::config::{BatchPolicy, ExecMode, Method};
+use mcma::coordinator::{
+    plan_routes, Dispatcher, Scratch, Server, ServerConfig, TableFallback,
+};
+use mcma::formats::{Dataset, Manifest, WeightsFile, WorkloadKind};
+use mcma::qos::QosConfig;
+use mcma::runtime::ModelBank;
+use mcma::train::{train_bench, Scheme, TrainOptions};
+use mcma::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mcma_table_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Two-cluster CSV (the cotrain test function, as a file): the output
+/// slope in x1 flips sign across x0 = 0.5, so K=2 specialisation wins.
+fn write_two_cluster_csv(dir: &std::path::Path, n: usize, seed: u64) -> std::path::PathBuf {
+    let mut rng = Rng::new(seed);
+    let mut text = String::from("x0,x1,y\n");
+    for _ in 0..n {
+        let x0 = rng.uniform(0.0, 1.0);
+        let x1 = rng.uniform(0.0, 1.0);
+        let y = if x0 < 0.5 { 0.15 + 0.3 * x1 } else { 0.85 - 0.3 * x1 };
+        text.push_str(&format!("{x0:.6},{x1:.6},{y:.6}\n"));
+    }
+    let path = dir.join("twocluster.csv");
+    std::fs::write(&path, text).unwrap();
+    path
+}
+
+fn table_opts(csv: &std::path::Path, out_dir: &std::path::Path, threads: usize) -> TrainOptions {
+    TrainOptions {
+        data: Some(csv.to_path_buf()),
+        d_out: 1,
+        k: 2,
+        samples: 400,
+        rounds: 2,
+        epochs: 6,
+        lr: 0.02,
+        seed: 11,
+        out_dir: out_dir.to_path_buf(),
+        threads,
+        ..TrainOptions::default()
+    }
+}
+
+/// The acceptance path: `mcma train --data foo.csv --d-out 1 --k 2` must
+/// build a fully servable artifact tree from nothing, with a v2 manifest
+/// entry (`kind: table`, source digest) that `ModelBank` and the
+/// dispatcher open exactly like a paper benchmark — in f32 AND int8.
+#[test]
+fn table_train_export_model_bank_serve_roundtrip() {
+    let dir = tmp_dir("e2e");
+    let csv = write_two_cluster_csv(&dir, 600, 0xDA7A);
+    let out_dir = dir.join("artifacts");
+    let report = train_bench(&table_opts(&csv, &out_dir, 2)).unwrap();
+    assert_eq!(report.bench, "twocluster");
+    assert_eq!(report.method, Method::McmaCompetitive);
+    assert!((0.0..=1.0).contains(&report.invocation_k));
+
+    // Artifact tree is complete.
+    let bdir = out_dir.join("twocluster");
+    for f in ["weights_rust.bin", "weights.bin", "test.bin"] {
+        assert!(bdir.join(f).exists(), "{f} missing");
+    }
+
+    // Manifest entry is table-kind with the CSV's content digest.
+    let man = Manifest::load(&out_dir).unwrap();
+    let bench = man.bench("twocluster").unwrap().clone();
+    assert_eq!(bench.kind, WorkloadKind::Table);
+    assert_eq!(bench.source_digest.len(), 16, "digest: {:?}", bench.source_digest);
+    assert_eq!((bench.n_in, bench.n_out), (2, 1));
+    assert!(bench.methods.iter().any(|m| m == "mcma_competitive"));
+    assert!(bench.methods.iter().any(|m| m == "one_pass"));
+    assert!(bench.train_n > 0 && bench.test_n > 0);
+
+    // ModelBank + dispatcher serve the held-out set with NO registered
+    // precise function — rejected samples come from the held-out labels.
+    let bank = ModelBank::load(None, &man, &bench, &[Method::McmaCompetitive], &[]).unwrap();
+    assert_eq!(bank.n_approx(Method::McmaCompetitive), 2);
+    let ds = Dataset::load(&man.dataset_path("twocluster")).unwrap();
+    assert_eq!(ds.n, bench.test_n);
+    let d = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+    assert!(!d.has_runtime_oracle(), "table workloads must have no oracle");
+    let out = d.run_dataset(&ds).unwrap();
+    assert_eq!(out.plan.routes.len(), ds.n);
+    assert!(
+        (out.metrics.invocation() - report.invocation_k).abs() < 1e-9,
+        "served invocation drifted from the training report"
+    );
+
+    // The int8 twin serves the same tree.
+    let d8 =
+        Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::NativeQ8).unwrap();
+    let out8 = d8.run_dataset(&ds).unwrap();
+    assert_eq!(out8.plan.routes.len(), ds.n);
+
+    // Weight bytes round-trip (weights.bin is the rust tree's own copy).
+    let wf = WeightsFile::load(&bdir.join("weights_rust.bin")).unwrap();
+    let back = WeightsFile::load(&bdir.join("weights.bin")).unwrap();
+    assert_eq!(wf.to_bytes(), back.to_bytes());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Thread-count determinism of the whole table pipeline: the split is a
+/// pure function of (file, holdout, seed) and the cotrain loop carries
+/// per-job RNG streams, so 1-thread and 4-thread runs must export
+/// bit-identical weights.
+#[test]
+fn table_split_and_training_deterministic_across_threads() {
+    let dir = tmp_dir("det");
+    let csv = write_two_cluster_csv(&dir, 300, 0x5EED);
+    let out1 = dir.join("a1");
+    let out4 = dir.join("a4");
+    let mut o1 = table_opts(&csv, &out1, 1);
+    let mut o4 = table_opts(&csv, &out4, 4);
+    o1.samples = 200;
+    o4.samples = 200;
+    o1.epochs = 2;
+    o4.epochs = 2;
+    train_bench(&o1).unwrap();
+    train_bench(&o4).unwrap();
+    let w1 = std::fs::read(out1.join("twocluster/weights_rust.bin")).unwrap();
+    let w4 = std::fs::read(out4.join("twocluster/weights_rust.bin")).unwrap();
+    assert_eq!(w1, w4, "trained weights depend on thread count");
+    let t1 = std::fs::read(out1.join("twocluster/test.bin")).unwrap();
+    let t4 = std::fs::read(out4.join("twocluster/test.bin")).unwrap();
+    assert_eq!(t1, t4, "held-out split depends on thread count");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A retrain against a CHANGED data file must re-derive the entry (new
+/// digest) and rewrite the tree's weights/labels instead of silently
+/// serving stale nets.
+#[test]
+fn table_retrain_tracks_source_digest() {
+    let dir = tmp_dir("digest");
+    let csv = write_two_cluster_csv(&dir, 300, 1);
+    let out_dir = dir.join("artifacts");
+    let mut opts = table_opts(&csv, &out_dir, 1);
+    opts.samples = 200;
+    opts.epochs = 2;
+    train_bench(&opts).unwrap();
+    let d1 = Manifest::load(&out_dir).unwrap().bench("twocluster").unwrap().source_digest.clone();
+
+    // Append rows — the digest must move and the retrain must accept it.
+    let mut text = std::fs::read_to_string(&csv).unwrap();
+    text.push_str("0.5,0.5,0.5\n0.1,0.9,0.42\n");
+    std::fs::write(&csv, text).unwrap();
+    train_bench(&opts).unwrap();
+    let d2 = Manifest::load(&out_dir).unwrap().bench("twocluster").unwrap().source_digest.clone();
+    assert_ne!(d1, d2, "digest must track the source content");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Oracle-less serving through the threaded pipeline: traffic replays
+/// held-out rows, rejected requests are served from the nearest held-out
+/// record, the QoS loop verifies against held-out labels, and
+/// `--qos-warm` seeds margins from the offline replay.
+#[test]
+fn table_serve_with_qos_warm_start() {
+    let dir = tmp_dir("serve");
+    let csv = write_two_cluster_csv(&dir, 600, 0xFEED);
+    let out_dir = dir.join("artifacts");
+    train_bench(&table_opts(&csv, &out_dir, 2)).unwrap();
+
+    let man = Arc::new(Manifest::load(&out_dir).unwrap());
+    let bench = Arc::new(man.bench("twocluster").unwrap().clone());
+    let ds = Dataset::load(&man.dataset_path("twocluster")).unwrap();
+    let qos = QosConfig {
+        target: 10.0, // generous: the trained workload must show 0 violations
+        shadow_rate: 0.5,
+        window: 64,
+        min_obs: 8,
+        tick_every: 16,
+        warm_start: true,
+        ..QosConfig::default()
+    };
+    let server = Server::spawn(
+        Arc::clone(&man),
+        Arc::clone(&bench),
+        ServerConfig {
+            policy: BatchPolicy { max_batch: 64, max_wait_us: 500 },
+            method: Method::McmaCompetitive,
+            exec: ExecMode::Native,
+            workers: 1,
+            qos: Some(qos),
+            table_fallback: TableFallback::Lookup,
+        },
+    )
+    .unwrap();
+    let mut rng = Rng::new(42);
+    let n = 500u64;
+    for id in 0..n {
+        let row = ds.x_row(rng.below(ds.n as u64) as usize);
+        server.submit(id, row.to_vec()).unwrap();
+    }
+    let report = server.shutdown(Vec::new()).unwrap();
+    assert_eq!(report.served, n, "requests lost");
+    let q = report.qos.as_ref().expect("qos report missing");
+    assert!(q.warm_started, "--qos-warm must seed from the offline replay");
+    assert_eq!(q.classes.len(), 2);
+    assert_eq!(q.total_violations(), 0, "loose target must show zero violations");
+    assert!(
+        report.invoked > 0,
+        "classifier rejected everything — two-cluster training budget too small"
+    );
+    assert!(
+        q.total_shadow() > 0,
+        "shadow verification from held-out labels never fired"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The strict fallback: with no lookup proxy installed, a CPU-routed
+/// sample is a hard error naming the workload — and installing the
+/// held-out lookup makes the identical plan servable.
+#[test]
+fn table_reject_fallback_is_hard_error() {
+    let dir = tmp_dir("reject");
+    let csv = write_two_cluster_csv(&dir, 300, 3);
+    let out_dir = dir.join("artifacts");
+    let mut opts = table_opts(&csv, &out_dir, 1);
+    opts.samples = 200;
+    opts.epochs = 2;
+    train_bench(&opts).unwrap();
+
+    let man = Manifest::load(&out_dir).unwrap();
+    let bench = man.bench("twocluster").unwrap().clone();
+    let bank = ModelBank::load(None, &man, &bench, &[], &[]).unwrap();
+    let ds = Dataset::load(&man.dataset_path("twocluster")).unwrap();
+    let d = Dispatcher::new(&bench, &bank, Method::McmaCompetitive, ExecMode::Native).unwrap();
+
+    // Force every sample onto the precise path.
+    let n = 4usize;
+    let classes = vec![d.n_approx(); n];
+    let plan = plan_routes(&classes, d.n_approx());
+    let x_norm = d.normalize(&ds.x_raw[..n * bench.n_in], n);
+    let mut y = Vec::new();
+    let mut scratch = Scratch::new();
+    let err = d
+        .execute_plan_into(&plan, &x_norm, &ds.x_raw[..n * bench.n_in], n, &mut y, &mut scratch)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no runtime oracle"), "{err}");
+    assert!(err.contains("twocluster"), "{err}");
+
+    // Same plan with the held-out lookup installed: exact labels back.
+    let d = d.with_precise_proxy(mcma::workload::PreciseProxy::lookup_from(&bench, &ds));
+    d.execute_plan_into(&plan, &x_norm, &ds.x_raw[..n * bench.n_in], n, &mut y, &mut scratch)
+        .unwrap();
+    assert_eq!(&y[..], &ds.y_norm[..n], "lookup must serve the held-out labels");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The complementary allocation scheme exports under the paper's
+/// `mcma_complementary` key and serves through the same pipeline
+/// (satellite: `--scheme complementary`).
+#[test]
+fn complementary_scheme_exports_and_serves() {
+    let dir = tmp_dir("compl");
+    let csv = write_two_cluster_csv(&dir, 400, 7);
+    let out_dir = dir.join("artifacts");
+    let mut opts = table_opts(&csv, &out_dir, 2);
+    opts.scheme = Scheme::Complementary;
+    opts.samples = 250;
+    let report = train_bench(&opts).unwrap();
+    assert_eq!(report.method, Method::McmaComplementary);
+
+    let man = Manifest::load(&out_dir).unwrap();
+    let bench = man.bench("twocluster").unwrap().clone();
+    assert!(bench.methods.iter().any(|m| m == "mcma_complementary"));
+    let bank = ModelBank::load(None, &man, &bench, &[], &[]).unwrap();
+    assert!(bank.has_method(Method::McmaComplementary));
+    let ds = Dataset::load(&man.dataset_path("twocluster")).unwrap();
+    let out = Dispatcher::new(&bench, &bank, Method::McmaComplementary, ExecMode::Native)
+        .unwrap()
+        .run_dataset(&ds)
+        .unwrap();
+    assert!(
+        (out.metrics.invocation() - report.invocation_k).abs() < 1e-9,
+        "complementary serving drifted from the training report"
+    );
+
+    // The fig9 fallback trajectory is keyed by the scheme's method.
+    let stats = mcma::util::json::parse_file(&out_dir.join("train_stats_rust.json")).unwrap();
+    assert!(stats.req("twocluster").unwrap().req("mcma_complementary").is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}

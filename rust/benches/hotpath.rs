@@ -144,7 +144,7 @@ fn artifact_suite(
         });
     }
 
-    common_tail(rec, budget, &ds.x_raw[..bench_man.n_in]);
+    common_tail(rec, budget, &bench_man, &ds.x_raw[..bench_man.n_in]);
     Ok(())
 }
 
@@ -179,7 +179,7 @@ fn synthetic_suite(rec: &mut Recorder, budget: Duration) -> mcma::Result<()> {
         &x_norm,
         &x_raw,
     );
-    common_tail(rec, budget, &x_raw[..man.n_in]);
+    common_tail(rec, budget, &man, &x_raw[..man.n_in]);
     Ok(())
 }
 
@@ -247,8 +247,8 @@ fn native_benches(
     });
 }
 
-/// Batcher + precise-CPU benches shared by both suites.
-fn common_tail(rec: &mut Recorder, budget: Duration, one_raw: &[f32]) {
+/// Batcher + precise-CPU + lookup-index benches shared by both suites.
+fn common_tail(rec: &mut Recorder, budget: Duration, bench: &BenchManifest, one_raw: &[f32]) {
     let d_in = one_raw.len();
     let mut rng = Rng::new(3);
     let reqs: Vec<Vec<f32>> = (0..256)
@@ -268,6 +268,53 @@ fn common_tail(rec: &mut Recorder, budget: Duration, one_raw: &[f32]) {
         benchfn.eval(one_raw, &mut out);
         std::hint::black_box(out[0]);
     });
+
+    // Precise-fallback lookup index: the k-d tree vs the linear scan it
+    // replaced, over a synthetic bench-shaped 4096-row store (the table-
+    // workload store is the held-out split; this keeps the ratio
+    // measurable without artifacts).
+    let n_store = 4096;
+    let d_out = bench.n_out.max(1);
+    let mut store = mcma::formats::Dataset {
+        n: n_store,
+        d_in,
+        d_out,
+        x_raw: Vec::with_capacity(n_store * d_in),
+        y_norm: vec![0.0; n_store * d_out],
+    };
+    for _ in 0..n_store {
+        for d in 0..d_in {
+            store
+                .x_raw
+                .push(rng.uniform(bench.x_lo[d] as f64, bench.x_hi[d] as f64) as f32);
+        }
+    }
+    let lookup = mcma::workload::NearestLookup::from_dataset(bench, &store);
+    let queries: Vec<Vec<f32>> = (0..64)
+        .map(|_| {
+            (0..d_in)
+                .map(|d| rng.uniform(bench.x_lo[d] as f64, bench.x_hi[d] as f64) as f32)
+                .collect()
+        })
+        .collect();
+    for q in &queries {
+        assert_eq!(lookup.nearest(q), lookup.nearest_scan(q), "kd-tree/scan disagreement");
+    }
+    let (q0, v0) = lookup.query_stats();
+    rec.bench_rows("precise lookup kd-tree x64 (4096-row store)", budget, 64, || {
+        for q in &queries {
+            std::hint::black_box(lookup.nearest(q));
+        }
+    });
+    let (q1, v1) = lookup.query_stats();
+    rec.bench_rows("precise lookup linear scan x64 (4096-row store)", budget, 64, || {
+        for q in &queries {
+            std::hint::black_box(lookup.nearest_scan(q));
+        }
+    });
+    if q1 > q0 {
+        rec.extra("lookup_visits_per_query", (v1 - v0) as f64 / (q1 - q0) as f64);
+    }
 }
 
 fn synthetic_manifest() -> BenchManifest {

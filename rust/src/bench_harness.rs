@@ -108,11 +108,19 @@ fn bench_impl<F: FnMut()>(name: &str, budget: Duration, rows: Option<u64>, mut f
 #[derive(Default)]
 pub struct Recorder {
     pub timings: Vec<Timing>,
+    /// Scalar side-measurements (not timings) carried into the JSON
+    /// report under `"extras"` — e.g. mean k-d-tree visits per query.
+    pub extras: Vec<(String, f64)>,
 }
 
 impl Recorder {
     pub fn new() -> Self {
         Recorder::default()
+    }
+
+    /// Record a scalar side-measurement for the JSON report.
+    pub fn extra(&mut self, key: &str, v: f64) {
+        self.extras.push((key.to_string(), v));
     }
 
     /// Run [`bench`] and keep the timing.
@@ -154,11 +162,18 @@ impl Recorder {
                 json::obj(fields)
             })
             .collect();
-        let doc = json::obj(vec![
+        let mut doc_fields = vec![
             ("suite", json::Value::Str(suite.to_string())),
             ("unix_time", json::Value::Num(unix_time)),
             ("results", json::Value::Arr(results)),
-        ]);
+        ];
+        let extras = json::Value::Obj(
+            self.extras.iter().map(|(k, v)| (k.clone(), json::Value::Num(*v))).collect(),
+        );
+        if !self.extras.is_empty() {
+            doc_fields.push(("extras", extras));
+        }
+        let doc = json::obj(doc_fields);
         std::fs::write(path, json::write(&doc))
             .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
         println!("wrote {} ({} results)", path.display(), self.timings.len());
@@ -265,6 +280,7 @@ mod tests {
         rec.bench("tiny", Duration::from_millis(5), || {
             std::hint::black_box((0..10).sum::<u64>());
         });
+        rec.extra("lookup_visits_per_query", 11.5);
         let path = std::env::temp_dir()
             .join(format!("mcma_bench_recorder_test_{}.json", std::process::id()));
         rec.write_json("test-suite", &path).unwrap();
@@ -274,6 +290,11 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "tiny");
         assert!(results[0].get("p99_ns").unwrap().as_f64().unwrap() > 0.0);
+        let extras = doc.get("extras").unwrap();
+        assert_eq!(
+            extras.get("lookup_visits_per_query").unwrap().as_f64().unwrap(),
+            11.5
+        );
         let _ = std::fs::remove_file(&path);
     }
 

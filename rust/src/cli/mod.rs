@@ -133,10 +133,12 @@ SUBCOMMANDS:
          [--epochs E] [--lr X]       under the same budget for comparison.
          [--bound B] [--seed S]      --data opens an arbitrary CSV/TSV
          [--out DIR] [--threads T]   workload: the last --d-out columns are
-                                     labels, --holdout (0.25) rows are held
+         [--perf-json PATH|none]     labels, --holdout (0.25) rows are held
                                      out for eval + oracle-less QoS.
                                      --scheme competitive|complementary
-                                     picks the co-training allocation
+                                     picks the co-training allocation;
+                                     --perf-json redirects/skips the
+                                     BENCH_train.json perf report
   npu-sim --bench B --method M    NPU cycle simulation + buffer-case ablation
          [--case 1|2|3]
 

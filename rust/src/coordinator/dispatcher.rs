@@ -47,6 +47,12 @@ pub struct EvalOutput {
     pub y_served: Vec<f32>,
     pub metrics: RunMetrics,
     pub weight_cache: WeightCache,
+    /// Mean k-d tree records visited per precise-path query during THIS
+    /// run, when the precise path was a [`crate::workload::NearestLookup`]
+    /// and at least one sample took it.  Feeds
+    /// [`crate::workload::precise_cost_cycles_measured`] so the NPU model
+    /// charges the measured sublinear lookup cost, not a full-scan bound.
+    pub precise_visits_per_query: Option<f64>,
 }
 
 /// Routing policy — how classifier outputs become destinations.
@@ -557,6 +563,11 @@ impl<'a> Dispatcher<'a> {
             lookup = PreciseProxy::lookup_from(self.bench, ds);
             Some(&lookup)
         };
+        // Snapshot the active lookup's visit counters around the run so the
+        // measured per-query cost covers exactly THIS dataset's precise
+        // traffic (the store may be shared with other runs).
+        let active_lookup = proxy.unwrap_or(&self.precise).lookup();
+        let stats_before = active_lookup.map(|l| l.query_stats());
         let mut y_served = Vec::new();
         self.execute_plan_with_proxy_into(
             &plan,
@@ -567,6 +578,13 @@ impl<'a> Dispatcher<'a> {
             &mut y_served,
             &mut scratch,
         )?;
+        let precise_visits_per_query = match (active_lookup, stats_before) {
+            (Some(l), Some((q0, v0))) => {
+                let (q1, v1) = l.query_stats();
+                (q1 > q0).then(|| (v1 - v0) as f64 / (q1 - q0) as f64)
+            }
+            _ => None,
+        };
 
         // Errors of served values; CPU-served are exact by construction
         // (same precise function), so their served error is 0.
@@ -621,7 +639,15 @@ impl<'a> Dispatcher<'a> {
         metrics.weight_switches = wc.switches;
         metrics.weight_refill_cycles = wc.refill_cycles;
 
-        Ok(EvalOutput { plan, err, err_if_invoked, y_served, metrics, weight_cache: wc })
+        Ok(EvalOutput {
+            plan,
+            err,
+            err_if_invoked,
+            y_served,
+            metrics,
+            weight_cache: wc,
+            precise_visits_per_query,
+        })
     }
 
     /// Online path: route + execute one dynamic batch (no ground-truth

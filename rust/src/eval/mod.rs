@@ -98,13 +98,15 @@ pub fn simulate(
     // The cost model charges the datapath precision the execution engine
     // models, so fig8-style speedup/energy reflect quantization under
     // `--exec native-q8`.  CPU-path cost comes from the workload's actual
-    // precise implementation: the registered function's op counts, or the
-    // held-out lookup scan for oracle-less table workloads.
+    // precise implementation: the registered function's op counts, or —
+    // for oracle-less table workloads — the k-d tree lookup at the visit
+    // count this very run measured (full-store bound when nothing took the
+    // precise path).
     let sim = NpuSim::new(
         ctx.cfg.npu,
         &clf_topo,
         &approx_topos,
-        crate::workload::precise_cost_cycles(bench),
+        crate::workload::precise_cost_cycles_measured(bench, out.precise_visits_per_query),
     )
     .with_precision(ctx.cfg.exec.precision());
     Ok(sim.simulate(&out.plan.routes, None))

@@ -73,17 +73,25 @@ pub fn quantized_deltas(ctx: &Context) -> crate::Result<Vec<QuantRow>> {
             if method.is_mcma() { &bench.clfn_topology } else { &bench.clf2_topology };
         let approx_topos: Vec<Vec<usize>> =
             (0..bank.n_approx(method)).map(|_| bench.approx_topology.clone()).collect();
-        let sim = NpuSim::new(
+        // Each engine's sim charges the precise-path cost ITS OWN run
+        // measured (routing can differ between f32 and int8, so the k-d
+        // tree visit mix can too).
+        let sim32 = NpuSim::new(
             ctx.cfg.npu,
             clf_topo,
             &approx_topos,
-            crate::workload::precise_cost_cycles(&bench),
+            crate::workload::precise_cost_cycles_measured(&bench, o32.precise_visits_per_query),
         );
-        let e32 = sim.simulate(&o32.plan.routes, None).energy_reduction_vs_cpu();
-        let e8 = sim
-            .with_precision(Precision::Int8)
-            .simulate(&o8.plan.routes, None)
-            .energy_reduction_vs_cpu();
+        let e32 = sim32.simulate(&o32.plan.routes, None).energy_reduction_vs_cpu();
+        let e8 = NpuSim::new(
+            ctx.cfg.npu,
+            clf_topo,
+            &approx_topos,
+            crate::workload::precise_cost_cycles_measured(&bench, o8.precise_visits_per_query),
+        )
+        .with_precision(Precision::Int8)
+        .simulate(&o8.plan.routes, None)
+        .energy_reduction_vs_cpu();
 
         rows.push(QuantRow {
             bench: name.clone(),

@@ -377,6 +377,13 @@ fn train_cmd(args: &Args) -> mcma::Result<()> {
             .map(std::path::PathBuf::from)
             .unwrap_or_else(mcma::artifacts_dir),
         threads: args.opt_usize("threads", 0)?,
+        // `--perf-json PATH` redirects the perf report, `--perf-json none`
+        // skips it; default is BENCH_train.json at the repo root.
+        perf_json: match args.opt("perf-json") {
+            Some("none") => None,
+            Some(p) => Some(std::path::PathBuf::from(p)),
+            None => Some(mcma::bench_harness::bench_json_path("BENCH_train.json")),
+        },
     };
     let t0 = Instant::now();
     let report = mcma::train::train_bench(&opts)?;
@@ -409,7 +416,7 @@ fn npu_sim_cmd(args: &Args) -> mcma::Result<()> {
         ctx.cfg.npu,
         clf_topo,
         &approx_topos,
-        mcma::workload::precise_cost_cycles(&bench),
+        mcma::workload::precise_cost_cycles_measured(&bench, e.out.precise_visits_per_query),
     );
     let r = sim.simulate(&e.out.plan.routes, force);
 

@@ -15,6 +15,7 @@ pub mod qgemm;
 pub mod simd;
 
 pub use gemm::{GemmScratch, PackedMlp};
+pub use gemm::{gemm_tiled, pack_tiles, pack_tiles_transposed, transpose_into};
 pub use qgemm::{PackedMlpQ8, QGemmScratch};
 pub use simd::Kernel;
 

@@ -149,9 +149,15 @@ impl PackedMlp {
     /// Force a specific micro-kernel (parity tests, ablations).  Panics if
     /// the kernel is not runnable on this CPU.
     pub fn with_kernel(mut self, kernel: Kernel) -> Self {
+        self.set_kernel(kernel);
+        self
+    }
+
+    /// In-place variant of [`Self::with_kernel`] — the trainer forces its
+    /// packed twin onto a kernel without rebuilding it.
+    pub fn set_kernel(&mut self, kernel: Kernel) {
         assert!(kernel.available(), "{} kernel unavailable on this CPU", kernel.name());
         self.kernel = kernel;
-        self
     }
 
     pub fn kernel(&self) -> Kernel {
@@ -297,6 +303,118 @@ fn layer_forward(layer: &PackedLayer, x: &[f32], n: usize, out: &mut [f32], kern
     }
 }
 
+/// Pack a row-major `(rows, cols)` matrix into [`NR`]-wide column tiles —
+/// the same layout [`PackedLayer`] uses for weights
+/// (`out[(t * rows + k) * NR + j] = src[k * cols + t*NR + j]`, columns past
+/// `cols` zero-padded).  `out` is clear-resized, so a reused buffer keeps
+/// its capacity but never leaks stale values into the padding.
+///
+/// The backward pass packs the delta panel with this to drive the
+/// `dW = a_prevᵀ · δ` GEMM through the same micro-kernels as the forward.
+pub fn pack_tiles(src: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    debug_assert!(src.len() >= rows * cols);
+    let n_tiles = cols.div_ceil(NR);
+    out.clear();
+    out.resize(n_tiles * rows * NR, 0.0);
+    for t in 0..n_tiles {
+        let c0 = t * NR;
+        let width = NR.min(cols - c0);
+        for k in 0..rows {
+            let dst = &mut out[(t * rows + k) * NR..(t * rows + k) * NR + width];
+            dst.copy_from_slice(&src[k * cols + c0..k * cols + c0 + width]);
+        }
+    }
+}
+
+/// Pack the TRANSPOSE of a row-major `(rows, cols)` matrix into [`NR`]-wide
+/// column tiles: the result tiles the `(cols, rows)` matrix `srcᵀ`, i.e.
+/// `out[(t * cols + k) * NR + j] = src[(t*NR + j) * cols + k]`.
+///
+/// This is the `Wᵀ` layout the backward pass needs for
+/// `δ_prev = δ · Wᵀ`: contraction runs over `fan_out` (= `cols` of the
+/// stored weight matrix) and the tile columns are `fan_in` rows of `W`.
+pub fn pack_tiles_transposed(src: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    debug_assert!(src.len() >= rows * cols);
+    let n_tiles = rows.div_ceil(NR);
+    out.clear();
+    out.resize(n_tiles * cols * NR, 0.0);
+    for t in 0..n_tiles {
+        let r0 = t * NR;
+        let width = NR.min(rows - r0);
+        for k in 0..cols {
+            for j in 0..width {
+                out[(t * cols + k) * NR + j] = src[(r0 + j) * cols + k];
+            }
+        }
+    }
+}
+
+/// Transpose a row-major `(rows, cols)` panel into `out` (`(cols, rows)`
+/// row-major, clear-resized).  The backward pass transposes the previous
+/// layer's activation panel once per minibatch so `dW = a_prevᵀ · δ`
+/// becomes a plain row-major GEMM for [`gemm_tiled`].
+pub fn transpose_into(src: &[f32], rows: usize, cols: usize, out: &mut Vec<f32>) {
+    debug_assert!(src.len() >= rows * cols);
+    out.clear();
+    out.resize(rows * cols, 0.0);
+    for i in 0..rows {
+        for j in 0..cols {
+            out[j * rows + i] = src[i * cols + j];
+        }
+    }
+}
+
+/// Bare tiled GEMM over a pre-packed right-hand side:
+/// `out[(m, n_cols)] = x[(m, k_dim)] · T` where `T` is `(k_dim, n_cols)`
+/// packed by [`pack_tiles`] / [`pack_tiles_transposed`].  No bias, no
+/// activation — this is [`layer_forward`]'s blocking (full `MR`-row
+/// micro-tiles through the dispatched SIMD kernel, scalar tail rows)
+/// exposed for the training-side delta GEMMs.
+///
+/// Numerics: accumulation over `k_dim` is ascending-k in every variant, so
+/// with [`Kernel::Scalar`] the result is bitwise identical to the naive
+/// triple loop in the same order; SIMD variants differ only by FMA
+/// contraction (same bound as the forward-path parity tests).
+pub fn gemm_tiled(
+    kernel: Kernel,
+    x: &[f32],
+    m: usize,
+    k_dim: usize,
+    tiles: &[f32],
+    n_cols: usize,
+    out: &mut [f32],
+) {
+    let n_tiles = n_cols.div_ceil(NR);
+    debug_assert!(x.len() >= m * k_dim);
+    debug_assert!(tiles.len() >= n_tiles * k_dim * NR);
+    debug_assert!(out.len() >= m * n_cols);
+    for t in 0..n_tiles {
+        let c0 = t * NR;
+        let width = NR.min(n_cols - c0);
+        let w_tile = &tiles[t * k_dim * NR..(t + 1) * k_dim * NR];
+        let mut i0 = 0;
+        while i0 + MR <= m {
+            let acc = simd::mr_tile_f32(kernel, x, i0, k_dim, w_tile);
+            for r in 0..MR {
+                out[(i0 + r) * n_cols + c0..(i0 + r) * n_cols + c0 + width]
+                    .copy_from_slice(&acc[r][..width]);
+            }
+            i0 += MR;
+        }
+        for i in i0..m {
+            let mut acc = [0.0f32; NR];
+            let xrow = &x[i * k_dim..(i + 1) * k_dim];
+            for (k, &xv) in xrow.iter().enumerate() {
+                let wrow = &w_tile[k * NR..k * NR + NR];
+                for j in 0..NR {
+                    acc[j] += xv * wrow[j];
+                }
+            }
+            out[i * n_cols + c0..i * n_cols + c0 + width].copy_from_slice(&acc[..width]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -437,5 +555,64 @@ mod tests {
                 prop::assert_close(&fast, &slow, 1e-5, 1e-5)
             },
         );
+    }
+
+    /// Reference GEMM in the exact accumulation order `gemm_tiled`'s scalar
+    /// kernel uses (ascending k), for bitwise comparison.
+    fn naive_gemm(x: &[f32], m: usize, kd: usize, w: &[f32], n_cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n_cols];
+        for i in 0..m {
+            for j in 0..n_cols {
+                let mut acc = 0.0f32;
+                for k in 0..kd {
+                    acc += x[i * kd + k] * w[k * n_cols + j];
+                }
+                out[i * n_cols + j] = acc;
+            }
+        }
+        out
+    }
+
+    /// `pack_tiles` + `gemm_tiled` (scalar kernel) is bitwise the naive
+    /// ascending-k triple loop, across MR/NR boundary shapes; SIMD kernels
+    /// agree within the forward-path FMA tolerance.  `pack_tiles_transposed`
+    /// computes against the transpose, and `transpose_into` round-trips.
+    #[test]
+    fn gemm_tiled_matches_naive_and_transpose() {
+        let mut r = Rng::new(0xF1E1);
+        for (m, kd, n_cols) in [(1usize, 1usize, 1usize), (4, 3, 8), (5, 7, 9), (13, 16, 17)] {
+            let x = prop::gens::vec_f32(&mut r, m * kd, -2.0, 2.0);
+            let w = prop::gens::vec_f32(&mut r, kd * n_cols, -2.0, 2.0);
+            let mut tiles = Vec::new();
+            pack_tiles(&w, kd, n_cols, &mut tiles);
+            let mut out = vec![0.0f32; m * n_cols];
+            gemm_tiled(Kernel::Scalar, &x, m, kd, &tiles, n_cols, &mut out);
+            assert_eq!(out, naive_gemm(&x, m, kd, &w, n_cols), "{m}x{kd}x{n_cols}");
+            for k in [Kernel::Avx2, Kernel::Neon] {
+                if !k.available() {
+                    continue;
+                }
+                let mut fast = vec![0.0f32; m * n_cols];
+                gemm_tiled(k, &x, m, kd, &tiles, n_cols, &mut fast);
+                prop::assert_close(&fast, &out, 1e-5, 1e-5)
+                    .unwrap_or_else(|e| panic!("{} {m}x{kd}x{n_cols}: {e}", k.name()));
+            }
+
+            // Transposed packing: x(m,kd) . wᵀ where w is (n_cols, kd)
+            // stored row-major — contraction over w's columns.
+            let wt_src = prop::gens::vec_f32(&mut r, n_cols * kd, -2.0, 2.0);
+            let mut t_tiles = Vec::new();
+            pack_tiles_transposed(&wt_src, n_cols, kd, &mut t_tiles);
+            let mut wt = Vec::new();
+            transpose_into(&wt_src, n_cols, kd, &mut wt);
+            let mut out_t = vec![0.0f32; m * n_cols];
+            gemm_tiled(Kernel::Scalar, &x, m, kd, &t_tiles, n_cols, &mut out_t);
+            assert_eq!(out_t, naive_gemm(&x, m, kd, &wt, n_cols), "transposed pack");
+        }
+        // Buffer reuse across shrinking shapes must not leak stale padding.
+        let mut tiles = Vec::new();
+        pack_tiles(&[1.0; 64], 8, 8, &mut tiles);
+        pack_tiles(&[2.0, 3.0], 1, 2, &mut tiles);
+        assert_eq!(&tiles[..NR], &[2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
     }
 }

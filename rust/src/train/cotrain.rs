@@ -8,7 +8,8 @@
 //!            │                                                                │
 //!   ┌────────┴─ round r ──────────────────────────────────────────────────┐   │
 //!   │ 1. each A_k trains `approx_epochs` on its partition  (threadpool)   │   │
-//!   │ 2. error matrix E[k][i] over the WHOLE set (packed GEMM forwards)   │   │
+//!   │ 2. error matrix E[k][i] over the WHOLE set — packed GEMM forwards   │   │
+//!   │    sharded as (net, fixed 512-row block) jobs across the pool       │   │
 //!   │ 3. sample i -> argmin_k E[k][i]; bound violated -> reject class nC  │   │
 //!   │ 4. multiclass classifier retrains on the refined labels             │   │
 //!   │ 5. measured invocation; |Δ| < tol twice -> converged                │   │
@@ -134,6 +135,9 @@ pub struct RoundStats {
     pub mean_min_err: f64,
     /// Samples whose argmin approximator changed this round.
     pub reassigned: usize,
+    /// Wall-clock of the whole round (train + error matrix + relabel +
+    /// classifier), milliseconds — the number `BENCH_train.json` tracks.
+    pub wall_ms: f64,
 }
 
 /// Co-training result: nets in the exact shape `MethodWeights` stores.
@@ -145,11 +149,48 @@ pub struct Cotrained {
     pub history: Vec<RoundStats>,
 }
 
-/// Per-sample RMSE of `mlp` over the whole set, through the packed kernel.
-fn per_sample_err(mlp: &Mlp, data: &TrainData) -> Vec<f64> {
-    let packed = PackedMlp::from_mlp(mlp);
-    let pred = packed.forward_batch(&data.x_norm, data.n);
-    nn::per_sample_rmse(&pred, &data.y_norm, data.n, data.d_out)
+/// Row-block height for the sharded whole-set forwards.  FIXED (never
+/// derived from the core count) so the shard boundaries — and therefore the
+/// MR-blocked kernel's tail rows inside each shard — are identical on every
+/// machine: per-row results don't depend on the partition, but keeping the
+/// partition machine-independent makes that invariant trivially auditable.
+const ERR_BLOCK_ROWS: usize = 512;
+
+/// Per-sample RMSE of every net over the whole set through the packed
+/// kernel, sharded across the pool as `(net, row-block)` jobs — a
+/// K-approximator round scores in ~1/cores of the serial wall-clock.
+///
+/// Bit-deterministic across thread counts: each row's forward touches only
+/// its own block, blocks are fixed-size ([`ERR_BLOCK_ROWS`]), and
+/// `parallel_map` preserves job order, so the assembled matrix is the same
+/// no matter how jobs land on workers.
+fn error_matrix(mlps: &[&Mlp], data: &TrainData, threads: usize) -> Vec<Vec<f64>> {
+    if mlps.is_empty() || data.n == 0 {
+        return vec![Vec::new(); mlps.len()];
+    }
+    let packed: Vec<PackedMlp> = mlps.iter().map(|m| PackedMlp::from_mlp(m)).collect();
+    let blocks = data.n.div_ceil(ERR_BLOCK_ROWS);
+    let jobs: Vec<(usize, usize)> =
+        (0..mlps.len()).flat_map(|k| (0..blocks).map(move |b| (k, b))).collect();
+    let shards = threadpool::parallel_map(&jobs, threads, |&(k, b)| {
+        let lo = b * ERR_BLOCK_ROWS;
+        let hi = ((b + 1) * ERR_BLOCK_ROWS).min(data.n);
+        let rows = hi - lo;
+        let pred = packed[k].forward_batch(&data.x_norm[lo * data.d_in..hi * data.d_in], rows);
+        nn::per_sample_rmse(
+            &pred,
+            &data.y_norm[lo * data.d_out..hi * data.d_out],
+            rows,
+            data.d_out,
+        )
+    });
+    // Jobs are k-major with ascending blocks, and parallel_map preserves
+    // order — concatenation reassembles each row left-to-right.
+    let mut mat: Vec<Vec<f64>> = (0..mlps.len()).map(|_| Vec::with_capacity(data.n)).collect();
+    for (&(k, _), shard) in jobs.iter().zip(shards) {
+        mat[k].extend(shard);
+    }
+    mat
 }
 
 /// Add small uniform noise to every weight — breaks the symmetry of the
@@ -202,7 +243,9 @@ pub fn cotrain(
     // * complementary — a hand-down chain from the start: A_0 keeps
     //   everything, A_k starts from the hardest (K-k)/K suffix (the
     //   samples its predecessors are least likely to cover).
-    let base_err = per_sample_err(&base.mlp, data);
+    let base_err = error_matrix(&[&base.mlp], data, threads)
+        .pop()
+        .expect("single-net error matrix");
     let mut order = all.clone();
     order.sort_by(|&a, &b| base_err[a].partial_cmp(&base_err[b]).unwrap());
     let mut groups: Vec<Vec<usize>> = match cfg.scheme {
@@ -244,33 +287,28 @@ pub fn cotrain(
     let mut calm = 0usize;
 
     for round in 0..cfg.rounds.max(1) {
-        // 1+2. Train each approximator on its partition, then score it on
-        // the WHOLE set (packed forwards) — sharded across the pool.  Each
-        // job carries its own epoch-shuffle seed so the result is
+        let round_start = std::time::Instant::now();
+        // 1. Train each approximator on its partition — one pool job per
+        // net, each carrying its own epoch-shuffle seed so the result is
         // deterministic regardless of thread count.
         let jobs: Vec<(Trainer, Vec<usize>, u64)> = trainers
             .into_iter()
             .zip(groups.iter())
             .map(|(t, g)| (t, g.clone(), rng.next_u64()))
             .collect();
-        let results: Vec<(Trainer, Vec<f64>)> =
-            threadpool::parallel_map(&jobs, threads, |(t, idx, epoch_seed)| {
-                let mut t = t.clone();
-                let mut r = Rng::new(*epoch_seed);
-                for _ in 0..cfg.approx_epochs {
-                    t.train_epoch(x, y, data.d_in, data.d_out, idx, &mut r);
-                }
-                let errs = per_sample_err(&t.mlp, data);
-                (t, errs)
-            });
-        let mut errmat: Vec<Vec<f64>> = Vec::with_capacity(cfg.k);
-        trainers = results
-            .into_iter()
-            .map(|(t, errs)| {
-                errmat.push(errs);
-                t
-            })
-            .collect();
+        trainers = threadpool::parallel_map(&jobs, threads, |(t, idx, epoch_seed)| {
+            let mut t = t.clone();
+            let mut r = Rng::new(*epoch_seed);
+            for _ in 0..cfg.approx_epochs {
+                t.train_epoch(x, y, data.d_in, data.d_out, idx, &mut r);
+            }
+            t
+        });
+        // 2. Score every net on the WHOLE set: (net, fixed row-block) jobs
+        // shard the K full-set forwards across the pool even when K is
+        // smaller than the core count.
+        let mlps: Vec<&Mlp> = trainers.iter().map(|t| &t.mlp).collect();
+        let errmat = error_matrix(&mlps, data, threads);
 
         // 3. Relabel every sample — competitive: argmin-error auction;
         // complementary: first approximator along the chain that meets
@@ -371,6 +409,7 @@ pub fn cotrain(
             clf_invocation,
             mean_min_err: err_sum / n.max(1) as f64,
             reassigned,
+            wall_ms: round_start.elapsed().as_secs_f64() * 1e3,
         };
         history.push(stats);
         if round >= 1 && (clf_invocation - prev_inv).abs() < cfg.tol {
@@ -564,6 +603,55 @@ mod tests {
         let b = cotrain(&data, &[2, 4, 1], &[2, 6, 3], &b_cfg);
         assert_eq!(a.classifier, b.classifier);
         assert_eq!(a.approximators, b.approximators);
+    }
+
+    /// The sharded error matrix is bitwise the serial per-net computation,
+    /// across thread counts and ragged block boundaries (n = 1300 is two
+    /// full 512-row blocks plus a 276-row tail, per net).
+    #[test]
+    fn error_matrix_sharding_is_bitwise_deterministic() {
+        let data = two_cluster_data(1300, 0xE44);
+        let mut rng = Rng::new(0xE45);
+        let nets: Vec<Mlp> = (0..3)
+            .map(|_| super::super::backprop::xavier_mlp(&[2, 5, 1], &mut rng))
+            .collect();
+        let refs: Vec<&Mlp> = nets.iter().collect();
+        // Serial reference: one whole-set packed forward per net.
+        let serial: Vec<Vec<f64>> = nets
+            .iter()
+            .map(|m| {
+                let pred = PackedMlp::from_mlp(m).forward_batch(&data.x_norm, data.n);
+                nn::per_sample_rmse(&pred, &data.y_norm, data.n, data.d_out)
+            })
+            .collect();
+        for threads in [1usize, 3, 4] {
+            let mat = error_matrix(&refs, &data, threads);
+            assert_eq!(mat, serial, "threads={threads}");
+        }
+        // Degenerate shapes don't panic and keep the row-per-net contract.
+        assert_eq!(error_matrix(&[], &data, 4).len(), 0);
+        let empty = TrainData {
+            n: 0,
+            d_in: 2,
+            d_out: 1,
+            x_raw: vec![],
+            x_norm: vec![],
+            y_norm: vec![],
+        };
+        assert_eq!(error_matrix(&refs, &empty, 4), vec![Vec::new(); 3]);
+    }
+
+    /// Round wall-clock lands in the stats and is sane.
+    #[test]
+    fn round_stats_carry_wall_clock() {
+        let data = two_cluster_data(150, 3);
+        let mut c = cfg(1);
+        c.rounds = 2;
+        c.warmup_epochs = 2;
+        c.approx_epochs = 2;
+        c.clf_epochs = 2;
+        let out = cotrain(&data, &[2, 4, 1], &[2, 6, 2], &c);
+        assert!(out.history.iter().all(|h| h.wall_ms.is_finite() && h.wall_ms >= 0.0));
     }
 
     #[test]

@@ -78,6 +78,12 @@ pub struct TrainOptions {
     pub out_dir: PathBuf,
     /// Threads for per-approximator round work (0 = all cores).
     pub threads: usize,
+    /// Where to write the training perf report (forward and
+    /// forward+backward samples/sec, round wall-clock, precise-lookup
+    /// visits/query).  `None` skips the recorder entirely — the unit-test
+    /// default via explicit override; the CLI default is
+    /// `BENCH_train.json` at the repo root.
+    pub perf_json: Option<PathBuf>,
 }
 
 impl Default for TrainOptions {
@@ -97,6 +103,7 @@ impl Default for TrainOptions {
             error_bound: None,
             out_dir: crate::artifacts_dir(),
             threads: 0,
+            perf_json: Some(crate::bench_harness::bench_json_path("BENCH_train.json")),
         }
     }
 }
@@ -156,6 +163,8 @@ pub struct TrainReport {
     pub out_dir: PathBuf,
     /// Files written, relative to `out_dir`.
     pub wrote: Vec<String>,
+    /// Absolute path of the perf report, when one was written.
+    pub perf_json: Option<PathBuf>,
 }
 
 impl TrainReport {
@@ -200,6 +209,9 @@ impl TrainReport {
         for f in &self.wrote {
             println!("wrote {}", self.out_dir.join(f).display());
         }
+        if let Some(p) = &self.perf_json {
+            println!("wrote {}", p.display());
+        }
     }
 }
 
@@ -237,6 +249,7 @@ fn save_round_stats(
                                     ),
                                     ("mean_min_err".into(), Value::Num(h.mean_min_err)),
                                     ("reassigned".into(), Value::Num(h.reassigned as f64)),
+                                    ("wall_ms".into(), Value::Num(h.wall_ms)),
                                 ])
                             })
                             .collect(),
@@ -252,6 +265,99 @@ fn save_round_stats(
     std::fs::write(&path, json::write(&Value::Obj(doc)))
         .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))?;
     Ok(())
+}
+
+/// Write the training perf report (`BENCH_train.json`): forward and
+/// forward+backward samples/sec through the kernelized trainer, the
+/// co-training rounds' wall-clock replayed from this run's history, and
+/// the precise-fallback lookup's k-d-tree vs linear-scan timing with the
+/// tree's measured visits/query.  Hard-errors if the k-d tree and the
+/// linear scan disagree on the seeded query slab — the report must never
+/// record the speed of a broken index.
+fn write_train_perf(
+    path: &std::path::Path,
+    bench: &crate::formats::BenchManifest,
+    train: &TrainData,
+    test_ds: &crate::formats::Dataset,
+    history: &[RoundStats],
+) -> crate::Result<()> {
+    use crate::bench_harness::{Recorder, Timing};
+    use crate::util::stats;
+    use crate::workload::NearestLookup;
+    use std::time::Duration;
+
+    let mut rec = Recorder::new();
+    let budget = Duration::from_millis(60);
+
+    // Forward / forward+backward throughput on a fixed training slab
+    // through the same kernelized Trainer co-training uses.
+    let rows = train.n.min(256);
+    let x = &train.x_norm[..rows * train.d_in];
+    let y = &train.y_norm[..rows * train.d_out];
+    let mut t = Trainer::new(&bench.approx_topology, TrainConfig::default(), 0x7e57);
+    rec.bench_rows(&format!("train forward x{rows}"), budget, rows as u64, || {
+        std::hint::black_box(t.loss_of(x, y, rows));
+    });
+    rec.bench_rows(&format!("train forward+backward x{rows}"), budget, rows as u64, || {
+        std::hint::black_box(t.grads(x, y, rows));
+    });
+
+    // Co-training round wall-clock, replayed from this run's own history
+    // (rows = training-set size, so rows/sec reads as samples per
+    // round-second).
+    let wall_ns: Vec<f64> = history.iter().map(|h| h.wall_ms * 1e6).collect();
+    if !wall_ns.is_empty() {
+        let timing = Timing {
+            name: format!("cotrain round wall x{}", train.n),
+            iters: wall_ns.len() as u64,
+            mean_ns: stats::mean(&wall_ns),
+            p50_ns: stats::percentile(&wall_ns, 50.0),
+            p95_ns: stats::percentile(&wall_ns, 95.0),
+            p99_ns: stats::percentile(&wall_ns, 99.0),
+            std_ns: stats::std_dev(&wall_ns),
+            rows: Some(train.n as u64),
+        };
+        timing.print();
+        rec.timings.push(timing);
+    }
+
+    // Precise-fallback lookup over the held-out store: the k-d tree must
+    // agree with the linear scan on every seeded query before its speed
+    // is worth recording.
+    let lookup = NearestLookup::from_dataset(bench, test_ds);
+    if !lookup.is_empty() {
+        let queries: Vec<&[f32]> = (0..train.n.min(256))
+            .map(|i| &train.x_raw[i * train.d_in..(i + 1) * train.d_in])
+            .collect();
+        for q in &queries {
+            let (tree, scan) = (lookup.nearest(q), lookup.nearest_scan(q));
+            anyhow::ensure!(
+                tree == scan,
+                "k-d tree disagrees with linear scan (tree {tree}, scan {scan}) — \
+                 refusing to write {}",
+                path.display()
+            );
+        }
+        let (q0, v0) = lookup.query_stats();
+        rec.bench(&format!("precise lookup kd-tree x{}", queries.len()), budget, || {
+            for q in &queries {
+                std::hint::black_box(lookup.nearest(q));
+            }
+        });
+        let (q1, v1) = lookup.query_stats();
+        rec.bench(&format!("precise lookup linear scan x{}", queries.len()), budget, || {
+            for q in &queries {
+                std::hint::black_box(lookup.nearest_scan(q));
+            }
+        });
+        if q1 > q0 {
+            rec.extra("lookup_visits_per_query", (v1 - v0) as f64 / (q1 - q0) as f64);
+        }
+        rec.extra("lookup_store_rows", lookup.len() as f64);
+        rec.extra("lookup_scan_agree", 1.0);
+    }
+
+    rec.write_json("train", path)
 }
 
 /// Method keys of a weights file, in `Method::ALL` display order
@@ -484,6 +590,10 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     )?;
     wrote.push("train_stats_rust.json".into());
 
+    if let Some(path) = &opts.perf_json {
+        write_train_perf(path, &bench, &train, &test_ds, &multi.history)?;
+    }
+
     Ok(TrainReport {
         bench: bench.name,
         k: opts.k,
@@ -496,5 +606,6 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         history: multi.history,
         out_dir: opts.out_dir.clone(),
         wrote,
+        perf_json: opts.perf_json.clone(),
     })
 }

@@ -102,18 +102,40 @@ pub trait WorkloadSource: Send + Sync {
 }
 
 /// Estimated CPU cost (cycles) of one precise evaluation for the NPU
-/// speedup/energy model.  Registered synthetic benchmarks report their
-/// derived op counts; table workloads have no closed-form function, so the
-/// precise path is modelled as its actual runtime implementation — a
-/// nearest-record scan over the held-out store (`test_n` records x `n_in`
-/// lanes, 4-wide SIMD) plus dispatch overhead.
+/// speedup/energy model, with no measured lookup cost available — the
+/// conservative full-store bound.  See
+/// [`precise_cost_cycles_measured`] for the measured-visits variant the
+/// eval paths prefer.
 pub fn precise_cost_cycles(bench: &BenchManifest) -> u64 {
+    precise_cost_cycles_measured(bench, None)
+}
+
+/// CPU cost (cycles) of one precise evaluation for the NPU speedup/energy
+/// model.  Registered synthetic benchmarks report their derived op counts.
+/// Table workloads have no closed-form function, so the precise path is
+/// modelled as its actual runtime implementation — the k-d tree
+/// nearest-record lookup over the held-out store ([`NearestLookup`]):
+/// when a run measured the tree's mean visited records per query
+/// (`visits_per_query`, from [`NearestLookup::visits_per_query`]), that
+/// sublinear count is charged (`n_in` lanes per visited record, 4-wide
+/// SIMD, plus dispatch overhead); otherwise the conservative full-scan
+/// bound over all `test_n` records applies.
+pub fn precise_cost_cycles_measured(
+    bench: &BenchManifest,
+    visits_per_query: Option<f64>,
+) -> u64 {
     if bench.kind == WorkloadKind::Synthetic {
         if let Ok(f) = crate::benchmarks::by_name(&bench.name) {
             return f.cpu_cycles();
         }
     }
-    let records = bench.test_n.max(64) as u64;
+    let full = bench.test_n.max(64) as u64;
+    let records = match visits_per_query {
+        // At least one record is always visited; never charge MORE than
+        // the full-scan bound (the estimate's own floor included).
+        Some(v) if v.is_finite() && v >= 1.0 => (v.ceil() as u64).min(full),
+        _ => full,
+    };
     let per_record = (bench.n_in as u64 + 2).div_ceil(4);
     500 + records * per_record
 }
@@ -154,6 +176,17 @@ mod tests {
         // More records => costlier precise path.
         table_man.test_n = 4000;
         assert!(precise_cost_cycles(&table_man) > scan);
+
+        // Measured sublinear visits are charged instead of the full scan…
+        table_man.test_n = 1000;
+        assert_eq!(precise_cost_cycles_measured(&table_man, Some(12.2)), 500 + 13 * 3);
+        // …clamped to [1 record, full-scan bound], garbage ignored.
+        assert_eq!(precise_cost_cycles_measured(&table_man, Some(1e12)), scan);
+        assert_eq!(precise_cost_cycles_measured(&table_man, Some(0.0)), scan);
+        assert_eq!(precise_cost_cycles_measured(&table_man, Some(f64::NAN)), scan);
+        assert_eq!(precise_cost_cycles_measured(&table_man, None), scan);
+        // Synthetic benches ignore the measurement entirely.
+        assert_eq!(precise_cost_cycles_measured(&man, Some(5.0)), registered);
     }
 
     #[test]

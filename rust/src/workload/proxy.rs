@@ -8,11 +8,40 @@
 //! QoS shadow verification), nearest-neighbour interpolation on unseen
 //! inputs — or a configurable reject-with-error for serving setups that
 //! would rather fail a request than serve an interpolated answer.
+//!
+//! The lookup is a bucketed k-d tree, built once at load over the scaled
+//! input space and queried allocation-free: best-first descent into the
+//! query's side of each splitting plane, pruning the far side only when
+//! its plane distance PROVABLY exceeds the best candidate.  Results are
+//! bitwise identical to the exhaustive scan ([`NearestLookup::nearest_scan`],
+//! kept as the test oracle): identical per-record metric (ascending-
+//! dimension f64 accumulation of `((q - r) * inv_scale)²`) and
+//! deterministic tie-breaking (equal distances resolve to the LOWEST
+//! record index, so equality at a splitting plane never prunes).  Visit
+//! counters feed the NPU cost model the MEASURED sublinear cost of the
+//! precise path ([`super::precise_cost_cycles_measured`]).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::benchmarks::{self, BenchFn};
 use crate::formats::{BenchManifest, Dataset, WorkloadKind};
+
+/// Records per leaf bucket.  Small enough that a leaf scan stays in
+/// registers/L1, big enough that the tree (and its pointer chasing) is
+/// ~n/8 nodes rather than n.
+const LEAF_SIZE: usize = 8;
+
+/// k-d tree node, arena-allocated (`Vec<KdNode>`, `u32` child indices).
+#[derive(Clone, Copy, Debug)]
+enum KdNode {
+    /// Records `perm[start..end]` — scanned exhaustively on visit.
+    Leaf { start: u32, end: u32 },
+    /// Splitting plane: `left` holds records with coordinate ≤ `split`
+    /// along `dim` (ties split deterministically by record index), `right`
+    /// those with coordinate ≥ `split`.
+    Split { dim: u32, split: f32, left: u32, right: u32 },
+}
 
 /// Nearest-record store: raw input rows with their normalised labels.
 /// Distance is squared L2 in NORMALISED input space (per-dimension
@@ -24,6 +53,66 @@ pub struct NearestLookup {
     x_raw: Vec<f32>,
     y_norm: Vec<f32>,
     inv_scale: Vec<f32>,
+    /// k-d tree over the scaled inputs: node arena, leaf permutation and
+    /// root index.  Built once in [`Self::from_dataset`].
+    nodes: Vec<KdNode>,
+    perm: Vec<u32>,
+    root: u32,
+    /// Query instrumentation (relaxed atomics — `&self` queries from many
+    /// server workers).  `visited` counts records whose distance was
+    /// (partially) evaluated; the ratio is the measured per-query cost the
+    /// NPU model charges.
+    queries: AtomicU64,
+    visited: AtomicU64,
+}
+
+/// Build one subtree over `perm[lo..hi]`, returning its arena index.
+/// Deterministic: split dimension is the widest SCALED spread, the median
+/// is selected under a total order on `(coordinate, record index)`, and
+/// zero-spread ranges (all records identical under the metric) collapse to
+/// a single leaf regardless of size.
+fn build_node(
+    nodes: &mut Vec<KdNode>,
+    perm: &mut [u32],
+    lo: usize,
+    hi: usize,
+    x: &[f32],
+    d_in: usize,
+    inv_scale: &[f32],
+) -> u32 {
+    let len = hi - lo;
+    let mut split_dim = None;
+    if len > LEAF_SIZE {
+        let mut best_spread = 0.0f32;
+        for d in 0..d_in {
+            let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &p in &perm[lo..hi] {
+                let v = x[p as usize * d_in + d];
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let spread = (mx - mn) * inv_scale[d];
+            if spread > best_spread {
+                best_spread = spread;
+                split_dim = Some(d);
+            }
+        }
+    }
+    let Some(dim) = split_dim else {
+        nodes.push(KdNode::Leaf { start: lo as u32, end: hi as u32 });
+        return (nodes.len() - 1) as u32;
+    };
+    let mid = len / 2;
+    perm[lo..hi].select_nth_unstable_by(mid, |&a, &b| {
+        let va = x[a as usize * d_in + dim];
+        let vb = x[b as usize * d_in + dim];
+        va.total_cmp(&vb).then(a.cmp(&b))
+    });
+    let split = x[perm[lo + mid] as usize * d_in + dim];
+    let left = build_node(nodes, perm, lo, lo + mid, x, d_in, inv_scale);
+    let right = build_node(nodes, perm, lo + mid, hi, x, d_in, inv_scale);
+    nodes.push(KdNode::Split { dim: dim as u32, split, left, right });
+    (nodes.len() - 1) as u32
 }
 
 impl NearestLookup {
@@ -31,12 +120,16 @@ impl NearestLookup {
         assert_eq!(ds.d_in, bench.n_in, "lookup store/bench input dims disagree");
         assert_eq!(ds.d_out, bench.n_out);
         assert!(ds.n > 0, "lookup store must be non-empty");
-        let inv_scale = (0..bench.n_in)
+        let inv_scale: Vec<f32> = (0..bench.n_in)
             .map(|d| {
                 let r = bench.x_hi[d] - bench.x_lo[d];
                 if r > 0.0 { 1.0 / r } else { 0.0 }
             })
             .collect();
+        let mut perm: Vec<u32> = (0..ds.n as u32).collect();
+        let mut nodes: Vec<KdNode> = Vec::with_capacity(2 * ds.n.div_ceil(LEAF_SIZE));
+        let root =
+            build_node(&mut nodes, &mut perm, 0, ds.n, &ds.x_raw, ds.d_in, &inv_scale);
         NearestLookup {
             n: ds.n,
             d_in: ds.d_in,
@@ -44,6 +137,11 @@ impl NearestLookup {
             x_raw: ds.x_raw.clone(),
             y_norm: ds.y_norm.clone(),
             inv_scale,
+            nodes,
+            perm,
+            root,
+            queries: AtomicU64::new(0),
+            visited: AtomicU64::new(0),
         }
     }
 
@@ -55,30 +153,111 @@ impl NearestLookup {
         self.n == 0
     }
 
-    /// Copy the label of the nearest stored record into `out`
-    /// (normalised space).  Linear scan — allocation-free, O(n · d_in);
-    /// the store is a held-out set (hundreds–thousands of rows), and the
-    /// cost model charges the precise path accordingly
-    /// ([`super::precise_cost_cycles`]).
-    pub fn lookup_into(&self, x_raw: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(x_raw.len(), self.d_in);
-        debug_assert_eq!(out.len(), self.d_out);
-        let (mut best_i, mut best_d) = (0usize, f64::INFINITY);
-        for i in 0..self.n {
-            let row = &self.x_raw[i * self.d_in..(i + 1) * self.d_in];
-            let mut dist = 0.0f64;
-            for d in 0..self.d_in {
-                let diff = ((x_raw[d] - row[d]) * self.inv_scale[d]) as f64;
-                dist += diff * diff;
-                if dist >= best_d {
-                    break; // early-out: already worse than the best
-                }
-            }
-            if dist < best_d {
-                best_d = dist;
-                best_i = i;
+    /// `(queries answered, records visited)` so far — the cost-model input.
+    pub fn query_stats(&self) -> (u64, u64) {
+        (self.queries.load(Ordering::Relaxed), self.visited.load(Ordering::Relaxed))
+    }
+
+    /// Mean records visited per query, if any query has run.  This is the
+    /// measured sublinear cost [`super::precise_cost_cycles_measured`]
+    /// charges instead of the full-scan estimate.
+    pub fn visits_per_query(&self) -> Option<f64> {
+        let q = self.queries.load(Ordering::Relaxed);
+        if q == 0 {
+            return None;
+        }
+        Some(self.visited.load(Ordering::Relaxed) as f64 / q as f64)
+    }
+
+    /// Accumulate record `i`'s scaled squared distance to `q`, updating
+    /// `best = (distance, index)` under the tie rule "equal distance keeps
+    /// the LOWER index".
+    ///
+    /// The bound check is hoisted: a record that loses index ties (`i >
+    /// best_i`) is dead the moment its partial sum REACHES `best_d` — and
+    /// when `best_d` is already 0 (exact duplicate found) it is rejected
+    /// before any per-dimension work, so a degenerate all-equal store
+    /// costs O(1) per record instead of O(d).  A record that would win the
+    /// tie is only dead strictly ABOVE `best_d`.
+    #[inline]
+    fn consider(&self, i: usize, q: &[f32], best: &mut (f64, usize)) {
+        let (best_d, best_i) = *best;
+        let loses_ties = i > best_i;
+        if loses_ties && best_d == 0.0 {
+            return;
+        }
+        let row = &self.x_raw[i * self.d_in..(i + 1) * self.d_in];
+        let mut dist = 0.0f64;
+        for d in 0..self.d_in {
+            let diff = ((q[d] - row[d]) * self.inv_scale[d]) as f64;
+            dist += diff * diff;
+            if dist > best_d || (loses_ties && dist >= best_d) {
+                return;
             }
         }
+        // dist < best_d, or dist == best_d with i < best_i: i wins.
+        *best = (dist, i);
+    }
+
+    /// Best-first descent; `visited` counts `consider` calls.
+    fn search(&self, node: u32, q: &[f32], best: &mut (f64, usize), visited: &mut u64) {
+        match self.nodes[node as usize] {
+            KdNode::Leaf { start, end } => {
+                for &p in &self.perm[start as usize..end as usize] {
+                    *visited += 1;
+                    self.consider(p as usize, q, best);
+                }
+            }
+            KdNode::Split { dim, split, left, right } => {
+                let d = dim as usize;
+                let (near, far) =
+                    if q[d] < split { (left, right) } else { (right, left) };
+                self.search(near, q, best, visited);
+                // Plane distance, in the exact arithmetic of the per-record
+                // metric (f32 product cast to f64, squared in f64) so the
+                // lower bound is sound for the scan's own rounding.  Prune
+                // only on STRICTLY greater: an equal-distance record beyond
+                // the plane could still win the index tie.
+                let diff = ((q[d] - split) * self.inv_scale[d]) as f64;
+                if diff * diff <= best.0 {
+                    self.search(far, q, best, visited);
+                }
+            }
+        }
+    }
+
+    /// Index of the nearest stored record (lowest index on ties) via the
+    /// k-d tree.  Allocation-free; updates the visit counters.
+    pub fn nearest(&self, x_raw: &[f32]) -> usize {
+        debug_assert_eq!(x_raw.len(), self.d_in);
+        let mut best = (f64::INFINITY, usize::MAX);
+        let mut visited = 0u64;
+        self.search(self.root, x_raw, &mut best, &mut visited);
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.visited.fetch_add(visited, Ordering::Relaxed);
+        best.1
+    }
+
+    /// Exhaustive linear scan under the identical metric and tie rule —
+    /// the reference [`Self::nearest`] is pinned against (equivalence
+    /// property tests and the `mcma train` seeded self-check).  Does not
+    /// touch the visit counters.
+    pub fn nearest_scan(&self, x_raw: &[f32]) -> usize {
+        debug_assert_eq!(x_raw.len(), self.d_in);
+        let mut best = (f64::INFINITY, usize::MAX);
+        for i in 0..self.n {
+            self.consider(i, x_raw, &mut best);
+        }
+        best.1
+    }
+
+    /// Copy the label of the nearest stored record into `out`
+    /// (normalised space).  k-d tree query — allocation-free, measured
+    /// sublinear visits; the cost model charges the precise path the
+    /// observed ratio ([`super::precise_cost_cycles_measured`]).
+    pub fn lookup_into(&self, x_raw: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d_out);
+        let best_i = self.nearest(x_raw);
         out.copy_from_slice(&self.y_norm[best_i * self.d_out..(best_i + 1) * self.d_out]);
     }
 }
@@ -116,6 +295,16 @@ impl PreciseProxy {
 
     pub fn is_reject(&self) -> bool {
         matches!(self, PreciseProxy::Reject)
+    }
+
+    /// The lookup store behind this proxy, if that's what it is — the
+    /// dispatcher reads its visit counters to report measured precise-path
+    /// cost ([`super::precise_cost_cycles_measured`]).
+    pub fn lookup(&self) -> Option<&NearestLookup> {
+        match self {
+            PreciseProxy::Lookup(l) => Some(l),
+            _ => None,
+        }
     }
 
     /// Produce the precise answer for one raw input row, in NORMALISED
@@ -250,5 +439,140 @@ mod tests {
             p.serve_norm_into(&b, ds.x_row(i), &mut raw, &mut out).unwrap();
             assert_eq!(out[0], ds.y_norm[i], "held-out replay must be exact");
         }
+    }
+
+    use crate::util::rng::Rng;
+
+    /// Manifest with `d` input dims over `[0, 1]` (dim 1, when present,
+    /// deliberately degenerate: `hi == lo` ⇒ `inv_scale == 0`, so that
+    /// axis is invisible to the metric).
+    fn bench_d(d: usize, degenerate_axis: bool) -> BenchManifest {
+        let mut b = bench(WorkloadKind::Table);
+        b.n_in = d;
+        b.x_lo = vec![0.0; d];
+        b.x_hi = vec![1.0; d];
+        if degenerate_axis && d > 1 {
+            b.x_hi[1] = 0.0;
+        }
+        b
+    }
+
+    fn random_store(r: &mut Rng, n: usize, d: usize, duplicates: bool) -> Dataset {
+        let mut x_raw: Vec<f32> = (0..n * d).map(|_| r.uniform(0.0, 1.0) as f32).collect();
+        if duplicates {
+            // Force exact duplicate points (including of row 0) so ties are
+            // real, not just close calls.
+            for i in (0..n).step_by(3) {
+                let src = if i % 2 == 0 { 0 } else { i / 2 };
+                let row: Vec<f32> = x_raw[src * d..(src + 1) * d].to_vec();
+                x_raw[i * d..(i + 1) * d].copy_from_slice(&row);
+            }
+        }
+        let y_norm: Vec<f32> = (0..n).map(|i| i as f32 / n as f32).collect();
+        Dataset { n, d_in: d, d_out: 1, x_raw, y_norm }
+    }
+
+    /// k-d tree vs exhaustive scan: bitwise-identical record INDEX (not
+    /// just label) on random tables, duplicate-heavy tables, and tables
+    /// with a metric-degenerate axis — across dimensionalities straddling
+    /// the leaf size and store sizes from sub-leaf to multi-level.
+    #[test]
+    fn prop_kdtree_matches_linear_scan_exactly() {
+        crate::util::prop::check(
+            "kdtree-vs-scan",
+            60,
+            0x7D7E,
+            |r: &mut Rng| {
+                let d = 1 + r.below(6) as usize;
+                let n = 1 + r.below(300) as usize;
+                let duplicates = r.below(2) == 0;
+                let degenerate = r.below(3) == 0;
+                let q_n = 1 + r.below(40) as usize;
+                let mut queries: Vec<f32> =
+                    (0..q_n * d).map(|_| r.uniform(-0.2, 1.2) as f32).collect();
+                let store = random_store(r, n, d, duplicates);
+                // Half the queries replay exact store rows (distance-zero
+                // ties are the adversarial case).
+                for qi in 0..q_n / 2 {
+                    let src = r.below(n as u64) as usize;
+                    queries[qi * d..(qi + 1) * d]
+                        .copy_from_slice(&store.x_raw[src * d..(src + 1) * d]);
+                }
+                (bench_d(d, degenerate), store, queries, d)
+            },
+            |(man, store, queries, d)| {
+                let l = NearestLookup::from_dataset(man, store);
+                for q in queries.chunks(*d) {
+                    let tree = l.nearest(q);
+                    let scan = l.nearest_scan(q);
+                    if tree != scan {
+                        return Err(format!("tree {tree} != scan {scan} for query {q:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Tie-breaking regression: the LOWEST record index wins, and the
+    /// winner is stable across query order (no hidden state).  An
+    /// all-equal store is also the degenerate case the hoisted early-out
+    /// targets: every query must still resolve to record 0.
+    #[test]
+    fn tie_breaks_to_lowest_index_stably() {
+        let b = bench_d(3, false);
+        // Store of 40 identical points.
+        let all_equal = Dataset {
+            n: 40,
+            d_in: 3,
+            d_out: 1,
+            x_raw: [0.25f32, 0.5, 0.75].repeat(40),
+            y_norm: (0..40).map(|i| i as f32).collect(),
+        };
+        let l = NearestLookup::from_dataset(&b, &all_equal);
+        let queries: [[f32; 3]; 3] =
+            [[0.25, 0.5, 0.75], [0.9, 0.9, 0.9], [0.0, 0.0, 0.0]];
+        // Forward, reversed, and interleaved query orders all agree.
+        for order in [[0usize, 1, 2], [2, 1, 0], [1, 0, 2]] {
+            for qi in order {
+                assert_eq!(l.nearest(&queries[qi]), 0, "query {qi} lost the tie");
+                assert_eq!(l.nearest_scan(&queries[qi]), 0);
+            }
+        }
+        // Two equidistant distinct records: query midway between rows 2
+        // and 5 (same point stored twice) must return 2.
+        let mut two = random_store(&mut Rng::new(9), 8, 2, false);
+        let dup: Vec<f32> = two.x_raw[2 * 2..3 * 2].to_vec();
+        two.x_raw[5 * 2..6 * 2].copy_from_slice(&dup);
+        let b2 = bench_d(2, false);
+        let l2 = NearestLookup::from_dataset(&b2, &two);
+        assert_eq!(l2.nearest(&dup), 2);
+        assert_eq!(l2.nearest_scan(&dup), 2);
+    }
+
+    /// Visit counters: exact-duplicate queries on a spread-out store visit
+    /// far fewer records than the store holds (the sublinearity the cost
+    /// model charges), and the stats accumulate across queries.
+    #[test]
+    fn visit_counters_measure_sublinear_queries() {
+        let mut r = Rng::new(0x715);
+        let n = 2048;
+        let store = random_store(&mut r, n, 2, false);
+        let b = bench_d(2, false);
+        let l = NearestLookup::from_dataset(&b, &store);
+        assert_eq!(l.query_stats(), (0, 0));
+        assert_eq!(l.visits_per_query(), None);
+        let q = 256usize;
+        for i in 0..q {
+            l.nearest(&store.x_raw[i * 2..(i + 1) * 2]);
+        }
+        let (queries, visited) = l.query_stats();
+        assert_eq!(queries, q as u64);
+        let vpq = l.visits_per_query().unwrap();
+        assert!((vpq - visited as f64 / q as f64).abs() < 1e-12);
+        assert!(
+            vpq < n as f64 / 4.0,
+            "k-d tree visited {vpq} of {n} records per query — not sublinear"
+        );
     }
 }

@@ -262,6 +262,7 @@ fn serve_with_qos_end_to_end() {
         seed: 11,
         out_dir: out_dir.clone(),
         threads: 2,
+        perf_json: None,
         ..TrainOptions::default()
     })
     .unwrap();
@@ -350,6 +351,7 @@ fn fig9_reads_native_round_stats() {
         seed: 3,
         out_dir: out_dir.clone(),
         threads: 1,
+        perf_json: None,
         ..TrainOptions::default()
     })
     .unwrap();

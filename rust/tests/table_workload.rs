@@ -53,6 +53,7 @@ fn table_opts(csv: &std::path::Path, out_dir: &std::path::Path, threads: usize) 
         seed: 11,
         out_dir: out_dir.to_path_buf(),
         threads,
+        perf_json: None,
         ..TrainOptions::default()
     }
 }

@@ -32,6 +32,7 @@ fn train_export_serves_through_model_bank() {
         seed: 11,
         out_dir: out_dir.clone(),
         threads: 2,
+        perf_json: Some(out_dir.join("BENCH_train.json")),
         ..TrainOptions::default()
     };
     let report = train_bench(&opts).unwrap();
@@ -39,6 +40,22 @@ fn train_export_serves_through_model_bank() {
     assert!((0.0..=1.0).contains(&report.invocation_k));
     assert!((0.0..=1.0).contains(&report.invocation_base));
     assert!(!report.history.is_empty());
+    assert!(report.history.iter().all(|h| h.wall_ms > 0.0), "rounds must carry wall-clock");
+
+    // (0) the perf report landed where asked, with forward AND backward
+    // samples/sec plus the lookup-index side-measurements.
+    let perf = mcma::util::json::parse_file(&out_dir.join("BENCH_train.json")).unwrap();
+    let results = perf.get("results").unwrap().as_arr().unwrap();
+    for needle in ["train forward x", "train forward+backward x", "cotrain round wall x"] {
+        let t = results
+            .iter()
+            .find(|r| r.get("name").unwrap().as_str().unwrap().starts_with(needle))
+            .unwrap_or_else(|| panic!("missing perf case {needle:?}"));
+        assert!(t.get("rows_per_sec").unwrap().as_f64().unwrap() > 0.0, "{needle} rows/sec");
+    }
+    let extras = perf.get("extras").expect("perf extras object");
+    assert_eq!(extras.get("lookup_scan_agree").unwrap().as_f64().unwrap(), 1.0);
+    assert!(extras.get("lookup_visits_per_query").unwrap().as_f64().unwrap() >= 1.0);
 
     // (1) every promised artifact exists.
     let bdir = out_dir.join("blackscholes");
@@ -100,6 +117,7 @@ fn train_merges_into_existing_tree() {
         seed,
         out_dir: out_dir.clone(),
         threads: 1,
+        perf_json: None,
         ..TrainOptions::default()
     };
     train_bench(&mk("sobel", 1)).unwrap();

@@ -103,6 +103,24 @@ fn bench_impl<F: FnMut()>(name: &str, budget: Duration, rows: Option<u64>, mut f
     timing
 }
 
+/// Build a [`Timing`] from externally-collected duration samples (ns) —
+/// e.g. per-request serve latencies from `mcma bench-load` — so
+/// measurements that don't come from a `bench` closure still flow
+/// through the same [`Recorder`] JSON schema.  `rows` is rows per
+/// sample, as in [`bench_with_rows`].
+pub fn timing_from_samples(name: &str, samples_ns: &[f64], rows: Option<u64>) -> Timing {
+    Timing {
+        name: name.to_string(),
+        iters: samples_ns.len() as u64,
+        mean_ns: stats::mean(samples_ns),
+        p50_ns: stats::percentile(samples_ns, 50.0),
+        p95_ns: stats::percentile(samples_ns, 95.0),
+        p99_ns: stats::percentile(samples_ns, 99.0),
+        std_ns: stats::std_dev(samples_ns),
+        rows,
+    }
+}
+
 /// Collects [`Timing`]s across a bench binary and writes the
 /// machine-readable JSON report consumed by cross-PR perf tracking.
 #[derive(Default)]
@@ -321,6 +339,16 @@ mod tests {
         assert!(results[0].get("rows_per_sec").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(results[0].get("rows").unwrap().as_f64().unwrap(), 256.0);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn timing_from_samples_matches_stats() {
+        let samples = [10.0, 20.0, 30.0, 40.0];
+        let t = timing_from_samples("ext", &samples, Some(1));
+        assert_eq!(t.iters, 4);
+        assert!((t.mean_ns - 25.0).abs() < 1e-9);
+        assert!(t.p50_ns >= 10.0 && t.p50_ns <= 40.0);
+        assert!(t.rows_per_sec().is_some());
     }
 
     #[test]

@@ -19,16 +19,19 @@ pub struct Args {
 }
 
 /// Option keys that take a value.
-const VALUE_KEYS: [&str; 27] = [
+const VALUE_KEYS: [&str; 38] = [
     // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
     // train
-    "k", "rounds", "epochs", "lr", "bound", "out", "threads",
+    "k", "rounds", "epochs", "lr", "bound", "out", "threads", "perf-json",
     // data-defined (table) workloads
     "data", "d-out", "holdout", "scheme", "precise-fallback",
     // serve/summary QoS loop
     "qos-target", "qos-quantile", "qos-shadow", "qos-window", "qos-seed",
+    // network serving (`serve --listen`) + load harness (`bench-load`)
+    "listen", "duration", "batch-max", "batch-wait-us",
+    "addr", "rate", "closed-loop", "mix", "csv", "json",
 ];
 
 /// Boolean flags (present/absent, no value).
@@ -126,6 +129,21 @@ SUBCOMMANDS:
                                      table workloads only: serve rejected
                                      requests from the nearest held-out
                                      record (default) or fail them
+         [--listen ADDR]             serve over TCP (length-prefixed binary
+         [--duration SEC]            frames) instead of the in-process demo
+         [--batch-max N]             traffic; adaptive micro-batching
+         [--batch-wait-us U]         coalesces GEMM-shaped batches under
+                                     load, drops to low-latency singles
+                                     when idle.  --duration 0 = until killed
+  bench-load --addr HOST:PORT       seeded load generator against a live
+         [--seed S] [--duration SEC] `mcma serve --listen` socket:
+         [--rate R | --closed-loop N] open-loop Poisson at R req/s or
+         [--mix W0,W1 | C:W,...]     closed-loop with N in flight; --mix
+         [--requests N]              weights request classes (equal shards
+         [--bench B]                 of the held-out set); --requests caps
+         [--qos-target T]            total sent (same seed + same cap =
+         [--csv PATH] [--json PATH]  identical sequence).  Writes the
+                                     per-request CSV + BENCH_serve.json
   train  --bench B | --data F.csv co-train K approximators + multiclass
          [--d-out N] [--holdout H]   classifier natively (no Python) and
          [--k K] [--scheme S]        export MCMW/MCQW artifacts ModelBank
@@ -246,6 +264,33 @@ mod tests {
         assert_eq!(b.opt("precise-fallback"), Some("reject"));
         assert!(b.has_flag("qos-warm"));
         assert!(Args::parse(["train".into(), "--dout".into(), "2".into()]).is_err());
+    }
+
+    #[test]
+    fn net_serve_and_bench_load_options_registered() {
+        let a = parse(
+            "serve --bench fft --listen 127.0.0.1:0 --duration 5 \
+             --batch-max 64 --batch-wait-us 500",
+        );
+        assert_eq!(a.opt("listen"), Some("127.0.0.1:0"));
+        assert_eq!(a.opt_usize("duration", 0).unwrap(), 5);
+        assert_eq!(a.opt_usize("batch-max", 0).unwrap(), 64);
+        assert_eq!(a.opt_usize("batch-wait-us", 0).unwrap(), 500);
+        let b = parse(
+            "bench-load --addr 127.0.0.1:7090 --seed 7 --duration 3 \
+             --closed-loop 32 --mix 3,1 --requests 500 --csv /tmp/load.csv \
+             --json /tmp/BENCH_serve.json --qos-target 1.0",
+        );
+        assert_eq!(b.subcommand.as_deref(), Some("bench-load"));
+        assert_eq!(b.opt("addr"), Some("127.0.0.1:7090"));
+        assert_eq!(b.opt_usize("closed-loop", 0).unwrap(), 32);
+        assert_eq!(b.opt("mix"), Some("3,1"));
+        assert_eq!(b.opt("csv"), Some("/tmp/load.csv"));
+        let c = parse("bench-load --rate 2000");
+        assert!((c.opt_f64("rate", 0.0).unwrap() - 2000.0).abs() < 1e-12);
+        // --perf-json is registered (it appears in USAGE and CI).
+        let d = parse("train --bench fft --perf-json /tmp/BENCH_train.json");
+        assert_eq!(d.opt("perf-json"), Some("/tmp/BENCH_train.json"));
     }
 
     #[test]

@@ -270,6 +270,15 @@ impl LatencyStats {
         stats::percentile(&self.samples, 99.0)
     }
 
+    pub fn p999(&self) -> f64 {
+        stats::percentile(&self.samples, 99.9)
+    }
+
+    /// Arbitrary percentile (linear interpolation), `p` in `[0, 100]`.
+    pub fn percentile(&self, p: f64) -> f64 {
+        stats::percentile(&self.samples, p)
+    }
+
     pub fn mean(&self) -> f64 {
         stats::mean(&self.samples)
     }

@@ -21,9 +21,9 @@ pub mod router;
 pub mod server;
 pub mod weight_cache;
 
-pub use batcher::{Batch, Batcher};
+pub use batcher::{Batch, Batcher, BatcherStats, IDLE_WAIT_DIV, MR};
 pub use dispatcher::{Dispatcher, EvalOutput, RouterPolicy, Scratch};
 pub use metrics::{ClassCounters, LatencyStats, PerRouteReport, RouteClassStats, RunMetrics};
 pub use router::{plan_routes, Route, RoutePlan};
-pub use server::{Server, ServerConfig, ServerReport, TableFallback};
+pub use server::{Response, Server, ServerConfig, ServerReport, Submitter, TableFallback};
 pub use weight_cache::{BufferCase, WeightCache};

@@ -37,7 +37,7 @@ use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler};
 use crate::runtime::{ModelBank, Runtime};
 use crate::workload::{NearestLookup, PreciseProxy};
 
-use super::batcher::Batcher;
+use super::batcher::{Batcher, BatcherStats};
 use super::dispatcher::Dispatcher;
 use super::metrics::{ClassCounters, LatencyStats, PerRouteReport};
 use super::router::Route;
@@ -58,6 +58,10 @@ pub struct Response {
     pub y: Vec<f32>,
     pub route: Route,
     pub latency_us: f64,
+    /// How many rows shared this request's dispatch batch — the
+    /// micro-batching observable, carried per-response so socket clients
+    /// (and `bench-load`) can build the batch-size histogram end to end.
+    pub batch_n: u32,
 }
 
 /// What a TABLE workload's dispatch workers do when the classifier
@@ -134,6 +138,9 @@ pub struct ServerReport {
     pub flushes_full: u64,
     pub flushes_timeout: u64,
     pub batches: u64,
+    /// Dispatched batch-size histogram from the batcher
+    /// (`batch_hist[n]` = batches of exactly `n` rows; index 0 unused).
+    pub batch_hist: Vec<u64>,
     /// Per-approximator-class (and CPU) response counts + latency.
     pub per_route: PerRouteReport,
     /// QoS controller outcome (present iff `ServerConfig::qos` was set).
@@ -233,7 +240,7 @@ impl QosShared {
 pub struct Server {
     ingress: mpsc::Sender<Option<Request>>,
     egress: mpsc::Receiver<Response>,
-    batcher_thread: Option<thread::JoinHandle<(u64, u64)>>,
+    batcher_thread: Option<thread::JoinHandle<BatcherStats>>,
     worker_threads: Vec<thread::JoinHandle<crate::Result<u64>>>,
     /// QoS controller thread (spawned iff `ServerConfig::qos`); joined
     /// after the workers so the observation channel is closed by then.
@@ -241,11 +248,40 @@ pub struct Server {
     started: Instant,
     /// Requests accepted so far; `shutdown` drains exactly
     /// `submitted - already_collected - lost` responses instead of
-    /// spinning on a fixed timeout after the last one.
-    submitted: AtomicU64,
+    /// spinning on a fixed timeout after the last one.  Shared with every
+    /// [`Submitter`] handed to network reader threads.
+    submitted: Arc<AtomicU64>,
     /// Responses workers failed to deliver (panic or error mid-batch),
     /// maintained by [`LostGuard`] so the drain never waits for them.
     lost: Arc<AtomicU64>,
+}
+
+/// Cloneable ingress handle for threads that submit requests without
+/// owning the `Server` (one per network reader thread).  The egress
+/// `Receiver` is `!Sync`, so the `Server` itself cannot be shared; a
+/// `Submitter` carries only the ingress sender plus the shared
+/// submitted counter, keeping `shutdown`'s exact drain accounting
+/// intact no matter which thread accepted the request.
+#[derive(Clone)]
+pub struct Submitter {
+    ingress: mpsc::Sender<Option<Request>>,
+    submitted: Arc<AtomicU64>,
+}
+
+impl Submitter {
+    /// Submit one request (non-blocking); mirrors [`Server::submit`].
+    pub fn submit(&self, id: u64, x_raw: Vec<f32>) -> crate::Result<()> {
+        self.ingress
+            .send(Some(Request { id, x_raw, submitted: Instant::now() }))
+            .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Requests submitted so far across ALL submitters of this server.
+    pub fn submitted(&self) -> u64 {
+        self.submitted.load(Ordering::Relaxed)
+    }
 }
 
 impl Server {
@@ -274,8 +310,14 @@ impl Server {
             .name("mcma-batcher".into())
             .spawn(move || {
                 let mut batcher = Batcher::new(policy, d_in);
-                let tick = Duration::from_micros((policy.max_wait_us / 2).max(50));
                 loop {
+                    // The tick tracks the batcher's ADAPTIVE age budget
+                    // (idle regime: max_wait/16), so a lone request is
+                    // re-polled — and dispatched — on the short idle
+                    // schedule instead of sleeping out half the full
+                    // coalescing window.
+                    let tick =
+                        Duration::from_micros((batcher.effective_wait_us() / 2).max(50));
                     match in_rx.recv_timeout(tick) {
                         Ok(Some(req)) => {
                             if let Some(b) = batcher.push(req.id, req.x_raw) {
@@ -295,7 +337,7 @@ impl Server {
                                 let _ = batch_tx.send(BatchMsg::Work(b));
                             }
                             let _ = batch_tx.send(BatchMsg::Stop);
-                            return (batcher.flushes_full, batcher.flushes_timeout);
+                            return batcher.into_stats();
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {
                             if let Some(b) = batcher.poll(Instant::now()) {
@@ -304,7 +346,7 @@ impl Server {
                         }
                         Err(mpsc::RecvTimeoutError::Disconnected) => {
                             let _ = batch_tx.send(BatchMsg::Stop);
-                            return (batcher.flushes_full, batcher.flushes_timeout);
+                            return batcher.into_stats();
                         }
                     }
                 }
@@ -453,6 +495,7 @@ impl Server {
                                                 .duration_since(batch.enqueued[j])
                                                 .as_secs_f64()
                                                 * 1e6,
+                                            batch_n: batch.n as u32,
                                         });
                                         guard.remaining -= 1;
                                     }
@@ -619,7 +662,7 @@ impl Server {
             worker_threads,
             qos_thread,
             started: Instant::now(),
-            submitted: AtomicU64::new(0),
+            submitted: Arc::new(AtomicU64::new(0)),
             lost,
         })
     }
@@ -631,6 +674,15 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
         self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(())
+    }
+
+    /// A cloneable ingress handle sharing this server's submit counter —
+    /// hand one to each network reader thread (see [`Submitter`]).
+    pub fn submitter(&self) -> Submitter {
+        Submitter {
+            ingress: self.ingress.clone(),
+            submitted: Arc::clone(&self.submitted),
+        }
     }
 
     /// Receive one response (blocking with timeout).
@@ -672,7 +724,7 @@ impl Server {
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        let (full, timeout) = self
+        let batcher_stats = self
             .batcher_thread
             .take()
             .unwrap()
@@ -707,9 +759,10 @@ impl Server {
             cpu: per_route.cpu.count,
             wall,
             latency,
-            flushes_full: full,
-            flushes_timeout: timeout,
+            flushes_full: batcher_stats.flushes_full,
+            flushes_timeout: batcher_stats.flushes_timeout,
             batches,
+            batch_hist: batcher_stats.size_hist,
             per_route,
             qos,
         })

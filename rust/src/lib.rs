@@ -25,6 +25,10 @@
 //!   batcher, multiclass router, MCCA cascade, weight-switch cache,
 //!   dispatcher, threaded pipeline server, metrics.
 //! * [`npu`] — cycle-level NPU simulator + energy model (Fig. 8).
+//! * [`net`] — TCP serving front-end: length-prefixed binary frames,
+//!   per-connection reader threads over the existing submit path, a
+//!   response pump with exact dead-client accounting, and the seeded
+//!   closed/open-loop load generator behind `mcma bench-load`.
 //! * [`qos`] — online quality control: deterministic shadow sampling of
 //!   approximated requests against the precise function, per-class
 //!   windowed error estimation, and an adaptive per-class invocation
@@ -60,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod eval;
 pub mod formats;
+pub mod net;
 pub mod nn;
 pub mod npu;
 pub mod qos;

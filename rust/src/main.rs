@@ -62,6 +62,7 @@ fn run(args: Args) -> mcma::Result<()> {
         }
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("bench-load") => bench_load_cmd(&args),
         Some("train") => train_cmd(&args),
         Some("npu-sim") => npu_sim_cmd(&args),
         Some("report") => report_cmd(&args),
@@ -248,9 +249,13 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
     let n_requests = args.opt_usize("requests", 5_000)?;
     let cfg = run_config(args)?;
     let qos = qos_config(args)?;
+    // `--batch-max`/`--batch-wait-us` are the canonical micro-batching
+    // knobs; the older `--batch`/`--wait-us` spellings keep working.
     let policy = BatchPolicy {
-        max_batch: args.opt_usize("batch", 256)?,
-        max_wait_us: args.opt_usize("wait-us", 2_000)? as u64,
+        max_batch: args.opt_usize("batch-max", args.opt_usize("batch", 256)?)?,
+        max_wait_us: args
+            .opt_usize("batch-wait-us", args.opt_usize("wait-us", 2_000)?)?
+            as u64,
     };
 
     let man = Arc::new(mcma::formats::Manifest::load(&mcma::artifacts_dir())?);
@@ -284,6 +289,28 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         },
     )?;
 
+    // `--listen ADDR`: serve over TCP (length-prefixed binary frames)
+    // instead of generating in-process demo traffic.  `--duration 0`
+    // (the default) serves until the process is killed.
+    if let Some(listen) = args.opt("listen") {
+        let net = mcma::net::NetServer::spawn(server, listen, 0, bench.n_in)?;
+        let duration = args.opt_usize("duration", 0)? as u64;
+        println!("listening on {} (bench {bench_name})", net.local_addr());
+        if duration == 0 {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+        let net_report = net.shutdown()?;
+        println!("connections      : {} accepted ({} killed malformed)",
+                 net_report.accepted, net_report.malformed);
+        println!("delivery failed  : {} (responses owed to dead clients)",
+                 net_report.delivery_failed);
+        print_server_report(&net_report.server);
+        return Ok(());
+    }
+
     let mut rng = Rng::new(42);
     let mut x = vec![0.0f32; bench.n_in];
     for id in 0..n_requests as u64 {
@@ -297,6 +324,13 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         server.submit(id, x.clone())?;
     }
     let report = server.shutdown(Vec::new())?;
+    print_server_report(&report);
+    anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
+    Ok(())
+}
+
+/// Shared report printer for the in-process and `--listen` serve paths.
+fn print_server_report(report: &mcma::coordinator::ServerReport) {
     println!("served           : {}", report.served);
     println!("throughput       : {:.0} req/s", report.throughput_rps());
     println!("invocation       : {}", pct(report.invocation()));
@@ -304,6 +338,7 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
              report.batches, report.flushes_full, report.flushes_timeout);
     println!("latency p50/p95/p99 : {:.0} / {:.0} / {:.0} µs",
              report.latency.p50(), report.latency.p95(), report.latency.p99());
+    println!("batch sizes      : {}", fmt_hist(&report.batch_hist));
     // Per-route breakdown (per-class invocation + latency counters).
     let mut rt = Table::new(
         "Per-route counters",
@@ -337,7 +372,175 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         println!("qos violations     : {} (breaker trips {})",
                  q.total_violations(), q.total_trips());
     }
-    anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
+}
+
+/// `size:count` pairs for the non-empty batch-size histogram buckets.
+fn fmt_hist(hist: &[u64]) -> String {
+    let pairs: Vec<String> = hist
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| **c > 0)
+        .map(|(n, c)| format!("{n}x{c}"))
+        .collect();
+    if pairs.is_empty() { "-".into() } else { pairs.join(" ") }
+}
+
+/// `--mix` parser: positional weights (`3,1`) or `CLASS:W` pairs
+/// (`0:3,1:1`; classes not named get weight 0).
+fn parse_mix(s: &str) -> mcma::Result<Vec<f64>> {
+    let mut out: Vec<f64> = Vec::new();
+    for (i, part) in s.split(',').enumerate() {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once(':') {
+            Some((c, w)) => {
+                let c: usize = c.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("--mix class {c:?} is not an integer")
+                })?;
+                let w: f64 = w.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("--mix weight {w:?} is not a number")
+                })?;
+                if out.len() <= c {
+                    out.resize(c + 1, 0.0);
+                }
+                out[c] += w;
+            }
+            None => {
+                let w: f64 = part.parse().map_err(|_| {
+                    anyhow::anyhow!("--mix weight {part:?} is not a number")
+                })?;
+                if out.len() <= i {
+                    out.resize(i + 1, 0.0);
+                }
+                out[i] += w;
+            }
+        }
+    }
+    anyhow::ensure!(
+        !out.is_empty() && out.iter().sum::<f64>() > 0.0,
+        "--mix needs at least one positive weight"
+    );
+    Ok(out)
+}
+
+/// `mcma bench-load`: seeded closed/open-loop load generation against a
+/// live `mcma serve --listen` socket.  Emits the per-request CSV and the
+/// `BENCH_serve.json` perf report (same `Recorder` schema as
+/// BENCH_hotpath/BENCH_train — the cross-PR serving trajectory).
+fn bench_load_cmd(args: &Args) -> mcma::Result<()> {
+    let addr = args
+        .opt("addr")
+        .ok_or_else(|| anyhow::anyhow!("--addr HOST:PORT required"))?;
+    let bench_name = args
+        .opt("bench")
+        .ok_or_else(|| anyhow::anyhow!("--bench required (held-out row + label source)"))?;
+    let man = mcma::formats::Manifest::load(&mcma::artifacts_dir())?;
+    let bench = man.bench(bench_name)?.clone();
+    let held_out = Arc::new(mcma::formats::Dataset::load(&man.dataset_path(bench_name))?);
+
+    let arrival = match (args.opt("rate"), args.opt("closed-loop")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--rate and --closed-loop are mutually exclusive")
+        }
+        (Some(_), None) => mcma::net::Arrival::OpenLoop {
+            rate_hz: args.opt_f64("rate", 1_000.0)?,
+        },
+        (None, _) => mcma::net::Arrival::ClosedLoop {
+            inflight: args.opt_usize("closed-loop", 32)?,
+        },
+    };
+    let cfg = mcma::net::LoadConfig {
+        addr: addr.to_string(),
+        seed: args.opt_usize("seed", 7)? as u64,
+        duration: std::time::Duration::from_secs(args.opt_usize("duration", 10)? as u64),
+        max_requests: match args.opt_usize("requests", 0)? {
+            0 => None,
+            n => Some(n as u64),
+        },
+        arrival,
+        mix: parse_mix(&args.opt_or("mix", "1"))?,
+        tag: 0,
+        qos_target: args.opt_f64("qos-target", bench.error_bound)?,
+    };
+    let report = mcma::net::load::run_load(&cfg, &held_out)?;
+    anyhow::ensure!(report.received > 0, "no responses received from {addr}");
+
+    println!("sent / received  : {} / {}", report.sent, report.received);
+    println!("rows/sec         : {:.0}", report.rows_per_sec());
+    println!(
+        "latency p50/p99/p999 : {:.0} / {:.0} / {:.0} µs",
+        report.latency.p50(),
+        report.latency.p99(),
+        report.latency.p999()
+    );
+    println!("batch sizes      : {}", fmt_hist(&report.batch_hist));
+    let routes: Vec<String> = report
+        .per_route
+        .classes
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.count > 0)
+        .map(|(k, c)| format!("A{k}:{}", c.count))
+        .collect();
+    println!(
+        "routes           : {} cpu:{}",
+        if routes.is_empty() { "-".into() } else { routes.join(" ") },
+        report.per_route.cpu.count
+    );
+    println!(
+        "violations       : {} (target {:.4})",
+        report.violations, cfg.qos_target
+    );
+
+    let csv_path = match args.opt("csv") {
+        Some("none") => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => Some(mcma::bench_harness::bench_json_path("BENCH_serve.csv")),
+    };
+    if let Some(p) = csv_path {
+        report.write_csv(&p)?;
+        println!("wrote {} ({} rows)", p.display(), report.records.len());
+    }
+    let json_path = match args.opt("json") {
+        Some("none") => None,
+        Some(p) => Some(std::path::PathBuf::from(p)),
+        None => Some(mcma::bench_harness::bench_json_path("BENCH_serve.json")),
+    };
+    if let Some(p) = json_path {
+        let mut rec = mcma::bench_harness::Recorder::new();
+        let ns: Vec<f64> = report.latency.samples.iter().map(|us| us * 1e3).collect();
+        rec.timings.push(mcma::bench_harness::timing_from_samples(
+            &format!("bench-load serve latency x{}", report.received),
+            &ns,
+            Some(1),
+        ));
+        rec.extra("rows_per_sec", report.rows_per_sec());
+        rec.extra("sent", report.sent as f64);
+        rec.extra("received", report.received as f64);
+        rec.extra("p50_us", report.latency.p50());
+        rec.extra("p95_us", report.latency.p95());
+        rec.extra("p99_us", report.latency.p99());
+        rec.extra("p999_us", report.latency.p999());
+        rec.extra("mean_us", report.latency.mean());
+        rec.extra("violations", report.violations as f64);
+        rec.extra("qos_target", cfg.qos_target);
+        rec.extra("multi_row_responses", report.multi_row_responses() as f64);
+        rec.extra("route_cpu_count", report.per_route.cpu.count as f64);
+        for (k, c) in report.per_route.classes.iter().enumerate() {
+            rec.extra(&format!("route_a{k}_count"), c.count as f64);
+        }
+        for (n, c) in report.batch_hist.iter().enumerate() {
+            if *c > 0 {
+                rec.extra(&format!("batch_hist_{n}"), *c as f64);
+            }
+        }
+        for (c, n) in report.per_class_sent.iter().enumerate() {
+            rec.extra(&format!("mix_class_{c}_sent"), *n as f64);
+        }
+        rec.write_json("mcma-serve-load", &p)?;
+    }
     Ok(())
 }
 

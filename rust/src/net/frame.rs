@@ -1,0 +1,450 @@
+//! Length-prefixed binary wire format for the TCP serving front-end.
+//!
+//! Every frame is a little-endian `u32` payload length followed by the
+//! payload.  Payload layouts (all integers little-endian):
+//!
+//! ```text
+//! request   [ver u8][kind=1 u8][tag u16][id u64][row f32 × d_in]
+//! response  [ver u8][kind=2 u8][route u16][batch_n u16][id u64][y f32 × d_out]
+//! ```
+//!
+//! * `ver` is [`FRAME_VERSION`]; a mismatch is malformed.
+//! * `tag` is the tenant/bench tag (single-tenant servers use 0 and
+//!   reject anything else) — the multi-tenant hook without a v2 format.
+//! * `route` is the approximator class that served the row, or
+//!   [`ROUTE_CPU`] for the precise path.
+//! * `batch_n` is how many rows shared the dispatch batch — the
+//!   micro-batching observable `bench-load` histograms client-side.
+//! * `id` is opaque to the server and echoed verbatim: clients pick any
+//!   correlation scheme they like.
+//!
+//! Malformed or oversized frames are connection-fatal, never
+//! process-fatal: [`FrameError::Malformed`] tells the listener to drop
+//! that one connection and keep serving the rest.
+//!
+//! [`FrameReader`] is the incremental decoder both ends use: it
+//! preserves partial progress across `WouldBlock`/`TimedOut` reads (the
+//! listener runs sockets with a short read timeout so threads can check
+//! the stop flag), which is what keeps a byte-at-a-time peer from ever
+//! desyncing the stream.
+
+use std::io::{self, Read};
+
+/// Protocol version byte; bumped on any layout change.
+pub const FRAME_VERSION: u8 = 1;
+
+/// Payload kind bytes.
+pub const KIND_REQUEST: u8 = 1;
+pub const KIND_RESPONSE: u8 = 2;
+
+/// `route` wire value for the precise CPU path (approximator classes are
+/// their index, so `u16::MAX` can never collide).
+pub const ROUTE_CPU: u16 = u16::MAX;
+
+/// Hard cap on f32 elements per row — far above any real workload
+/// (paper benches are ≤ 6 inputs) but small enough that a hostile
+/// length prefix cannot make the server allocate unboundedly.
+pub const MAX_ROW_ELEMS: usize = 4096;
+
+/// Hard cap on a whole payload: the largest legal header plus a full
+/// row.  Anything bigger is malformed before a single payload byte is
+/// read.
+pub const MAX_FRAME_BYTES: usize = RESP_HEADER + 4 * MAX_ROW_ELEMS;
+
+const REQ_HEADER: usize = 1 + 1 + 2 + 8;
+const RESP_HEADER: usize = 1 + 1 + 2 + 2 + 8;
+
+/// Frame-layer failure.  `Io` is transport trouble (peer gone); both
+/// variants kill the one connection they occurred on.
+#[derive(Debug)]
+pub enum FrameError {
+    Io(io::Error),
+    Malformed(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+            FrameError::Malformed(m) => write!(f, "malformed frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<io::Error> for FrameError {
+    fn from(e: io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+fn malformed(msg: impl Into<String>) -> FrameError {
+    FrameError::Malformed(msg.into())
+}
+
+/// Decoded request header (row payload goes to the caller's buffer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestHead {
+    pub tag: u16,
+    pub id: u64,
+}
+
+/// Decoded response header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ResponseHead {
+    pub route: u16,
+    pub batch_n: u16,
+    pub id: u64,
+}
+
+/// Encode a request frame (length prefix included) into `buf`,
+/// clearing it first — callers keep one buffer per connection so the
+/// steady-state write path allocates nothing.
+pub fn encode_request(buf: &mut Vec<u8>, tag: u16, id: u64, row: &[f32]) {
+    assert!(row.len() <= MAX_ROW_ELEMS, "row exceeds MAX_ROW_ELEMS");
+    buf.clear();
+    let len = (REQ_HEADER + 4 * row.len()) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(FRAME_VERSION);
+    buf.push(KIND_REQUEST);
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    for v in row {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a response frame (length prefix included) into `buf`,
+/// clearing it first.
+pub fn encode_response(buf: &mut Vec<u8>, route: u16, batch_n: u16, id: u64, y: &[f32]) {
+    assert!(y.len() <= MAX_ROW_ELEMS, "row exceeds MAX_ROW_ELEMS");
+    buf.clear();
+    let len = (RESP_HEADER + 4 * y.len()) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(FRAME_VERSION);
+    buf.push(KIND_RESPONSE);
+    buf.extend_from_slice(&route.to_le_bytes());
+    buf.extend_from_slice(&batch_n.to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    for v in y {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn check_head(payload: &[u8], kind: u8, header: usize) -> Result<(), FrameError> {
+    if payload.len() < header {
+        return Err(malformed(format!(
+            "payload {} bytes, header needs {header}",
+            payload.len()
+        )));
+    }
+    if payload[0] != FRAME_VERSION {
+        return Err(malformed(format!(
+            "version {} (expected {FRAME_VERSION})",
+            payload[0]
+        )));
+    }
+    if payload[1] != kind {
+        return Err(malformed(format!("kind {} (expected {kind})", payload[1])));
+    }
+    if (payload.len() - header) % 4 != 0 {
+        return Err(malformed("row bytes not a multiple of 4"));
+    }
+    Ok(())
+}
+
+fn read_f32s(bytes: &[u8], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+}
+
+/// Decode a request payload (no length prefix); the row lands in
+/// `row_out` (cleared first, f32s copied out of the unaligned wire
+/// bytes).
+pub fn decode_request(payload: &[u8], row_out: &mut Vec<f32>) -> Result<RequestHead, FrameError> {
+    check_head(payload, KIND_REQUEST, REQ_HEADER)?;
+    let tag = u16::from_le_bytes([payload[2], payload[3]]);
+    let id = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    read_f32s(&payload[REQ_HEADER..], row_out);
+    Ok(RequestHead { tag, id })
+}
+
+/// Decode a response payload (no length prefix).
+pub fn decode_response(payload: &[u8], y_out: &mut Vec<f32>) -> Result<ResponseHead, FrameError> {
+    check_head(payload, KIND_RESPONSE, RESP_HEADER)?;
+    let route = u16::from_le_bytes([payload[2], payload[3]]);
+    let batch_n = u16::from_le_bytes([payload[4], payload[5]]);
+    let id = u64::from_le_bytes(payload[6..14].try_into().unwrap());
+    read_f32s(&payload[RESP_HEADER..], y_out);
+    Ok(ResponseHead { route, batch_n, id })
+}
+
+/// Route ↔ wire mapping.
+pub fn route_to_wire(route: crate::coordinator::Route) -> u16 {
+    match route {
+        crate::coordinator::Route::Approx(k) => k as u16,
+        crate::coordinator::Route::Cpu => ROUTE_CPU,
+    }
+}
+
+pub fn wire_to_route(w: u16) -> crate::coordinator::Route {
+    if w == ROUTE_CPU {
+        crate::coordinator::Route::Cpu
+    } else {
+        crate::coordinator::Route::Approx(w as usize)
+    }
+}
+
+/// One `FrameReader::poll` outcome.
+#[derive(Debug, PartialEq, Eq)]
+pub enum FramePoll {
+    /// A complete payload is available via [`FrameReader::payload`].
+    Frame,
+    /// The read timed out / would block; partial progress is retained —
+    /// call `poll` again (after checking your stop flag).
+    Pending,
+    /// Clean EOF on a frame boundary: the peer finished sending.
+    Closed,
+}
+
+/// Incremental frame decoder that survives short reads and read
+/// timeouts without losing its place in the stream.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    len_buf: [u8; 4],
+    len_got: usize,
+    payload: Vec<u8>,
+    payload_got: usize,
+    /// `Some(len)` once the prefix is fully read and validated.
+    want: Option<usize>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The completed payload after `poll` returned [`FramePoll::Frame`].
+    pub fn payload(&self) -> &[u8] {
+        &self.payload[..self.want.unwrap_or(0)]
+    }
+
+    /// Advance the decoder by reading from `r`.  EOF mid-frame is
+    /// malformed; EOF on a frame boundary is [`FramePoll::Closed`].
+    /// After [`FramePoll::Frame`], the next `poll` starts the next
+    /// frame.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<FramePoll, FrameError> {
+        // Returning a completed frame resets for the next one.
+        if let Some(len) = self.want {
+            if self.payload_got == len && len > 0 {
+                self.want = None;
+                self.len_got = 0;
+                self.payload_got = 0;
+            }
+        }
+        // Phase 1: the 4-byte length prefix.
+        while self.want.is_none() {
+            match r.read(&mut self.len_buf[self.len_got..]) {
+                Ok(0) => {
+                    if self.len_got == 0 {
+                        return Ok(FramePoll::Closed);
+                    }
+                    return Err(malformed("eof inside length prefix"));
+                }
+                Ok(n) => {
+                    self.len_got += n;
+                    if self.len_got == 4 {
+                        let len = u32::from_le_bytes(self.len_buf) as usize;
+                        if len < 2 || len > MAX_FRAME_BYTES {
+                            return Err(malformed(format!(
+                                "frame length {len} outside [2, {MAX_FRAME_BYTES}]"
+                            )));
+                        }
+                        if self.payload.len() < len {
+                            self.payload.resize(len, 0);
+                        }
+                        self.want = Some(len);
+                        self.payload_got = 0;
+                    }
+                }
+                Err(e) if retryable(&e) => return Ok(FramePoll::Pending),
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        // Phase 2: the payload.
+        let len = self.want.unwrap();
+        while self.payload_got < len {
+            match r.read(&mut self.payload[self.payload_got..len]) {
+                Ok(0) => return Err(malformed("eof inside payload")),
+                Ok(n) => self.payload_got += n,
+                Err(e) if retryable(&e) => return Ok(FramePoll::Pending),
+                Err(e) => return Err(FrameError::Io(e)),
+            }
+        }
+        Ok(FramePoll::Frame)
+    }
+}
+
+/// Read errors that mean "try again later", not "connection broken".
+/// Linux reports a `read` timeout as `WouldBlock`; other platforms use
+/// `TimedOut`; `Interrupted` is a stray signal.
+fn retryable(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Route;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_roundtrip() {
+        let mut buf = Vec::new();
+        let row = [1.0f32, -2.5, 3.25];
+        encode_request(&mut buf, 7, 42, &row);
+        // Length prefix covers exactly the payload.
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4);
+        let mut out = Vec::new();
+        let head = decode_request(&buf[4..], &mut out).unwrap();
+        assert_eq!(head, RequestHead { tag: 7, id: 42 });
+        assert_eq!(out, row);
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let mut buf = Vec::new();
+        let y = [0.125f32, 9.0];
+        encode_response(&mut buf, 3, 8, u64::MAX, &y);
+        let mut out = Vec::new();
+        let head = decode_response(&buf[4..], &mut out).unwrap();
+        assert_eq!(head, ResponseHead { route: 3, batch_n: 8, id: u64::MAX });
+        assert_eq!(out, y);
+    }
+
+    #[test]
+    fn route_wire_mapping_roundtrips() {
+        for r in [Route::Approx(0), Route::Approx(5), Route::Cpu] {
+            assert_eq!(wire_to_route(route_to_wire(r)), r);
+        }
+        assert_eq!(route_to_wire(Route::Cpu), ROUTE_CPU);
+    }
+
+    #[test]
+    fn rejects_bad_version_kind_and_shape() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 0, 1, &[1.0]);
+        let mut out = Vec::new();
+
+        let mut bad = buf[4..].to_vec();
+        bad[0] = 99;
+        assert!(matches!(
+            decode_request(&bad, &mut out),
+            Err(FrameError::Malformed(_))
+        ));
+
+        let mut bad = buf[4..].to_vec();
+        bad[1] = KIND_RESPONSE;
+        assert!(matches!(
+            decode_request(&bad, &mut out),
+            Err(FrameError::Malformed(_))
+        ));
+
+        // Truncated header and ragged row bytes are both malformed.
+        assert!(matches!(
+            decode_request(&buf[4..9], &mut out),
+            Err(FrameError::Malformed(_))
+        ));
+        let mut ragged = buf[4..].to_vec();
+        ragged.push(0);
+        assert!(matches!(
+            decode_request(&ragged, &mut out),
+            Err(FrameError::Malformed(_))
+        ));
+    }
+
+    /// A `Read` that yields one byte per call, interleaving WouldBlock —
+    /// the worst-case peer for an incremental decoder.
+    struct Trickle {
+        data: Vec<u8>,
+        pos: usize,
+        block_next: bool,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if self.block_next {
+                self.block_next = false;
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "later"));
+            }
+            self.block_next = true;
+            if self.pos == self.data.len() {
+                return Ok(0);
+            }
+            out[0] = self.data[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_byte_at_a_time_reads() {
+        let mut wire = Vec::new();
+        let mut frame = Vec::new();
+        encode_request(&mut frame, 0, 11, &[1.0, 2.0]);
+        wire.extend_from_slice(&frame);
+        encode_request(&mut frame, 0, 12, &[3.0]);
+        wire.extend_from_slice(&frame);
+
+        let mut r = Trickle { data: wire, pos: 0, block_next: false };
+        let mut fr = FrameReader::new();
+        let mut row = Vec::new();
+        let mut ids = Vec::new();
+        loop {
+            match fr.poll(&mut r).unwrap() {
+                FramePoll::Frame => {
+                    let head = decode_request(fr.payload(), &mut row).unwrap();
+                    ids.push((head.id, row.clone()));
+                }
+                FramePoll::Pending => continue,
+                FramePoll::Closed => break,
+            }
+        }
+        assert_eq!(ids, vec![(11, vec![1.0, 2.0]), (12, vec![3.0])]);
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_and_mid_frame_eof() {
+        // Hostile length prefix: rejected before any payload allocation
+        // beyond the cap.
+        let huge = (MAX_FRAME_BYTES as u32 + 1).to_le_bytes();
+        let mut fr = FrameReader::new();
+        assert!(matches!(
+            fr.poll(&mut Cursor::new(huge.to_vec())),
+            Err(FrameError::Malformed(_))
+        ));
+
+        // EOF halfway through a declared payload is malformed, not Closed.
+        let mut frame = Vec::new();
+        encode_request(&mut frame, 0, 5, &[1.0, 2.0, 3.0]);
+        frame.truncate(frame.len() - 3);
+        let mut fr = FrameReader::new();
+        let mut cur = Cursor::new(frame);
+        let err = loop {
+            match fr.poll(&mut cur) {
+                Ok(FramePoll::Frame) => panic!("truncated frame decoded"),
+                Ok(_) => continue,
+                Err(e) => break e,
+            }
+        };
+        assert!(matches!(err, FrameError::Malformed(_)));
+    }
+}

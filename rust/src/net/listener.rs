@@ -1,0 +1,421 @@
+//! TCP front-end over the in-process serving pipeline.
+//!
+//! ```text
+//! client ──frames──► reader thread (per conn) ──Submitter──► Server ingress
+//! client ◄─frames── response pump (owns Server) ◄─egress────┘
+//! ```
+//!
+//! * The **accept loop** hands each connection a dedicated reader
+//!   thread; readers decode request frames and feed the existing
+//!   submit path through a [`Submitter`] — the batcher, workers and
+//!   QoS controller are completely unchanged.
+//! * The **response pump** is the single owner of the [`Server`]
+//!   (its egress receiver is `!Sync`): it demultiplexes responses back
+//!   to their connections, reusing one write buffer per connection so
+//!   the steady-state write path allocates nothing.
+//! * **Id mapping**: the client's `id` is opaque and echoed verbatim;
+//!   internally each request travels as `(conn_id << 32) | slot`, where
+//!   `slot` indexes a per-connection slab that remembers the client id.
+//!   Slots are recycled, so the slab stops growing at the connection's
+//!   high-water in-flight mark.
+//!
+//! ## Dead connections never stall the drain
+//!
+//! When a client disconnects with requests still in flight, its
+//! responses continue to arrive at the pump, which counts them as
+//! `delivery_failed`, skips the dead socket, and still adds them to the
+//! collected set — so `Server::shutdown`'s exact
+//! `submitted − collected − lost` accounting sees every frame owed to
+//! the dead connection and finishes without ever touching its 2 s
+//! last-resort timeout.  A malformed or oversized frame likewise kills
+//! only its own connection ([`FrameError::Malformed`]), never the
+//! server.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Response, Server, ServerReport, Submitter};
+
+use super::frame::{
+    decode_request, encode_response, route_to_wire, FrameError, FramePoll, FrameReader,
+};
+
+/// Socket read timeout: how often reader threads wake to check the stop
+/// flag.  Partial frame progress is preserved across wakeups by
+/// [`FrameReader`].
+const READ_TICK: Duration = Duration::from_millis(25);
+
+/// Pump-side egress poll granularity (stop-flag check cadence).
+const PUMP_TICK: Duration = Duration::from_millis(25);
+
+/// A stuck client gets this long to accept a response write before the
+/// connection is declared dead (keeps one unread socket from stalling
+/// the pump).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(1);
+
+/// How long the pump keeps waiting for in-flight responses after stop,
+/// as long as progress continues.
+const QUIESCE_GRACE: Duration = Duration::from_millis(300);
+
+/// Per-connection state shared by its reader thread and the pump.
+struct Conn {
+    writer: TcpStream,
+    /// Slot-indexed client ids for requests in flight.
+    pending: Vec<u64>,
+    free: Vec<u32>,
+    in_flight: u64,
+    dead: bool,
+    /// Reused response encode buffer (zero-alloc steady-state writes).
+    write_buf: Vec<u8>,
+}
+
+impl Conn {
+    fn new(writer: TcpStream) -> Self {
+        Conn {
+            writer,
+            pending: Vec::new(),
+            free: Vec::new(),
+            in_flight: 0,
+            dead: false,
+            write_buf: Vec::new(),
+        }
+    }
+
+    fn alloc_slot(&mut self, client_id: u64) -> u32 {
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.pending.push(0);
+                (self.pending.len() - 1) as u32
+            }
+        };
+        self.pending[slot as usize] = client_id;
+        self.in_flight += 1;
+        slot
+    }
+
+    fn release_slot(&mut self, slot: u32) -> u64 {
+        let client_id = self.pending[slot as usize];
+        self.free.push(slot);
+        self.in_flight -= 1;
+        client_id
+    }
+}
+
+type Registry = Arc<Mutex<HashMap<u32, Conn>>>;
+
+/// Final accounting after [`NetServer::shutdown`].
+#[derive(Debug)]
+pub struct NetReport {
+    /// Connections accepted over the server's lifetime.
+    pub accepted: u64,
+    /// Connections killed for protocol violations (bad frame, wrong
+    /// tag, wrong row width).
+    pub malformed: u64,
+    /// Responses whose connection was already dead at delivery time —
+    /// counted, collected, and therefore never stalling the drain.
+    pub delivery_failed: u64,
+    /// The inner pipeline's report (latency, routes, batches, QoS).
+    pub server: ServerReport,
+}
+
+/// Running TCP front-end; `shutdown` tears the whole stack down and
+/// returns the end-to-end report.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    pump_stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+    reader_threads: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    pump_thread: Option<thread::JoinHandle<crate::Result<(ServerReport, u64)>>>,
+    accepted: Arc<AtomicU64>,
+    malformed: Arc<AtomicU64>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral test port) and
+    /// start serving the pipeline over it.  `tag` is the tenant tag
+    /// requests must carry (single-tenant: 0); `d_in` the row width
+    /// requests must have — both checked before anything reaches the
+    /// batcher, so a hostile frame can never panic the pipeline.
+    pub fn spawn(server: Server, addr: &str, tag: u16, d_in: usize) -> crate::Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let pump_stop = Arc::new(AtomicBool::new(false));
+        let accepted = Arc::new(AtomicU64::new(0));
+        let malformed = Arc::new(AtomicU64::new(0));
+        let registry: Registry = Arc::new(Mutex::new(HashMap::new()));
+        let reader_threads: Arc<Mutex<Vec<thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let submitter = server.submitter();
+
+        // Response pump: sole owner of the Server.  Delivers responses
+        // to their sockets as they arrive and keeps every one (delivered
+        // or not) in `collected`, which makes the final shutdown drain
+        // exact even when clients died mid-batch.
+        let pump_thread = {
+            let registry = Arc::clone(&registry);
+            let pump_stop = Arc::clone(&pump_stop);
+            let submitter = submitter.clone();
+            thread::Builder::new().name("mcma-net-pump".into()).spawn(
+                move || -> crate::Result<(ServerReport, u64)> {
+                    let mut collected: Vec<Response> = Vec::new();
+                    let mut delivery_failed = 0u64;
+                    loop {
+                        match server.recv_timeout(PUMP_TICK) {
+                            Some(resp) => {
+                                deliver(&registry, &resp, &mut delivery_failed);
+                                collected.push(resp);
+                            }
+                            None => {
+                                if !pump_stop.load(Ordering::Acquire) {
+                                    continue;
+                                }
+                                // Stop requested and the readers are
+                                // already joined (no new submits): keep
+                                // draining while progress holds, then
+                                // hand the exact set to shutdown.
+                                let mut deadline = Instant::now() + QUIESCE_GRACE;
+                                while submitter.submitted() > collected.len() as u64 {
+                                    match server.recv_timeout(PUMP_TICK) {
+                                        Some(resp) => {
+                                            deliver(&registry, &resp, &mut delivery_failed);
+                                            collected.push(resp);
+                                            deadline = Instant::now() + QUIESCE_GRACE;
+                                        }
+                                        None => {
+                                            if Instant::now() >= deadline {
+                                                break;
+                                            }
+                                        }
+                                    }
+                                }
+                                let report = server.shutdown(collected)?;
+                                return Ok((report, delivery_failed));
+                            }
+                        }
+                    }
+                },
+            )?
+        };
+
+        // Accept loop: nonblocking accept + stop-flag poll.  Each
+        // connection gets a reader thread; accepted sockets are switched
+        // back to blocking mode explicitly (they do not reliably inherit
+        // the listener's flags) with a short read timeout for stop
+        // checks.
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let registry = Arc::clone(&registry);
+            let reader_threads = Arc::clone(&reader_threads);
+            let accepted = Arc::clone(&accepted);
+            let malformed = Arc::clone(&malformed);
+            thread::Builder::new().name("mcma-net-accept".into()).spawn(move || {
+                let mut next_conn_id: u32 = 1;
+                while !stop.load(Ordering::Acquire) {
+                    let stream = match listener.accept() {
+                        Ok((s, _)) => s,
+                        Err(_) => {
+                            thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    if stream.set_nonblocking(false).is_err()
+                        || stream.set_read_timeout(Some(READ_TICK)).is_err()
+                        || stream.set_write_timeout(Some(WRITE_TIMEOUT)).is_err()
+                    {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let writer = match stream.try_clone() {
+                        Ok(w) => w,
+                        Err(_) => continue,
+                    };
+                    let conn_id = next_conn_id;
+                    next_conn_id = next_conn_id.wrapping_add(1);
+                    accepted.fetch_add(1, Ordering::Relaxed);
+                    registry.lock().unwrap().insert(conn_id, Conn::new(writer));
+                    let spawned = thread::Builder::new()
+                        .name(format!("mcma-net-conn-{conn_id}"))
+                        .spawn({
+                            let stop = Arc::clone(&stop);
+                            let registry = Arc::clone(&registry);
+                            let malformed = Arc::clone(&malformed);
+                            let submitter = submitter.clone();
+                            move || {
+                                read_connection(
+                                    conn_id, stream, &registry, &submitter, &stop,
+                                    &malformed, tag, d_in,
+                                )
+                            }
+                        });
+                    match spawned {
+                        Ok(h) => reader_threads.lock().unwrap().push(h),
+                        Err(_) => {
+                            registry.lock().unwrap().remove(&conn_id);
+                        }
+                    }
+                }
+            })?
+        };
+
+        Ok(NetServer {
+            local_addr,
+            stop,
+            pump_stop,
+            accept_thread: Some(accept_thread),
+            reader_threads,
+            pump_thread: Some(pump_thread),
+            accepted,
+            malformed,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, join readers, drain in-flight responses, shut the
+    /// pipeline down, and report.
+    pub fn shutdown(mut self) -> crate::Result<NetReport> {
+        // Order matters: readers first (no new submits), then the pump
+        // (drain + exact Server::shutdown accounting).
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let readers: Vec<_> = self.reader_threads.lock().unwrap().drain(..).collect();
+        for t in readers {
+            let _ = t.join();
+        }
+        self.pump_stop.store(true, Ordering::Release);
+        let (server, delivery_failed) = self
+            .pump_thread
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("net pump thread panicked"))??;
+        Ok(NetReport {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            malformed: self.malformed.load(Ordering::Relaxed),
+            delivery_failed,
+            server,
+        })
+    }
+}
+
+/// Deliver one response to its connection; dead or vanished connections
+/// are counted, never waited on.
+fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64) {
+    let conn_id = (resp.id >> 32) as u32;
+    let slot = resp.id as u32;
+    let mut reg = registry.lock().unwrap();
+    let Some(conn) = reg.get_mut(&conn_id) else {
+        *delivery_failed += 1;
+        return;
+    };
+    let client_id = conn.release_slot(slot);
+    if conn.dead {
+        *delivery_failed += 1;
+    } else {
+        let batch_n = resp.batch_n.min(u16::MAX as u32) as u16;
+        encode_response(
+            &mut conn.write_buf,
+            route_to_wire(resp.route),
+            batch_n,
+            client_id,
+            &resp.y,
+        );
+        if conn.writer.write_all(&conn.write_buf).is_err() {
+            conn.dead = true;
+            *delivery_failed += 1;
+            let _ = conn.writer.shutdown(Shutdown::Both);
+        }
+    }
+    if conn.dead && conn.in_flight == 0 {
+        reg.remove(&conn_id);
+    }
+}
+
+/// Reader-thread body: decode frames, validate, submit.  Any protocol
+/// violation (bad frame, wrong tag, wrong row width) or transport error
+/// kills this connection only.
+#[allow(clippy::too_many_arguments)]
+fn read_connection(
+    conn_id: u32,
+    mut stream: TcpStream,
+    registry: &Registry,
+    submitter: &Submitter,
+    stop: &AtomicBool,
+    malformed: &AtomicU64,
+    tag: u16,
+    d_in: usize,
+) {
+    let mut fr = FrameReader::new();
+    let mut protocol_violation = false;
+    loop {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match fr.poll(&mut stream) {
+            Ok(FramePoll::Pending) => continue,
+            Ok(FramePoll::Closed) => break,
+            Ok(FramePoll::Frame) => {
+                let mut row = Vec::new();
+                let head = match decode_request(fr.payload(), &mut row) {
+                    Ok(h) => h,
+                    Err(_) => {
+                        protocol_violation = true;
+                        break;
+                    }
+                };
+                if head.tag != tag || row.len() != d_in {
+                    protocol_violation = true;
+                    break;
+                }
+                let global_id = {
+                    let mut reg = registry.lock().unwrap();
+                    let Some(conn) = reg.get_mut(&conn_id) else { break };
+                    let slot = conn.alloc_slot(head.id);
+                    ((conn_id as u64) << 32) | slot as u64
+                };
+                if submitter.submit(global_id, row).is_err() {
+                    // Pipeline ingress closed under us: roll the slot
+                    // back (no response will ever arrive for it) and
+                    // stop reading.
+                    let mut reg = registry.lock().unwrap();
+                    if let Some(conn) = reg.get_mut(&conn_id) {
+                        conn.release_slot(global_id as u32);
+                    }
+                    break;
+                }
+            }
+            Err(FrameError::Malformed(_)) => {
+                protocol_violation = true;
+                break;
+            }
+            Err(FrameError::Io(_)) => break,
+        }
+    }
+    if protocol_violation {
+        malformed.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+    let mut reg = registry.lock().unwrap();
+    if let Some(conn) = reg.get_mut(&conn_id) {
+        conn.dead = true;
+        if conn.in_flight == 0 {
+            reg.remove(&conn_id);
+        }
+    }
+}

@@ -1,0 +1,458 @@
+//! Seeded closed/open-loop load generator (`mcma bench-load`).
+//!
+//! Modeled on edgeless_benchmark's seeded workload populations: every
+//! stochastic choice — which mix class a request belongs to, which
+//! held-out row it carries, the Poisson interarrival gaps — comes from
+//! dedicated `util::rng` splitmix64 streams of the one `--seed`, so two
+//! runs with the same seed generate **identical request sequences**
+//! regardless of how the server happens to interleave responses.
+//!
+//! * **Mix classes** partition the served workload's held-out set into
+//!   `mix.len()` equal contiguous shards; a request first draws its
+//!   class (weighted), then a row uniformly inside that shard.  With a
+//!   single weight the whole set is one class.
+//! * **Closed loop** keeps exactly `inflight` requests outstanding
+//!   (credit tokens recycled by the receiver) — the arrival model that
+//!   lets the server's micro-batcher show coalescing.
+//! * **Open loop** fires at `rate_hz` with exponential interarrivals,
+//!   never waiting for responses — the overload-probing model.
+//!
+//! The report carries client-observed p50/p99/p999, per-route counts,
+//! the batch-size histogram (from the `batch_n` response field), and
+//! QoS violations scored client-side: each response is compared against
+//! the held-out row's recorded label with the same `row_rmse` the QoS
+//! controller uses.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{LatencyStats, PerRouteReport};
+use crate::formats::Dataset;
+use crate::util::rng::{splitmix64, Rng};
+
+use super::frame::{
+    decode_response, encode_request, wire_to_route, FramePoll, FrameReader,
+};
+
+/// Arrival model.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate_hz`, regardless of outstanding count.
+    OpenLoop { rate_hz: f64 },
+    /// Exactly `inflight` requests outstanding at all times.
+    ClosedLoop { inflight: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct LoadConfig {
+    /// Server address, e.g. `127.0.0.1:7090`.
+    pub addr: String,
+    pub seed: u64,
+    /// Stop issuing new requests after this long.
+    pub duration: Duration,
+    /// Also stop after this many requests (`None` = duration only).
+    /// Same-seed runs with the same cap are bit-identical end to end.
+    pub max_requests: Option<u64>,
+    pub arrival: Arrival,
+    /// Mix-class weights; the held-out set is split into `mix.len()`
+    /// equal contiguous shards.  Empty means one uniform class.
+    pub mix: Vec<f64>,
+    /// Tenant tag to stamp on every request.
+    pub tag: u16,
+    /// Client-side QoS error bound: a response whose RMSE against the
+    /// held-out label exceeds this counts as a violation.
+    pub qos_target: f64,
+}
+
+/// One request's full client-side record (CSV row).
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub class: usize,
+    pub row: usize,
+    /// Filled in by the receiver; `None` = never answered.
+    pub latency_us: Option<f64>,
+    pub route: Option<u16>,
+    pub batch_n: u16,
+    pub err: f64,
+    pub violation: bool,
+}
+
+/// Aggregate load-run outcome.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub received: u64,
+    pub violations: u64,
+    pub wall: Duration,
+    pub latency: LatencyStats,
+    pub per_route: PerRouteReport,
+    /// Client-observed dispatch batch sizes (`batch_hist[n]` = responses
+    /// whose batch had exactly `n` rows).
+    pub batch_hist: Vec<u64>,
+    pub per_class_sent: Vec<u64>,
+    /// Per-request records in send order (CSV source).
+    pub records: Vec<RequestRecord>,
+}
+
+impl LoadReport {
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.wall.as_secs_f64() == 0.0 {
+            0.0
+        } else {
+            self.received as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// Responses served in batches of more than one row.
+    pub fn multi_row_responses(&self) -> u64 {
+        self.batch_hist.iter().skip(2).sum()
+    }
+
+    /// Write the per-request CSV (send order; one line per request).
+    pub fn write_csv(&self, path: &Path) -> crate::Result<()> {
+        let mut out = String::new();
+        out.push_str("req,class,row,route,batch_n,latency_us,err,violation\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let route = match r.route {
+                Some(w) => format!("{w}"),
+                None => "-".into(),
+            };
+            let latency = match r.latency_us {
+                Some(us) => format!("{us:.1}"),
+                None => "-".into(),
+            };
+            out.push_str(&format!(
+                "{i},{},{},{route},{},{latency},{:.6},{}\n",
+                r.class, r.row, r.batch_n, r.err, u8::from(r.violation)
+            ));
+        }
+        std::fs::write(path, out)
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+/// Shared sender/receiver state: per-request metadata appended in send
+/// order, results filled in on response arrival.
+struct Flight {
+    sent_at: Vec<Instant>,
+    records: Vec<RequestRecord>,
+    received: u64,
+    violations: u64,
+    latency: LatencyStats,
+    per_route: PerRouteReport,
+    batch_hist: Vec<u64>,
+}
+
+/// Draw the request sequence deterministically: class (weighted by
+/// `mix`), then row uniform within the class's contiguous shard.
+/// Consuming this sequentially is what makes same-seed runs identical.
+fn draw_request(rng: &mut Rng, mix: &[f64], mix_total: f64, n_rows: usize) -> (usize, usize) {
+    let classes = mix.len();
+    let mut class = classes - 1;
+    let mut acc = 0.0;
+    let u = rng.f64() * mix_total;
+    for (c, w) in mix.iter().enumerate() {
+        acc += w;
+        if u < acc {
+            class = c;
+            break;
+        }
+    }
+    let lo = class * n_rows / classes;
+    let hi = ((class + 1) * n_rows / classes).max(lo + 1);
+    let row = lo + rng.below((hi - lo) as u64) as usize;
+    (class, row)
+}
+
+/// Run the load against a live server.  `held_out` is the served
+/// workload's held-out dataset — the row source and the violation
+/// oracle.
+pub fn run_load(cfg: &LoadConfig, held_out: &Arc<Dataset>) -> crate::Result<LoadReport> {
+    anyhow::ensure!(held_out.n > 0, "held-out dataset is empty");
+    let mix: Vec<f64> = if cfg.mix.is_empty() { vec![1.0] } else { cfg.mix.clone() };
+    anyhow::ensure!(
+        mix.iter().all(|w| *w >= 0.0) && mix.iter().sum::<f64>() > 0.0,
+        "mix weights must be non-negative with a positive sum"
+    );
+    anyhow::ensure!(
+        mix.len() <= held_out.n,
+        "more mix classes ({}) than held-out rows ({})",
+        mix.len(),
+        held_out.n
+    );
+    let mix_total: f64 = mix.iter().sum();
+
+    let stream = TcpStream::connect(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("connecting {}: {e}", cfg.addr))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_millis(25)))?;
+    let mut write_half = stream.try_clone()?;
+
+    let flight = Arc::new(Mutex::new(Flight {
+        sent_at: Vec::new(),
+        records: Vec::new(),
+        received: 0,
+        violations: 0,
+        latency: LatencyStats::default(),
+        per_route: PerRouteReport::default(),
+        batch_hist: Vec::new(),
+    }));
+    let done_sending = Arc::new(AtomicBool::new(false));
+    // Closed-loop credit tokens: the receiver returns one per response.
+    let (credit_tx, credit_rx) = mpsc::channel::<()>();
+
+    // Receiver thread: decode responses, score against held-out labels,
+    // record latency/route/batch size.
+    let receiver = {
+        let flight = Arc::clone(&flight);
+        let done_sending = Arc::clone(&done_sending);
+        let held_out = Arc::clone(held_out);
+        let credit_tx = credit_tx.clone();
+        let qos_target = cfg.qos_target;
+        let mut read_half = stream;
+        thread::Builder::new().name("mcma-load-recv".into()).spawn(move || {
+            let mut fr = FrameReader::new();
+            let mut y = Vec::new();
+            let mut idle_since = Instant::now();
+            loop {
+                match fr.poll(&mut read_half) {
+                    Ok(FramePoll::Frame) => {
+                        idle_since = Instant::now();
+                        let head = match decode_response(fr.payload(), &mut y) {
+                            Ok(h) => h,
+                            Err(_) => return,
+                        };
+                        let now = Instant::now();
+                        let mut f = flight.lock().unwrap();
+                        let i = head.id as usize;
+                        if i >= f.records.len() {
+                            return; // protocol violation: unknown id
+                        }
+                        let us =
+                            now.duration_since(f.sent_at[i]).as_secs_f64() * 1e6;
+                        let err =
+                            crate::qos::row_rmse(&y, held_out.y_row(f.records[i].row));
+                        let violation = err > qos_target;
+                        {
+                            let rec = &mut f.records[i];
+                            rec.latency_us = Some(us);
+                            rec.route = Some(head.route);
+                            rec.batch_n = head.batch_n;
+                            rec.err = err;
+                            rec.violation = violation;
+                        }
+                        f.received += 1;
+                        f.violations += u64::from(violation);
+                        f.latency.push(us);
+                        f.per_route.push(wire_to_route(head.route), us);
+                        let b = head.batch_n as usize;
+                        if f.batch_hist.len() <= b {
+                            f.batch_hist.resize(b + 1, 0);
+                        }
+                        f.batch_hist[b] += 1;
+                        let outstanding_done = done_sending.load(Ordering::Acquire)
+                            && f.received == f.records.len() as u64;
+                        drop(f);
+                        let _ = credit_tx.send(());
+                        if outstanding_done {
+                            return;
+                        }
+                    }
+                    Ok(FramePoll::Pending) => {
+                        // Once the sender finished: leave immediately if
+                        // every request is answered, else give the tail
+                        // 2 s of quiet before declaring the rest lost.
+                        if done_sending.load(Ordering::Acquire) {
+                            let complete = {
+                                let f = flight.lock().unwrap();
+                                f.received == f.records.len() as u64
+                            };
+                            if complete || idle_since.elapsed() > Duration::from_secs(2) {
+                                return;
+                            }
+                        }
+                    }
+                    Ok(FramePoll::Closed) | Err(_) => return,
+                }
+            }
+        })?
+    };
+
+    // Sender (this thread): one splitmix64 stream for the request
+    // sequence, an independent one for arrival timing — timing noise
+    // can never perturb WHICH requests are generated.
+    let mut seq_rng = Rng::new(splitmix64(cfg.seed ^ 0x5eed_5eed_0000_0001));
+    let mut gap_rng = Rng::new(splitmix64(cfg.seed ^ 0x5eed_5eed_0000_0002));
+    let started = Instant::now();
+    let stop_at = started + cfg.duration;
+    let mut sent = 0u64;
+    let mut per_class_sent = vec![0u64; mix.len()];
+    let mut buf = Vec::new();
+
+    if let Arrival::ClosedLoop { inflight } = cfg.arrival {
+        for _ in 0..inflight.max(1) {
+            let _ = credit_tx.send(());
+        }
+    }
+    let mut next_fire = started;
+
+    loop {
+        if Instant::now() >= stop_at {
+            break;
+        }
+        if let Some(cap) = cfg.max_requests {
+            if sent >= cap {
+                break;
+            }
+        }
+        match cfg.arrival {
+            Arrival::ClosedLoop { .. } => {
+                // Wait for a credit, re-checking the deadline.
+                match credit_rx.recv_timeout(Duration::from_millis(25)) {
+                    Ok(()) => {}
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            Arrival::OpenLoop { rate_hz } => {
+                let gap = -(1.0 - gap_rng.f64()).ln() / rate_hz.max(1e-9);
+                next_fire += Duration::from_secs_f64(gap);
+                let now = Instant::now();
+                if next_fire > now {
+                    thread::sleep(next_fire - now);
+                }
+            }
+        }
+        let (class, row) = draw_request(&mut seq_rng, &mix, mix_total, held_out.n);
+        encode_request(&mut buf, cfg.tag, sent, held_out.x_row(row));
+        {
+            let mut f = flight.lock().unwrap();
+            f.sent_at.push(Instant::now());
+            f.records.push(RequestRecord {
+                class,
+                row,
+                latency_us: None,
+                route: None,
+                batch_n: 0,
+                err: 0.0,
+                violation: false,
+            });
+        }
+        if write_half.write_all(&buf).is_err() {
+            // Roll the record back: it never reached the wire.
+            let mut f = flight.lock().unwrap();
+            f.sent_at.pop();
+            f.records.pop();
+            break;
+        }
+        per_class_sent[class] += 1;
+        sent += 1;
+    }
+
+    done_sending.store(true, Ordering::Release);
+    drop(credit_tx);
+    receiver
+        .join()
+        .map_err(|_| anyhow::anyhow!("load receiver thread panicked"))?;
+    // Half-close our side so the server sees a clean EOF.
+    let _ = write_half.shutdown(std::net::Shutdown::Write);
+    let wall = started.elapsed();
+
+    let f = Arc::try_unwrap(flight)
+        .map_err(|_| anyhow::anyhow!("flight state still shared"))?
+        .into_inner()
+        .unwrap();
+    Ok(LoadReport {
+        sent,
+        received: f.received,
+        violations: f.violations,
+        wall,
+        latency: f.latency,
+        per_route: f.per_route,
+        batch_hist: f.batch_hist,
+        per_class_sent,
+        records: f.records,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same seed ⇒ identical (class, row) sequence; different seed ⇒
+    /// (overwhelmingly) different.  This is the pure core the e2e
+    /// same-seed CSV test rests on.
+    #[test]
+    fn request_sequence_is_seed_deterministic() {
+        let mix = vec![3.0, 1.0];
+        let total = 4.0;
+        let draw_n = |seed: u64| -> Vec<(usize, usize)> {
+            let mut rng = Rng::new(splitmix64(seed ^ 0x5eed_5eed_0000_0001));
+            (0..200).map(|_| draw_request(&mut rng, &mix, total, 1000)).collect()
+        };
+        let a = draw_n(7);
+        let b = draw_n(7);
+        let c = draw_n(8);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // Shard discipline: class 0 rows in [0, 500), class 1 in [500, 1000).
+        for (class, row) in &a {
+            match class {
+                0 => assert!(*row < 500),
+                1 => assert!((500..1000).contains(row)),
+                _ => panic!("impossible class"),
+            }
+        }
+        // The 3:1 weighting shows up in the draw counts.
+        let c0 = a.iter().filter(|(c, _)| *c == 0).count();
+        assert!(c0 > 100, "class 0 should dominate a 3:1 mix, got {c0}/200");
+    }
+
+    #[test]
+    fn csv_has_header_and_one_line_per_request() {
+        let report = LoadReport {
+            sent: 2,
+            received: 1,
+            violations: 0,
+            wall: Duration::from_secs(1),
+            latency: LatencyStats::default(),
+            per_route: PerRouteReport::default(),
+            batch_hist: vec![0, 1],
+            per_class_sent: vec![2],
+            records: vec![
+                RequestRecord {
+                    class: 0,
+                    row: 5,
+                    latency_us: Some(42.0),
+                    route: Some(0),
+                    batch_n: 1,
+                    err: 0.001,
+                    violation: false,
+                },
+                RequestRecord {
+                    class: 0,
+                    row: 9,
+                    latency_us: None,
+                    route: None,
+                    batch_n: 0,
+                    err: 0.0,
+                    violation: false,
+                },
+            ],
+        };
+        let path = std::env::temp_dir().join(format!("mcma-load-{}.csv", std::process::id()));
+        report.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("req,class,row,route"));
+        assert!(lines[1].starts_with("0,0,5,0,1,42.0"));
+        assert!(lines[2].contains(",-,"), "unanswered request marked with -");
+    }
+}

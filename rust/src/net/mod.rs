@@ -1,0 +1,23 @@
+//! Network serving front-end + seeded load harness.
+//!
+//! Three pieces, layered over the in-process pipeline without changing
+//! it:
+//!
+//! * [`frame`] — the little-endian length-prefixed wire format (version
+//!   byte, hard size caps, connection-fatal-only malformed errors).
+//! * [`listener`] — [`NetServer`]: accept loop, per-connection reader
+//!   threads feeding the existing submit path, and the response pump
+//!   that owns the [`crate::coordinator::Server`] and keeps its
+//!   shutdown accounting exact even when clients die mid-batch.
+//! * [`load`] — `mcma bench-load`: seeded open-loop (Poisson) /
+//!   closed-loop request generation over the served workload's held-out
+//!   rows, with client-observed latency percentiles, per-route counts,
+//!   batch-size histogram and QoS violation scoring.
+
+pub mod frame;
+pub mod listener;
+pub mod load;
+
+pub use frame::{FrameError, FramePoll, FrameReader, FRAME_VERSION, ROUTE_CPU};
+pub use listener::{NetReport, NetServer};
+pub use load::{Arrival, LoadConfig, LoadReport};

@@ -1,0 +1,364 @@
+//! End-to-end tests for the TCP serving front-end: socket responses
+//! bitwise-identical to in-process dispatch, seed-deterministic load
+//! sequences, malformed frames killing exactly one connection, the
+//! dead-client drain regression (a client that sends and vanishes must
+//! not stall `shutdown`), micro-batch coalescing under closed-loop load
+//! next to sub-wait idle latency, and the QoS controller running
+//! unchanged over socket traffic.
+//!
+//! One tiny real tree is trained once per process (`trained_dir`) and
+//! shared by every test; each test runs its own `Server` + `NetServer`
+//! on an ephemeral loopback port.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, OnceLock};
+use std::time::{Duration, Instant};
+
+use mcma::config::{BatchPolicy, ExecMode, Method};
+use mcma::coordinator::{Route, Server, ServerConfig};
+use mcma::formats::{BenchManifest, Dataset, Manifest};
+use mcma::net::frame::{decode_response, encode_request, FramePoll, FrameReader};
+use mcma::net::load::run_load;
+use mcma::net::{Arrival, LoadConfig, NetServer};
+use mcma::qos::QosConfig;
+use mcma::train::{train_bench, TrainOptions};
+
+const BENCH: &str = "blackscholes";
+
+/// Train the shared tiny tree exactly once per test process.
+fn trained_dir() -> &'static Path {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir().join(format!("mcma_net_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        train_bench(&TrainOptions {
+            bench: BENCH.into(),
+            k: 2,
+            samples: 400,
+            rounds: 2,
+            epochs: 3,
+            seed: 11,
+            out_dir: dir.clone(),
+            threads: 2,
+            perf_json: None,
+            ..TrainOptions::default()
+        })
+        .unwrap();
+        dir
+    })
+}
+
+fn artifacts() -> (Arc<Manifest>, Arc<BenchManifest>, Arc<Dataset>) {
+    let man = Arc::new(Manifest::load(trained_dir()).unwrap());
+    let bench = Arc::new(man.bench(BENCH).unwrap().clone());
+    let ds = Arc::new(Dataset::load(&man.dataset_path(BENCH)).unwrap());
+    (man, bench, ds)
+}
+
+fn spawn_server(policy: BatchPolicy, qos: Option<QosConfig>) -> Server {
+    let (man, bench, _) = artifacts();
+    Server::spawn(
+        man,
+        Arc::clone(&bench),
+        ServerConfig {
+            policy,
+            method: Method::McmaCompetitive,
+            exec: ExecMode::Native,
+            workers: 2,
+            qos,
+            table_fallback: Default::default(),
+        },
+    )
+    .unwrap()
+}
+
+fn spawn_net(policy: BatchPolicy, qos: Option<QosConfig>) -> NetServer {
+    let (_, bench, _) = artifacts();
+    let server = spawn_server(policy, qos);
+    NetServer::spawn(server, "127.0.0.1:0", 0, bench.n_in).unwrap()
+}
+
+/// Raw client: send `rows` as request frames (`id` = row index), read
+/// until every response arrived, return `(y, route)` indexed by id.
+fn roundtrip_rows(
+    addr: std::net::SocketAddr,
+    ds: &Dataset,
+    rows: usize,
+) -> Vec<(Vec<f32>, u16)> {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_millis(25)))
+        .unwrap();
+    let mut buf = Vec::new();
+    for i in 0..rows {
+        encode_request(&mut buf, 0, i as u64, ds.x_row(i));
+        stream.write_all(&buf).unwrap();
+    }
+    let mut out: Vec<Option<(Vec<f32>, u16)>> = vec![None; rows];
+    let mut got = 0usize;
+    let mut fr = FrameReader::new();
+    let mut y = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while got < rows {
+        assert!(Instant::now() < deadline, "responses stalled at {got}/{rows}");
+        match fr.poll(&mut stream).unwrap() {
+            FramePoll::Frame => {
+                let head = decode_response(fr.payload(), &mut y).unwrap();
+                let slot = &mut out[head.id as usize];
+                assert!(slot.is_none(), "duplicate response id {}", head.id);
+                *slot = Some((y.clone(), head.route));
+                got += 1;
+            }
+            FramePoll::Pending => continue,
+            FramePoll::Closed => panic!("server closed with {got}/{rows} answered"),
+        }
+    }
+    out.into_iter().map(Option::unwrap).collect()
+}
+
+/// The acceptance bar: what a socket client reads back is bitwise
+/// identical (f32 for f32) to what the in-process pipeline hands the
+/// same rows, routes included.  `ExecMode::Native` serves rows
+/// independently of batch shape, so micro-batching cannot perturb this.
+#[test]
+fn socket_responses_bitwise_match_in_process() {
+    let (_, _, ds) = artifacts();
+    let n = ds.n.min(96);
+    let policy = BatchPolicy { max_batch: 32, max_wait_us: 2_000 };
+
+    // In-process reference through the identical pipeline.
+    let server = spawn_server(policy, None);
+    for i in 0..n {
+        server.submit(i as u64, ds.x_row(i).to_vec()).unwrap();
+    }
+    let mut reference: Vec<Option<(Vec<f32>, Route)>> = vec![None; n];
+    let mut collected = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while collected.len() < n {
+        assert!(Instant::now() < deadline, "in-process run stalled");
+        if let Some(resp) = server.recv_timeout(Duration::from_millis(50)) {
+            reference[resp.id as usize] = Some((resp.y.clone(), resp.route));
+            collected.push(resp);
+        }
+    }
+    server.shutdown(collected).unwrap();
+
+    // Same rows over the wire.
+    let net = spawn_net(policy, None);
+    let served = roundtrip_rows(net.local_addr(), &ds, n);
+    let report = net.shutdown().unwrap();
+    assert_eq!(report.server.served, n as u64);
+    assert_eq!(report.malformed, 0);
+
+    for (i, (y, route)) in served.iter().enumerate() {
+        let (ref_y, ref_route) = reference[i].as_ref().unwrap();
+        assert_eq!(y, ref_y, "row {i}: socket y diverged from in-process y");
+        assert_eq!(*route, mcma::net::frame::route_to_wire(*ref_route), "row {i} route");
+    }
+}
+
+/// Same seed ⇒ identical (class, row) request sequence and identical
+/// CSV row count; different seed ⇒ different sequence.  The cap (not
+/// the wall clock) ends the runs, so this holds on any machine.
+#[test]
+fn same_seed_runs_identical_request_sequences() {
+    let (_, _, ds) = artifacts();
+    let net = spawn_net(BatchPolicy { max_batch: 32, max_wait_us: 2_000 }, None);
+    let cfg = |seed: u64| LoadConfig {
+        addr: net.local_addr().to_string(),
+        seed,
+        duration: Duration::from_secs(60),
+        max_requests: Some(120),
+        arrival: Arrival::ClosedLoop { inflight: 8 },
+        mix: vec![3.0, 1.0],
+        tag: 0,
+        qos_target: 10.0,
+    };
+    let a = run_load(&cfg(7), &ds).unwrap();
+    let b = run_load(&cfg(7), &ds).unwrap();
+    let c = run_load(&cfg(8), &ds).unwrap();
+    net.shutdown().unwrap();
+
+    let seq = |r: &mcma::net::LoadReport| -> Vec<(usize, usize)> {
+        r.records.iter().map(|rec| (rec.class, rec.row)).collect()
+    };
+    assert_eq!(a.sent, 120);
+    assert_eq!(a.received, 120, "closed-loop run lost responses");
+    assert_eq!(seq(&a), seq(&b), "same seed must replay the same sequence");
+    assert_ne!(seq(&a), seq(&c), "different seeds drew identical sequences");
+    assert_eq!(a.per_class_sent, b.per_class_sent);
+
+    // CSV artifacts agree row-for-row on the deterministic columns.
+    let dir = std::env::temp_dir();
+    let pa = dir.join(format!("mcma_net_csv_a_{}.csv", std::process::id()));
+    let pb = dir.join(format!("mcma_net_csv_b_{}.csv", std::process::id()));
+    a.write_csv(&pa).unwrap();
+    b.write_csv(&pb).unwrap();
+    let col_cr = |p: &Path| -> Vec<String> {
+        std::fs::read_to_string(p)
+            .unwrap()
+            .lines()
+            .map(|l| l.split(',').take(3).collect::<Vec<_>>().join(","))
+            .collect()
+    };
+    assert_eq!(col_cr(&pa).len(), 121, "header + one line per request");
+    assert_eq!(col_cr(&pa), col_cr(&pb));
+    let _ = std::fs::remove_file(&pa);
+    let _ = std::fs::remove_file(&pb);
+}
+
+/// A malformed (oversized) frame kills exactly its own connection; a
+/// well-behaved neighbour keeps being served by the same process.
+#[test]
+fn malformed_frame_kills_only_its_connection() {
+    let (_, _, ds) = artifacts();
+    let net = spawn_net(BatchPolicy { max_batch: 16, max_wait_us: 1_000 }, None);
+
+    // Hostile client: length prefix far beyond MAX_FRAME_BYTES.
+    let mut evil = TcpStream::connect(net.local_addr()).unwrap();
+    evil.write_all(&(u32::MAX).to_le_bytes()).unwrap();
+    evil.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut probe = [0u8; 16];
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "server never closed the malformed connection"
+        );
+        match std::io::Read::read(&mut evil, &mut probe) {
+            Ok(0) => break,          // clean close
+            Ok(_) => panic!("server answered a malformed frame"),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => continue,
+            Err(_) => break,         // reset also counts as closed
+        }
+    }
+
+    // A good client on the same server is unaffected.
+    let served = roundtrip_rows(net.local_addr(), &ds, 8);
+    assert_eq!(served.len(), 8);
+    let report = net.shutdown().unwrap();
+    assert!(report.malformed >= 1, "violation not counted");
+    assert!(report.accepted >= 2);
+    assert_eq!(report.server.served, 8);
+}
+
+/// Satellite regression: a client that submits a burst and disconnects
+/// without reading anything must not stall the drain — shutdown
+/// completes well under the pipeline's 2 s last-resort timeout, with
+/// every response accounted for.
+#[test]
+fn dead_client_mid_flight_does_not_stall_shutdown() {
+    let (_, _, ds) = artifacts();
+    let net = spawn_net(BatchPolicy { max_batch: 64, max_wait_us: 20_000 }, None);
+    let n = 32usize;
+    {
+        let mut stream = TcpStream::connect(net.local_addr()).unwrap();
+        let mut buf = Vec::new();
+        for i in 0..n {
+            encode_request(&mut buf, 0, i as u64, ds.x_row(i));
+            stream.write_all(&buf).unwrap();
+        }
+        // Drop without reading a single response.
+    }
+    // Let the reader ingest the burst before tearing down.
+    std::thread::sleep(Duration::from_millis(300));
+    let started = Instant::now();
+    let report = net.shutdown().unwrap();
+    let elapsed = started.elapsed();
+    assert_eq!(
+        report.server.served, n as u64,
+        "responses owed to the dead client were lost, not collected"
+    );
+    assert!(
+        elapsed < Duration::from_millis(1_500),
+        "drain stalled {elapsed:?} on a dead client (2 s safety net territory)"
+    );
+}
+
+/// The adaptive micro-batcher: closed-loop pressure produces multi-row
+/// batches, while a single idle request is answered far sooner than the
+/// full `--batch-wait-us` bound (the idle regime divides the wait).
+#[test]
+fn batches_coalesce_under_load_but_idle_stays_low_latency() {
+    let (_, _, ds) = artifacts();
+    // An enormous full-load wait: if the idle path waited it out, the
+    // single-request probe below would take ≥ half a second.  max_batch
+    // equals the closed-loop depth so the load phase flushes on FILL,
+    // not on the (huge) age budget.
+    let net = spawn_net(BatchPolicy { max_batch: 16, max_wait_us: 500_000 }, None);
+
+    // Idle probe FIRST (fresh server is in the idle regime by
+    // construction: the size EWMA starts at 1.0).
+    let t0 = Instant::now();
+    let one = roundtrip_rows(net.local_addr(), &ds, 1);
+    let idle_latency = t0.elapsed();
+    assert_eq!(one.len(), 1);
+    assert!(
+        idle_latency < Duration::from_millis(250),
+        "idle request waited out the full batch window: {idle_latency:?}"
+    );
+
+    // Now sustained closed-loop pressure must coalesce.
+    let report = run_load(
+        &LoadConfig {
+            addr: net.local_addr().to_string(),
+            seed: 7,
+            duration: Duration::from_secs(60),
+            max_requests: Some(320),
+            arrival: Arrival::ClosedLoop { inflight: 16 },
+            mix: vec![1.0],
+            tag: 0,
+            qos_target: 10.0,
+        },
+        &ds,
+    )
+    .unwrap();
+    net.shutdown().unwrap();
+    assert_eq!(report.received, 320);
+    assert!(
+        report.multi_row_responses() > 0,
+        "closed-loop load never produced a multi-row batch: {:?}",
+        report.batch_hist
+    );
+}
+
+/// The QoS controller runs unchanged under socket traffic: the report
+/// carries per-class rows and a generous target shows zero violations,
+/// client-side and server-side alike.
+#[test]
+fn qos_controller_runs_over_socket_traffic() {
+    let (_, _, ds) = artifacts();
+    let qos = QosConfig {
+        target: 10.0,
+        shadow_rate: 0.5,
+        window: 64,
+        min_obs: 8,
+        tick_every: 16,
+        ..QosConfig::default()
+    };
+    let net = spawn_net(BatchPolicy { max_batch: 32, max_wait_us: 2_000 }, Some(qos));
+    let report = run_load(
+        &LoadConfig {
+            addr: net.local_addr().to_string(),
+            seed: 7,
+            duration: Duration::from_secs(60),
+            max_requests: Some(300),
+            arrival: Arrival::ClosedLoop { inflight: 8 },
+            mix: vec![1.0],
+            tag: 0,
+            qos_target: 10.0,
+        },
+        &ds,
+    )
+    .unwrap();
+    let net_report = net.shutdown().unwrap();
+    assert_eq!(report.received, 300);
+    assert_eq!(report.violations, 0, "generous client-side target violated");
+    let q = net_report.server.qos.as_ref().expect("qos report missing over socket");
+    assert_eq!(q.total_violations(), 0);
+    assert_eq!(q.classes.len(), 2, "one QoS row per approximator class");
+}

@@ -34,8 +34,11 @@ const VALUE_KEYS: [&str; 38] = [
     "addr", "rate", "closed-loop", "mix", "csv", "json",
 ];
 
-/// Boolean flags (present/absent, no value).
-const FLAG_KEYS: [&str; 4] = ["verbose", "help", "force", "qos-warm"];
+/// Boolean flags (present/absent, no value).  Every key here must be
+/// documented in [`USAGE`] or looked up via `has_flag` — `mcma-audit`'s
+/// cli-registry rule flags dead keys (`verbose` and `force` were removed
+/// once the audit showed nothing consumed them).
+const FLAG_KEYS: [&str; 2] = ["help", "qos-warm"];
 
 impl Args {
     /// Parse `std::env::args()`-style tokens (without argv[0]).
@@ -164,6 +167,7 @@ COMMON OPTIONS:
   --exec pjrt|native|native-q8    execution engine (default pjrt);
                                   native-q8 = int8 quantized SIMD engine
   --samples N                     cap test samples (default: full test set)
+  --help                          print this message and exit
 
 ENVIRONMENT:
   MCMA_ARTIFACTS                  artifact tree (default: ./artifacts)
@@ -195,9 +199,11 @@ mod tests {
 
     #[test]
     fn flags_vs_value_options() {
-        let a = parse("eval --verbose --samples 100");
-        assert!(a.has_flag("verbose"));
+        let a = parse("serve --qos-warm --samples 100");
+        assert!(a.has_flag("qos-warm"));
+        assert!(!a.has_flag("help"));
         assert_eq!(a.opt_usize("samples", 0).unwrap(), 100);
+        assert!(parse("eval --help").has_flag("help"));
     }
 
     #[test]

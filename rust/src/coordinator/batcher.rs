@@ -25,6 +25,8 @@
 //! *formation* logic, only the flush *trigger*), so tests can pin exactly
 //! which requests land in which batch for a given arrival order.
 
+// audit:deterministic — batch formation takes `now` from the caller so
+// tests replay identical timelines; only latency metadata touches clocks.
 use std::time::{Duration, Instant};
 
 use crate::config::BatchPolicy;
@@ -123,6 +125,7 @@ impl Batcher {
     /// Enqueue; returns a full batch if this push filled it.
     pub fn push(&mut self, id: u64, x_raw: Vec<f32>) -> Option<Batch> {
         assert_eq!(x_raw.len(), self.d_in, "request dimensionality mismatch");
+        // audit:allow(determinism) — enqueue stamp is latency metadata; batch formation uses the caller-supplied `now`.
         self.queue.push(Pending { id, x_raw, enqueued: Instant::now() });
         if self.queue.len() >= self.policy.max_batch {
             self.flushes_full += 1;

@@ -25,6 +25,9 @@
 //! shadow payload copies, which are of the same nature as the response
 //! payloads.
 
+// audit:connection-facing — network readers feed this pipeline; a
+// hostile request must never panic a worker or the batcher thread.
+
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -35,6 +38,7 @@ use crate::config::{BatchPolicy, ExecMode, Method};
 use crate::formats::{BenchManifest, Dataset, Manifest, WeightsFile, WorkloadKind};
 use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler};
 use crate::runtime::{ModelBank, Runtime};
+use crate::util::lock_unpoisoned;
 use crate::workload::{NearestLookup, PreciseProxy};
 
 use super::batcher::{Batcher, BatcherStats};
@@ -226,12 +230,14 @@ impl QosShared {
 
     fn publish(&self, margins: &[f32]) {
         for (slot, m) in self.margins.iter().zip(margins) {
+            // audit:allow(atomics) — single-writer f32-bits publish; workers tolerate one-batch staleness
             slot.store(m.to_bits(), Ordering::Relaxed);
         }
     }
 
     fn load_into(&self, out: &mut Vec<f32>) {
         out.clear();
+        // audit:allow(atomics) — margin snapshot; one-batch staleness is the design (see module docs)
         out.extend(self.margins.iter().map(|s| f32::from_bits(s.load(Ordering::Relaxed))));
     }
 }
@@ -274,12 +280,14 @@ impl Submitter {
         self.ingress
             .send(Some(Request { id, x_raw, submitted: Instant::now() }))
             .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
+        // audit:allow(atomics) — monotone counter; the mpsc send above orders it against the drain
         self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
 
     /// Requests submitted so far across ALL submitters of this server.
     pub fn submitted(&self) -> u64 {
+        // audit:allow(atomics) — monotone counter polled by the drain; re-read every iteration
         self.submitted.load(Ordering::Relaxed)
     }
 }
@@ -459,7 +467,7 @@ impl Server {
                         // (reused buffer; one relaxed load per class).
                         let mut margins: Vec<f32> = Vec::new();
                         loop {
-                            let msg = { batch_rx.lock().unwrap().recv() };
+                            let msg = { lock_unpoisoned(&batch_rx).recv() };
                             match msg {
                                 Ok(BatchMsg::Work(batch)) => {
                                     batches += 1;
@@ -486,13 +494,23 @@ impl Server {
                                         &mut scratch,
                                     )?;
                                     let now = Instant::now();
-                                    for (j, &id) in batch.ids.iter().enumerate() {
+                                    // Lockstep iteration instead of indexed
+                                    // access: a ragged plan/output length can
+                                    // only truncate (and be counted lost),
+                                    // never panic the worker.
+                                    let rows = batch
+                                        .ids
+                                        .iter()
+                                        .zip(y.chunks_exact(d_out.max(1)))
+                                        .zip(plan.routes.iter())
+                                        .zip(batch.enqueued.iter());
+                                    for (((&id, y_row), &route), &enq) in rows {
                                         let _ = out_tx.send(Response {
                                             id,
-                                            y: y[j * d_out..(j + 1) * d_out].to_vec(),
-                                            route: plan.routes[j],
+                                            y: y_row.to_vec(),
+                                            route,
                                             latency_us: now
-                                                .duration_since(batch.enqueued[j])
+                                                .duration_since(enq)
                                                 .as_secs_f64()
                                                 * 1e6,
                                             batch_n: batch.n as u32,
@@ -512,17 +530,19 @@ impl Server {
                                     if let (Some(tx), Some(s), Some(c)) =
                                         (&obs_tx, &sampler, &counters)
                                     {
-                                        for (j, &id) in batch.ids.iter().enumerate() {
-                                            if let Route::Approx(k) = plan.routes[j] {
+                                        let shadow_rows = batch
+                                            .ids
+                                            .iter()
+                                            .zip(plan.routes.iter())
+                                            .zip(batch.x_raw.chunks_exact(d_in.max(1)))
+                                            .zip(y.chunks_exact(d_out.max(1)));
+                                        for (((&id, &route), x_row), y_row) in shadow_rows {
+                                            if let Route::Approx(k) = route {
                                                 if s.pick(id) {
                                                     let obs = ShadowObs {
                                                         class: k,
-                                                        x_raw: batch.x_raw
-                                                            [j * d_in..(j + 1) * d_in]
-                                                            .to_vec(),
-                                                        y_served: y
-                                                            [j * d_out..(j + 1) * d_out]
-                                                            .to_vec(),
+                                                        x_raw: x_row.to_vec(),
+                                                        y_served: y_row.to_vec(),
                                                     };
                                                     if tx.try_send(obs).is_err() {
                                                         c.record_shadow_dropped();
@@ -672,6 +692,7 @@ impl Server {
         self.ingress
             .send(Some(Request { id, x_raw, submitted: Instant::now() }))
             .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
+        // audit:allow(atomics) — monotone counter; the mpsc send above orders it against the drain
         self.submitted.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }
@@ -702,6 +723,7 @@ impl Server {
         // that vanish without being counted (e.g. a worker wedged before
         // its batch was guarded); it resets on progress, so a healthy
         // shutdown never waits on it.
+        // audit:allow(atomics) — submitters are done by shutdown; the 2 s net below covers any straggler
         let submitted = self.submitted.load(Ordering::Relaxed);
         let mut deadline = Instant::now() + Duration::from_millis(2000);
         loop {
@@ -727,7 +749,7 @@ impl Server {
         let batcher_stats = self
             .batcher_thread
             .take()
-            .unwrap()
+            .ok_or_else(|| anyhow::anyhow!("batcher thread already joined"))?
             .join()
             .map_err(|_| anyhow::anyhow!("batcher thread panicked"))?;
         let mut batches = 0u64;

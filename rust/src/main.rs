@@ -37,6 +37,10 @@ fn run_config(args: &Args) -> mcma::Result<RunConfig> {
 }
 
 fn run(args: Args) -> mcma::Result<()> {
+    if args.has_flag("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
     match args.subcommand.as_deref() {
         None | Some("help") => {
             println!("{USAGE}");

@@ -28,6 +28,9 @@
 //! the stop flag), which is what keeps a byte-at-a-time peer from ever
 //! desyncing the stream.
 
+// audit:connection-facing — a hostile frame must kill only its own
+// connection; mcma-audit bans panics and unchecked indexing here.
+
 use std::io::{self, Read};
 
 /// Protocol version byte; bumped on any layout change.
@@ -139,14 +142,17 @@ fn check_head(payload: &[u8], kind: u8, header: usize) -> Result<(), FrameError>
             payload.len()
         )));
     }
-    if payload[0] != FRAME_VERSION {
+    let (ver, got_kind) = match payload {
+        &[ver, k, ..] => (ver, k),
+        _ => return Err(malformed("payload shorter than 2 bytes")),
+    };
+    if ver != FRAME_VERSION {
         return Err(malformed(format!(
-            "version {} (expected {FRAME_VERSION})",
-            payload[0]
+            "version {ver} (expected {FRAME_VERSION})"
         )));
     }
-    if payload[1] != kind {
-        return Err(malformed(format!("kind {} (expected {kind})", payload[1])));
+    if got_kind != kind {
+        return Err(malformed(format!("kind {got_kind} (expected {kind})")));
     }
     if (payload.len() - header) % 4 != 0 {
         return Err(malformed("row bytes not a multiple of 4"));
@@ -154,11 +160,33 @@ fn check_head(payload: &[u8], kind: u8, header: usize) -> Result<(), FrameError>
     Ok(())
 }
 
+/// Little-endian header fields, with a short slice reported as malformed
+/// instead of panicking.
+fn get_u16(b: &[u8], at: usize) -> Result<u16, FrameError> {
+    match b.get(at..at + 2) {
+        Some(&[lo, hi]) => Ok(u16::from_le_bytes([lo, hi])),
+        _ => Err(malformed("truncated u16 header field")),
+    }
+}
+
+fn get_u64(b: &[u8], at: usize) -> Result<u64, FrameError> {
+    match b.get(at..at + 8) {
+        Some(s) => {
+            let mut le = [0u8; 8];
+            le.copy_from_slice(s); // `get(at..at + 8)` yielded exactly 8 bytes
+            Ok(u64::from_le_bytes(le))
+        }
+        None => Err(malformed("truncated u64 header field")),
+    }
+}
+
 fn read_f32s(bytes: &[u8], out: &mut Vec<f32>) {
     out.clear();
     out.reserve(bytes.len() / 4);
     for c in bytes.chunks_exact(4) {
-        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        let mut le = [0u8; 4];
+        le.copy_from_slice(c); // chunks_exact(4) yields exactly 4 bytes
+        out.push(f32::from_le_bytes(le));
     }
 }
 
@@ -167,19 +195,19 @@ fn read_f32s(bytes: &[u8], out: &mut Vec<f32>) {
 /// bytes).
 pub fn decode_request(payload: &[u8], row_out: &mut Vec<f32>) -> Result<RequestHead, FrameError> {
     check_head(payload, KIND_REQUEST, REQ_HEADER)?;
-    let tag = u16::from_le_bytes([payload[2], payload[3]]);
-    let id = u64::from_le_bytes(payload[4..12].try_into().unwrap());
-    read_f32s(&payload[REQ_HEADER..], row_out);
+    let tag = get_u16(payload, 2)?;
+    let id = get_u64(payload, 4)?;
+    read_f32s(payload.get(REQ_HEADER..).unwrap_or(&[]), row_out);
     Ok(RequestHead { tag, id })
 }
 
 /// Decode a response payload (no length prefix).
 pub fn decode_response(payload: &[u8], y_out: &mut Vec<f32>) -> Result<ResponseHead, FrameError> {
     check_head(payload, KIND_RESPONSE, RESP_HEADER)?;
-    let route = u16::from_le_bytes([payload[2], payload[3]]);
-    let batch_n = u16::from_le_bytes([payload[4], payload[5]]);
-    let id = u64::from_le_bytes(payload[6..14].try_into().unwrap());
-    read_f32s(&payload[RESP_HEADER..], y_out);
+    let route = get_u16(payload, 2)?;
+    let batch_n = get_u16(payload, 4)?;
+    let id = get_u64(payload, 6)?;
+    read_f32s(payload.get(RESP_HEADER..).unwrap_or(&[]), y_out);
     Ok(ResponseHead { route, batch_n, id })
 }
 
@@ -230,7 +258,8 @@ impl FrameReader {
 
     /// The completed payload after `poll` returned [`FramePoll::Frame`].
     pub fn payload(&self) -> &[u8] {
-        &self.payload[..self.want.unwrap_or(0)]
+        let n = self.want.unwrap_or(0);
+        self.payload.get(..n).unwrap_or(&[])
     }
 
     /// Advance the decoder by reading from `r`.  EOF mid-frame is
@@ -248,6 +277,7 @@ impl FrameReader {
         }
         // Phase 1: the 4-byte length prefix.
         while self.want.is_none() {
+            // audit:allow(panic-free-net) — len_got < 4 inside this loop: reaching 4 sets `want` and exits it
             match r.read(&mut self.len_buf[self.len_got..]) {
                 Ok(0) => {
                     if self.len_got == 0 {
@@ -276,8 +306,12 @@ impl FrameReader {
             }
         }
         // Phase 2: the payload.
-        let len = self.want.unwrap();
+        let Some(len) = self.want else {
+            // Phase 1 always leaves `want` set; stay total anyway.
+            return Err(malformed("frame reader lost its length state"));
+        };
         while self.payload_got < len {
+            // audit:allow(panic-free-net) — payload was resized to `len` when the prefix was accepted
             match r.read(&mut self.payload[self.payload_got..len]) {
                 Ok(0) => return Err(malformed("eof inside payload")),
                 Ok(n) => self.payload_got += n,

@@ -31,6 +31,9 @@
 //! only its own connection ([`FrameError::Malformed`]), never the
 //! server.
 
+// audit:connection-facing — a hostile peer must kill only its own
+// connection; mcma-audit bans panics and unchecked indexing here.
+
 use std::collections::HashMap;
 use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -40,6 +43,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Response, Server, ServerReport, Submitter};
+use crate::util::lock_unpoisoned;
 
 use super::frame::{
     decode_request, encode_response, route_to_wire, FrameError, FramePoll, FrameReader,
@@ -87,23 +91,31 @@ impl Conn {
     }
 
     fn alloc_slot(&mut self, client_id: u64) -> u32 {
-        let slot = match self.free.pop() {
-            Some(s) => s,
+        self.in_flight += 1;
+        match self.free.pop() {
+            Some(s) => {
+                // Free-listed slots were handed out of `pending`, so the
+                // lookup cannot miss; stay total regardless.
+                if let Some(p) = self.pending.get_mut(s as usize) {
+                    *p = client_id;
+                }
+                s
+            }
             None => {
-                self.pending.push(0);
+                self.pending.push(client_id);
                 (self.pending.len() - 1) as u32
             }
-        };
-        self.pending[slot as usize] = client_id;
-        self.in_flight += 1;
-        slot
+        }
     }
 
-    fn release_slot(&mut self, slot: u32) -> u64 {
-        let client_id = self.pending[slot as usize];
+    /// Client id for the slot, or `None` for a slot this connection
+    /// never allocated — the caller counts that as a failed delivery
+    /// instead of letting a corrupt id echo panic the pump.
+    fn release_slot(&mut self, slot: u32) -> Option<u64> {
+        let client_id = *self.pending.get(slot as usize)?;
         self.free.push(slot);
-        self.in_flight -= 1;
-        client_id
+        self.in_flight = self.in_flight.saturating_sub(1);
+        Some(client_id)
     }
 }
 
@@ -242,8 +254,9 @@ impl NetServer {
                     };
                     let conn_id = next_conn_id;
                     next_conn_id = next_conn_id.wrapping_add(1);
+                    // audit:allow(atomics) — monotone counter, read once in shutdown after joins
                     accepted.fetch_add(1, Ordering::Relaxed);
-                    registry.lock().unwrap().insert(conn_id, Conn::new(writer));
+                    lock_unpoisoned(&registry).insert(conn_id, Conn::new(writer));
                     let spawned = thread::Builder::new()
                         .name(format!("mcma-net-conn-{conn_id}"))
                         .spawn({
@@ -259,9 +272,9 @@ impl NetServer {
                             }
                         });
                     match spawned {
-                        Ok(h) => reader_threads.lock().unwrap().push(h),
+                        Ok(h) => lock_unpoisoned(&reader_threads).push(h),
                         Err(_) => {
-                            registry.lock().unwrap().remove(&conn_id);
+                            lock_unpoisoned(&registry).remove(&conn_id);
                         }
                     }
                 }
@@ -294,7 +307,7 @@ impl NetServer {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        let readers: Vec<_> = self.reader_threads.lock().unwrap().drain(..).collect();
+        let readers: Vec<_> = lock_unpoisoned(&self.reader_threads).drain(..).collect();
         for t in readers {
             let _ = t.join();
         }
@@ -302,12 +315,12 @@ impl NetServer {
         let (server, delivery_failed) = self
             .pump_thread
             .take()
-            .unwrap()
+            .ok_or_else(|| anyhow::anyhow!("net pump thread already joined"))?
             .join()
             .map_err(|_| anyhow::anyhow!("net pump thread panicked"))??;
         Ok(NetReport {
-            accepted: self.accepted.load(Ordering::Relaxed),
-            malformed: self.malformed.load(Ordering::Relaxed),
+            accepted: self.accepted.load(Ordering::Relaxed), // audit:allow(atomics) — read after accept/reader joins
+            malformed: self.malformed.load(Ordering::Relaxed), // audit:allow(atomics) — read after accept/reader joins
             delivery_failed,
             server,
         })
@@ -319,27 +332,28 @@ impl NetServer {
 fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64) {
     let conn_id = (resp.id >> 32) as u32;
     let slot = resp.id as u32;
-    let mut reg = registry.lock().unwrap();
+    let mut reg = lock_unpoisoned(registry);
     let Some(conn) = reg.get_mut(&conn_id) else {
         *delivery_failed += 1;
         return;
     };
-    let client_id = conn.release_slot(slot);
-    if conn.dead {
-        *delivery_failed += 1;
-    } else {
-        let batch_n = resp.batch_n.min(u16::MAX as u32) as u16;
-        encode_response(
-            &mut conn.write_buf,
-            route_to_wire(resp.route),
-            batch_n,
-            client_id,
-            &resp.y,
-        );
-        if conn.writer.write_all(&conn.write_buf).is_err() {
-            conn.dead = true;
-            *delivery_failed += 1;
-            let _ = conn.writer.shutdown(Shutdown::Both);
+    match conn.release_slot(slot) {
+        None => *delivery_failed += 1,
+        Some(_) if conn.dead => *delivery_failed += 1,
+        Some(client_id) => {
+            let batch_n = resp.batch_n.min(u16::MAX as u32) as u16;
+            encode_response(
+                &mut conn.write_buf,
+                route_to_wire(resp.route),
+                batch_n,
+                client_id,
+                &resp.y,
+            );
+            if conn.writer.write_all(&conn.write_buf).is_err() {
+                conn.dead = true;
+                *delivery_failed += 1;
+                let _ = conn.writer.shutdown(Shutdown::Both);
+            }
         }
     }
     if conn.dead && conn.in_flight == 0 {
@@ -384,7 +398,7 @@ fn read_connection(
                     break;
                 }
                 let global_id = {
-                    let mut reg = registry.lock().unwrap();
+                    let mut reg = lock_unpoisoned(registry);
                     let Some(conn) = reg.get_mut(&conn_id) else { break };
                     let slot = conn.alloc_slot(head.id);
                     ((conn_id as u64) << 32) | slot as u64
@@ -393,9 +407,9 @@ fn read_connection(
                     // Pipeline ingress closed under us: roll the slot
                     // back (no response will ever arrive for it) and
                     // stop reading.
-                    let mut reg = registry.lock().unwrap();
+                    let mut reg = lock_unpoisoned(registry);
                     if let Some(conn) = reg.get_mut(&conn_id) {
-                        conn.release_slot(global_id as u32);
+                        let _ = conn.release_slot(global_id as u32);
                     }
                     break;
                 }
@@ -408,10 +422,11 @@ fn read_connection(
         }
     }
     if protocol_violation {
+        // audit:allow(atomics) — monotone counter, read once in shutdown after joins
         malformed.fetch_add(1, Ordering::Relaxed);
     }
     let _ = stream.shutdown(Shutdown::Both);
-    let mut reg = registry.lock().unwrap();
+    let mut reg = lock_unpoisoned(registry);
     if let Some(conn) = reg.get_mut(&conn_id) {
         conn.dead = true;
         if conn.in_flight == 0 {

@@ -26,6 +26,7 @@
 //! f32 rounding (the property test below pins 1e-5; FMA contraction in the
 //! SIMD variants stays inside the same tolerance).
 
+// audit:deterministic — packed forward must match the scalar path bitwise.
 use super::simd::{self, Kernel};
 use super::{sigmoid, Mlp};
 

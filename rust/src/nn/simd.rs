@@ -211,6 +211,14 @@ pub fn row_tile_q8(xrow: &[i8], w_tile: &[i8]) -> [i32; NR] {
     acc
 }
 
+// SAFETY: callers (mr_tile_f32, which debug_asserts both bounds) pass
+// `x.len() >= (i0 + MR) * fi` and `w_tile.len() >= fi * NR`.  Every
+// `get_unchecked` index is `(i0 + r) * fi + k` with `r < MR`, `k < fi`,
+// so it is `< (i0 + MR) * fi`; every 8-float load reads
+// `w_tile[k * NR .. k * NR + 8]` with `NR == 8`, so it ends `<= fi * NR`.
+// Loads/stores are the unaligned variants (`loadu`/`storeu`), so no
+// alignment requirement; the `avx2`+`fma` target features hold because
+// `Kernel::Avx2` is only constructed after runtime detection.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
 unsafe fn mr_tile_f32_avx2(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [[f32; NR]; MR] {
@@ -230,6 +238,16 @@ unsafe fn mr_tile_f32_avx2(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [
     out
 }
 
+// SAFETY: callers (mr_tile_q8, which debug_asserts both bounds) pass
+// `x.len() >= (i0 + MR) * fi` and `w_tile.len() >= q8_tile_len(fi)
+// = ceil(fi / 2) * 2 * NR`, i.e. ceil(fi / 2) pair rows of 16 bytes.
+// Each 128-bit load reads pair row `k2 <= ceil(fi / 2) - 1` (the odd
+// tail reads row `pairs = fi / 2`, which exists exactly because
+// `ceil(fi / 2) = pairs + 1` for odd `fi`), so it stays in bounds.
+// `get_unchecked` reads `(i0 + r) * fi + 2 * k2 (+1)`, bounded by
+// `(i0 + r) * fi + fi - 1 < (i0 + MR) * fi`.  `_mm_loadu_si128` is the
+// unaligned load; the `avx2` target feature holds because
+// `Kernel::Avx2` is only constructed after runtime detection.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn mr_tile_q8_avx2(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i32; NR]; MR] {
@@ -268,6 +286,13 @@ unsafe fn mr_tile_q8_avx2(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i3
     out
 }
 
+// SAFETY: same contract as mr_tile_f32_avx2 — callers guarantee
+// `x.len() >= (i0 + MR) * fi` and `w_tile.len() >= fi * NR`; the two
+// 4-float `vld1q_f32` loads cover `w_tile[k * NR .. k * NR + 8]` which
+// ends `<= fi * NR`, and `get_unchecked` indices stay
+// `< (i0 + MR) * fi`.  NEON loads/stores have no alignment requirement
+// here, and the `neon` target feature holds because `Kernel::Neon` is
+// only constructed after runtime detection.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn mr_tile_f32_neon(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [[f32; NR]; MR] {
@@ -291,6 +316,13 @@ unsafe fn mr_tile_f32_neon(x: &[f32], i0: usize, fi: usize, w_tile: &[f32]) -> [
     out
 }
 
+// SAFETY: same contract as mr_tile_q8_avx2 — callers guarantee
+// `x.len() >= (i0 + MR) * fi` and `w_tile.len() >= q8_tile_len(fi)`
+// (ceil(fi / 2) pair rows of 16 bytes), so each 16-byte `vld2_s8`
+// reads an existing pair row (the odd tail row included) and every
+// `get_unchecked` index is `< (i0 + MR) * fi`.  `vld2_s8` has no
+// alignment requirement, and the `neon` target feature holds because
+// `Kernel::Neon` is only constructed after runtime detection.
 #[cfg(target_arch = "aarch64")]
 #[target_feature(enable = "neon")]
 unsafe fn mr_tile_q8_neon(x: &[i8], i0: usize, fi: usize, w_tile: &[i8]) -> [[i32; NR]; MR] {

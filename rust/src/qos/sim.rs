@@ -23,6 +23,7 @@
 //! counts: batches are processed sequentially, the f32 native forward is
 //! chunking-exact, and shadow selection is a pure id hash.
 
+// audit:deterministic — replay must be reproducible for summary tables.
 use crate::coordinator::{Dispatcher, Route, RoutePlan, Scratch};
 use crate::formats::Dataset;
 use crate::workload::PreciseProxy;

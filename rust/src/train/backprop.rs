@@ -34,6 +34,7 @@
 //! only by FMA contraction, and gradients stay bit-deterministic across
 //! thread counts (nothing here depends on the pool).
 
+// audit:deterministic — same seed must give bit-identical weights.
 use crate::nn::{
     gemm_tiled, pack_tiles, pack_tiles_transposed, transpose_into, Kernel, Layer, Matrix, Mlp,
     PackedMlp,

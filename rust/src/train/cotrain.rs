@@ -33,6 +33,7 @@
 //! method (safe/unsafe relabelling each round) under either scheme, which
 //! is exactly the baseline the acceptance comparison wants.
 
+// audit:deterministic — same seed + any thread count = same partition.
 use crate::nn::{self, Mlp, PackedMlp};
 use crate::util::rng::Rng;
 use crate::util::threadpool;
@@ -287,6 +288,7 @@ pub fn cotrain(
     let mut calm = 0usize;
 
     for round in 0..cfg.rounds.max(1) {
+        // audit:allow(determinism) — wall-clock feeds RoundStats reporting only.
         let round_start = std::time::Instant::now();
         // 1. Train each approximator on its partition — one pool job per
         // net, each carrying its own epoch-shuffle seed so the result is

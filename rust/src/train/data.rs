@@ -7,4 +7,5 @@
 //! historical `train::data` paths working; the streams are unchanged, so
 //! same-seed datasets are bit-identical across the move.
 
+// audit:deterministic — same-seed datasets are bit-identical (see above).
 pub use crate::workload::{derive_bench_manifest, sample_data, TrainData};

@@ -32,6 +32,8 @@ pub use backprop::{one_hot_into, xavier_mlp, Loss, TrainConfig, Trainer};
 pub use cotrain::{cotrain, Cotrained, CotrainConfig, RoundStats, Scheme};
 pub use data::{derive_bench_manifest, sample_data, TrainData};
 
+// audit:deterministic — artifact trees must be reproducible run to run.
+// audit:allow(determinism) — serializers sort HashMap keys before writing.
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -473,6 +475,7 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
         &cfg_for(1, Scheme::Competitive),
     );
 
+    // audit:allow(determinism) — keys are sorted at serialization time.
     let mut methods = HashMap::new();
     methods.insert(
         "one_pass".to_string(),
@@ -552,6 +555,7 @@ pub fn train_bench(opts: &TrainOptions) -> crate::Result<TrainReport> {
     let mut man = Manifest::load(&opts.out_dir).unwrap_or_else(|_| Manifest {
         n_approx: opts.k,
         batch_sizes: vec![1, 256],
+        // audit:allow(determinism) — manifest writer sorts benchmark names.
         benchmarks: HashMap::new(),
         root: opts.out_dir.clone(),
     });

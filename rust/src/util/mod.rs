@@ -10,3 +10,34 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod threadpool;
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if another thread panicked while
+/// holding it.  The connection-facing paths use this instead of
+/// `.lock().unwrap()`: one poisoned registry entry must not cascade into
+/// killing the accept loop (the data under our mutexes stays consistent
+/// under panic — every critical section is a single insert/remove/push).
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panic() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+}
+

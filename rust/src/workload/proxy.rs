@@ -155,6 +155,7 @@ impl NearestLookup {
 
     /// `(queries answered, records visited)` so far — the cost-model input.
     pub fn query_stats(&self) -> (u64, u64) {
+        // audit:allow(atomics) — monotone stats counters; readers tolerate lag.
         (self.queries.load(Ordering::Relaxed), self.visited.load(Ordering::Relaxed))
     }
 
@@ -162,10 +163,12 @@ impl NearestLookup {
     /// measured sublinear cost [`super::precise_cost_cycles_measured`]
     /// charges instead of the full-scan estimate.
     pub fn visits_per_query(&self) -> Option<f64> {
+        // audit:allow(atomics) — cost-model average; a stale read only lags it.
         let q = self.queries.load(Ordering::Relaxed);
         if q == 0 {
             return None;
         }
+        // audit:allow(atomics) — pairs with the `queries` read above; approximate by design.
         Some(self.visited.load(Ordering::Relaxed) as f64 / q as f64)
     }
 
@@ -233,8 +236,9 @@ impl NearestLookup {
         let mut best = (f64::INFINITY, usize::MAX);
         let mut visited = 0u64;
         self.search(self.root, x_raw, &mut best, &mut visited);
+        // audit:allow(atomics) — monotone visit counters; no ordering with data.
         self.queries.fetch_add(1, Ordering::Relaxed);
-        self.visited.fetch_add(visited, Ordering::Relaxed);
+        self.visited.fetch_add(visited, Ordering::Relaxed); // audit:allow(atomics) — same counter pair.
         best.1
     }
 

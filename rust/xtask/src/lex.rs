@@ -1,0 +1,457 @@
+//! Hand-rolled lexical pass over one Rust source file.
+//!
+//! The audit rules do not need a parse tree — they need to know, per
+//! line, WHICH characters are code, which are comment text, and which
+//! are string-literal content.  This module produces exactly that
+//! three-way split, plus the `#[cfg(test)]` region map, so rules can
+//! match tokens in code without tripping over the same words inside
+//! strings, docs, or tests.
+//!
+//! Handled: line comments (`//`, `///`, `//!`), nested block comments,
+//! normal strings with escapes (including multi-line), raw strings
+//! `r"…"` / `r#"…"#` (any hash count, `b`/`br` prefixes), char
+//! literals vs. lifetimes.  That is the entire lexical surface the
+//! `rust/src` tree uses.
+
+/// One source line, split into three aligned views.  Each view has the
+/// same length as the original line; characters that do not belong to
+/// the view are blanked to spaces, so column positions line up.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// Code only: comment text and string/char contents blanked
+    /// (string DELIMITERS are kept so quotes remain visible).
+    pub code: String,
+    /// Code plus string literals verbatim (comments blanked) — used by
+    /// scans that need literal values next to calls, e.g. `.opt("key")`.
+    pub code_strings: String,
+    /// String-literal CONTENT only (everything else blanked) — used by
+    /// the USAGE `--key` token scan.
+    pub strings: String,
+    /// Comment text on this line (concatenated, `//` / `/*` markers
+    /// stripped), trimmed.
+    pub comment: String,
+}
+
+/// A fully lexed file.
+#[derive(Debug)]
+pub struct LexedFile {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<Line>,
+    /// `is_test[i]` — line `i` (0-based) is inside a `#[cfg(test)]`
+    /// item (attribute line included).
+    pub is_test: Vec<bool>,
+}
+
+impl LexedFile {
+    /// 1-based line count convenience.
+    pub fn n_lines(&self) -> usize {
+        self.lines.len()
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nested depth.
+    Block(u32),
+    /// Escape-aware normal string.
+    Str,
+    /// Raw string with `n` hashes (`r"…"` is 0).
+    RawStr(u32),
+}
+
+/// Character classes routed to the three views.
+#[derive(Clone, Copy)]
+enum Class {
+    Code,
+    Comment,
+    StrContent,
+    /// Quotes / raw-string hashes: visible in both code views.
+    StrDelim,
+}
+
+struct Sink {
+    lines: Vec<Line>,
+    code: String,
+    code_strings: String,
+    strings: String,
+    comment: String,
+}
+
+impl Sink {
+    fn new() -> Self {
+        Sink {
+            lines: Vec::new(),
+            code: String::new(),
+            code_strings: String::new(),
+            strings: String::new(),
+            comment: String::new(),
+        }
+    }
+
+    fn put(&mut self, c: char, class: Class) {
+        match class {
+            Class::Code => {
+                self.code.push(c);
+                self.code_strings.push(c);
+                self.strings.push(' ');
+            }
+            Class::Comment => {
+                self.code.push(' ');
+                self.code_strings.push(' ');
+                self.strings.push(' ');
+                self.comment.push(c);
+            }
+            Class::StrContent => {
+                self.code.push(' ');
+                self.code_strings.push(c);
+                self.strings.push(c);
+            }
+            Class::StrDelim => {
+                self.code.push(c);
+                self.code_strings.push(c);
+                self.strings.push(' ');
+            }
+        }
+    }
+
+    fn newline(&mut self) {
+        self.lines.push(Line {
+            code: std::mem::take(&mut self.code),
+            code_strings: std::mem::take(&mut self.code_strings),
+            strings: std::mem::take(&mut self.strings),
+            comment: std::mem::take(&mut self.comment).trim().to_string(),
+        });
+    }
+}
+
+fn ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into per-line views.  `rel` is stored verbatim.
+pub fn lex(rel: &str, src: &str) -> LexedFile {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut sink = Sink::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    // Previous CODE character (for raw-string prefix detection).
+    let mut prev_code: char = ' ';
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            sink.newline();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                // Comment openers.
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    sink.put(' ', Class::Comment);
+                    sink.put(' ', Class::Comment);
+                    i += 2;
+                    state = State::LineComment;
+                    continue;
+                }
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    sink.put(' ', Class::Comment);
+                    sink.put(' ', Class::Comment);
+                    i += 2;
+                    state = State::Block(1);
+                    continue;
+                }
+                // Raw / byte string prefixes.  Only when `r`/`b` does not
+                // continue an identifier (`for`, `b2b`, …).
+                if (c == 'r' || c == 'b') && !ident_char(prev_code) {
+                    if let Some((pre, hashes)) = raw_prefix(&chars, i) {
+                        for _ in 0..pre {
+                            sink.put(chars[i], Class::StrDelim);
+                            i += 1;
+                        }
+                        state = State::RawStr(hashes);
+                        prev_code = ' ';
+                        continue;
+                    }
+                    if c == 'b' && i + 1 < n && chars[i + 1] == '"' {
+                        sink.put(c, Class::StrDelim);
+                        sink.put('"', Class::StrDelim);
+                        i += 2;
+                        state = State::Str;
+                        prev_code = ' ';
+                        continue;
+                    }
+                }
+                if c == '"' {
+                    sink.put(c, Class::StrDelim);
+                    i += 1;
+                    state = State::Str;
+                    prev_code = ' ';
+                    continue;
+                }
+                // Char literal vs lifetime.
+                if c == '\'' && !ident_char(prev_code) {
+                    if let Some(len) = char_literal_len(&chars, i) {
+                        sink.put('\'', Class::StrDelim);
+                        for k in 1..len - 1 {
+                            // Escapes/content blanked like string content.
+                            let _ = k;
+                            sink.put(' ', Class::StrContent);
+                        }
+                        sink.put('\'', Class::StrDelim);
+                        i += len;
+                        prev_code = ' ';
+                        continue;
+                    }
+                }
+                sink.put(c, Class::Code);
+                if !c.is_whitespace() {
+                    prev_code = c;
+                }
+                i += 1;
+            }
+            State::LineComment => {
+                sink.put(c, Class::Comment);
+                i += 1;
+            }
+            State::Block(depth) => {
+                if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    sink.put(' ', Class::Comment);
+                    sink.put(' ', Class::Comment);
+                    i += 2;
+                    state = if depth == 1 { State::Code } else { State::Block(depth - 1) };
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    sink.put(' ', Class::Comment);
+                    sink.put(' ', Class::Comment);
+                    i += 2;
+                    state = State::Block(depth + 1);
+                } else {
+                    sink.put(c, Class::Comment);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    sink.put(c, Class::StrContent);
+                    if chars[i + 1] != '\n' {
+                        sink.put(chars[i + 1], Class::StrContent);
+                        i += 2;
+                    } else {
+                        // Line-continuation escape: newline handled above.
+                        i += 1;
+                    }
+                } else if c == '"' {
+                    sink.put(c, Class::StrDelim);
+                    i += 1;
+                    state = State::Code;
+                } else {
+                    sink.put(c, Class::StrContent);
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && raw_closes(&chars, i, hashes) {
+                    sink.put(c, Class::StrDelim);
+                    i += 1;
+                    for _ in 0..hashes {
+                        if i < n {
+                            sink.put(chars[i], Class::StrDelim);
+                            i += 1;
+                        }
+                    }
+                    state = State::Code;
+                } else {
+                    sink.put(c, Class::StrContent);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // Final line without trailing newline.
+    if !sink.code.is_empty()
+        || !sink.comment.is_empty()
+        || !sink.code_strings.is_empty()
+    {
+        sink.newline();
+    }
+
+    let is_test = mark_test_regions(&sink.lines);
+    LexedFile { rel: rel.to_string(), lines: sink.lines, is_test }
+}
+
+/// If `chars[i..]` starts a raw-string literal (`r"`, `r#"`, `br##"`,
+/// …), return (prefix length up to and including the opening quote,
+/// hash count).
+fn raw_prefix(chars: &[char], i: usize) -> Option<(usize, u32)> {
+    let n = chars.len();
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if j >= n || chars[j] != 'r' {
+            return None;
+        }
+    }
+    if j >= n || chars[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < n && chars[j] == '"' {
+        Some((j - i + 1, hashes))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` trailing `#`s?
+fn raw_closes(chars: &[char], i: usize, hashes: u32) -> bool {
+    let n = chars.len();
+    for k in 0..hashes as usize {
+        if i + 1 + k >= n || chars[i + 1 + k] != '#' {
+            return false;
+        }
+    }
+    true
+}
+
+/// Length (in chars, including both quotes) of a char literal starting
+/// at `i`, or `None` if this `'` is a lifetime.
+fn char_literal_len(chars: &[char], i: usize) -> Option<usize> {
+    let n = chars.len();
+    if i + 1 >= n {
+        return None;
+    }
+    if chars[i + 1] == '\\' {
+        // Escaped literal: scan (bounded) for the closing quote.
+        let mut j = i + 2;
+        let mut steps = 0;
+        while j < n && steps < 12 {
+            if chars[j] == '\'' {
+                return Some(j - i + 1);
+            }
+            if chars[j] == '\n' {
+                return None;
+            }
+            j += 1;
+            steps += 1;
+        }
+        return None;
+    }
+    // Plain one-char literal: 'x'.
+    if chars[i + 1] != '\'' && i + 2 < n && chars[i + 2] == '\'' {
+        return Some(3);
+    }
+    None
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item: the attribute
+/// line(s), any further attributes/comments, and the brace-matched body
+/// of the item that follows.
+fn mark_test_regions(lines: &[Line]) -> Vec<bool> {
+    let mut is_test = vec![false; lines.len()];
+    let mut i = 0usize;
+    while i < lines.len() {
+        let code = lines[i].code.replace(' ', "");
+        if !code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // From the attribute, find the opening brace of the item.
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < lines.len() {
+            is_test[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    ';' if !opened && depth == 0 => {
+                        // `#[cfg(test)] mod tests;` — declaration only.
+                        opened = true;
+                        depth = 0;
+                    }
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    is_test
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_code_comments_strings() {
+        let f = lex(
+            "t.rs",
+            "let x = \"a[0].unwrap()\"; // c.unwrap()\nlet y = v[0];\n",
+        );
+        assert_eq!(f.n_lines(), 2);
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].code_strings.contains("a[0].unwrap()"));
+        assert!(f.lines[0].strings.contains("a[0].unwrap()"));
+        assert!(f.lines[0].comment.contains("c.unwrap()"));
+        assert!(f.lines[1].code.contains("v[0]"));
+    }
+
+    #[test]
+    fn multiline_and_raw_strings() {
+        let f = lex(
+            "t.rs",
+            "const U: &str = \"line one --key\nline two --other\";\nlet r = r#\"raw \"quoted\" [x]\"#;\n",
+        );
+        assert!(f.lines[0].strings.contains("--key"));
+        assert!(f.lines[1].strings.contains("--other"));
+        assert!(f.lines[1].code.contains(';'));
+        assert!(f.lines[2].strings.contains("raw"));
+        assert!(!f.lines[2].code.contains("[x]"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_lifetimes() {
+        let f = lex(
+            "t.rs",
+            "/* a /* b */ still */ fn f<'a>(x: &'a str) -> char { 'x' }\n",
+        );
+        assert!(f.lines[0].comment.contains("still"));
+        assert!(f.lines[0].code.contains("fn f<'a>"));
+        // Char literal content blanked to a space; quotes kept.
+        assert!(f.lines[0].code.contains("' '"));
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { v[0].unwrap(); }\n}\nfn c() {}\n";
+        let f = lex("t.rs", src);
+        assert_eq!(f.is_test, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_strings() {
+        let f = lex("t.rs", "let s = \"a\\\"b\"; let t = 1;\n");
+        assert!(f.lines[0].strings.contains("a\\\"b"));
+        assert!(f.lines[0].code.contains("let t = 1;"));
+    }
+}

@@ -1,0 +1,158 @@
+//! mcma-audit: the repo-invariant static-analysis pass.
+//!
+//! `cargo run -p xtask -- audit` walks `rust/src/**`, lexes every file
+//! with the hand-rolled lexer in [`lex`], applies the five repo rules in
+//! [`rules`], and reports `file:line` diagnostics plus a machine-readable
+//! JSON document for CI.  Zero dependencies by design: the pass must run
+//! in the offline build container with nothing but std.
+
+pub mod lex;
+pub mod rules;
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+pub use rules::{Allow, Finding};
+
+/// One complete audit run.
+#[derive(Debug)]
+pub struct Report {
+    pub root: String,
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub allows: Vec<Allow>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Audit every `*.rs` file under `root` (recursively, sorted, skipping
+/// `target/` and dot-directories so the walk order — and therefore the
+/// report — is deterministic).
+pub fn audit_dir(root: &Path) -> io::Result<Report> {
+    let mut rels = Vec::new();
+    walk(root, Path::new(""), &mut rels)?;
+    rels.sort();
+    let mut files = Vec::new();
+    for rel in &rels {
+        let src = fs::read_to_string(root.join(rel))?;
+        files.push(lex::lex(rel, &src));
+    }
+    let (findings, allows) = rules::audit(&files);
+    Ok(Report {
+        root: root.display().to_string(),
+        files_scanned: files.len(),
+        findings,
+        allows,
+    })
+}
+
+fn walk(root: &Path, rel: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(root.join(rel))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with('.') || name == "target" {
+            continue;
+        }
+        let sub = rel.join(name.as_ref());
+        let ty = entry.file_type()?;
+        if ty.is_dir() {
+            walk(root, &sub, out)?;
+        } else if name.ends_with(".rs") {
+            // `/`-separated rel paths keep rule path-matching portable.
+            out.push(sub.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+/// Serialize the report (schema 1) — hand-rolled, like everything else
+/// here, so the analyzer stays dependency-free.
+pub fn to_json(r: &Report) -> String {
+    let mut s = String::with_capacity(4096);
+    s.push_str("{\"schema\":1,\"root\":");
+    json_str(&r.root, &mut s);
+    s.push_str(&format!(",\"files_scanned\":{}", r.files_scanned));
+    s.push_str(",\"findings\":[");
+    for (i, f) in r.findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":");
+        json_str(&f.rule, &mut s);
+        s.push_str(",\"file\":");
+        json_str(&f.file, &mut s);
+        s.push_str(&format!(",\"line\":{},\"message\":", f.line));
+        json_str(&f.message, &mut s);
+        s.push('}');
+    }
+    s.push_str("],\"allows\":[");
+    for (i, a) in r.allows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("{\"rule\":");
+        json_str(&a.rule, &mut s);
+        s.push_str(",\"file\":");
+        json_str(&a.file, &mut s);
+        s.push_str(&format!(",\"line\":{},\"reason\":", a.line));
+        json_str(&a.reason, &mut s);
+        s.push('}');
+    }
+    s.push_str("]}\n");
+    s
+}
+
+fn json_str(v: &str, out: &mut String) {
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_escapes() {
+        let mut s = String::new();
+        json_str("a\"b\\c\nd", &mut s);
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\"");
+    }
+
+    #[test]
+    fn json_shape() {
+        let r = Report {
+            root: "src".into(),
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "atomics".into(),
+                file: "a.rs".into(),
+                line: 3,
+                message: "m".into(),
+            }],
+            allows: vec![],
+        };
+        let j = to_json(&r);
+        assert!(j.contains("\"schema\":1"));
+        assert!(j.contains("\"rule\":\"atomics\",\"file\":\"a.rs\",\"line\":3"));
+        assert!(j.contains("\"allows\":[]"));
+    }
+}

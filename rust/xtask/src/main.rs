@@ -1,0 +1,87 @@
+//! `cargo run -p xtask -- audit [--root DIR] [--json PATH]`
+//!
+//! Exit status: 0 when the tree is clean, 1 when any finding survives
+//! suppression, 2 on usage / IO errors.
+
+use std::path::PathBuf;
+use std::process::exit;
+
+const HELP: &str = "\
+mcma-audit — repo-invariant static analysis for rust/src
+
+USAGE:
+  cargo run -p xtask -- audit [--root DIR] [--json PATH]
+
+OPTIONS:
+  --root DIR    tree to scan (default: the crate's ../src)
+  --json PATH   also write the machine-readable report (schema 1)
+
+RULES:
+  cli-registry     USAGE text, option lookups, and VALUE_KEYS/FLAG_KEYS agree
+  panic-free-net   no unwrap/expect/panic!/indexing in connection-facing code
+  determinism      no wall clock / hash order / thread identity in
+                   audit:deterministic modules
+  safety-comments  every `unsafe` carries a // SAFETY: rationale
+  atomics          every Ordering::Relaxed outside the counter module is
+                   individually justified
+
+Suppress a finding with `// audit:allow(<rule>) — <reason>` on the same
+or the preceding line; allows without a reason or without a matching
+finding are themselves findings.
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.first().map(String::as_str) != Some("audit") {
+        eprint!("{HELP}");
+        exit(2);
+    }
+    let mut root: Option<PathBuf> = None;
+    let mut json: Option<PathBuf> = None;
+    let mut it = argv.iter().skip(1);
+    while let Some(tok) = it.next() {
+        match tok.as_str() {
+            "--root" => root = it.next().map(PathBuf::from),
+            "--json" => json = it.next().map(PathBuf::from),
+            "--help" | "-h" => {
+                print!("{HELP}");
+                exit(0);
+            }
+            other => {
+                eprintln!("unknown argument {other:?}\n\n{HELP}");
+                exit(2);
+            }
+        }
+    }
+    let root = root.unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
+    });
+
+    let report = match xtask::audit_dir(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("mcma-audit: cannot scan {}: {e}", root.display());
+            exit(2);
+        }
+    };
+
+    for f in &report.findings {
+        println!("{}/{}:{}: [{}] {}", report.root, f.file, f.line, f.rule, f.message);
+    }
+    println!(
+        "mcma-audit: {} files scanned, {} finding(s), {} justified allow(s)",
+        report.files_scanned,
+        report.findings.len(),
+        report.allows.len()
+    );
+
+    if let Some(path) = json {
+        if let Err(e) = std::fs::write(&path, xtask::to_json(&report)) {
+            eprintln!("mcma-audit: cannot write {}: {e}", path.display());
+            exit(2);
+        }
+        println!("mcma-audit: wrote {}", path.display());
+    }
+
+    exit(if report.clean() { 0 } else { 1 });
+}

@@ -1,0 +1,768 @@
+//! The five mcma-audit rules plus the `audit:allow` annotation grammar.
+//!
+//! Every rule is grounded in a bug class this repo has actually hit or
+//! a promise the README actually makes:
+//!
+//! | rule              | invariant                                              |
+//! |-------------------|--------------------------------------------------------|
+//! | `cli-registry`    | USAGE text, option lookups, and the key registries in  |
+//! |                   | `cli/mod.rs` agree (the PR 7 `--perf-json` class)      |
+//! | `panic-free-net`  | connection-facing code never panics on hostile input   |
+//! | `determinism`     | `audit:deterministic` modules use no wall clock, no    |
+//! |                   | hash-order iteration, no thread identity               |
+//! | `safety-comments` | every `unsafe` carries a `// SAFETY:` rationale        |
+//! | `atomics`         | every `Ordering::Relaxed` outside the counter module   |
+//! |                   | is individually justified                              |
+//!
+//! Scope markers (`// audit:connection-facing`, `// audit:deterministic`)
+//! opt a file into rules 2 and 3.  The REQUIRED_* path lists below pin the
+//! files that must carry each marker, so removing a marker from a core
+//! file is itself a finding — markers cannot silently rot.
+//!
+//! Suppression grammar: `// audit:allow(<rule>) — <reason>` (also `-` or
+//! `--` as the separator).  An allow covers its own line and the next
+//! line, must name a known rule, must give a non-empty reason, and must
+//! actually match a finding — otherwise it is reported as `bad-allow` /
+//! `unused-allow`.
+
+use crate::lex::{LexedFile, Line};
+
+/// The five enforceable rule identifiers (valid targets for
+/// `audit:allow(...)`).
+pub const RULE_IDS: [&str; 5] = [
+    "cli-registry",
+    "panic-free-net",
+    "determinism",
+    "safety-comments",
+    "atomics",
+];
+
+/// Files that MUST declare `// audit:connection-facing`.
+pub const REQUIRED_CONNECTION_FACING: [&str; 3] = [
+    "net/frame.rs",
+    "net/listener.rs",
+    "coordinator/server.rs",
+];
+
+/// Files that MUST declare `// audit:deterministic`.
+pub const REQUIRED_DETERMINISTIC: [&str; 7] = [
+    "train/backprop.rs",
+    "train/cotrain.rs",
+    "train/data.rs",
+    "train/mod.rs",
+    "qos/sim.rs",
+    "nn/gemm.rs",
+    "coordinator/batcher.rs",
+];
+
+/// Modules whose `Ordering::Relaxed` uses are monotonic counters read
+/// only after the writing threads are joined (or where one-interval
+/// staleness is explicitly tolerated); the atomics rule skips them.
+pub const ATOMICS_COUNTER_MODULES: [&str; 1] = ["coordinator/metrics.rs"];
+
+const MARKER_CONNECTION_FACING: &str = "audit:connection-facing";
+const MARKER_DETERMINISTIC: &str = "audit:deterministic";
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    pub rule: String,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub rule: String,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub reason: String,
+}
+
+/// Run every rule over the lexed files.  Returns the surviving findings
+/// (post-suppression, including `bad-allow`/`unused-allow` meta
+/// findings) and the parsed allow annotations.
+pub fn audit(files: &[LexedFile]) -> (Vec<Finding>, Vec<Allow>) {
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut allows: Vec<Allow> = Vec::new();
+
+    for f in files {
+        collect_allows(f, &mut allows, &mut findings);
+    }
+
+    for f in files {
+        let conn = has_marker(f, MARKER_CONNECTION_FACING);
+        let det = has_marker(f, MARKER_DETERMINISTIC);
+        if conn {
+            panic_free(f, &mut findings);
+        }
+        if det {
+            determinism(f, &mut findings);
+        }
+        safety_comments(f, &mut findings);
+        atomics(f, &mut findings);
+    }
+
+    required_markers(files, &mut findings);
+    cli_registry(files, &mut findings);
+
+    dedup(&mut findings);
+    let findings = suppress(findings, &allows);
+    (findings, allows)
+}
+
+// ---------------------------------------------------------------------------
+// token scanning helpers
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Byte offsets where `word` occurs in `hay` with non-identifier
+/// characters (or string edges) on both sides.
+fn word_positions(hay: &str, word: &str) -> Vec<usize> {
+    let h = hay.as_bytes();
+    let w = word.as_bytes();
+    let mut out = Vec::new();
+    if w.is_empty() || h.len() < w.len() {
+        return out;
+    }
+    for i in 0..=h.len() - w.len() {
+        if &h[i..i + w.len()] != w {
+            continue;
+        }
+        let pre_ok = i == 0 || !is_ident_byte(h[i - 1]);
+        let post = i + w.len();
+        let post_ok = post >= h.len() || !is_ident_byte(h[post]);
+        if pre_ok && post_ok {
+            out.push(i);
+        }
+    }
+    out
+}
+
+fn has_word(hay: &str, word: &str) -> bool {
+    !word_positions(hay, word).is_empty()
+}
+
+fn has_marker(f: &LexedFile, marker: &str) -> bool {
+    f.lines.iter().any(|l| l.comment.contains(marker))
+}
+
+fn push(findings: &mut Vec<Finding>, rule: &str, file: &str, line0: usize, msg: String) {
+    findings.push(Finding {
+        rule: rule.to_string(),
+        file: file.to_string(),
+        line: line0 + 1,
+        message: msg,
+    });
+}
+
+/// One finding per (rule, file, line) is enough for the allow grammar;
+/// drop duplicates from multiple hits on the same line.
+fn dedup(findings: &mut Vec<Finding>) {
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, &a.rule, &a.message).cmp(&(&b.file, b.line, &b.rule, &b.message))
+    });
+    findings.dedup_by(|a, b| a.rule == b.rule && a.file == b.file && a.line == b.line);
+}
+
+// ---------------------------------------------------------------------------
+// allow annotations
+
+fn collect_allows(f: &LexedFile, allows: &mut Vec<Allow>, findings: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        let c = &line.comment;
+        let Some(at) = c.find("audit:allow") else { continue };
+        let rest = &c[at + "audit:allow".len()..];
+        let parsed = parse_allow_tail(rest);
+        match parsed {
+            Ok((rule, reason)) => {
+                if !RULE_IDS.contains(&rule.as_str()) {
+                    push(
+                        findings,
+                        "bad-allow",
+                        &f.rel,
+                        i,
+                        format!("audit:allow names unknown rule `{rule}`"),
+                    );
+                } else if reason.is_empty() {
+                    push(
+                        findings,
+                        "bad-allow",
+                        &f.rel,
+                        i,
+                        format!("audit:allow({rule}) has no reason — write one after `—`"),
+                    );
+                } else {
+                    allows.push(Allow {
+                        rule,
+                        file: f.rel.clone(),
+                        line: i + 1,
+                        reason,
+                    });
+                }
+            }
+            Err(why) => {
+                push(findings, "bad-allow", &f.rel, i, why.to_string());
+            }
+        }
+    }
+}
+
+/// Parse the tail after `audit:allow`: `(<rule>) <sep> <reason>` where
+/// `<sep>` is `—`, `--`, or `-`.
+fn parse_allow_tail(rest: &str) -> Result<(String, String), &'static str> {
+    let rest = rest.trim_start();
+    let Some(stripped) = rest.strip_prefix('(') else {
+        return Err("audit:allow must be written `audit:allow(<rule>) — <reason>`");
+    };
+    let Some(close) = stripped.find(')') else {
+        return Err("audit:allow(<rule>) is missing the closing `)`");
+    };
+    let rule = stripped[..close].trim().to_string();
+    let mut reason = stripped[close + 1..].trim_start();
+    for sep in ["—", "--", "-"] {
+        if let Some(r) = reason.strip_prefix(sep) {
+            reason = r;
+            break;
+        }
+    }
+    Ok((rule, reason.trim().to_string()))
+}
+
+/// Drop findings covered by an allow on the same or the previous line;
+/// report allows that cover nothing.
+fn suppress(findings: Vec<Finding>, allows: &[Allow]) -> Vec<Finding> {
+    let mut used = vec![false; allows.len()];
+    let mut out = Vec::new();
+    for fd in findings {
+        let mut covered = false;
+        for (k, a) in allows.iter().enumerate() {
+            if a.rule == fd.rule
+                && a.file == fd.file
+                && (a.line == fd.line || a.line + 1 == fd.line)
+            {
+                used[k] = true;
+                covered = true;
+            }
+        }
+        if !covered {
+            out.push(fd);
+        }
+    }
+    for (k, a) in allows.iter().enumerate() {
+        if !used[k] {
+            out.push(Finding {
+                rule: "unused-allow".to_string(),
+                file: a.file.clone(),
+                line: a.line,
+                message: format!(
+                    "audit:allow({}) matches no finding on this or the next line — remove it",
+                    a.rule
+                ),
+            });
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line, &a.rule).cmp(&(&b.file, b.line, &b.rule)));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// rule: required markers
+
+fn required_markers(files: &[LexedFile], findings: &mut Vec<Finding>) {
+    for f in files {
+        if REQUIRED_CONNECTION_FACING.contains(&f.rel.as_str())
+            && !has_marker(f, MARKER_CONNECTION_FACING)
+        {
+            push(
+                findings,
+                "panic-free-net",
+                &f.rel,
+                0,
+                "file must declare `// audit:connection-facing` (required scope)".to_string(),
+            );
+        }
+        if REQUIRED_DETERMINISTIC.contains(&f.rel.as_str())
+            && !has_marker(f, MARKER_DETERMINISTIC)
+        {
+            push(
+                findings,
+                "determinism",
+                &f.rel,
+                0,
+                "file must declare `// audit:deterministic` (required scope)".to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: panic-free-net
+
+const PANIC_MACROS: [&str; 4] = ["panic", "unreachable", "todo", "unimplemented"];
+
+fn panic_free(f: &LexedFile, findings: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+        let b = code.as_bytes();
+        for m in ["unwrap", "expect"] {
+            for p in word_positions(code, m) {
+                let dotted = p > 0 && b[p - 1] == b'.';
+                let called = b.get(p + m.len()) == Some(&b'(');
+                if dotted && called {
+                    push(
+                        findings,
+                        "panic-free-net",
+                        &f.rel,
+                        i,
+                        format!(".{m}() in connection-facing code — hostile input must not panic; return an error or use a lossless fallback"),
+                    );
+                }
+            }
+        }
+        for m in PANIC_MACROS {
+            for p in word_positions(code, m) {
+                if b.get(p + m.len()) == Some(&b'!') {
+                    push(
+                        findings,
+                        "panic-free-net",
+                        &f.rel,
+                        i,
+                        format!("{m}! in connection-facing code — a hostile frame must never kill the server"),
+                    );
+                }
+            }
+        }
+        for i_br in 1..b.len() {
+            if b[i_br] != b'[' {
+                continue;
+            }
+            let p = b[i_br - 1];
+            if is_ident_byte(p) || p == b')' || p == b']' {
+                push(
+                    findings,
+                    "panic-free-net",
+                    &f.rel,
+                    i,
+                    "direct indexing in connection-facing code — use .get()/.chunks_exact()/zip so short input cannot panic".to_string(),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: determinism
+
+/// Tokens forbidden in `audit:deterministic` modules.  `HashMap`/`HashSet`
+/// iteration order, wall clocks, and thread identity are the three ways a
+/// bitwise thread-count-invariance test passes on sampled seeds but lies.
+const NONDET_TOKENS: [&str; 6] = [
+    "Instant::now",
+    "SystemTime",
+    "HashMap",
+    "HashSet",
+    "thread::current",
+    "ThreadId",
+];
+
+fn determinism(f: &LexedFile, findings: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        for tok in NONDET_TOKENS {
+            if has_word_path(&line.code, tok) {
+                push(
+                    findings,
+                    "determinism",
+                    &f.rel,
+                    i,
+                    format!("`{tok}` in an audit:deterministic module — output must be a pure function of inputs and seed"),
+                );
+            }
+        }
+    }
+}
+
+/// `word_positions` for possibly `::`-qualified tokens: boundaries are
+/// checked on the first and last path segment only.
+fn has_word_path(code: &str, tok: &str) -> bool {
+    let b = code.as_bytes();
+    let t = tok.as_bytes();
+    if b.len() < t.len() {
+        return false;
+    }
+    for i in 0..=b.len() - t.len() {
+        if &b[i..i + t.len()] != t {
+            continue;
+        }
+        let pre_ok = i == 0 || !is_ident_byte(b[i - 1]);
+        let post = i + t.len();
+        let post_ok = post >= b.len() || !is_ident_byte(b[post]);
+        if pre_ok && post_ok {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// rule: safety-comments
+
+fn safety_comments(f: &LexedFile, findings: &mut Vec<Finding>) {
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        if !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !has_safety_rationale(&f.lines, i) {
+            push(
+                findings,
+                "safety-comments",
+                &f.rel,
+                i,
+                "unsafe without a `// SAFETY:` rationale — spell out the pointer-validity/length/feature argument".to_string(),
+            );
+        }
+    }
+}
+
+/// A `// SAFETY:` comment counts if it is on the `unsafe` line itself or
+/// on a directly preceding run of comment-only / attribute-only lines.
+fn has_safety_rationale(lines: &[Line], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() {
+            if l.comment.is_empty() {
+                return false; // blank line ends the comment run
+            }
+            if l.comment.contains("SAFETY:") {
+                return true;
+            }
+            continue; // comment-only line, keep walking
+        }
+        // Attribute-only lines (e.g. #[target_feature(...)]) are transparent.
+        if code.starts_with("#[") && code.ends_with(']') {
+            if l.comment.contains("SAFETY:") {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// rule: atomics
+
+fn atomics(f: &LexedFile, findings: &mut Vec<Finding>) {
+    if ATOMICS_COUNTER_MODULES.contains(&f.rel.as_str()) {
+        return;
+    }
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        if has_word(&line.code, "Relaxed") {
+            push(
+                findings,
+                "atomics",
+                &f.rel,
+                i,
+                "Ordering::Relaxed outside the counter-module allowlist — justify with audit:allow(atomics) or strengthen the ordering".to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// rule: cli-registry
+
+struct KeyAt {
+    key: String,
+    /// 1-based.
+    line: usize,
+}
+
+fn cli_registry(files: &[LexedFile], findings: &mut Vec<Finding>) {
+    let Some(cli) = files.iter().find(|f| f.rel.ends_with("cli/mod.rs")) else {
+        return; // fixture trees without a CLI simply skip this rule
+    };
+
+    let value_keys = extract_key_array(cli, "VALUE_KEYS");
+    let flag_keys = extract_key_array(cli, "FLAG_KEYS");
+    if value_keys.is_none() {
+        push(findings, "cli-registry", &cli.rel, 0, "VALUE_KEYS registry not found".to_string());
+    }
+    if flag_keys.is_none() {
+        push(findings, "cli-registry", &cli.rel, 0, "FLAG_KEYS registry not found".to_string());
+    }
+    let value_keys = value_keys.unwrap_or_default();
+    let flag_keys = flag_keys.unwrap_or_default();
+    let registered =
+        |k: &str| value_keys.iter().chain(&flag_keys).any(|e| e.key == k);
+
+    // --key tokens in cli/mod.rs string literals (USAGE + error text).
+    let mut usage: Vec<KeyAt> = Vec::new();
+    for (i, line) in cli.lines.iter().enumerate() {
+        if cli.is_test[i] {
+            continue;
+        }
+        for key in dash_dash_tokens(&line.strings) {
+            usage.push(KeyAt { key, line: i + 1 });
+        }
+    }
+
+    // Literal option lookups anywhere in non-test code.
+    let mut value_lookups: Vec<(KeyAt, String)> = Vec::new();
+    let mut flag_lookups: Vec<(KeyAt, String)> = Vec::new();
+    for f in files {
+        for (i, line) in f.lines.iter().enumerate() {
+            if f.is_test[i] {
+                continue;
+            }
+            for (pat, is_flag) in [
+                (".opt(\"", false),
+                (".opt_or(\"", false),
+                (".opt_usize(\"", false),
+                (".opt_f64(\"", false),
+                (".has_flag(\"", true),
+            ] {
+                for key in literal_args(&line.code_strings, pat) {
+                    let at = KeyAt { key, line: i + 1 };
+                    if is_flag {
+                        flag_lookups.push((at, f.rel.clone()));
+                    } else {
+                        value_lookups.push((at, f.rel.clone()));
+                    }
+                }
+            }
+        }
+    }
+
+    // Direction 1: every mention must be registered.
+    for u in &usage {
+        if !registered(&u.key) {
+            push(
+                findings,
+                "cli-registry",
+                &cli.rel,
+                u.line - 1,
+                format!("--{} appears in usage text but is not in VALUE_KEYS/FLAG_KEYS", u.key),
+            );
+        }
+    }
+    for (l, file) in &value_lookups {
+        if !value_keys.iter().any(|e| e.key == l.key) {
+            push(
+                findings,
+                "cli-registry",
+                file,
+                l.line - 1,
+                format!("option lookup \"{}\" is not in VALUE_KEYS — unknown-key rejection would eat it", l.key),
+            );
+        }
+    }
+    for (l, file) in &flag_lookups {
+        if !flag_keys.iter().any(|e| e.key == l.key) {
+            push(
+                findings,
+                "cli-registry",
+                file,
+                l.line - 1,
+                format!("flag lookup \"{}\" is not in FLAG_KEYS", l.key),
+            );
+        }
+    }
+
+    // Direction 2: every registered key must be mentioned somewhere.
+    let mentioned = |k: &str| {
+        usage.iter().any(|u| u.key == k)
+            || value_lookups.iter().any(|(l, _)| l.key == k)
+            || flag_lookups.iter().any(|(l, _)| l.key == k)
+    };
+    for e in value_keys.iter().chain(&flag_keys) {
+        if !mentioned(&e.key) {
+            push(
+                findings,
+                "cli-registry",
+                &cli.rel,
+                e.line - 1,
+                format!("registered key \"{}\" appears in no usage text and no lookup — dead registry entry", e.key),
+            );
+        }
+    }
+}
+
+/// Pull the string literals out of `const NAME: [&str; N] = [ ... ];`.
+/// Keys contain no whitespace, so inside the array region every
+/// whitespace-separated token of the `strings` view is one key.
+fn extract_key_array(f: &LexedFile, name: &str) -> Option<Vec<KeyAt>> {
+    let decl = (0..f.lines.len()).find(|&i| {
+        !f.is_test[i]
+            && has_word(&f.lines[i].code, name)
+            && f.lines[i].code.contains("const")
+    })?;
+    let mut keys = Vec::new();
+    let mut seen_eq = false;
+    let mut depth: i32 = 0;
+    let mut started = false;
+    for j in decl..f.lines.len() {
+        for &c in f.lines[j].code.as_bytes() {
+            if !seen_eq {
+                if c == b'=' {
+                    seen_eq = true;
+                }
+                continue;
+            }
+            match c {
+                b'[' => {
+                    depth += 1;
+                    started = true;
+                }
+                b']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if started {
+            for tok in f.lines[j].strings.split_whitespace() {
+                keys.push(KeyAt { key: tok.to_string(), line: j + 1 });
+            }
+            if depth <= 0 {
+                break;
+            }
+        }
+    }
+    Some(keys)
+}
+
+/// `--key` tokens in string-literal content: `--` not preceded by another
+/// dash, followed by a lowercase letter, then `[a-z0-9-]*`.  Format-string
+/// fragments like `--{k}` yield no token.
+fn dash_dash_tokens(strings: &str) -> Vec<String> {
+    let b = strings.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < b.len() {
+        if b[i] == b'-'
+            && b[i + 1] == b'-'
+            && (i == 0 || b[i - 1] != b'-')
+            && b[i + 2].is_ascii_lowercase()
+        {
+            let mut j = i + 2;
+            while j < b.len() && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'-')
+            {
+                j += 1;
+            }
+            let tok = &strings[i + 2..j];
+            let tok = tok.trim_end_matches('-');
+            if !tok.is_empty() {
+                out.push(tok.to_string());
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// First string-literal argument of every `pat` call site on the line,
+/// where `pat` ends with `("` (e.g. `.opt_usize("`).
+fn literal_args(code_strings: &str, pat: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = code_strings;
+    while let Some(at) = rest.find(pat) {
+        let after = &rest[at + pat.len()..];
+        if let Some(end) = after.find('"') {
+            out.push(after[..end].to_string());
+            rest = &after[end..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lex::lex;
+
+    fn run_one(rel: &str, src: &str) -> (Vec<Finding>, Vec<Allow>) {
+        audit(&[lex(rel, src)])
+    }
+
+    #[test]
+    fn allow_suppresses_and_unused_is_reported() {
+        let src = "// audit:connection-facing\n\
+                   fn f(v: &[u8]) {\n\
+                   // audit:allow(panic-free-net) — length asserted by caller\n\
+                   let _ = v[0];\n\
+                   // audit:allow(panic-free-net) — stale\n\
+                   let _ = v.first();\n\
+                   }\n";
+        let (findings, allows) = run_one("x.rs", src);
+        assert_eq!(allows.len(), 2);
+        assert_eq!(findings.len(), 1);
+        assert_eq!(findings[0].rule, "unused-allow");
+        assert_eq!(findings[0].line, 5);
+    }
+
+    #[test]
+    fn bad_allow_grammar() {
+        let src = "// audit:allow(not-a-rule) — whatever\n\
+                   // audit:allow(atomics)\n";
+        let (findings, _) = run_one("x.rs", src);
+        let rules: Vec<_> = findings.iter().map(|f| f.rule.as_str()).collect();
+        assert_eq!(rules, ["bad-allow", "bad-allow"]);
+    }
+
+    #[test]
+    fn dash_dash_token_extraction() {
+        assert_eq!(
+            dash_dash_tokens("  --seed N   --closed-loop   --{k} ---x"),
+            vec!["seed".to_string(), "closed-loop".to_string()]
+        );
+    }
+
+    #[test]
+    fn required_marker_missing_is_a_finding() {
+        let (findings, _) = run_one("net/frame.rs", "fn f() {}\n");
+        assert!(findings
+            .iter()
+            .any(|f| f.rule == "panic-free-net" && f.line == 1));
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "// audit:connection-facing\n\
+                   fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g(v: &[u8]) { v[0]; v.first().unwrap(); }\n\
+                   }\n";
+        let (findings, _) = run_one("x.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

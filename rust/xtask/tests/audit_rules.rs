@@ -1,0 +1,139 @@
+//! Integration tests: each audit rule fires on a seeded fixture
+//! violation (exact rule id + line asserted, in the struct report AND
+//! the JSON document), and the real `rust/src` tree is clean.
+
+use std::path::{Path, PathBuf};
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures")
+        .join(name)
+}
+
+fn audit(name: &str) -> xtask::Report {
+    xtask::audit_dir(&fixture(name)).expect("fixture tree must scan")
+}
+
+/// `(file, line)` pairs for one rule, in report order.
+fn hits(report: &xtask::Report, rule: &str) -> Vec<(String, usize)> {
+    report
+        .findings
+        .iter()
+        .filter(|f| f.rule == rule)
+        .map(|f| (f.file.clone(), f.line))
+        .collect()
+}
+
+fn assert_json_has(report: &xtask::Report, rule: &str, file: &str, line: usize) {
+    let json = xtask::to_json(report);
+    let needle = format!("\"rule\":\"{rule}\",\"file\":\"{file}\",\"line\":{line}");
+    assert!(
+        json.contains(&needle),
+        "JSON report missing {needle}\n{json}"
+    );
+}
+
+#[test]
+fn panic_free_net_fires_on_each_panic_path() {
+    let r = audit("panic_free_net");
+    assert_eq!(
+        hits(&r, "panic-free-net"),
+        vec![
+            ("bad.rs".to_string(), 3), // v[0]
+            ("bad.rs".to_string(), 4), // .unwrap()
+            ("bad.rs".to_string(), 5), // .expect()
+            ("bad.rs".to_string(), 6), // unreachable!
+        ]
+    );
+    assert_eq!(r.findings.len(), 4, "{:#?}", r.findings);
+    assert_json_has(&r, "panic-free-net", "bad.rs", 4);
+}
+
+#[test]
+fn determinism_fires_on_clock_and_hash_order() {
+    let r = audit("determinism");
+    assert_eq!(
+        hits(&r, "determinism"),
+        vec![
+            ("bad.rs".to_string(), 2), // use ... HashMap
+            ("bad.rs".to_string(), 4), // Instant::now
+            ("bad.rs".to_string(), 5), // HashMap::new
+        ]
+    );
+    assert_eq!(r.findings.len(), 3, "{:#?}", r.findings);
+    assert_json_has(&r, "determinism", "bad.rs", 4);
+}
+
+#[test]
+fn safety_comments_fires_only_without_rationale() {
+    let r = audit("safety_comments");
+    assert_eq!(
+        hits(&r, "safety-comments"),
+        vec![
+            ("bad.rs".to_string(), 1),  // unsafe fn, no SAFETY
+            ("bad.rs".to_string(), 11), // unsafe block, no SAFETY
+        ]
+    );
+    assert_eq!(r.findings.len(), 2, "{:#?}", r.findings);
+    assert_json_has(&r, "safety-comments", "bad.rs", 11);
+}
+
+#[test]
+fn atomics_fires_unless_allowed() {
+    let r = audit("atomics");
+    assert_eq!(hits(&r, "atomics"), vec![("bad.rs".to_string(), 4)]);
+    assert_eq!(r.findings.len(), 1, "{:#?}", r.findings);
+    assert_eq!(r.allows.len(), 1);
+    assert_eq!(r.allows[0].rule, "atomics");
+    assert_eq!(r.allows[0].line, 8);
+    assert!(r.allows[0].reason.contains("monotone counter"));
+    assert_json_has(&r, "atomics", "bad.rs", 4);
+}
+
+#[test]
+fn cli_registry_catches_the_perf_json_class() {
+    let r = audit("cli_registry");
+    // Dead registry entry (`ghost`), undocumented-but-used key in both
+    // directions (`perf-json` in USAGE and in a lookup).
+    assert_eq!(
+        hits(&r, "cli-registry"),
+        vec![
+            ("cli/mod.rs".to_string(), 4), // dead "ghost" entry
+            ("cli/mod.rs".to_string(), 7), // --perf-json in USAGE, unregistered
+            ("main.rs".to_string(), 3),    // .opt("perf-json") unregistered
+        ]
+    );
+    assert_eq!(r.findings.len(), 3, "{:#?}", r.findings);
+    assert_json_has(&r, "cli-registry", "cli/mod.rs", 7);
+    assert_json_has(&r, "cli-registry", "main.rs", 3);
+}
+
+#[test]
+fn allow_grammar_is_enforced() {
+    let r = audit("allows");
+    assert_eq!(
+        hits(&r, "bad-allow"),
+        vec![
+            ("bad.rs".to_string(), 1), // unknown rule
+            ("bad.rs".to_string(), 3), // missing reason
+        ]
+    );
+    assert_eq!(hits(&r, "unused-allow"), vec![("bad.rs".to_string(), 5)]);
+    assert_eq!(r.findings.len(), 3, "{:#?}", r.findings);
+}
+
+/// The real tree must stay clean: zero findings, and every allow that
+/// suppressed something carries a written reason.
+#[test]
+fn repo_src_tree_is_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("src");
+    let r = xtask::audit_dir(&root).expect("rust/src must scan");
+    assert!(r.files_scanned > 50, "suspiciously small tree: {}", r.files_scanned);
+    assert!(
+        r.findings.is_empty(),
+        "mcma-audit found {} issue(s) in rust/src:\n{:#?}",
+        r.findings.len(),
+        r.findings
+    );
+    assert!(r.allows.iter().all(|a| !a.reason.trim().is_empty()));
+}

@@ -1,0 +1,6 @@
+// audit:allow(no-such-rule) — irrelevant
+pub fn f() {}
+// audit:allow(atomics)
+pub fn g() {}
+// audit:allow(determinism) — justified but nothing here
+pub fn h() {}

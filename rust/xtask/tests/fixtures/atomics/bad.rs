@@ -1,0 +1,10 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn bump_ok(c: &AtomicU64) {
+    // audit:allow(atomics) — monotone counter, read only after join
+    c.fetch_add(1, Ordering::Relaxed);
+}

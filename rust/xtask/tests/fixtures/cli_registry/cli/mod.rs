@@ -1,0 +1,8 @@
+// fixture: the PR 7 `--perf-json` regression — documented and looked up
+// but never registered, plus a dead `ghost` registry entry.
+const VALUE_KEYS: [&str; 2] = ["bench", "seed"];
+const FLAG_KEYS: [&str; 2] = ["help", "ghost"];
+
+pub const USAGE: &str = "\
+usage: mcma train --bench B [--seed S] [--perf-json PATH]
+";

@@ -1,0 +1,5 @@
+// fixture main: looks up a key missing from VALUE_KEYS.
+pub fn run(args: &Args) {
+    let _ = args.opt("perf-json");
+    let _ = args.has_flag("help");
+}

@@ -1,0 +1,7 @@
+// audit:deterministic — fixture: wall clock and hash order must be flagged
+use std::collections::HashMap;
+pub fn now_ms() -> u128 {
+    let t = std::time::Instant::now();
+    let _m: HashMap<u32, u32> = HashMap::new();
+    t.elapsed().as_millis()
+}

@@ -1,0 +1,8 @@
+// audit:connection-facing — fixture: every panic path must be flagged
+pub fn decode(v: &[u8]) -> u8 {
+    let a = v[0];
+    let b = v.first().unwrap();
+    let c = v.get(1).expect("short");
+    if v.len() > 9 { unreachable!() }
+    a + b + c
+}

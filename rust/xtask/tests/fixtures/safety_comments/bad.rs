@@ -1,0 +1,12 @@
+pub unsafe fn read_raw(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn call(p: *const u8) -> u8 {
+    // SAFETY: caller guarantees p is valid for reads
+    unsafe { read_raw(p) }
+}
+
+pub fn bad(p: *const u8) -> u8 {
+    unsafe { read_raw(p) }
+}

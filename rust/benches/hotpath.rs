@@ -257,7 +257,7 @@ fn common_tail(rec: &mut Recorder, budget: Duration, bench: &BenchManifest, one_
     rec.bench("batcher push+flush 256 reqs", budget, || {
         let mut b = Batcher::new(BatchPolicy { max_batch: 256, max_wait_us: 10_000 }, d_in);
         for (i, r) in reqs.iter().enumerate() {
-            std::hint::black_box(b.push(i as u64, r.clone()));
+            std::hint::black_box(b.push(i as u64, r.clone(), std::time::Instant::now()));
         }
     });
 

@@ -19,7 +19,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value.
-const VALUE_KEYS: [&str; 38] = [
+const VALUE_KEYS: [&str; 42] = [
     // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
@@ -32,7 +32,16 @@ const VALUE_KEYS: [&str; 38] = [
     // network serving (`serve --listen`) + load harness (`bench-load`)
     "listen", "duration", "batch-max", "batch-wait-us",
     "addr", "rate", "closed-loop", "mix", "csv", "json",
+    // observability (`serve` writers + `stats` scraper)
+    "watch", "trace-json", "metrics-json", "metrics-interval-s",
 ];
+
+/// Positional argument names, in the order subcommands consume them via
+/// [`Args::pos`].  Registration (plus an UPPERCASE placeholder in
+/// [`USAGE`]) is what lets `mcma-audit`'s cli-registry rule track
+/// positionals the same way it tracks `--key` options — `mcma stats
+/// ADDR` needs no allow comments.
+const POSITIONAL_KEYS: [&str; 1] = ["addr"];
 
 /// Boolean flags (present/absent, no value).  Every key here must be
 /// documented in [`USAGE`] or looked up via `has_flag` — `mcma-audit`'s
@@ -102,6 +111,15 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Positional argument by registered name (see [`POSITIONAL_KEYS`]):
+    /// the value at the name's registered index, if given.  Subcommands
+    /// with bespoke positional grammars (e.g. `figure 7a`) keep indexing
+    /// `positionals` directly.
+    pub fn pos(&self, name: &str) -> Option<&str> {
+        let i = POSITIONAL_KEYS.iter().position(|k| *k == name)?;
+        self.positionals.get(i).map(String::as_str)
+    }
 }
 
 pub const USAGE: &str = "\
@@ -138,6 +156,15 @@ SUBCOMMANDS:
          [--batch-wait-us U]         coalesces GEMM-shaped batches under
                                      load, drops to low-latency singles
                                      when idle.  --duration 0 = until killed
+         [--trace-json PATH]         drain the sampled span journal (JSON
+                                     lines) to PATH at shutdown
+         [--metrics-json PATH]       write the live metrics snapshot to
+         [--metrics-interval-s N]    PATH every N seconds (default 5)
+  stats  ADDR | --addr HOST:PORT    scrape a running `serve --listen`
+         [--watch SECS] [--json PATH] server in-band (STATS frame): stage
+                                     waterfall percentiles, route/QoS
+                                     counters; --watch re-scrapes every
+                                     SECS; --json dumps the raw snapshot
   bench-load --addr HOST:PORT       seeded load generator against a live
          [--seed S] [--duration SEC] `mcma serve --listen` socket:
          [--rate R | --closed-loop N] open-loop Poisson at R req/s or
@@ -297,6 +324,31 @@ mod tests {
         // --perf-json is registered (it appears in USAGE and CI).
         let d = parse("train --bench fft --perf-json /tmp/BENCH_train.json");
         assert_eq!(d.opt("perf-json"), Some("/tmp/BENCH_train.json"));
+    }
+
+    #[test]
+    fn observability_options_registered() {
+        let a = parse(
+            "serve --bench fft --listen 127.0.0.1:0 --trace-json /tmp/trace.jsonl \
+             --metrics-json /tmp/m.json --metrics-interval-s 2",
+        );
+        assert_eq!(a.opt("trace-json"), Some("/tmp/trace.jsonl"));
+        assert_eq!(a.opt("metrics-json"), Some("/tmp/m.json"));
+        assert_eq!(a.opt_usize("metrics-interval-s", 5).unwrap(), 2);
+        let b = parse("stats --addr 127.0.0.1:7090 --watch 2");
+        assert_eq!(b.subcommand.as_deref(), Some("stats"));
+        assert_eq!(b.opt("addr"), Some("127.0.0.1:7090"));
+        assert_eq!(b.opt_usize("watch", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn registered_positional_lookup() {
+        let a = parse("stats 127.0.0.1:7090");
+        assert_eq!(a.pos("addr"), Some("127.0.0.1:7090"));
+        let b = parse("stats");
+        assert_eq!(b.pos("addr"), None);
+        // Unregistered names never resolve, whatever was typed.
+        assert_eq!(a.pos("figure"), None);
     }
 
     #[test]

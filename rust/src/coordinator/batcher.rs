@@ -46,6 +46,9 @@ pub const IDLE_WAIT_DIV: u64 = 16;
 pub struct Pending {
     pub id: u64,
     pub x_raw: Vec<f32>,
+    /// When the caller submitted the request (carried through so the
+    /// dispatch side can split queue-wait from batch-formation time).
+    pub submitted: Instant,
     pub enqueued: Instant,
 }
 
@@ -56,6 +59,8 @@ pub struct Batch {
     /// Row-major `(n, d_in)` raw inputs.
     pub x_raw: Vec<f32>,
     pub n: usize,
+    /// Per-row submit stamps (same order as `ids`).
+    pub submitted: Vec<Instant>,
     pub enqueued: Vec<Instant>,
 }
 
@@ -122,11 +127,13 @@ impl Batcher {
         }
     }
 
-    /// Enqueue; returns a full batch if this push filled it.
-    pub fn push(&mut self, id: u64, x_raw: Vec<f32>) -> Option<Batch> {
+    /// Enqueue; returns a full batch if this push filled it.  `submitted`
+    /// is the caller's submit stamp, carried through to the batch so the
+    /// observability plane can decompose queue vs batch-formation time.
+    pub fn push(&mut self, id: u64, x_raw: Vec<f32>, submitted: Instant) -> Option<Batch> {
         assert_eq!(x_raw.len(), self.d_in, "request dimensionality mismatch");
         // audit:allow(determinism) — enqueue stamp is latency metadata; batch formation uses the caller-supplied `now`.
-        self.queue.push(Pending { id, x_raw, enqueued: Instant::now() });
+        self.queue.push(Pending { id, x_raw, submitted, enqueued: Instant::now() });
         if self.queue.len() >= self.policy.max_batch {
             self.flushes_full += 1;
             return Some(self.flush(true));
@@ -180,13 +187,15 @@ impl Batcher {
         let taken: Vec<Pending> = self.queue.drain(..n).collect();
         let mut x = Vec::with_capacity(n * self.d_in);
         let mut ids = Vec::with_capacity(n);
+        let mut sub = Vec::with_capacity(n);
         let mut enq = Vec::with_capacity(n);
         for p in taken {
             ids.push(p.id);
+            sub.push(p.submitted);
             enq.push(p.enqueued);
             x.extend_from_slice(&p.x_raw);
         }
-        Batch { ids, x_raw: x, n, enqueued: enq }
+        Batch { ids, x_raw: x, n, submitted: sub, enqueued: enq }
     }
 }
 
@@ -202,9 +211,9 @@ mod tests {
     #[test]
     fn fills_at_max_batch() {
         let mut b = Batcher::new(policy(3, 1_000_000), 2);
-        assert!(b.push(0, vec![0.0; 2]).is_none());
-        assert!(b.push(1, vec![0.0; 2]).is_none());
-        let batch = b.push(2, vec![0.0; 2]).expect("should flush");
+        assert!(b.push(0, vec![0.0; 2], Instant::now()).is_none());
+        assert!(b.push(1, vec![0.0; 2], Instant::now()).is_none());
+        let batch = b.push(2, vec![0.0; 2], Instant::now()).expect("should flush");
         assert_eq!(batch.n, 3);
         assert_eq!(batch.ids, vec![0, 1, 2]);
         assert_eq!(batch.x_raw.len(), 6);
@@ -215,7 +224,7 @@ mod tests {
     #[test]
     fn timeout_flushes_partial() {
         let mut b = Batcher::new(policy(100, 0), 1);
-        b.push(7, vec![1.0]);
+        b.push(7, vec![1.0], Instant::now());
         let batch = b.poll(Instant::now()).expect("age 0 flushes immediately");
         assert_eq!(batch.ids, vec![7]);
         assert_eq!(b.flushes_timeout, 1);
@@ -226,8 +235,8 @@ mod tests {
     fn drain_returns_leftovers() {
         let mut b = Batcher::new(policy(10, 1_000_000), 1);
         assert!(b.drain().is_none());
-        b.push(1, vec![0.5]);
-        b.push(2, vec![0.6]);
+        b.push(1, vec![0.5], Instant::now());
+        b.push(2, vec![0.6], Instant::now());
         let batch = b.drain().unwrap();
         assert_eq!(batch.n, 2);
         assert_eq!(batch.x_raw, vec![0.5, 0.6]);
@@ -241,7 +250,7 @@ mod tests {
     fn mr_rounding_is_deterministic_for_arrival_order() {
         let mut b = Batcher::new(policy(64, 0), 1);
         for id in 0..10u64 {
-            assert!(b.push(id, vec![id as f32]).is_none());
+            assert!(b.push(id, vec![id as f32], Instant::now()).is_none());
         }
         let first = b.poll(Instant::now()).expect("age 0 flushes");
         assert_eq!(first.n, 8, "10 pending round down to two MR blocks");
@@ -252,7 +261,7 @@ mod tests {
         assert_eq!(rest.ids, vec![8, 9]);
         // Exactly MR pending is already GEMM-shaped: no rounding.
         for id in 10..14u64 {
-            b.push(id, vec![id as f32]);
+            b.push(id, vec![id as f32], Instant::now());
         }
         assert_eq!(b.poll(Instant::now()).unwrap().n, 4);
         let stats = b.into_stats();
@@ -269,7 +278,7 @@ mod tests {
         let mut b = Batcher::new(policy(10, 1_000_000), 1);
         let mut got = None;
         for id in 0..10u64 {
-            if let Some(batch) = b.push(id, vec![0.0]) {
+            if let Some(batch) = b.push(id, vec![0.0], Instant::now()) {
                 got = Some(batch);
             }
         }
@@ -292,21 +301,21 @@ mod tests {
         let later = || Instant::now() + Duration::from_secs(1);
         // Singles keep it idle.
         for id in 0..3u64 {
-            b.push(id, vec![0.0]);
+            b.push(id, vec![0.0], Instant::now());
             assert!(b.poll(later()).is_some());
             assert_eq!(b.effective_wait_us(), 100);
         }
         // A run of 8-row batches pushes the EWMA past MR: full budget.
         for round in 0..4u64 {
             for id in 0..8u64 {
-                b.push(100 + round * 8 + id, vec![0.0]);
+                b.push(100 + round * 8 + id, vec![0.0], Instant::now());
             }
             assert!(b.poll(later()).is_some());
         }
         assert_eq!(b.effective_wait_us(), 1600, "coalescing regime engages");
         // Singles again: decays back to the idle budget.
         for id in 0..12u64 {
-            b.push(1000 + id, vec![0.0]);
+            b.push(1000 + id, vec![0.0], Instant::now());
             assert!(b.poll(later()).is_some());
         }
         assert_eq!(b.effective_wait_us(), 100, "idle regime re-engages");
@@ -331,7 +340,7 @@ mod tests {
                 let mut b = Batcher::new(policy(*max_batch, 0), 1);
                 let mut got: Vec<u64> = Vec::new();
                 for (i, &do_poll) in polls.iter().enumerate() {
-                    if let Some(batch) = b.push(i as u64, vec![i as f32]) {
+                    if let Some(batch) = b.push(i as u64, vec![i as f32], Instant::now()) {
                         got.extend(&batch.ids);
                     }
                     if do_poll {
@@ -356,6 +365,6 @@ mod tests {
     #[should_panic(expected = "dimensionality")]
     fn rejects_wrong_width() {
         let mut b = Batcher::new(policy(4, 0), 3);
-        b.push(0, vec![0.0; 2]);
+        b.push(0, vec![0.0; 2], Instant::now());
     }
 }

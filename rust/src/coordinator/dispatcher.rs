@@ -137,6 +137,11 @@ pub struct Dispatcher<'a> {
     /// The native engines already execute group-by-group; this flag makes
     /// the weight-switch accounting follow the same order.
     pub route_sorted: bool,
+    /// Live metrics sink (the serving pipeline installs one via
+    /// [`Self::with_obs`]): per-route-class execute timing and precise-
+    /// fallback timing land here straight from the execute loops.  `None`
+    /// (offline eval, tests) records nothing and never reads the clock.
+    pub obs: Option<std::sync::Arc<crate::obs::Registry>>,
 }
 
 impl<'a> Dispatcher<'a> {
@@ -161,6 +166,7 @@ impl<'a> Dispatcher<'a> {
             npu_cfg: crate::config::NpuConfig::default(),
             policy: RouterPolicy::Argmax,
             route_sorted: false,
+            obs: None,
         })
     }
 
@@ -189,6 +195,12 @@ impl<'a> Dispatcher<'a> {
     /// Builder-style route-sorted execution toggle (see `route_sorted`).
     pub fn with_route_sorted(mut self, sorted: bool) -> Self {
         self.route_sorted = sorted;
+        self
+    }
+
+    /// Builder-style live-metrics sink (see the `obs` field).
+    pub fn with_obs(mut self, obs: std::sync::Arc<crate::obs::Registry>) -> Self {
+        self.obs = Some(obs);
         self
     }
 
@@ -481,7 +493,12 @@ impl<'a> Dispatcher<'a> {
             for &i in group.iter() {
                 gather.extend_from_slice(&x_norm[i * d_in..(i + 1) * d_in]);
             }
+            // Clock reads gated on the sink: offline eval pays nothing.
+            let t0 = self.obs.as_ref().map(|_| std::time::Instant::now());
             self.forward_into(Role::Approx, k, gather, group.len(), gemm, qgemm, group_out)?;
+            if let (Some(obs), Some(t0)) = (&self.obs, t0) {
+                obs.record_route_execute(k, t0.elapsed().as_micros() as u64);
+            }
             for (j, &i) in group.iter().enumerate() {
                 y[i * d_out..(i + 1) * d_out]
                     .copy_from_slice(&group_out[j * d_out..(j + 1) * d_out]);
@@ -492,6 +509,10 @@ impl<'a> Dispatcher<'a> {
         // registered function, a held-out lookup, or a hard reject).
         raw_out.clear();
         raw_out.resize(d_out, 0.0);
+        let t_cpu = match &self.obs {
+            Some(_) if !plan.cpu.is_empty() => Some(std::time::Instant::now()),
+            _ => None,
+        };
         for &i in &plan.cpu {
             precise.serve_norm_into(
                 self.bench,
@@ -499,6 +520,9 @@ impl<'a> Dispatcher<'a> {
                 raw_out,
                 &mut y[i * d_out..(i + 1) * d_out],
             )?;
+        }
+        if let (Some(obs), Some(t_cpu)) = (&self.obs, t_cpu) {
+            obs.stage_fallback.record(t_cpu.elapsed().as_micros() as u64);
         }
         Ok(())
     }

@@ -36,7 +36,8 @@ use std::time::{Duration, Instant};
 
 use crate::config::{BatchPolicy, ExecMode, Method};
 use crate::formats::{BenchManifest, Dataset, Manifest, WeightsFile, WorkloadKind};
-use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler};
+use crate::obs::{Event, Obs};
+use crate::qos::{Controller, QosConfig, QosReport, ShadowSampler, MARGIN_PRECISE};
 use crate::runtime::{ModelBank, Runtime};
 use crate::util::lock_unpoisoned;
 use crate::workload::{NearestLookup, PreciseProxy};
@@ -61,7 +62,16 @@ pub struct Response {
     /// Normalised-space output actually served.
     pub y: Vec<f32>,
     pub route: Route,
+    /// Submit → dispatch latency (the SERVED latency: when the worker
+    /// handed the response to egress, measured from `Request::submitted`).
+    /// Client-delivery time is a separate measurement — the response pump
+    /// records submit → delivered into `obs` only for writes that
+    /// actually reached the socket, so a dead client can't skew it.
     pub latency_us: f64,
+    /// When the request entered the pipeline — lets the delivery side
+    /// compute submit → delivered without re-deriving it from
+    /// `latency_us`.
+    pub submitted: Instant,
     /// How many rows shared this request's dispatch batch — the
     /// micro-batching observable, carried per-response so socket clients
     /// (and `bench-load`) can build the batch-size histogram end to end.
@@ -183,12 +193,18 @@ enum BatchMsg {
 struct LostGuard<'a> {
     lost: &'a AtomicU64,
     remaining: u64,
+    /// In-flight gauge to release the shortfall from (None in unit
+    /// tests); kept exact even when a worker dies mid-batch.
+    inflight: Option<&'a crate::obs::Gauge>,
 }
 
 impl Drop for LostGuard<'_> {
     fn drop(&mut self) {
         if self.remaining > 0 {
             self.lost.fetch_add(self.remaining, Ordering::Release);
+            if let Some(g) = self.inflight {
+                g.add(-(self.remaining as i64));
+            }
         }
     }
 }
@@ -198,6 +214,12 @@ impl Drop for LostGuard<'_> {
 /// further observations (counted in `ClassCounters::shadow_dropped`)
 /// instead of queueing unbounded memory or ever blocking dispatch.
 const SHADOW_QUEUE_CAP: usize = 1024;
+
+/// Fraction of request ids whose spans land in the trace journal.  The
+/// pick is the same pure `(seed, id)` hash discipline as shadow
+/// sampling (different mixing constant), so the traced set is
+/// worker-count invariant.
+const DEFAULT_TRACE_RATE: f64 = 0.02;
 
 /// How long the QoS thread waits for an observation before checking
 /// whether an open circuit breaker needs a wall-clock cooldown tick
@@ -260,6 +282,10 @@ pub struct Server {
     /// Responses workers failed to deliver (panic or error mid-batch),
     /// maintained by [`LostGuard`] so the drain never waits for them.
     lost: Arc<AtomicU64>,
+    /// Live observability: stage-histogram registry + span journal,
+    /// shared with every pipeline thread (and, via [`Server::obs`], with
+    /// the network front-end's readers and response pump).
+    obs: Obs,
 }
 
 /// Cloneable ingress handle for threads that submit requests without
@@ -272,6 +298,7 @@ pub struct Server {
 pub struct Submitter {
     ingress: mpsc::Sender<Option<Request>>,
     submitted: Arc<AtomicU64>,
+    metrics: Arc<crate::obs::Registry>,
 }
 
 impl Submitter {
@@ -282,6 +309,8 @@ impl Submitter {
             .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
         // audit:allow(atomics) — monotone counter; the mpsc send above orders it against the drain
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.submitted.inc();
+        self.metrics.inflight.add(1);
         Ok(())
     }
 
@@ -314,11 +343,25 @@ impl Server {
         let d_in = bench.n_in;
         let policy = cfg.policy;
 
+        // Observability plane: shared registry + sampled span journal.
+        // Trace sampling reuses the QoS seed when present so one seed
+        // pins both deterministic samples.
+        let trace_seed = cfg.qos.as_ref().map(|q| q.seed).unwrap_or(0x0B5E_0B5E);
+        let obs = Obs::new(trace_seed, DEFAULT_TRACE_RATE);
+        obs.metrics.set_exec_mode(match cfg.exec {
+            ExecMode::Native => "native",
+            ExecMode::NativeQ8 => "native-q8",
+            ExecMode::Pjrt => "pjrt",
+        });
+        obs.metrics.qos_enabled.set(cfg.qos.is_some() as i64);
+
+        let batcher_metrics = Arc::clone(&obs.metrics);
         let batcher_thread = thread::Builder::new()
             .name("mcma-batcher".into())
             .spawn(move || {
                 let mut batcher = Batcher::new(policy, d_in);
                 loop {
+                    batcher_metrics.batch_queue_depth.set(batcher.pending() as i64);
                     // The tick tracks the batcher's ADAPTIVE age budget
                     // (idle regime: max_wait/16), so a lone request is
                     // re-polled — and dispatched — on the short idle
@@ -328,7 +371,7 @@ impl Server {
                         Duration::from_micros((batcher.effective_wait_us() / 2).max(50));
                     match in_rx.recv_timeout(tick) {
                         Ok(Some(req)) => {
-                            if let Some(b) = batcher.push(req.id, req.x_raw) {
+                            if let Some(b) = batcher.push(req.id, req.x_raw, req.submitted) {
                                 let _ = batch_tx.send(BatchMsg::Work(b));
                             }
                             // Age check must ALSO run on the arrival path:
@@ -424,6 +467,7 @@ impl Server {
             let obs_tx = obs_tx.clone();
             let table_lookup = table_store.as_ref().map(|(_, l)| Arc::clone(l));
             let cfg = cfg.clone();
+            let obs = obs.clone();
             worker_threads.push(
                 thread::Builder::new()
                     .name(format!("mcma-dispatch-{w}"))
@@ -453,6 +497,11 @@ impl Server {
                                 .with_precise_proxy(PreciseProxy::Lookup(Arc::clone(lookup))),
                             _ => dispatcher,
                         };
+                        // Per-class execute + precise-fallback timing lands
+                        // in the shared registry straight from the
+                        // dispatcher's inner loops.
+                        let dispatcher = dispatcher.with_obs(Arc::clone(&obs.metrics));
+                        let tracer = obs.journal.sampler();
                         let mut batches = 0u64;
                         let d_in = bench.n_in;
                         let d_out = bench.n_out;
@@ -478,6 +527,7 @@ impl Server {
                                     let mut guard = LostGuard {
                                         lost: &lost,
                                         remaining: batch.ids.len() as u64,
+                                        inflight: Some(&obs.metrics.inflight),
                                     };
                                     let margin_view = match &qos_shared {
                                         Some(sh) => {
@@ -486,6 +536,7 @@ impl Server {
                                         }
                                         None => None,
                                     };
+                                    let recv_now = Instant::now();
                                     dispatcher.process_batch_with_margins_into(
                                         &batch,
                                         margin_view,
@@ -494,6 +545,12 @@ impl Server {
                                         &mut scratch,
                                     )?;
                                     let now = Instant::now();
+                                    // Execute time is batch-level; it is
+                                    // recorded once PER ROW below so every
+                                    // stage histogram has the same count
+                                    // and the waterfall sums row-wise.
+                                    let exec_us =
+                                        now.duration_since(recv_now).as_micros() as u64;
                                     // Lockstep iteration instead of indexed
                                     // access: a ragged plan/output length can
                                     // only truncate (and be counted lost),
@@ -503,16 +560,53 @@ impl Server {
                                         .iter()
                                         .zip(y.chunks_exact(d_out.max(1)))
                                         .zip(plan.routes.iter())
-                                        .zip(batch.enqueued.iter());
-                                    for (((&id, y_row), &route), &enq) in rows {
+                                        .zip(batch.enqueued.iter())
+                                        .zip(batch.submitted.iter());
+                                    for ((((&id, y_row), &route), &enq), &sub) in rows {
+                                        // duration_since saturates to zero,
+                                        // so stage stamps read on different
+                                        // threads can never panic here.
+                                        let queue_us =
+                                            enq.duration_since(sub).as_micros() as u64;
+                                        let batch_us =
+                                            recv_now.duration_since(enq).as_micros() as u64;
+                                        let e2e_us =
+                                            now.duration_since(sub).as_micros() as u64;
+                                        obs.metrics.stage_queue.record(queue_us);
+                                        obs.metrics.stage_batch.record(batch_us);
+                                        obs.metrics.stage_execute.record(exec_us);
+                                        obs.metrics.e2e_dispatch.record(e2e_us);
+                                        obs.metrics.dispatched.inc();
+                                        obs.metrics.inflight.add(-1);
+                                        match route {
+                                            Route::Approx(_) => {
+                                                obs.metrics.route_invoked_rows.inc()
+                                            }
+                                            Route::Cpu => obs.metrics.route_cpu_rows.inc(),
+                                        }
+                                        if tracer.pick(id) {
+                                            obs.journal.push(Event::Span {
+                                                id,
+                                                route: match route {
+                                                    Route::Approx(k) => k as i64,
+                                                    Route::Cpu => -1,
+                                                },
+                                                queue_us,
+                                                batch_us,
+                                                exec_us,
+                                                e2e_us,
+                                                at_us: obs.journal.now_us(),
+                                            });
+                                        }
                                         let _ = out_tx.send(Response {
                                             id,
                                             y: y_row.to_vec(),
                                             route,
                                             latency_us: now
-                                                .duration_since(enq)
+                                                .duration_since(sub)
                                                 .as_secs_f64()
                                                 * 1e6,
+                                            submitted: sub,
                                             batch_n: batch.n as u32,
                                         });
                                         guard.remaining -= 1;
@@ -539,13 +633,17 @@ impl Server {
                                         for (((&id, &route), x_row), y_row) in shadow_rows {
                                             if let Route::Approx(k) = route {
                                                 if s.pick(id) {
-                                                    let obs = ShadowObs {
+                                                    let sob = ShadowObs {
                                                         class: k,
                                                         x_raw: x_row.to_vec(),
                                                         y_served: y_row.to_vec(),
                                                     };
-                                                    if tx.try_send(obs).is_err() {
+                                                    if tx.try_send(sob).is_err() {
                                                         c.record_shadow_dropped();
+                                                        obs.metrics.shadow_drops.inc();
+                                                        obs.journal.push(Event::ShadowDrop {
+                                                            at_us: obs.journal.now_us(),
+                                                        });
                                                     }
                                                 }
                                             }
@@ -576,6 +674,7 @@ impl Server {
                 let counters = Arc::clone(counters);
                 let method = cfg.method;
                 let table_store = table_store.clone();
+                let qobs = obs.clone();
                 Some(
                     thread::Builder::new()
                         .name("mcma-qos".into())
@@ -599,6 +698,10 @@ impl Server {
                             };
                             let mut ctrl = Controller::new(q, n_approx);
                             let mut margins: Vec<f32> = Vec::new();
+                            // Last margins mirrored to the obs plane —
+                            // diffed on every publish to emit margin-move
+                            // and breaker-transition events.
+                            let mut prev_margins: Vec<f32> = vec![0.0; n_approx];
                             if q.warm_start {
                                 // Seed margins from the offline replay of
                                 // the held-out set instead of cold-starting
@@ -613,6 +716,8 @@ impl Server {
                                         ctrl.seed_margins(&m);
                                         ctrl.margins_into(&mut margins);
                                         shared.publish(&margins);
+                                        note_qos_publish(&qobs, &prev_margins, &margins);
+                                        prev_margins.clone_from(&margins);
                                     }
                                     Ok(None) => eprintln!(
                                         "mcma-qos: no held-out test.bin — \
@@ -628,20 +733,30 @@ impl Server {
                             let mut y_precise = vec![0.0f32; bench.n_out];
                             loop {
                                 match obs_rx.recv_timeout(BREAKER_IDLE_TICK) {
-                                    Ok(obs) => {
+                                    Ok(sob) => {
+                                        let t_shadow = Instant::now();
                                         proxy.serve_norm_into(
                                             &bench,
-                                            &obs.x_raw,
+                                            &sob.x_raw,
                                             &mut raw,
                                             &mut y_precise,
                                         )?;
+                                        qobs.metrics
+                                            .stage_shadow
+                                            .record(t_shadow.elapsed().as_micros() as u64);
                                         let err =
-                                            crate::qos::row_rmse(&obs.y_served, &y_precise);
-                                        counters.record_shadow(obs.class);
-                                        ctrl.observe(obs.class, err);
+                                            crate::qos::row_rmse(&sob.y_served, &y_precise);
+                                        counters.record_shadow(sob.class);
+                                        ctrl.observe(sob.class, err);
                                         if ctrl.maybe_tick() {
                                             ctrl.margins_into(&mut margins);
                                             shared.publish(&margins);
+                                            note_qos_publish(
+                                                &qobs,
+                                                &prev_margins,
+                                                &margins,
+                                            );
+                                            prev_margins.clone_from(&margins);
                                         }
                                     }
                                     Err(mpsc::RecvTimeoutError::Timeout) => {
@@ -658,6 +773,12 @@ impl Server {
                                             ctrl.tick();
                                             ctrl.margins_into(&mut margins);
                                             shared.publish(&margins);
+                                            note_qos_publish(
+                                                &qobs,
+                                                &prev_margins,
+                                                &margins,
+                                            );
+                                            prev_margins.clone_from(&margins);
                                         }
                                     }
                                     Err(mpsc::RecvTimeoutError::Disconnected) => break,
@@ -684,6 +805,7 @@ impl Server {
             started: Instant::now(),
             submitted: Arc::new(AtomicU64::new(0)),
             lost,
+            obs,
         })
     }
 
@@ -694,6 +816,8 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("server ingress closed"))?;
         // audit:allow(atomics) — monotone counter; the mpsc send above orders it against the drain
         self.submitted.fetch_add(1, Ordering::Relaxed);
+        self.obs.metrics.submitted.inc();
+        self.obs.metrics.inflight.add(1);
         Ok(())
     }
 
@@ -703,7 +827,15 @@ impl Server {
         Submitter {
             ingress: self.ingress.clone(),
             submitted: Arc::clone(&self.submitted),
+            metrics: Arc::clone(&self.obs.metrics),
         }
+    }
+
+    /// The pipeline's observability handle (metrics registry + span
+    /// journal) — cloneable; the network front-end's readers and response
+    /// pump record into the same plane the STATS scrape snapshots.
+    pub fn obs(&self) -> Obs {
+        self.obs.clone()
     }
 
     /// Receive one response (blocking with timeout).
@@ -825,6 +957,39 @@ fn warm_start_margins(
     Ok(Some(sim.final_margins))
 }
 
+/// Mirror one controller publish into the observability plane: per-class
+/// margin gauges, margin-move / breaker counters, journal events, and
+/// the open-breaker gauge.  A class forced precise publishes
+/// [`MARGIN_PRECISE`] — that sentinel is how breaker transitions are
+/// recognised here without reaching into controller internals.  Classes
+/// beyond [`crate::obs::OBS_ROUTE_CLASSES`] still produce events; only
+/// the fixed gauge array truncates.
+fn note_qos_publish(obs: &Obs, prev: &[f32], cur: &[f32]) {
+    let at_us = obs.journal.now_us();
+    for (class, (&old, &new)) in prev.iter().zip(cur.iter()).enumerate() {
+        if old == new {
+            continue;
+        }
+        let was_open = old >= MARGIN_PRECISE;
+        let is_open = new >= MARGIN_PRECISE;
+        if is_open && !was_open {
+            obs.metrics.breaker_trips.inc();
+            obs.journal.push(Event::Breaker { class, open: true, at_us });
+        } else if was_open && !is_open {
+            obs.metrics.breaker_resets.inc();
+            obs.journal.push(Event::Breaker { class, open: false, at_us });
+        } else {
+            obs.metrics.margin_moves.inc();
+            obs.journal.push(Event::MarginMove { class, from: old, to: new, at_us });
+        }
+    }
+    for (slot, &m) in obs.metrics.qos_margins.iter().zip(cur.iter()) {
+        slot.set(m);
+    }
+    let open = cur.iter().filter(|&&m| m >= MARGIN_PRECISE).count();
+    obs.metrics.open_breakers.set(open as i64);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -838,7 +1003,7 @@ mod tests {
 
         // Fully-sent batch: no loss.
         {
-            let mut g = LostGuard { lost: &lost, remaining: 3 };
+            let mut g = LostGuard { lost: &lost, remaining: 3, inflight: None };
             for _ in 0..3 {
                 g.remaining -= 1;
             }
@@ -847,14 +1012,14 @@ mod tests {
 
         // Error return after 1 of 4 responses: 3 lost.
         {
-            let mut g = LostGuard { lost: &lost, remaining: 4 };
+            let mut g = LostGuard { lost: &lost, remaining: 4, inflight: None };
             g.remaining -= 1;
         }
         assert_eq!(lost.load(Ordering::Acquire), 3);
 
         // Panic unwind mid-batch still releases the count.
         let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let mut g = LostGuard { lost: &lost, remaining: 5 };
+            let mut g = LostGuard { lost: &lost, remaining: 5, inflight: None };
             g.remaining -= 2;
             panic!("worker panic (expected in test)");
         }));

@@ -25,6 +25,9 @@
 //!   batcher, multiclass router, MCCA cascade, weight-switch cache,
 //!   dispatcher, threaded pipeline server, metrics.
 //! * [`npu`] — cycle-level NPU simulator + energy model (Fig. 8).
+//! * [`obs`] — live observability: lock-free stage-histogram metrics
+//!   registry, sampled span journal, and the snapshot payload behind
+//!   the in-band STATS scrape and `mcma stats`.
 //! * [`net`] — TCP serving front-end: length-prefixed binary frames,
 //!   per-connection reader threads over the existing submit path, a
 //!   response pump with exact dead-client accounting, and the seeded
@@ -67,6 +70,7 @@ pub mod formats;
 pub mod net;
 pub mod nn;
 pub mod npu;
+pub mod obs;
 pub mod qos;
 pub mod runtime;
 pub mod train;

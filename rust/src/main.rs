@@ -66,6 +66,7 @@ fn run(args: Args) -> mcma::Result<()> {
         }
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
+        Some("stats") => stats_cmd(&args),
         Some("bench-load") => bench_load_cmd(&args),
         Some("train") => train_cmd(&args),
         Some("npu-sim") => npu_sim_cmd(&args),
@@ -293,6 +294,28 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         },
     )?;
 
+    // Observability writers (`--metrics-json` overwrites a snapshot
+    // every `--metrics-interval-s`; `--trace-json` appends the drained
+    // span journal as JSON lines).  The handle is taken before the net
+    // front-end consumes the server; the detached writer thread keeps
+    // the files fresh even on the serve-forever path, and the explicit
+    // flushes below cover the clean-shutdown paths.
+    let obs = server.obs();
+    let trace_json = args.opt("trace-json").map(std::path::PathBuf::from);
+    let metrics_json = args.opt("metrics-json").map(std::path::PathBuf::from);
+    let metrics_interval = args.opt_usize("metrics-interval-s", 5)?.max(1) as u64;
+    if metrics_json.is_some() || trace_json.is_some() {
+        let obs = obs.clone();
+        let metrics_json = metrics_json.clone();
+        let trace_json = trace_json.clone();
+        std::thread::Builder::new()
+            .name("mcma-obs-writer".into())
+            .spawn(move || loop {
+                std::thread::sleep(std::time::Duration::from_secs(metrics_interval));
+                write_observability(&obs, metrics_json.as_deref(), trace_json.as_deref());
+            })?;
+    }
+
     // `--listen ADDR`: serve over TCP (length-prefixed binary frames)
     // instead of generating in-process demo traffic.  `--duration 0`
     // (the default) serves until the process is killed.
@@ -307,6 +330,7 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         }
         std::thread::sleep(std::time::Duration::from_secs(duration));
         let net_report = net.shutdown()?;
+        write_observability(&obs, metrics_json.as_deref(), trace_json.as_deref());
         println!("connections      : {} accepted ({} killed malformed)",
                  net_report.accepted, net_report.malformed);
         println!("delivery failed  : {} (responses owed to dead clients)",
@@ -328,9 +352,193 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
         server.submit(id, x.clone())?;
     }
     let report = server.shutdown(Vec::new())?;
+    write_observability(&obs, metrics_json.as_deref(), trace_json.as_deref());
     print_server_report(&report);
     anyhow::ensure!(report.served as usize == n_requests, "dropped requests");
     Ok(())
+}
+
+/// Flush the live observability state: snapshot JSON (overwritten in
+/// place — readers always see a complete recent document) and newly
+/// journaled trace events (appended as JSON lines; the drain is
+/// destructive, so each event lands in the file exactly once).
+/// Best-effort: a full disk must not kill a serving process.
+fn write_observability(
+    obs: &mcma::obs::Obs,
+    metrics: Option<&std::path::Path>,
+    trace: Option<&std::path::Path>,
+) {
+    if let Some(p) = metrics {
+        let json = mcma::util::json::write(&obs.snapshot_json());
+        if let Err(e) = std::fs::write(p, json) {
+            eprintln!("warning: writing {}: {e}", p.display());
+        }
+    }
+    if let Some(p) = trace {
+        let lines = obs.journal.drain_json_lines();
+        if lines.is_empty() {
+            return;
+        }
+        use std::io::Write as _;
+        let appended = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(p)
+            .and_then(|mut f| f.write_all(lines.as_bytes()));
+        if let Err(e) = appended {
+            eprintln!("warning: appending {}: {e}", p.display());
+        }
+    }
+}
+
+/// `mcma stats`: scrape a running `serve --listen` server through the
+/// in-band STATS frame and print its stage waterfall.  The address is
+/// positional (`mcma stats 127.0.0.1:7090`) or `--addr`; `--watch SECS`
+/// re-scrapes until interrupted; `--json PATH` also dumps each raw
+/// snapshot for tooling.
+fn stats_cmd(args: &Args) -> mcma::Result<()> {
+    let addr = args
+        .pos("addr")
+        .or_else(|| args.opt("addr"))
+        .ok_or_else(|| {
+            anyhow::anyhow!("address required: `mcma stats HOST:PORT` (or --addr HOST:PORT)")
+        })?
+        .to_string();
+    let watch = args.opt_usize("watch", 0)? as u64;
+    let json_path = args.opt("json").map(std::path::PathBuf::from);
+    loop {
+        let snap = mcma::net::load::scrape_stats(&addr, 0)?;
+        print_stats_snapshot(&snap);
+        if let Some(p) = &json_path {
+            std::fs::write(p, mcma::util::json::write(&snap))
+                .map_err(|e| anyhow::anyhow!("writing {}: {e}", p.display()))?;
+            println!("wrote {}", p.display());
+        }
+        if watch == 0 {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs(watch));
+        println!();
+    }
+}
+
+/// Render one STATS snapshot: headline counters, the stage waterfall,
+/// per-route-class execute latency, and the QoS margin/breaker state.
+/// Stage histograms are log2-bucketed, so printed percentiles carry at
+/// most 2x bucket error (see README "Observability").
+fn print_stats_snapshot(snap: &mcma::util::json::Value) {
+    let f = |path: &[&str]| -> f64 {
+        let mut cur = snap;
+        for key in path {
+            match cur.get(key) {
+                Some(v) => cur = v,
+                None => return 0.0,
+            }
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+    println!(
+        "uptime           : {:.1} s (exec {})",
+        f(&["uptime_s"]),
+        snap.get("exec_mode").and_then(|v| v.as_str()).unwrap_or("?")
+    );
+    println!(
+        "connections      : {:.0} accepted, {:.0} closed, {:.0} malformed frames, {:.0} stats scrapes",
+        f(&["counters", "accepted_conns"]),
+        f(&["counters", "closed_conns"]),
+        f(&["counters", "malformed_frames"]),
+        f(&["counters", "stats_requests"]),
+    );
+    println!(
+        "requests         : {:.0} submitted -> {:.0} dispatched -> {:.0} delivered ({:.0} delivery failures)",
+        f(&["counters", "submitted"]),
+        f(&["counters", "dispatched"]),
+        f(&["counters", "delivered"]),
+        f(&["counters", "delivery_failures"]),
+    );
+    println!(
+        "rows             : {:.0} invoked (approximated), {:.0} cpu-precise",
+        f(&["counters", "route_invoked_rows"]),
+        f(&["counters", "route_cpu_rows"]),
+    );
+    println!(
+        "inflight / queue : {:.0} / {:.0}",
+        f(&["gauges", "inflight"]),
+        f(&["gauges", "batch_queue_depth"]),
+    );
+
+    let mut t = Table::new(
+        "Stage waterfall (µs; log2 buckets — percentiles within 2x)",
+        &["stage", "count", "p50", "p90", "p99", "mean"],
+    );
+    for name in [
+        "decode",
+        "queue",
+        "batch",
+        "execute",
+        "fallback",
+        "shadow_verify",
+        "pump",
+        "e2e_dispatch",
+        "e2e_delivered",
+    ] {
+        let h = |k: &str| f(&["stages", name, k]);
+        if h("count") == 0.0 {
+            continue;
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{:.0}", h("count")),
+            format!("{:.0}", h("p50_us")),
+            format!("{:.0}", h("p90_us")),
+            format!("{:.0}", h("p99_us")),
+            format!("{:.0}", h("mean_us")),
+        ]);
+    }
+    t.print();
+
+    // Per-route-class GEMM execute latency (only classes that ran).
+    let routes = snap.get("route_execute").and_then(|v| v.as_arr()).unwrap_or(&[]);
+    for entry in routes {
+        let Some(pair) = entry.as_arr() else { continue };
+        let (Some(k), Some(h)) = (pair.first().and_then(|v| v.as_f64()), pair.get(1)) else {
+            continue;
+        };
+        let g = |key: &str| h.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!(
+            "route A{k:.0} execute : {:.0} batches, p50 {:.0} µs, p99 {:.0} µs",
+            g("count"),
+            g("p50_us"),
+            g("p99_us"),
+        );
+    }
+
+    if f(&["gauges", "qos_enabled"]) > 0.0 {
+        let margins: Vec<String> = snap
+            .get("qos_margins")
+            .and_then(|v| v.as_arr())
+            .unwrap_or(&[])
+            .iter()
+            .map(|v| format!("{:.3}", v.as_f64().unwrap_or(0.0)))
+            .collect();
+        println!(
+            "qos              : margins [{}], {:.0} open breakers",
+            margins.join(" "),
+            f(&["gauges", "open_breakers"]),
+        );
+        println!(
+            "qos churn        : {:.0} margin moves, {:.0} trips, {:.0} resets, {:.0} shadow drops",
+            f(&["counters", "margin_moves"]),
+            f(&["counters", "breaker_trips"]),
+            f(&["counters", "breaker_resets"]),
+            f(&["counters", "shadow_drops"]),
+        );
+    }
+    println!(
+        "trace journal    : {:.0} buffered, {:.0} dropped",
+        f(&["trace", "buffered"]),
+        f(&["trace", "dropped"]),
+    );
 }
 
 /// Shared report printer for the in-process and `--listen` serve paths.
@@ -497,6 +705,22 @@ fn bench_load_cmd(args: &Args) -> mcma::Result<()> {
         "violations       : {} (target {:.4})",
         report.violations, cfg.qos_target
     );
+    if let Some(stages) = report.stats_snapshot.as_ref().and_then(|s| s.get("stages")) {
+        let p50 = |name: &str| {
+            stages
+                .get(name)
+                .and_then(|h| h.get("p50_us"))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        println!(
+            "server waterfall : queue {:.0} + batch {:.0} + execute {:.0} + pump {:.0} µs (p50, mid-run scrape)",
+            p50("queue"),
+            p50("batch"),
+            p50("execute"),
+            p50("pump"),
+        );
+    }
 
     let csv_path = match args.opt("csv") {
         Some("none") => None,
@@ -542,6 +766,31 @@ fn bench_load_cmd(args: &Args) -> mcma::Result<()> {
         }
         for (c, n) in report.per_class_sent.iter().enumerate() {
             rec.extra(&format!("mix_class_{c}_sent"), *n as f64);
+        }
+        // Server-side stage waterfall from the mid-run STATS scrape:
+        // decomposes the client-observed e2e latency above into the
+        // pipeline stages, so the cross-PR BENCH_serve trajectory can
+        // attribute regressions to a stage rather than to "serving".
+        if let Some(stages) =
+            report.stats_snapshot.as_ref().and_then(|s| s.get("stages"))
+        {
+            for stage in [
+                "decode",
+                "queue",
+                "batch",
+                "execute",
+                "fallback",
+                "pump",
+                "e2e_dispatch",
+                "e2e_delivered",
+            ] {
+                let Some(h) = stages.get(stage) else { continue };
+                for q in ["count", "p50_us", "p99_us", "mean_us"] {
+                    if let Some(x) = h.get(q).and_then(|v| v.as_f64()) {
+                        rec.extra(&format!("stage_{stage}_{q}"), x);
+                    }
+                }
+            }
         }
         rec.write_json("mcma-serve-load", &p)?;
     }

@@ -4,8 +4,10 @@
 //! payload.  Payload layouts (all integers little-endian):
 //!
 //! ```text
-//! request   [ver u8][kind=1 u8][tag u16][id u64][row f32 × d_in]
-//! response  [ver u8][kind=2 u8][route u16][batch_n u16][id u64][y f32 × d_out]
+//! request    [ver u8][kind=1 u8][tag u16][id u64][row f32 × d_in]
+//! response   [ver u8][kind=2 u8][route u16][batch_n u16][id u64][y f32 × d_out]
+//! stats req  [ver u8][kind=3 u8][tag u16][id u64]                (no row)
+//! stats resp [ver u8][kind=3 u8][json bytes]
 //! ```
 //!
 //! * `ver` is [`FRAME_VERSION`]; a mismatch is malformed.
@@ -17,6 +19,12 @@
 //!   micro-batching observable `bench-load` histograms client-side.
 //! * `id` is opaque to the server and echoed verbatim: clients pick any
 //!   correlation scheme they like.
+//! * a stats request is exactly a request header with `kind = 3`; the
+//!   reply is the live [`crate::obs`] JSON snapshot.  Stats responses
+//!   are the one frame whose payload is not f32-row-shaped, so they are
+//!   decoded by [`decode_stats_response`] (and read client-side by
+//!   [`read_stats_response`], which allows up to [`MAX_STATS_BYTES`]),
+//!   never by `check_head`'s multiple-of-4 rule.
 //!
 //! Malformed or oversized frames are connection-fatal, never
 //! process-fatal: [`FrameError::Malformed`] tells the listener to drop
@@ -39,6 +47,8 @@ pub const FRAME_VERSION: u8 = 1;
 /// Payload kind bytes.
 pub const KIND_REQUEST: u8 = 1;
 pub const KIND_RESPONSE: u8 = 2;
+/// In-band observability scrape (request AND response use this kind).
+pub const KIND_STATS: u8 = 3;
 
 /// `route` wire value for the precise CPU path (approximator classes are
 /// their index, so `u16::MAX` can never collide).
@@ -56,6 +66,12 @@ pub const MAX_FRAME_BYTES: usize = RESP_HEADER + 4 * MAX_ROW_ELEMS;
 
 const REQ_HEADER: usize = 1 + 1 + 2 + 8;
 const RESP_HEADER: usize = 1 + 1 + 2 + 2 + 8;
+
+/// Hard cap on a stats RESPONSE payload (the JSON snapshot).  Stats
+/// replies only flow server → client and are read with the dedicated
+/// [`read_stats_response`], so this cap can exceed [`MAX_FRAME_BYTES`]
+/// without widening what the server-side readers will accept.
+pub const MAX_STATS_BYTES: usize = 2 + 64 * 1024;
 
 /// Frame-layer failure.  `Io` is transport trouble (peer gone); both
 /// variants kill the one connection they occurred on.
@@ -211,6 +227,85 @@ pub fn decode_response(payload: &[u8], y_out: &mut Vec<f32>) -> Result<ResponseH
     Ok(ResponseHead { route, batch_n, id })
 }
 
+/// Encode a stats request (length prefix included): a bare request
+/// header with [`KIND_STATS`] and no row.
+pub fn encode_stats_request(buf: &mut Vec<u8>, tag: u16, id: u64) {
+    buf.clear();
+    buf.extend_from_slice(&(REQ_HEADER as u32).to_le_bytes());
+    buf.push(FRAME_VERSION);
+    buf.push(KIND_STATS);
+    buf.extend_from_slice(&tag.to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+}
+
+/// Decode a stats request payload — exactly a request header, nothing
+/// after it (a stats frame carrying extra bytes is malformed).
+pub fn decode_stats_request(payload: &[u8]) -> Result<RequestHead, FrameError> {
+    if payload.len() != REQ_HEADER {
+        return Err(malformed(format!(
+            "stats request is {} bytes (expected {REQ_HEADER})",
+            payload.len()
+        )));
+    }
+    check_head(payload, KIND_STATS, REQ_HEADER)?;
+    let tag = get_u16(payload, 2)?;
+    let id = get_u64(payload, 4)?;
+    Ok(RequestHead { tag, id })
+}
+
+/// Encode a stats response (length prefix included): `[ver][kind=3]`
+/// followed by raw JSON bytes.
+pub fn encode_stats_response(buf: &mut Vec<u8>, json_bytes: &[u8]) {
+    assert!(
+        json_bytes.len() <= MAX_STATS_BYTES - 2,
+        "stats snapshot exceeds MAX_STATS_BYTES"
+    );
+    buf.clear();
+    let len = (2 + json_bytes.len()) as u32;
+    buf.extend_from_slice(&len.to_le_bytes());
+    buf.push(FRAME_VERSION);
+    buf.push(KIND_STATS);
+    buf.extend_from_slice(json_bytes);
+}
+
+/// Decode a stats response payload, returning the JSON bytes.  Total on
+/// any input: the payload is length-arbitrary by design, so only the
+/// version and kind bytes are validated.
+pub fn decode_stats_response(payload: &[u8]) -> Result<&[u8], FrameError> {
+    let (ver, kind) = match payload {
+        &[ver, k, ..] => (ver, k),
+        _ => return Err(malformed("stats payload shorter than 2 bytes")),
+    };
+    if ver != FRAME_VERSION {
+        return Err(malformed(format!(
+            "version {ver} (expected {FRAME_VERSION})"
+        )));
+    }
+    if kind != KIND_STATS {
+        return Err(malformed(format!("kind {kind} (expected {KIND_STATS})")));
+    }
+    Ok(payload.get(2..).unwrap_or(&[]))
+}
+
+/// Blocking read of one stats response frame into `out` (the payload,
+/// prefix stripped) — the dedicated client-side reader: stats replies
+/// may exceed [`MAX_FRAME_BYTES`], which the row-sized [`FrameReader`]
+/// would reject.
+pub fn read_stats_response(r: &mut impl Read, out: &mut Vec<u8>) -> Result<(), FrameError> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < 2 || len > MAX_STATS_BYTES {
+        return Err(malformed(format!(
+            "stats frame length {len} outside [2, {MAX_STATS_BYTES}]"
+        )));
+    }
+    out.clear();
+    out.resize(len, 0);
+    r.read_exact(out.as_mut_slice())?;
+    Ok(())
+}
+
 /// Route ↔ wire mapping.
 pub fn route_to_wire(route: crate::coordinator::Route) -> u16 {
     match route {
@@ -362,6 +457,84 @@ mod tests {
         let head = decode_response(&buf[4..], &mut out).unwrap();
         assert_eq!(head, ResponseHead { route: 3, batch_n: 8, id: u64::MAX });
         assert_eq!(out, y);
+    }
+
+    #[test]
+    fn stats_request_roundtrip() {
+        let mut buf = Vec::new();
+        encode_stats_request(&mut buf, 5, 0xDEAD_BEEF);
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, buf.len() - 4);
+        assert_eq!(len, 12); // bare request header, no row
+        let head = decode_stats_request(&buf[4..]).unwrap();
+        assert_eq!(head, RequestHead { tag: 5, id: 0xDEAD_BEEF });
+    }
+
+    #[test]
+    fn stats_response_roundtrip() {
+        let mut buf = Vec::new();
+        let json = br#"{"uptime_s":1.5,"counters":{}}"#;
+        encode_stats_response(&mut buf, json);
+        // Deliberately NOT a multiple of 4 after the 2-byte head: stats
+        // responses bypass check_head's row-shape rule.
+        let payload = &buf[4..];
+        assert_eq!(decode_stats_response(payload).unwrap(), json);
+
+        let mut out = Vec::new();
+        read_stats_response(&mut Cursor::new(buf.clone()), &mut out).unwrap();
+        assert_eq!(decode_stats_response(&out).unwrap(), json);
+    }
+
+    #[test]
+    fn stats_frames_reject_malformed() {
+        let mut buf = Vec::new();
+        encode_stats_request(&mut buf, 0, 1);
+
+        // Extra trailing bytes on a stats request are malformed.
+        let mut long = buf[4..].to_vec();
+        long.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(matches!(
+            decode_stats_request(&long),
+            Err(FrameError::Malformed(_))
+        ));
+
+        // Wrong version / wrong kind.
+        let mut bad = buf[4..].to_vec();
+        bad[0] = 9;
+        assert!(matches!(
+            decode_stats_request(&bad),
+            Err(FrameError::Malformed(_))
+        ));
+        let mut bad = buf[4..].to_vec();
+        bad[1] = KIND_REQUEST;
+        assert!(matches!(
+            decode_stats_request(&bad),
+            Err(FrameError::Malformed(_))
+        ));
+        assert!(matches!(
+            decode_stats_response(&bad),
+            Err(FrameError::Malformed(_))
+        ));
+        assert!(matches!(
+            decode_stats_response(&[FRAME_VERSION]),
+            Err(FrameError::Malformed(_))
+        ));
+
+        // A stats request still fits through the row-sized FrameReader
+        // (12 bytes << MAX_FRAME_BYTES) — the server reads it in-band.
+        let mut fr = FrameReader::new();
+        let mut cur = Cursor::new(buf.clone());
+        assert_eq!(fr.poll(&mut cur).unwrap(), FramePoll::Frame);
+        assert_eq!(fr.payload().get(1), Some(&KIND_STATS));
+
+        // Hostile stats-reply length prefix is rejected by the client
+        // reader before any oversized allocation.
+        let huge = ((MAX_STATS_BYTES + 1) as u32).to_le_bytes();
+        let mut out = Vec::new();
+        assert!(matches!(
+            read_stats_response(&mut Cursor::new(huge.to_vec()), &mut out),
+            Err(FrameError::Malformed(_))
+        ));
     }
 
     #[test]

@@ -43,10 +43,12 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{Response, Server, ServerReport, Submitter};
+use crate::obs::{Event, Obs};
 use crate::util::lock_unpoisoned;
 
 use super::frame::{
-    decode_request, encode_response, route_to_wire, FrameError, FramePoll, FrameReader,
+    decode_request, decode_stats_request, encode_response, encode_stats_response,
+    route_to_wire, FrameError, FramePoll, FrameReader, KIND_STATS,
 };
 
 /// Socket read timeout: how often reader threads wake to check the stop
@@ -76,6 +78,10 @@ struct Conn {
     dead: bool,
     /// Reused response encode buffer (zero-alloc steady-state writes).
     write_buf: Vec<u8>,
+    /// STATS scrapes awaiting an answer — bumped by the reader thread,
+    /// drained by the response pump (which composes the snapshot JSON
+    /// once per tick no matter how many connections asked).
+    stats_pending: u32,
 }
 
 impl Conn {
@@ -87,6 +93,7 @@ impl Conn {
             in_flight: 0,
             dead: false,
             write_buf: Vec::new(),
+            stats_pending: 0,
         }
     }
 
@@ -169,23 +176,32 @@ impl NetServer {
         let reader_threads: Arc<Mutex<Vec<thread::JoinHandle<()>>>> =
             Arc::new(Mutex::new(Vec::new()));
         let submitter = server.submitter();
+        // Pulled before the pump takes ownership of the Server; readers
+        // and the pump record into the same plane the pipeline threads do.
+        let obs = server.obs();
 
         // Response pump: sole owner of the Server.  Delivers responses
         // to their sockets as they arrive and keeps every one (delivered
         // or not) in `collected`, which makes the final shutdown drain
-        // exact even when clients died mid-batch.
+        // exact even when clients died mid-batch.  It also answers
+        // in-band STATS scrapes: readers bump `Conn::stats_pending`, the
+        // pump writes the snapshot frames from the same thread that owns
+        // response ordering, so a scrape reply never interleaves into
+        // the middle of a response frame.
         let pump_thread = {
             let registry = Arc::clone(&registry);
             let pump_stop = Arc::clone(&pump_stop);
             let submitter = submitter.clone();
+            let obs = obs.clone();
             thread::Builder::new().name("mcma-net-pump".into()).spawn(
                 move || -> crate::Result<(ServerReport, u64)> {
                     let mut collected: Vec<Response> = Vec::new();
                     let mut delivery_failed = 0u64;
                     loop {
+                        answer_stats(&registry, &obs);
                         match server.recv_timeout(PUMP_TICK) {
                             Some(resp) => {
-                                deliver(&registry, &resp, &mut delivery_failed);
+                                deliver(&registry, &resp, &mut delivery_failed, &obs);
                                 collected.push(resp);
                             }
                             None => {
@@ -200,7 +216,12 @@ impl NetServer {
                                 while submitter.submitted() > collected.len() as u64 {
                                     match server.recv_timeout(PUMP_TICK) {
                                         Some(resp) => {
-                                            deliver(&registry, &resp, &mut delivery_failed);
+                                            deliver(
+                                                &registry,
+                                                &resp,
+                                                &mut delivery_failed,
+                                                &obs,
+                                            );
                                             collected.push(resp);
                                             deadline = Instant::now() + QUIESCE_GRACE;
                                         }
@@ -211,6 +232,7 @@ impl NetServer {
                                         }
                                     }
                                 }
+                                answer_stats(&registry, &obs);
                                 let report = server.shutdown(collected)?;
                                 return Ok((report, delivery_failed));
                             }
@@ -256,6 +278,7 @@ impl NetServer {
                     next_conn_id = next_conn_id.wrapping_add(1);
                     // audit:allow(atomics) — monotone counter, read once in shutdown after joins
                     accepted.fetch_add(1, Ordering::Relaxed);
+                    obs.metrics.accepted_conns.inc();
                     lock_unpoisoned(&registry).insert(conn_id, Conn::new(writer));
                     let spawned = thread::Builder::new()
                         .name(format!("mcma-net-conn-{conn_id}"))
@@ -264,10 +287,11 @@ impl NetServer {
                             let registry = Arc::clone(&registry);
                             let malformed = Arc::clone(&malformed);
                             let submitter = submitter.clone();
+                            let obs = obs.clone();
                             move || {
                                 read_connection(
                                     conn_id, stream, &registry, &submitter, &stop,
-                                    &malformed, tag, d_in,
+                                    &malformed, &obs, tag, d_in,
                                 )
                             }
                         });
@@ -328,18 +352,28 @@ impl NetServer {
 }
 
 /// Deliver one response to its connection; dead or vanished connections
-/// are counted, never waited on.
-fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64) {
+/// are counted, never waited on.  Submit → delivered latency (and the
+/// pump stage it implies) is recorded ONLY for writes that actually
+/// reached the socket — a dead client's responses land in
+/// `delivery_failures`, never in the served-latency histograms.
+fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64, obs: &Obs) {
     let conn_id = (resp.id >> 32) as u32;
     let slot = resp.id as u32;
     let mut reg = lock_unpoisoned(registry);
     let Some(conn) = reg.get_mut(&conn_id) else {
         *delivery_failed += 1;
+        obs.metrics.delivery_failures.inc();
         return;
     };
     match conn.release_slot(slot) {
-        None => *delivery_failed += 1,
-        Some(_) if conn.dead => *delivery_failed += 1,
+        None => {
+            *delivery_failed += 1;
+            obs.metrics.delivery_failures.inc();
+        }
+        Some(_) if conn.dead => {
+            *delivery_failed += 1;
+            obs.metrics.delivery_failures.inc();
+        }
         Some(client_id) => {
             let batch_n = resp.batch_n.min(u16::MAX as u32) as u16;
             encode_response(
@@ -352,7 +386,22 @@ fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64) {
             if conn.writer.write_all(&conn.write_buf).is_err() {
                 conn.dead = true;
                 *delivery_failed += 1;
+                obs.metrics.delivery_failures.inc();
                 let _ = conn.writer.shutdown(Shutdown::Both);
+            } else {
+                let e2e_us = resp.submitted.elapsed().as_micros() as u64;
+                let pump_us = (e2e_us as f64 - resp.latency_us).max(0.0) as u64;
+                obs.metrics.stage_pump.record(pump_us);
+                obs.metrics.e2e_delivered.record(e2e_us);
+                obs.metrics.delivered.inc();
+                if obs.journal.sampled(resp.id) {
+                    obs.journal.push(Event::Delivered {
+                        id: resp.id,
+                        pump_us,
+                        e2e_us,
+                        at_us: obs.journal.now_us(),
+                    });
+                }
             }
         }
     }
@@ -361,9 +410,35 @@ fn deliver(registry: &Registry, resp: &Response, delivery_failed: &mut u64) {
     }
 }
 
+/// Answer every pending STATS scrape.  The snapshot JSON is composed at
+/// most once per call, then written to each asking connection through
+/// its reused write buffer.  Runs on the pump thread, so scrape replies
+/// serialise with response frames on each socket.
+fn answer_stats(registry: &Registry, obs: &Obs) {
+    let mut reg = lock_unpoisoned(registry);
+    if !reg.values().any(|c| c.stats_pending > 0) {
+        return;
+    }
+    let json = crate::util::json::write(&obs.snapshot_json());
+    let bytes = json.as_bytes();
+    for conn in reg.values_mut() {
+        while conn.stats_pending > 0 {
+            conn.stats_pending -= 1;
+            if conn.dead {
+                continue;
+            }
+            encode_stats_response(&mut conn.write_buf, bytes);
+            if conn.writer.write_all(&conn.write_buf).is_err() {
+                conn.dead = true;
+                let _ = conn.writer.shutdown(Shutdown::Both);
+            }
+        }
+    }
+}
+
 /// Reader-thread body: decode frames, validate, submit.  Any protocol
 /// violation (bad frame, wrong tag, wrong row width) or transport error
-/// kills this connection only.
+/// kills this connection only — including a malformed STATS frame.
 #[allow(clippy::too_many_arguments)]
 fn read_connection(
     conn_id: u32,
@@ -372,6 +447,7 @@ fn read_connection(
     submitter: &Submitter,
     stop: &AtomicBool,
     malformed: &AtomicU64,
+    obs: &Obs,
     tag: u16,
     d_in: usize,
 ) {
@@ -385,6 +461,28 @@ fn read_connection(
             Ok(FramePoll::Pending) => continue,
             Ok(FramePoll::Closed) => break,
             Ok(FramePoll::Frame) => {
+                let t_decode = Instant::now();
+                // In-band STATS scrape: a bare header frame with the
+                // stats kind.  Validated like any other frame (malformed
+                // kills only this connection), then queued for the pump
+                // to answer — the reader never writes to the socket.
+                if fr.payload().get(1) == Some(&KIND_STATS) {
+                    match decode_stats_request(fr.payload()) {
+                        Ok(h) if h.tag == tag => {
+                            obs.metrics.frames_in.inc();
+                            obs.metrics.stats_requests.inc();
+                            obs.metrics.tags.record(h.tag);
+                            let mut reg = lock_unpoisoned(registry);
+                            let Some(conn) = reg.get_mut(&conn_id) else { break };
+                            conn.stats_pending = conn.stats_pending.saturating_add(1);
+                            continue;
+                        }
+                        _ => {
+                            protocol_violation = true;
+                            break;
+                        }
+                    }
+                }
                 let mut row = Vec::new();
                 let head = match decode_request(fr.payload(), &mut row) {
                     Ok(h) => h,
@@ -397,6 +495,11 @@ fn read_connection(
                     protocol_violation = true;
                     break;
                 }
+                obs.metrics.frames_in.inc();
+                obs.metrics.tags.record(head.tag);
+                obs.metrics
+                    .stage_decode
+                    .record(t_decode.elapsed().as_micros() as u64);
                 let global_id = {
                     let mut reg = lock_unpoisoned(registry);
                     let Some(conn) = reg.get_mut(&conn_id) else { break };
@@ -424,7 +527,9 @@ fn read_connection(
     if protocol_violation {
         // audit:allow(atomics) — monotone counter, read once in shutdown after joins
         malformed.fetch_add(1, Ordering::Relaxed);
+        obs.metrics.malformed_frames.inc();
     }
+    obs.metrics.closed_conns.inc();
     let _ = stream.shutdown(Shutdown::Both);
     let mut reg = lock_unpoisoned(registry);
     if let Some(conn) = reg.get_mut(&conn_id) {

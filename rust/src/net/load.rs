@@ -36,7 +36,8 @@ use crate::formats::Dataset;
 use crate::util::rng::{splitmix64, Rng};
 
 use super::frame::{
-    decode_response, encode_request, wire_to_route, FramePoll, FrameReader,
+    decode_response, decode_stats_response, encode_request, encode_stats_request,
+    read_stats_response, wire_to_route, FramePoll, FrameReader,
 };
 
 /// Arrival model.
@@ -97,6 +98,11 @@ pub struct LoadReport {
     pub per_class_sent: Vec<u64>,
     /// Per-request records in send order (CSV source).
     pub records: Vec<RequestRecord>,
+    /// Server-side observability snapshot scraped mid-run over a second
+    /// connection (in-band STATS frame) — the stage waterfall as the
+    /// server saw it while this load was live.  `None` when the scrape
+    /// connection failed (e.g. pre-STATS server).
+    pub stats_snapshot: Option<crate::util::json::Value>,
 }
 
 impl LoadReport {
@@ -167,6 +173,30 @@ fn draw_request(rng: &mut Rng, mix: &[f64], mix_total: f64, n_rows: usize) -> (u
     let hi = ((class + 1) * n_rows / classes).max(lo + 1);
     let row = lo + rng.below((hi - lo) as u64) as usize;
     (class, row)
+}
+
+/// Scrape a live server's observability snapshot over its own short
+/// connection: send one in-band STATS frame, read back the JSON reply.
+/// Used mid-run by [`run_load`] and directly by `mcma stats`.
+pub fn scrape_stats(addr: &str, tag: u16) -> crate::Result<crate::util::json::Value> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting {addr}: {e}"))?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    let mut buf = Vec::new();
+    encode_stats_request(&mut buf, tag, 0);
+    stream
+        .write_all(&buf)
+        .map_err(|e| anyhow::anyhow!("sending STATS to {addr}: {e}"))?;
+    let mut payload = Vec::new();
+    read_stats_response(&mut stream, &mut payload)
+        .map_err(|e| anyhow::anyhow!("reading STATS reply from {addr}: {e}"))?;
+    let json_bytes = decode_stats_response(&payload)
+        .map_err(|e| anyhow::anyhow!("decoding STATS reply from {addr}: {e}"))?;
+    let text = std::str::from_utf8(json_bytes)
+        .map_err(|e| anyhow::anyhow!("STATS reply from {addr} is not UTF-8: {e}"))?;
+    crate::util::json::parse(text)
+        .map_err(|e| anyhow::anyhow!("STATS reply from {addr} is not JSON: {e}"))
 }
 
 /// Run the load against a live server.  `held_out` is the served
@@ -293,6 +323,13 @@ pub fn run_load(cfg: &LoadConfig, held_out: &Arc<Dataset>) -> crate::Result<Load
     let mut sent = 0u64;
     let mut per_class_sent = vec![0u64; mix.len()];
     let mut buf = Vec::new();
+    // Mid-run stage-waterfall scrape: fire once past the halfway point
+    // (by request cap when set, else by wall clock) so the snapshot
+    // reflects the server under this load, not its idle tail.  The
+    // scrape rides its own connection and its own RNG-free path, so it
+    // cannot perturb the seeded request sequence.
+    let scrape_after = started + cfg.duration / 2;
+    let mut stats_snapshot: Option<crate::util::json::Value> = None;
 
     if let Arrival::ClosedLoop { inflight } = cfg.arrival {
         for _ in 0..inflight.max(1) {
@@ -352,6 +389,18 @@ pub fn run_load(cfg: &LoadConfig, held_out: &Arc<Dataset>) -> crate::Result<Load
         }
         per_class_sent[class] += 1;
         sent += 1;
+        let halfway = match cfg.max_requests {
+            Some(cap) => sent >= cap / 2,
+            None => Instant::now() >= scrape_after,
+        };
+        if stats_snapshot.is_none() && halfway {
+            stats_snapshot = scrape_stats(&cfg.addr, cfg.tag).ok();
+        }
+    }
+    // Short runs can finish before the halfway trigger; scrape now while
+    // the server is still hot (the receiver is still draining the tail).
+    if stats_snapshot.is_none() {
+        stats_snapshot = scrape_stats(&cfg.addr, cfg.tag).ok();
     }
 
     done_sending.store(true, Ordering::Release);
@@ -377,6 +426,7 @@ pub fn run_load(cfg: &LoadConfig, held_out: &Arc<Dataset>) -> crate::Result<Load
         batch_hist: f.batch_hist,
         per_class_sent,
         records: f.records,
+        stats_snapshot,
     })
 }
 
@@ -444,6 +494,7 @@ mod tests {
                     violation: false,
                 },
             ],
+            stats_snapshot: None,
         };
         let path = std::env::temp_dir().join(format!("mcma-load-{}.csv", std::process::id()));
         report.write_csv(&path).unwrap();

@@ -4,11 +4,13 @@
 //! it:
 //!
 //! * [`frame`] — the little-endian length-prefixed wire format (version
-//!   byte, hard size caps, connection-fatal-only malformed errors).
+//!   byte, hard size caps, connection-fatal-only malformed errors),
+//!   including the in-band STATS scrape frames (`KIND_STATS`).
 //! * [`listener`] — [`NetServer`]: accept loop, per-connection reader
 //!   threads feeding the existing submit path, and the response pump
-//!   that owns the [`crate::coordinator::Server`] and keeps its
-//!   shutdown accounting exact even when clients die mid-batch.
+//!   that owns the [`crate::coordinator::Server`], keeps its shutdown
+//!   accounting exact even when clients die mid-batch, and answers
+//!   STATS scrapes with the live [`crate::obs`] snapshot.
 //! * [`load`] — `mcma bench-load`: seeded open-loop (Poisson) /
 //!   closed-loop request generation over the served workload's held-out
 //!   rows, with client-observed latency percentiles, per-route counts,
@@ -18,6 +20,9 @@ pub mod frame;
 pub mod listener;
 pub mod load;
 
-pub use frame::{FrameError, FramePoll, FrameReader, FRAME_VERSION, ROUTE_CPU};
+pub use frame::{
+    FrameError, FramePoll, FrameReader, FRAME_VERSION, KIND_STATS, MAX_STATS_BYTES,
+    ROUTE_CPU,
+};
 pub use listener::{NetReport, NetServer};
-pub use load::{Arrival, LoadConfig, LoadReport};
+pub use load::{scrape_stats, Arrival, LoadConfig, LoadReport};

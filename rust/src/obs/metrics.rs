@@ -1,0 +1,760 @@
+//! Lock-free metrics: counters, gauges and log2-bucketed latency
+//! histograms ([`Hist64`]), composed into the fixed-shape [`Registry`]
+//! every serving thread shares.
+//!
+//! Everything here is wait-free on the record path: one to three
+//! `fetch_add`s per event, no locks, no allocation.  All atomics are
+//! `Relaxed` — these are monotone counters whose snapshots feed reports,
+//! never synchronisation (the same contract as `coordinator/metrics.rs`;
+//! both modules are allowlisted by the `atomics` audit rule).  A snapshot
+//! may therefore tear by a few in-flight records across cells; quantiles
+//! are bucket-bounded anyway, so the tear sits below the measurement's
+//! own resolution.
+//!
+//! ## Histogram semantics
+//!
+//! [`Hist64`] buckets a `u64` sample (microseconds on every stage
+//! histogram) by bit width: bucket 0 holds exact zeros, bucket `i >= 1`
+//! holds `[2^(i-1), 2^i - 1]`, and bucket 63 absorbs everything from
+//! `2^62` up.  Quantiles interpolate linearly inside the landing bucket,
+//! so a reported pXX is **bucket-bounded**: the true quantile lies in the
+//! same power-of-two bucket, i.e. within 2x of the reported value (the
+//! bucket bounds themselves are exact).  Snapshots merge cellwise —
+//! associative and commutative, so per-thread histograms fold in any
+//! order.
+
+use std::sync::atomic::{AtomicI64, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-writer-wins instantaneous value (queue depth, open breakers).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// f32 gauge stored as bits (the QoS margins in the scrape) — same
+/// publish discipline as `coordinator::server`'s margin atomics.
+#[derive(Debug, Default)]
+pub struct GaugeF32(AtomicU32);
+
+impl GaugeF32 {
+    pub fn set(&self, v: f32) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f32 {
+        f32::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Log2-bucketed histogram: 64 atomic cells + count + sum (for means).
+#[derive(Debug)]
+pub struct Hist64 {
+    buckets: [AtomicU64; 64],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Hist64 {
+    fn default() -> Self {
+        Hist64::new()
+    }
+}
+
+impl Hist64 {
+    pub fn new() -> Self {
+        Hist64 {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket for value `v`: 0 for 0, else its bit width (clamped to 63).
+    #[inline]
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(63)
+        }
+    }
+
+    /// Inclusive lower bound of bucket `i`.
+    pub fn bucket_lo(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else {
+            1u64 << (i - 1)
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`.
+    pub fn bucket_hi(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            63 => u64::MAX,
+            i => (1u64 << i) - 1,
+        }
+    }
+
+    /// Record one sample — three relaxed adds, wait-free.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if let Some(cell) = self.buckets.get(Self::bucket_index(v)) {
+            cell.fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-data copy of a [`Hist64`] — mergeable, serialisable.
+#[derive(Clone, Copy, Debug)]
+pub struct HistSnapshot {
+    pub buckets: [u64; 64],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { buckets: [0; 64], count: 0, sum: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Cellwise sum — associative and commutative.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Quantile `p` in `[0, 100]`, linearly interpolated inside the
+    /// landing bucket (bucket-bounded; see module docs).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (p / 100.0).clamp(0.0, 1.0) * self.count as f64;
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if (cum + c) as f64 >= rank {
+                let lo = Hist64::bucket_lo(i) as f64;
+                let hi = Hist64::bucket_hi(i) as f64;
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lo + frac * (hi - lo);
+            }
+            cum += c;
+        }
+        Hist64::bucket_hi(63) as f64
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile(99.9)
+    }
+
+    /// Upper bound of the highest populated bucket.
+    pub fn max_bound(&self) -> u64 {
+        self.buckets
+            .iter()
+            .enumerate()
+            .rev()
+            .find(|(_, &c)| c > 0)
+            .map(|(i, _)| Hist64::bucket_hi(i))
+            .unwrap_or(0)
+    }
+
+    /// Compact JSON: summary quantiles + sparse `[bucket, count]` pairs.
+    pub fn to_json(&self) -> Value {
+        let buckets: Vec<Value> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Value::Arr(vec![Value::Num(i as f64), Value::Num(c as f64)]))
+            .collect();
+        json::obj(vec![
+            ("count", Value::Num(self.count as f64)),
+            ("sum_us", Value::Num(self.sum as f64)),
+            ("mean_us", Value::Num(self.mean())),
+            ("p50_us", Value::Num(self.p50())),
+            ("p90_us", Value::Num(self.p90())),
+            ("p99_us", Value::Num(self.p99())),
+            ("p999_us", Value::Num(self.p999())),
+            ("max_us", Value::Num(self.max_bound() as f64)),
+            ("buckets", Value::Arr(buckets)),
+        ])
+    }
+}
+
+/// Number of fixed per-tenant-tag slots in [`TagTable`].
+pub const TAG_SLOTS: usize = 16;
+
+/// Fixed-slot per-tenant-tag request counts: [`TAG_SLOTS`] CAS-registered
+/// slots + an overflow counter, so the hot path stays allocation- and
+/// lock-free no matter how many distinct tags clients send.
+#[derive(Debug)]
+pub struct TagTable {
+    /// `(tag + 1, count)`; a slot key of 0 means empty (tag 0 is valid).
+    slots: [(AtomicU64, AtomicU64); TAG_SLOTS],
+    overflow: AtomicU64,
+}
+
+impl Default for TagTable {
+    fn default() -> Self {
+        TagTable::new()
+    }
+}
+
+impl TagTable {
+    pub fn new() -> Self {
+        TagTable {
+            slots: std::array::from_fn(|_| (AtomicU64::new(0), AtomicU64::new(0))),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    /// Count one request for `tag`, claiming a free slot on first sight.
+    pub fn record(&self, tag: u16) {
+        let key = tag as u64 + 1;
+        for (slot_key, count) in self.slots.iter() {
+            let cur = slot_key.load(Ordering::Relaxed);
+            if cur == key {
+                count.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+            if cur == 0 {
+                // Claim the empty slot; if another thread won the race
+                // with the SAME tag the slot is still ours to count in.
+                match slot_key.compare_exchange(
+                    0,
+                    key,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        count.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(winner) if winner == key => {
+                        count.fetch_add(1, Ordering::Relaxed);
+                        return;
+                    }
+                    Err(_) => continue,
+                }
+            }
+        }
+        self.overflow.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(tag, count)` for every claimed slot, in slot order.
+    pub fn snapshot(&self) -> Vec<(u16, u64)> {
+        self.slots
+            .iter()
+            .filter_map(|(slot_key, count)| {
+                let key = slot_key.load(Ordering::Relaxed);
+                (key != 0).then(|| ((key - 1) as u16, count.load(Ordering::Relaxed)))
+            })
+            .collect()
+    }
+
+    /// Requests whose tag found no free slot (counted, never lost).
+    pub fn overflow(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-route-class execute histograms the registry carries.  Routes
+/// `k >= OBS_ROUTE_CLASSES` fold into the last slot so the registry's
+/// shape is fixed regardless of the served method's approximator count
+/// (every paper method has well under 8 classes).
+pub const OBS_ROUTE_CLASSES: usize = 8;
+
+/// The fixed-shape metrics registry every serving thread shares.
+///
+/// Stage histograms decompose one request's life into a waterfall, all
+/// in microseconds on the monotonic clock:
+///
+/// * `stage_decode`    — reader thread: frame decode + submit call;
+/// * `stage_queue`     — submit → batcher enqueue (ingress channel hop);
+/// * `stage_batch`     — batcher enqueue → dispatch-worker receipt
+///   (coalescing wait + batch channel hop);
+/// * `stage_execute`   — whole-batch classify/route/execute (recorded
+///   once per row so stage quantiles compose with the e2e ones);
+/// * `route_execute[k]`— per-route-class GEMM forward (one sample per
+///   executed group, batch-level; `exec_mode` says f32 vs int8);
+/// * `stage_fallback`  — precise/lookup CPU path (one sample per batch
+///   that had rejects);
+/// * `stage_shadow`    — QoS shadow verification per observation (off
+///   the request path);
+/// * `stage_pump`      — worker dispatch → client socket write;
+/// * `e2e_dispatch`    — submit → response dispatched (the served
+///   latency, `Response::latency_us`);
+/// * `e2e_delivered`   — submit → bytes written to the client; only
+///   successful deliveries are recorded, so dead clients can't skew it
+///   (failures land in `delivery_failures` instead).
+///
+/// `queue + batch + execute` sums to `e2e_dispatch` per request (up to
+/// clock-read skew), and `e2e_dispatch + pump` to `e2e_delivered` —
+/// stage quantiles are therefore consistent with the end-to-end ones
+/// within the documented bucket error.
+#[derive(Debug)]
+pub struct Registry {
+    t0: Instant,
+    exec_mode: Mutex<String>,
+
+    // Connection / frame plane.
+    pub accepted_conns: Counter,
+    pub closed_conns: Counter,
+    pub frames_in: Counter,
+    pub malformed_frames: Counter,
+    pub stats_requests: Counter,
+
+    // Request plane.
+    pub submitted: Counter,
+    pub dispatched: Counter,
+    pub delivered: Counter,
+    pub delivery_failures: Counter,
+    pub route_invoked_rows: Counter,
+    pub route_cpu_rows: Counter,
+
+    // QoS decision plane.
+    pub margin_moves: Counter,
+    pub breaker_trips: Counter,
+    pub breaker_resets: Counter,
+    pub shadow_drops: Counter,
+
+    pub inflight: Gauge,
+    pub batch_queue_depth: Gauge,
+    pub open_breakers: Gauge,
+    pub qos_enabled: Gauge,
+
+    pub stage_decode: Hist64,
+    pub stage_queue: Hist64,
+    pub stage_batch: Hist64,
+    pub stage_execute: Hist64,
+    pub stage_fallback: Hist64,
+    pub stage_shadow: Hist64,
+    pub stage_pump: Hist64,
+    pub e2e_dispatch: Hist64,
+    pub e2e_delivered: Hist64,
+    route_execute: [Hist64; OBS_ROUTE_CLASSES],
+
+    pub qos_margins: [GaugeF32; OBS_ROUTE_CLASSES],
+    pub tags: TagTable,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry {
+            t0: Instant::now(),
+            exec_mode: Mutex::new(String::new()),
+            accepted_conns: Counter::default(),
+            closed_conns: Counter::default(),
+            frames_in: Counter::default(),
+            malformed_frames: Counter::default(),
+            stats_requests: Counter::default(),
+            submitted: Counter::default(),
+            dispatched: Counter::default(),
+            delivered: Counter::default(),
+            delivery_failures: Counter::default(),
+            route_invoked_rows: Counter::default(),
+            route_cpu_rows: Counter::default(),
+            margin_moves: Counter::default(),
+            breaker_trips: Counter::default(),
+            breaker_resets: Counter::default(),
+            shadow_drops: Counter::default(),
+            inflight: Gauge::default(),
+            batch_queue_depth: Gauge::default(),
+            open_breakers: Gauge::default(),
+            qos_enabled: Gauge::default(),
+            stage_decode: Hist64::new(),
+            stage_queue: Hist64::new(),
+            stage_batch: Hist64::new(),
+            stage_execute: Hist64::new(),
+            stage_fallback: Hist64::new(),
+            stage_shadow: Hist64::new(),
+            stage_pump: Hist64::new(),
+            e2e_dispatch: Hist64::new(),
+            e2e_delivered: Hist64::new(),
+            route_execute: std::array::from_fn(|_| Hist64::new()),
+            qos_margins: std::array::from_fn(|_| GaugeF32::default()),
+            tags: TagTable::new(),
+        }
+    }
+
+    /// Seconds since the registry was created (serve start).
+    pub fn uptime_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// Label the execution engine for the scrape ("native", "native-q8",
+    /// "pjrt") — distinguishes f32 from int8 GEMM in `route_execute`.
+    pub fn set_exec_mode(&self, mode: &str) {
+        if let Ok(mut g) = self.exec_mode.lock() {
+            *g = mode.to_string();
+        }
+    }
+
+    /// One per-route-class GEMM execute sample (class folds into the
+    /// last slot past [`OBS_ROUTE_CLASSES`]).
+    pub fn record_route_execute(&self, k: usize, us: u64) {
+        if let Some(h) = self.route_execute.get(k.min(OBS_ROUTE_CLASSES - 1)) {
+            h.record(us);
+        }
+    }
+
+    pub fn route_execute_snapshot(&self, k: usize) -> HistSnapshot {
+        self.route_execute
+            .get(k)
+            .map(|h| h.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Full JSON snapshot — the STATS scrape body (minus journal health,
+    /// which [`crate::obs::Obs::snapshot_json`] appends).
+    pub fn snapshot_json(&self) -> Value {
+        fn num(n: u64) -> Value {
+            Value::Num(n as f64)
+        }
+        let counters = json::obj(vec![
+            ("accepted_conns", num(self.accepted_conns.get())),
+            ("closed_conns", num(self.closed_conns.get())),
+            ("frames_in", num(self.frames_in.get())),
+            ("malformed_frames", num(self.malformed_frames.get())),
+            ("stats_requests", num(self.stats_requests.get())),
+            ("submitted", num(self.submitted.get())),
+            ("dispatched", num(self.dispatched.get())),
+            ("delivered", num(self.delivered.get())),
+            ("delivery_failures", num(self.delivery_failures.get())),
+            ("route_invoked_rows", num(self.route_invoked_rows.get())),
+            ("route_cpu_rows", num(self.route_cpu_rows.get())),
+            ("margin_moves", num(self.margin_moves.get())),
+            ("breaker_trips", num(self.breaker_trips.get())),
+            ("breaker_resets", num(self.breaker_resets.get())),
+            ("shadow_drops", num(self.shadow_drops.get())),
+        ]);
+        let gauges = json::obj(vec![
+            ("inflight", Value::Num(self.inflight.get() as f64)),
+            ("batch_queue_depth", Value::Num(self.batch_queue_depth.get() as f64)),
+            ("open_breakers", Value::Num(self.open_breakers.get() as f64)),
+            ("qos_enabled", Value::Num(self.qos_enabled.get() as f64)),
+        ]);
+        let stages = json::obj(vec![
+            ("decode", self.stage_decode.snapshot().to_json()),
+            ("queue", self.stage_queue.snapshot().to_json()),
+            ("batch", self.stage_batch.snapshot().to_json()),
+            ("execute", self.stage_execute.snapshot().to_json()),
+            ("fallback", self.stage_fallback.snapshot().to_json()),
+            ("shadow_verify", self.stage_shadow.snapshot().to_json()),
+            ("pump", self.stage_pump.snapshot().to_json()),
+            ("e2e_dispatch", self.e2e_dispatch.snapshot().to_json()),
+            ("e2e_delivered", self.e2e_delivered.snapshot().to_json()),
+        ]);
+        let route_execute: Vec<Value> = self
+            .route_execute
+            .iter()
+            .enumerate()
+            .filter(|(_, h)| h.snapshot().count > 0)
+            .map(|(k, h)| {
+                Value::Arr(vec![Value::Num(k as f64), h.snapshot().to_json()])
+            })
+            .collect();
+        let margins: Vec<Value> = self
+            .qos_margins
+            .iter()
+            .map(|g| Value::Num(g.get() as f64))
+            .collect();
+        let tags: Vec<Value> = self
+            .tags
+            .snapshot()
+            .into_iter()
+            .map(|(tag, count)| {
+                Value::Arr(vec![Value::Num(tag as f64), Value::Num(count as f64)])
+            })
+            .collect();
+        let exec_mode = self
+            .exec_mode
+            .lock()
+            .map(|g| g.clone())
+            .unwrap_or_default();
+        json::obj(vec![
+            ("schema", Value::Num(1.0)),
+            ("uptime_s", Value::Num(self.uptime_s())),
+            ("exec_mode", Value::Str(exec_mode)),
+            ("counters", counters),
+            ("gauges", gauges),
+            ("qos_margins", Value::Arr(margins)),
+            ("stages", stages),
+            ("route_execute", Value::Arr(route_execute)),
+            ("tags", Value::Arr(tags)),
+            ("tag_overflow", num(self.tags.overflow())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::threadpool;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(Hist64::bucket_index(0), 0);
+        assert_eq!(Hist64::bucket_index(1), 1);
+        assert_eq!(Hist64::bucket_index(2), 2);
+        assert_eq!(Hist64::bucket_index(3), 2);
+        assert_eq!(Hist64::bucket_index(4), 3);
+        assert_eq!(Hist64::bucket_index(1023), 10);
+        assert_eq!(Hist64::bucket_index(1024), 11);
+        assert_eq!(Hist64::bucket_index(u64::MAX), 63);
+        // Every value sits inside its bucket's [lo, hi] range.
+        for v in [0u64, 1, 2, 3, 7, 8, 100, 4096, 1 << 40, u64::MAX] {
+            let i = Hist64::bucket_index(v);
+            assert!(Hist64::bucket_lo(i) <= v && v <= Hist64::bucket_hi(i), "v={v}");
+        }
+    }
+
+    #[test]
+    fn record_and_snapshot_totals() {
+        let h = Hist64::new();
+        for v in [0u64, 1, 1, 5, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 5);
+        assert_eq!(s.sum, 1007);
+        assert_eq!(s.buckets[0], 1); // the zero
+        assert_eq!(s.buckets[1], 2); // the ones
+        assert!((s.mean() - 201.4).abs() < 1e-9);
+    }
+
+    /// The hist quantile must land in the same (or an adjacent) log2
+    /// bucket as the exact sorted quantile — the documented bound.
+    #[test]
+    fn percentile_is_bucket_bounded_vs_exact_sort() {
+        let mut rng = Rng::new(0xC0FFEE);
+        let h = Hist64::new();
+        let mut vals: Vec<u64> = (0..10_000)
+            .map(|_| (rng.lognormal(5.0, 1.5) as u64).min(1 << 40))
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        for &p in &[10.0, 50.0, 90.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * vals.len() as f64).ceil() as usize;
+            let exact = vals[rank.clamp(1, vals.len()) - 1];
+            let got = s.percentile(p) as u64;
+            let (bi_exact, bi_got) =
+                (Hist64::bucket_index(exact), Hist64::bucket_index(got));
+            assert!(
+                bi_exact.abs_diff(bi_got) <= 1,
+                "p{p}: exact {exact} (bucket {bi_exact}) vs hist {got} (bucket {bi_got})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Rng::new(42);
+        let parts: Vec<HistSnapshot> = (0..3)
+            .map(|_| {
+                let h = Hist64::new();
+                for _ in 0..500 {
+                    h.record(rng.below(1 << 20));
+                }
+                h.snapshot()
+            })
+            .collect();
+        // (a + b) + c == a + (b + c) == (c + a) + b, cell for cell.
+        let mut ab_c = parts[0];
+        ab_c.merge(&parts[1]);
+        ab_c.merge(&parts[2]);
+        let mut bc = parts[1];
+        bc.merge(&parts[2]);
+        let mut a_bc = parts[0];
+        a_bc.merge(&bc);
+        let mut ca_b = parts[2];
+        ca_b.merge(&parts[0]);
+        ca_b.merge(&parts[1]);
+        for s in [&a_bc, &ca_b] {
+            assert_eq!(ab_c.buckets, s.buckets);
+            assert_eq!(ab_c.count, s.count);
+            assert_eq!(ab_c.sum, s.sum);
+        }
+        assert_eq!(ab_c.count, 1500);
+    }
+
+    /// Concurrent recorders through the thread pool lose nothing: the
+    /// final snapshot equals the single-threaded reference.
+    #[test]
+    fn concurrent_recorders_are_consistent() {
+        let h = Hist64::new();
+        let chunks: Vec<u64> = (0..8).collect();
+        threadpool::parallel_map(&chunks, 4, |&c| {
+            let mut rng = Rng::new(0xAB0 + c);
+            for _ in 0..5_000 {
+                h.record(rng.below(1 << 30));
+            }
+        });
+        let got = h.snapshot();
+        let reference = Hist64::new();
+        for &c in &chunks {
+            let mut rng = Rng::new(0xAB0 + c);
+            for _ in 0..5_000 {
+                reference.record(rng.below(1 << 30));
+            }
+        }
+        let want = reference.snapshot();
+        assert_eq!(got.count, 40_000);
+        assert_eq!(got.buckets, want.buckets);
+        assert_eq!(got.sum, want.sum);
+    }
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let s = Hist64::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.max_bound(), 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn tag_table_claims_counts_and_overflows() {
+        let t = TagTable::new();
+        t.record(0); // tag 0 is representable (key = tag + 1)
+        t.record(0);
+        t.record(7);
+        assert_eq!(t.snapshot(), vec![(0, 2), (7, 1)]);
+        assert_eq!(t.overflow(), 0);
+        for tag in 100..100 + TAG_SLOTS as u16 {
+            t.record(tag);
+        }
+        // Two slots were taken by tags 0 and 7, so the last two new tags
+        // overflowed instead of evicting anyone.
+        assert_eq!(t.snapshot().len(), TAG_SLOTS);
+        assert_eq!(t.overflow(), 2);
+    }
+
+    #[test]
+    fn counters_and_gauges() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(3);
+        g.add(-5);
+        assert_eq!(g.get(), -2);
+        let f = GaugeF32::default();
+        f.set(0.25);
+        assert_eq!(f.get(), 0.25);
+    }
+
+    #[test]
+    fn registry_snapshot_roundtrips_through_json() {
+        let r = Registry::new();
+        r.set_exec_mode("native");
+        r.submitted.add(10);
+        r.stage_queue.record(5);
+        r.e2e_dispatch.record(120);
+        r.record_route_execute(1, 90);
+        r.record_route_execute(99, 90); // folds into the last slot
+        r.qos_margins[1].set(0.5);
+        r.tags.record(3);
+        let text = json::write(&r.snapshot_json());
+        let v = json::parse(&text).expect("snapshot JSON parses");
+        assert_eq!(v.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("exec_mode").unwrap().as_str(), Some("native"));
+        let counters = v.get("counters").unwrap();
+        assert_eq!(counters.get("submitted").unwrap().as_f64(), Some(10.0));
+        let stages = v.get("stages").unwrap();
+        assert_eq!(
+            stages.get("queue").unwrap().get("count").unwrap().as_f64(),
+            Some(1.0)
+        );
+        let re = v.get("route_execute").unwrap().as_arr().unwrap();
+        assert_eq!(re.len(), 2); // class 1 + the fold slot
+        let margins = v.get("qos_margins").unwrap().as_arr().unwrap();
+        assert_eq!(margins[1].as_f64(), Some(0.5));
+        assert_eq!(v.get("tags").unwrap().as_arr().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Live observability for the serving pipeline — dependency-free.
+//!
+//! Three parts (see ISSUE/README "Observability"):
+//!
+//! * [`metrics`] — a fixed-shape, lock-free [`Registry`] of counters,
+//!   gauges and log2-bucketed [`Hist64`] latency histograms, one per
+//!   named pipeline stage, so a request's end-to-end latency decomposes
+//!   into a waterfall (decode → queue → batch → execute → pump);
+//! * [`trace`] — a bounded [`Journal`] of structured events (sampled
+//!   request spans + QoS decision events), drainable as JSON lines via
+//!   `mcma serve --trace-json PATH`;
+//! * the in-band STATS scrape: `net/frame.rs` defines `KIND_STATS`, the
+//!   response pump answers it with [`Obs::snapshot_json`], and
+//!   `mcma stats --addr HOST:PORT` pretty-prints it live.
+//!
+//! The registry is shared by reference everywhere (readers, batcher,
+//! dispatch workers, the QoS thread, the response pump); recording is
+//! wait-free so the hot path never queues behind an observer.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    Counter, Gauge, GaugeF32, Hist64, HistSnapshot, Registry, TagTable,
+    OBS_ROUTE_CLASSES, TAG_SLOTS,
+};
+pub use trace::{Event, Journal, TraceSampler, DEFAULT_CAP};
+
+use std::sync::Arc;
+
+use crate::util::json::Value;
+
+/// The shared handle every pipeline thread carries: metrics + journal.
+#[derive(Clone)]
+pub struct Obs {
+    pub metrics: Arc<Registry>,
+    pub journal: Arc<Journal>,
+}
+
+impl Obs {
+    /// Fresh registry + journal.  `trace_seed`/`trace_rate` seed the
+    /// span sampler (same id-hash discipline as shadow sampling).
+    pub fn new(trace_seed: u64, trace_rate: f64) -> Self {
+        Obs {
+            metrics: Arc::new(Registry::new()),
+            journal: Arc::new(Journal::new(trace_seed, trace_rate, DEFAULT_CAP)),
+        }
+    }
+
+    /// The STATS scrape body: registry snapshot + journal health.
+    pub fn snapshot_json(&self) -> Value {
+        let mut v = self.metrics.snapshot_json();
+        if let Value::Obj(kvs) = &mut v {
+            kvs.push((
+                "trace".to_string(),
+                crate::util::json::obj(vec![
+                    ("buffered", Value::Num(self.journal.len() as f64)),
+                    ("dropped", Value::Num(self.journal.dropped() as f64)),
+                ]),
+            ));
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_snapshot_includes_trace_health() {
+        let obs = Obs::new(1, 1.0);
+        obs.journal.push(Event::ShadowDrop { at_us: 1 });
+        let v = obs.snapshot_json();
+        let trace = v.get("trace").expect("trace section");
+        assert_eq!(trace.get("buffered").unwrap().as_f64(), Some(1.0));
+        assert_eq!(trace.get("dropped").unwrap().as_f64(), Some(0.0));
+        assert!(v.get("stages").is_some());
+    }
+}

@@ -1,0 +1,299 @@
+//! Sampled span journal: a bounded ring of structured pipeline events,
+//! drainable as JSON lines (`mcma serve --trace-json PATH`).
+//!
+//! Request spans are sampled by [`TraceSampler`] — the same pure
+//! `(seed, id)` SplitMix64 hash discipline as
+//! [`crate::qos::ShadowSampler`], with a different mixing constant so the
+//! traced set and the shadow-verified set are independent samples.  The
+//! decision depends only on the request id, so the traced set is
+//! bit-identical across worker counts, batch shapes and arrival orders.
+//! QoS decision events (margin moves, breaker transitions, shadow drops)
+//! are rare control-plane events and are always journalled.
+//!
+//! The ring is bounded: when full, the oldest event is dropped and
+//! counted (`dropped`), never blocking a pipeline thread for more than
+//! one short mutex hold.  Timestamps are microseconds since the
+//! journal's epoch (serve start) on the monotonic clock.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Value};
+use crate::util::rng::splitmix64;
+
+/// Default ring capacity (events).
+pub const DEFAULT_CAP: usize = 4096;
+
+/// Mixing constant for the trace sampler — deliberately distinct from
+/// the shadow sampler's multiplier so `pick` disagrees between the two.
+const TRACE_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Stateless seeded sampler; `Copy` so every thread carries its own.
+/// Mirrors [`crate::qos::ShadowSampler`]: pure in `(seed, id)`.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSampler {
+    seed: u64,
+    threshold: u64,
+    all: bool,
+}
+
+impl TraceSampler {
+    pub fn new(seed: u64, rate: f64) -> Self {
+        let rate = rate.clamp(0.0, 1.0);
+        TraceSampler {
+            seed,
+            // f64 -> u64 `as` saturates, so rate = 1.0 maps to u64::MAX;
+            // the `all` flag closes the one-in-2^64 gap exactly.
+            threshold: (rate * u64::MAX as f64) as u64,
+            all: rate >= 1.0,
+        }
+    }
+
+    /// Should request `id` be traced?  Pure in `(seed, id)`.
+    #[inline]
+    pub fn pick(&self, id: u64) -> bool {
+        self.all || splitmix64(self.seed ^ id.wrapping_mul(TRACE_MIX)) < self.threshold
+    }
+}
+
+/// One structured journal entry.  `at_us` is microseconds since the
+/// journal's epoch on the monotonic clock.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// One sampled request's stage decomposition, recorded at dispatch.
+    /// `route` is the approximator class, or -1 for the precise path.
+    Span {
+        id: u64,
+        route: i64,
+        queue_us: u64,
+        batch_us: u64,
+        exec_us: u64,
+        e2e_us: u64,
+        at_us: u64,
+    },
+    /// Client delivery of a sampled response (the pump stage).
+    Delivered { id: u64, pump_us: u64, e2e_us: u64, at_us: u64 },
+    /// The QoS controller moved a class margin.
+    MarginMove { class: usize, from: f32, to: f32, at_us: u64 },
+    /// A class circuit breaker opened (`open = true`) or closed again.
+    Breaker { class: usize, open: bool, at_us: u64 },
+    /// A shadow observation was lost to queue backpressure.
+    ShadowDrop { at_us: u64 },
+}
+
+impl Event {
+    /// One JSON object per event, discriminated by `"type"`.
+    pub fn to_json(&self) -> Value {
+        fn num(n: u64) -> Value {
+            Value::Num(n as f64)
+        }
+        match self {
+            Event::Span { id, route, queue_us, batch_us, exec_us, e2e_us, at_us } => {
+                json::obj(vec![
+                    ("type", Value::Str("span".into())),
+                    ("id", num(*id)),
+                    ("route", Value::Num(*route as f64)),
+                    ("queue_us", num(*queue_us)),
+                    ("batch_us", num(*batch_us)),
+                    ("exec_us", num(*exec_us)),
+                    ("e2e_us", num(*e2e_us)),
+                    ("at_us", num(*at_us)),
+                ])
+            }
+            Event::Delivered { id, pump_us, e2e_us, at_us } => json::obj(vec![
+                ("type", Value::Str("delivered".into())),
+                ("id", num(*id)),
+                ("pump_us", num(*pump_us)),
+                ("e2e_us", num(*e2e_us)),
+                ("at_us", num(*at_us)),
+            ]),
+            Event::MarginMove { class, from, to, at_us } => json::obj(vec![
+                ("type", Value::Str("margin".into())),
+                ("class", num(*class as u64)),
+                ("from", Value::Num(*from as f64)),
+                ("to", Value::Num(*to as f64)),
+                ("at_us", num(*at_us)),
+            ]),
+            Event::Breaker { class, open, at_us } => json::obj(vec![
+                ("type", Value::Str("breaker".into())),
+                ("class", num(*class as u64)),
+                ("open", Value::Bool(*open)),
+                ("at_us", num(*at_us)),
+            ]),
+            Event::ShadowDrop { at_us } => json::obj(vec![
+                ("type", Value::Str("shadow_drop".into())),
+                ("at_us", num(*at_us)),
+            ]),
+        }
+    }
+}
+
+struct Ring {
+    buf: VecDeque<Event>,
+    dropped: u64,
+}
+
+/// Bounded, mutex-guarded event ring shared by every pipeline thread.
+pub struct Journal {
+    t0: Instant,
+    cap: usize,
+    sampler: TraceSampler,
+    ring: Mutex<Ring>,
+}
+
+impl Journal {
+    pub fn new(seed: u64, rate: f64, cap: usize) -> Self {
+        Journal {
+            t0: Instant::now(),
+            cap: cap.max(1),
+            sampler: TraceSampler::new(seed, rate),
+            ring: Mutex::new(Ring { buf: VecDeque::new(), dropped: 0 }),
+        }
+    }
+
+    /// The journal's request sampler (copy it into worker threads).
+    pub fn sampler(&self) -> TraceSampler {
+        self.sampler
+    }
+
+    /// Is request `id` in the traced sample?
+    #[inline]
+    pub fn sampled(&self, id: u64) -> bool {
+        self.sampler.pick(id)
+    }
+
+    /// Microseconds since the journal's epoch (monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.t0.elapsed().as_micros() as u64
+    }
+
+    /// Append one event, dropping (and counting) the oldest when full.
+    pub fn push(&self, ev: Event) {
+        if let Ok(mut g) = self.ring.lock() {
+            if g.buf.len() >= self.cap {
+                g.buf.pop_front();
+                g.dropped += 1;
+            }
+            g.buf.push_back(ev);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.lock().map(|g| g.buf.len()).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events evicted because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().map(|g| g.dropped).unwrap_or(0)
+    }
+
+    /// Drain every buffered event as newline-delimited JSON (oldest
+    /// first).  The ring is left empty; `dropped` keeps accumulating.
+    pub fn drain_json_lines(&self) -> String {
+        let events: Vec<Event> = match self.ring.lock() {
+            Ok(mut g) => g.buf.drain(..).collect(),
+            Err(_) => Vec::new(),
+        };
+        let mut out = String::new();
+        for ev in &events {
+            out.push_str(&json::write(&ev.to_json()));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let j = Journal::new(1, 1.0, 8);
+        for i in 0..18u64 {
+            j.push(Event::ShadowDrop { at_us: i });
+        }
+        assert_eq!(j.len(), 8);
+        assert_eq!(j.dropped(), 10);
+        let lines = j.drain_json_lines();
+        assert_eq!(lines.lines().count(), 8);
+        assert!(j.is_empty());
+        // Oldest got evicted: the first surviving event is at_us = 10.
+        let first = json::parse(lines.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("at_us").unwrap().as_f64(), Some(10.0));
+        assert_eq!(j.dropped(), 10); // draining doesn't reset the count
+    }
+
+    /// The traced set is a pure function of (seed, id): partitioning the
+    /// id space across any number of workers yields the same picks — the
+    /// worker-count invariance the shadow sampler pins, with a different
+    /// mixing constant.
+    #[test]
+    fn sampler_is_worker_count_invariant() {
+        let s = TraceSampler::new(0x7ACE, 0.2);
+        let forward: Vec<u64> = (0..4096).filter(|&id| s.pick(id)).collect();
+        // "Three workers": ids striped by residue, each reversed.
+        let mut striped: Vec<u64> = (0u64..3)
+            .flat_map(|r| (0..4096).rev().filter(move |id| id % 3 == r))
+            .filter(|&id| s.pick(id))
+            .collect();
+        striped.sort_unstable();
+        assert_eq!(forward, striped);
+        assert!(!forward.is_empty() && forward.len() < 4096);
+    }
+
+    #[test]
+    fn sampler_differs_from_shadow_sampler_on_same_seed() {
+        let trace = TraceSampler::new(0x5AD0, 0.3);
+        let shadow = crate::qos::ShadowSampler::new(0x5AD0, 0.3);
+        let same = (0..4096u64)
+            .filter(|&id| trace.pick(id) == shadow.pick(id))
+            .count();
+        assert!(same < 4096, "trace and shadow samples must be independent");
+    }
+
+    #[test]
+    fn sampler_edge_rates() {
+        let never = TraceSampler::new(9, 0.0);
+        let always = TraceSampler::new(9, 1.0);
+        for id in 0..512 {
+            assert!(!never.pick(id));
+            assert!(always.pick(id));
+        }
+    }
+
+    #[test]
+    fn events_serialise_with_type_tags() {
+        let evs = [
+            Event::Span {
+                id: 7,
+                route: -1,
+                queue_us: 1,
+                batch_us: 2,
+                exec_us: 3,
+                e2e_us: 6,
+                at_us: 99,
+            },
+            Event::Delivered { id: 7, pump_us: 4, e2e_us: 10, at_us: 100 },
+            Event::MarginMove { class: 1, from: 0.0, to: 0.05, at_us: 101 },
+            Event::Breaker { class: 1, open: true, at_us: 102 },
+            Event::ShadowDrop { at_us: 103 },
+        ];
+        let types: Vec<String> = evs
+            .iter()
+            .map(|e| {
+                let v = json::parse(&json::write(&e.to_json())).unwrap();
+                v.get("type").unwrap().as_str().unwrap().to_string()
+            })
+            .collect();
+        assert_eq!(types, ["span", "delivered", "margin", "breaker", "shadow_drop"]);
+        let span = json::parse(&json::write(&evs[0].to_json())).unwrap();
+        assert_eq!(span.get("route").unwrap().as_f64(), Some(-1.0));
+        assert_eq!(span.get("e2e_us").unwrap().as_f64(), Some(6.0));
+    }
+}

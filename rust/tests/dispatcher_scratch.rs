@@ -66,6 +66,7 @@ fn random_batch(rng: &mut Rng, n: usize) -> Batch {
         ids: (0..n as u64).collect(),
         x_raw: (0..n * 9).map(|_| rng.uniform(0.0, 1.0) as f32).collect(),
         n,
+        submitted: vec![now; n],
         enqueued: vec![now; n],
     }
 }

@@ -20,7 +20,7 @@ use mcma::config::{BatchPolicy, ExecMode, Method};
 use mcma::coordinator::{Route, Server, ServerConfig};
 use mcma::formats::{BenchManifest, Dataset, Manifest};
 use mcma::net::frame::{decode_response, encode_request, FramePoll, FrameReader};
-use mcma::net::load::run_load;
+use mcma::net::load::{run_load, scrape_stats};
 use mcma::net::{Arrival, LoadConfig, NetServer};
 use mcma::qos::QosConfig;
 use mcma::train::{train_bench, TrainOptions};
@@ -324,6 +324,129 @@ fn batches_coalesce_under_load_but_idle_stays_low_latency() {
         "closed-loop load never produced a multi-row batch: {:?}",
         report.batch_hist
     );
+}
+
+/// The in-band STATS scrape: after real traffic, a KIND_STATS frame on
+/// a second connection returns a JSON snapshot whose pipeline counters
+/// and stage waterfall account for every row just served, with the QoS
+/// margin/breaker section present.  The percentile checks use the
+/// documented log2-bucket error bound: a reported percentile is within
+/// a factor of 2 of the true value, and stage quantiles are pointwise
+/// below e2e quantiles, so reported stage p50 <= 4 x reported e2e p50.
+#[test]
+fn stats_scrape_reports_stage_waterfall_and_qos() {
+    let (_, _, ds) = artifacts();
+    let qos = QosConfig {
+        target: 10.0,
+        shadow_rate: 0.5,
+        window: 64,
+        min_obs: 8,
+        tick_every: 16,
+        ..QosConfig::default()
+    };
+    let net = spawn_net(BatchPolicy { max_batch: 32, max_wait_us: 2_000 }, Some(qos));
+    let n = 64usize;
+    let served = roundtrip_rows(net.local_addr(), &ds, n);
+    assert_eq!(served.len(), n);
+
+    let snap = scrape_stats(&net.local_addr().to_string(), 0).expect("live scrape failed");
+    net.shutdown().unwrap();
+
+    let num = |path: &[&str]| -> f64 {
+        let mut cur = &snap;
+        for k in path {
+            cur = cur.get(k).unwrap_or_else(|| panic!("snapshot missing {path:?}"));
+        }
+        cur.as_f64().unwrap_or_else(|| panic!("{path:?} is not a number"))
+    };
+    assert_eq!(num(&["counters", "submitted"]), n as f64);
+    assert_eq!(num(&["counters", "dispatched"]), n as f64);
+    // The client read every response before scraping, so the pump had
+    // already recorded each delivery (same thread that answers STATS).
+    assert_eq!(num(&["counters", "delivered"]), n as f64);
+    assert_eq!(num(&["counters", "delivery_failures"]), 0.0);
+    assert!(num(&["counters", "stats_requests"]) >= 1.0);
+    assert_eq!(
+        num(&["counters", "route_invoked_rows"]) + num(&["counters", "route_cpu_rows"]),
+        n as f64,
+        "route split must account for every row"
+    );
+    for stage in ["decode", "queue", "batch", "execute", "pump", "e2e_dispatch", "e2e_delivered"] {
+        assert_eq!(
+            num(&["stages", stage, "count"]),
+            n as f64,
+            "stage {stage} lost rows"
+        );
+    }
+    // Waterfall consistency within the bucket error bound.
+    let e2e_p50 = num(&["stages", "e2e_dispatch", "p50_us"]);
+    assert!(e2e_p50 > 0.0, "e2e dispatch p50 cannot be zero for a TCP roundtrip");
+    for stage in ["queue", "batch", "execute"] {
+        let p50 = num(&["stages", stage, "p50_us"]);
+        assert!(
+            p50 <= 4.0 * e2e_p50 + 2.0,
+            "stage {stage} p50 {p50} inconsistent with e2e p50 {e2e_p50}"
+        );
+    }
+    // e2e_delivered >= e2e_dispatch pointwise, so within bucket error:
+    assert!(
+        num(&["stages", "e2e_delivered", "p50_us"]) >= e2e_p50 / 4.0 - 2.0,
+        "delivered e2e collapsed below dispatch e2e"
+    );
+    // QoS margins/breakers surface through the scrape.
+    assert_eq!(num(&["gauges", "qos_enabled"]), 1.0);
+    let margins = snap.get("qos_margins").and_then(|v| v.as_arr()).expect("qos_margins");
+    assert_eq!(margins.len(), 8, "fixed gauge slots");
+    assert!(num(&["gauges", "open_breakers"]) >= 0.0);
+    assert!(num(&["trace", "buffered"]) >= 0.0);
+}
+
+/// A malformed STATS frame (frame kind 3 with the wrong payload size)
+/// is a protocol violation that kills exactly its own connection — the
+/// scrape path reuses the reader's fatal-on-malformed discipline — while
+/// a healthy client and a healthy scrape keep working on the server.
+#[test]
+fn malformed_stats_frame_kills_only_its_connection() {
+    let (_, _, ds) = artifacts();
+    let net = spawn_net(BatchPolicy { max_batch: 16, max_wait_us: 1_000 }, None);
+
+    // Hostile scrape: valid envelope + version + KIND_STATS, but 13
+    // payload bytes where the stats request header is exactly 12.
+    let mut evil = TcpStream::connect(net.local_addr()).unwrap();
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&13u32.to_le_bytes());
+    frame.push(mcma::net::FRAME_VERSION);
+    frame.push(mcma::net::KIND_STATS);
+    frame.extend_from_slice(&[0u8; 11]);
+    evil.write_all(&frame).unwrap();
+    evil.set_read_timeout(Some(Duration::from_millis(100))).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut probe = [0u8; 16];
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "server never closed the malformed STATS connection"
+        );
+        match std::io::Read::read(&mut evil, &mut probe) {
+            Ok(0) => break,          // clean close
+            Ok(_) => panic!("server answered a malformed STATS frame"),
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => continue,
+            Err(_) => break,         // reset also counts as closed
+        }
+    }
+
+    // The same server still serves rows and answers a healthy scrape.
+    let served = roundtrip_rows(net.local_addr(), &ds, 8);
+    assert_eq!(served.len(), 8);
+    let snap = scrape_stats(&net.local_addr().to_string(), 0).unwrap();
+    let malformed = snap
+        .get("counters")
+        .and_then(|c| c.get("malformed_frames"))
+        .and_then(|v| v.as_f64());
+    assert_eq!(malformed, Some(1.0), "exactly the hostile frame counted");
+    let report = net.shutdown().unwrap();
+    assert!(report.malformed >= 1, "violation not counted");
+    assert_eq!(report.server.served, 8);
 }
 
 /// The QoS controller runs unchanged under socket traffic: the report

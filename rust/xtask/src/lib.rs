@@ -1,10 +1,12 @@
 //! mcma-audit: the repo-invariant static-analysis pass.
 //!
-//! `cargo run -p xtask -- audit` walks `rust/src/**`, lexes every file
-//! with the hand-rolled lexer in [`lex`], applies the five repo rules in
-//! [`rules`], and reports `file:line` diagnostics plus a machine-readable
-//! JSON document for CI.  Zero dependencies by design: the pass must run
-//! in the offline build container with nothing but std.
+//! `cargo run -p xtask -- audit` walks the whole `rust/` tree (`src`,
+//! `xtask/src`, `tests`, `benches` — see [`TREE_ROOTS`]), lexes every
+//! file with the hand-rolled lexer in [`lex`], applies the five repo
+//! rules in [`rules`], and reports `file:line` diagnostics plus a
+//! machine-readable JSON document for CI.  Zero dependencies by design:
+//! the pass must run in the offline build container with nothing but
+//! std.
 
 pub mod lex;
 pub mod rules;
@@ -45,6 +47,48 @@ pub fn audit_dir(root: &Path) -> io::Result<Report> {
     let (findings, allows) = rules::audit(&files);
     Ok(Report {
         root: root.display().to_string(),
+        files_scanned: files.len(),
+        findings,
+        allows,
+    })
+}
+
+/// Roots scanned by [`audit_tree`], as `(subdir, rel-prefix)` relative
+/// to the `rust/` crate directory.  `src` keeps unprefixed rels so the
+/// REQUIRED_* / ATOMICS_COUNTER_MODULES path lists in [`rules`] keep
+/// matching; the other trees are prefixed so findings print a usable
+/// path.  `xtask/tests` is deliberately absent: its fixtures seed the
+/// very violations the rules exist to catch.
+pub const TREE_ROOTS: [(&str, &str); 4] = [
+    ("src", ""),
+    ("xtask/src", "xtask/src/"),
+    ("tests", "tests/"),
+    ("benches", "benches/"),
+];
+
+/// Audit the whole `rust/` tree in one pass: the library, the analyzer's
+/// own source, and the integration-test / bench trees.  One combined
+/// pass (rather than four [`audit_dir`] calls) so cross-file rules like
+/// `cli-registry` see lookups in every tree against the one registry.
+/// Missing roots are skipped, so partial checkouts still scan.
+pub fn audit_tree(rust_dir: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    for (sub, prefix) in TREE_ROOTS {
+        let root = rust_dir.join(sub);
+        if !root.is_dir() {
+            continue;
+        }
+        let mut rels = Vec::new();
+        walk(&root, Path::new(""), &mut rels)?;
+        rels.sort();
+        for rel in &rels {
+            let src = fs::read_to_string(root.join(rel))?;
+            files.push(lex::lex(&format!("{prefix}{rel}"), &src));
+        }
+    }
+    let (findings, allows) = rules::audit(&files);
+    Ok(Report {
+        root: rust_dir.display().to_string(),
         files_scanned: files.len(),
         findings,
         allows,

@@ -13,11 +13,13 @@ USAGE:
   cargo run -p xtask -- audit [--root DIR] [--json PATH]
 
 OPTIONS:
-  --root DIR    tree to scan (default: the crate's ../src)
+  --root DIR    single tree to scan (default: the whole rust/ crate —
+                src, xtask/src, tests, benches; fixture trees excluded)
   --json PATH   also write the machine-readable report (schema 1)
 
 RULES:
-  cli-registry     USAGE text, option lookups, and VALUE_KEYS/FLAG_KEYS agree
+  cli-registry     USAGE text, option/positional lookups, and the
+                   VALUE_KEYS/FLAG_KEYS/POSITIONAL_KEYS registries agree
   panic-free-net   no unwrap/expect/panic!/indexing in connection-facing code
   determinism      no wall clock / hash order / thread identity in
                    audit:deterministic modules
@@ -53,14 +55,19 @@ fn main() {
             }
         }
     }
-    let root = root.unwrap_or_else(|| {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("src")
-    });
-
-    let report = match xtask::audit_dir(&root) {
+    // `--root` pins a single tree (fixtures, experiments); the default
+    // is the combined src + xtask/src + tests + benches sweep.
+    let report = match &root {
+        Some(dir) => xtask::audit_dir(dir),
+        None => xtask::audit_tree(&PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")),
+    };
+    let report = match report {
         Ok(r) => r,
         Err(e) => {
-            eprintln!("mcma-audit: cannot scan {}: {e}", root.display());
+            let shown = root.unwrap_or_else(|| {
+                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+            });
+            eprintln!("mcma-audit: cannot scan {}: {e}", shown.display());
             exit(2);
         }
     };

@@ -6,7 +6,10 @@
 //! | rule              | invariant                                              |
 //! |-------------------|--------------------------------------------------------|
 //! | `cli-registry`    | USAGE text, option lookups, and the key registries in  |
-//! |                   | `cli/mod.rs` agree (the PR 7 `--perf-json` class)      |
+//! |                   | `cli/mod.rs` agree (the PR 7 `--perf-json` class);     |
+//! |                   | positional args (`Args::pos` / POSITIONAL_KEYS /       |
+//! |                   | UPPERCASE usage placeholders) are held to the same     |
+//! |                   | two-direction contract                                 |
 //! | `panic-free-net`  | connection-facing code never panics on hostile input   |
 //! | `determinism`     | `audit:deterministic` modules use no wall clock, no    |
 //! |                   | hash-order iteration, no thread identity               |
@@ -58,7 +61,8 @@ pub const REQUIRED_DETERMINISTIC: [&str; 7] = [
 /// Modules whose `Ordering::Relaxed` uses are monotonic counters read
 /// only after the writing threads are joined (or where one-interval
 /// staleness is explicitly tolerated); the atomics rule skips them.
-pub const ATOMICS_COUNTER_MODULES: [&str; 1] = ["coordinator/metrics.rs"];
+pub const ATOMICS_COUNTER_MODULES: [&str; 2] =
+    ["coordinator/metrics.rs", "obs/metrics.rs"];
 
 const MARKER_CONNECTION_FACING: &str = "audit:connection-facing";
 const MARKER_DETERMINISTIC: &str = "audit:deterministic";
@@ -147,8 +151,20 @@ fn has_word(hay: &str, word: &str) -> bool {
     !word_positions(hay, word).is_empty()
 }
 
+/// The annotation at the START of a comment, if any: the comment text
+/// (doc-comment `/`/`!` prefixes stripped) must begin with `audit:`.
+/// Prose that merely mentions an annotation mid-sentence — like the
+/// module docs of this very file, which the analyzer also scans — must
+/// not opt a file into a rule scope or parse as an allow.
+fn annotation(comment: &str) -> Option<&str> {
+    let t = comment.trim_start_matches(['/', '!', ' ', '\t']);
+    t.starts_with("audit:").then_some(t)
+}
+
 fn has_marker(f: &LexedFile, marker: &str) -> bool {
-    f.lines.iter().any(|l| l.comment.contains(marker))
+    f.lines
+        .iter()
+        .any(|l| annotation(&l.comment).is_some_and(|a| a.starts_with(marker)))
 }
 
 fn push(findings: &mut Vec<Finding>, rule: &str, file: &str, line0: usize, msg: String) {
@@ -177,9 +193,8 @@ fn collect_allows(f: &LexedFile, allows: &mut Vec<Allow>, findings: &mut Vec<Fin
         if f.is_test[i] {
             continue;
         }
-        let c = &line.comment;
-        let Some(at) = c.find("audit:allow") else { continue };
-        let rest = &c[at + "audit:allow".len()..];
+        let Some(ann) = annotation(&line.comment) else { continue };
+        let Some(rest) = ann.strip_prefix("audit:allow") else { continue };
         let parsed = parse_allow_tail(rest);
         match parsed {
             Ok((rule, reason)) => {
@@ -504,6 +519,21 @@ struct KeyAt {
     line: usize,
 }
 
+/// Option-lookup methods on `Args`: (method name, is_flag).  The call
+/// patterns (`.opt("`, …) are assembled at runtime from these names so
+/// the table cannot match itself when the analyzer audits its own
+/// source tree.
+const LOOKUP_FNS: [(&str, bool); 5] = [
+    ("opt", false),
+    ("opt_or", false),
+    ("opt_usize", false),
+    ("opt_f64", false),
+    ("has_flag", true),
+];
+
+/// The positional-lookup method on `Args` (registry: POSITIONAL_KEYS).
+const POSITIONAL_LOOKUP_FN: &str = "pos";
+
 fn cli_registry(files: &[LexedFile], findings: &mut Vec<Finding>) {
     let Some(cli) = files.iter().find(|f| f.rel.ends_with("cli/mod.rs")) else {
         return; // fixture trees without a CLI simply skip this rule
@@ -536,19 +566,16 @@ fn cli_registry(files: &[LexedFile], findings: &mut Vec<Finding>) {
     // Literal option lookups anywhere in non-test code.
     let mut value_lookups: Vec<(KeyAt, String)> = Vec::new();
     let mut flag_lookups: Vec<(KeyAt, String)> = Vec::new();
+    let mut pos_lookups: Vec<(KeyAt, String)> = Vec::new();
+    let pos_pat = format!(".{POSITIONAL_LOOKUP_FN}(\"");
     for f in files {
         for (i, line) in f.lines.iter().enumerate() {
             if f.is_test[i] {
                 continue;
             }
-            for (pat, is_flag) in [
-                (".opt(\"", false),
-                (".opt_or(\"", false),
-                (".opt_usize(\"", false),
-                (".opt_f64(\"", false),
-                (".has_flag(\"", true),
-            ] {
-                for key in literal_args(&line.code_strings, pat) {
+            for (name, is_flag) in LOOKUP_FNS {
+                let pat = format!(".{name}(\"");
+                for key in literal_args(&line.code_strings, &pat) {
                     let at = KeyAt { key, line: i + 1 };
                     if is_flag {
                         flag_lookups.push((at, f.rel.clone()));
@@ -556,6 +583,9 @@ fn cli_registry(files: &[LexedFile], findings: &mut Vec<Finding>) {
                         value_lookups.push((at, f.rel.clone()));
                     }
                 }
+            }
+            for key in literal_args(&line.code_strings, &pos_pat) {
+                pos_lookups.push((KeyAt { key, line: i + 1 }, f.rel.clone()));
             }
         }
     }
@@ -612,6 +642,58 @@ fn cli_registry(files: &[LexedFile], findings: &mut Vec<Finding>) {
             );
         }
     }
+
+    // Positional arguments: `Args::pos("key")` resolves through the
+    // POSITIONAL_KEYS registry, and usage text names positionals by
+    // their UPPERCASE placeholder (`mcma stats ADDR` <-> "addr").  The
+    // registry is optional — trees without positionals skip all of this
+    // — but once declared, both directions are enforced like options.
+    let positional_keys = extract_key_array(cli, "POSITIONAL_KEYS").unwrap_or_default();
+    let placeholders: Vec<String> = cli
+        .lines
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !cli.is_test[*i])
+        .flat_map(|(_, line)| upper_tokens(&line.strings))
+        .collect();
+    for (l, file) in &pos_lookups {
+        if !positional_keys.iter().any(|e| e.key == l.key) {
+            push(
+                findings,
+                "cli-registry",
+                file,
+                l.line - 1,
+                format!("positional lookup \"{}\" is not in POSITIONAL_KEYS — Args::pos would never find it", l.key),
+            );
+        }
+    }
+    for e in &positional_keys {
+        let in_usage = placeholders.iter().any(|p| p == &e.key);
+        let looked_up = pos_lookups.iter().any(|(l, _)| l.key == e.key);
+        if !in_usage && !looked_up {
+            push(
+                findings,
+                "cli-registry",
+                &cli.rel,
+                e.line - 1,
+                format!("registered positional \"{}\" appears in no usage text (as its UPPERCASE placeholder) and no .pos() lookup — dead registry entry", e.key),
+            );
+        }
+    }
+}
+
+/// ALL-CAPS placeholder tokens (A-Z 0-9 `_` `-`, at least two chars,
+/// leading uppercase letter) in string content, lowercased — the USAGE
+/// convention for naming positional arguments (`ADDR`, `HOST:PORT`
+/// splits at the `:` into two tokens).
+fn upper_tokens(strings: &str) -> Vec<String> {
+    strings
+        .split(|c: char| {
+            !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_' || c == '-')
+        })
+        .filter(|t| t.len() >= 2 && t.starts_with(|c: char| c.is_ascii_uppercase()))
+        .map(|t| t.to_ascii_lowercase())
+        .collect()
 }
 
 /// Pull the string literals out of `const NAME: [&str; N] = [ ... ];`.
@@ -744,6 +826,45 @@ mod tests {
             dash_dash_tokens("  --seed N   --closed-loop   --{k} ---x"),
             vec!["seed".to_string(), "closed-loop".to_string()]
         );
+    }
+
+    #[test]
+    fn marker_mentioned_in_prose_does_not_opt_in() {
+        // The analyzer scans its own source, whose docs NAME the markers
+        // mid-sentence; only a comment STARTING with the annotation may
+        // opt a file into a rule scope or parse as an allow.
+        let src = "//! Scope markers (`// audit:connection-facing`) opt files in.\n\
+                   //! Suppress with `// audit:allow(<rule>) — <reason>`.\n\
+                   fn f(v: &[u8]) { let _ = v[0]; }\n";
+        let (findings, allows) = run_one("x.rs", src);
+        assert!(findings.is_empty(), "{findings:?}");
+        assert!(allows.is_empty());
+    }
+
+    #[test]
+    fn positional_registry_is_checked_both_ways() {
+        let cli = "const VALUE_KEYS: [&str; 0] = [];\n\
+                   const FLAG_KEYS: [&str; 0] = [];\n\
+                   const POSITIONAL_KEYS: [&str; 2] = [\"addr\", \"phantom\"];\n\
+                   pub const USAGE: &str = \"usage: mcma stats ADDR\";\n";
+        let main = "pub fn run(args: &Args) {\n\
+                    let _ = args.pos(\"addr\");\n\
+                    let _ = args.pos(\"ghost\");\n\
+                    }\n";
+        let (findings, _) =
+            audit(&[lex("cli/mod.rs", cli), lex("main.rs", main)]);
+        let cli_hits: Vec<(String, usize)> = findings
+            .iter()
+            .map(|f| (f.file.clone(), f.line))
+            .collect();
+        // `addr` is fine (ADDR placeholder + lookup); `phantom` is a dead
+        // registry entry; `ghost` is an unregistered lookup.
+        assert_eq!(
+            cli_hits,
+            vec![("cli/mod.rs".to_string(), 3), ("main.rs".to_string(), 3)],
+            "{findings:#?}"
+        );
+        assert!(findings.iter().all(|f| f.rule == "cli-registry"));
     }
 
     #[test]

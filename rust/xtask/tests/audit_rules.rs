@@ -93,19 +93,43 @@ fn atomics_fires_unless_allowed() {
 #[test]
 fn cli_registry_catches_the_perf_json_class() {
     let r = audit("cli_registry");
-    // Dead registry entry (`ghost`), undocumented-but-used key in both
-    // directions (`perf-json` in USAGE and in a lookup).
+    // Dead registry entries (`ghost` flag, `phantom` positional),
+    // undocumented-but-used keys in both directions (`perf-json` in
+    // USAGE and in a lookup, `unregistered` in a .pos() lookup).
     assert_eq!(
         hits(&r, "cli-registry"),
         vec![
-            ("cli/mod.rs".to_string(), 4), // dead "ghost" entry
-            ("cli/mod.rs".to_string(), 7), // --perf-json in USAGE, unregistered
-            ("main.rs".to_string(), 3),    // .opt("perf-json") unregistered
+            ("cli/mod.rs".to_string(), 4),  // dead "ghost" entry
+            ("cli/mod.rs".to_string(), 7),  // --perf-json in USAGE, unregistered
+            ("cli/mod.rs".to_string(), 10), // dead "phantom" positional
+            ("main.rs".to_string(), 3),     // .opt("perf-json") unregistered
+            ("main.rs".to_string(), 6),     // .pos("unregistered")
         ]
     );
-    assert_eq!(r.findings.len(), 3, "{:#?}", r.findings);
+    assert_eq!(r.findings.len(), 5, "{:#?}", r.findings);
     assert_json_has(&r, "cli-registry", "cli/mod.rs", 7);
+    assert_json_has(&r, "cli-registry", "cli/mod.rs", 10);
     assert_json_has(&r, "cli-registry", "main.rs", 3);
+    assert_json_has(&r, "cli-registry", "main.rs", 6);
+}
+
+/// `audit_tree` sweeps src + xtask/src + tests + benches (prefixed
+/// rels), and deliberately never descends into `xtask/tests` — the
+/// fixture trees there seed violations on purpose.
+#[test]
+fn audit_tree_scans_all_roots_but_not_fixture_trees() {
+    let r = xtask::audit_tree(&fixture("tree")).expect("tree fixture must scan");
+    assert_eq!(r.files_scanned, 3, "src + xtask/src + tests, NOT xtask/tests");
+    assert_eq!(
+        hits(&r, "atomics"),
+        vec![("xtask/src/main.rs".to_string(), 2)]
+    );
+    assert_eq!(
+        hits(&r, "safety-comments"),
+        vec![("tests/integration.rs".to_string(), 2)]
+    );
+    assert_eq!(r.findings.len(), 2, "{:#?}", r.findings);
+    assert_json_has(&r, "atomics", "xtask/src/main.rs", 2);
 }
 
 #[test]
@@ -132,6 +156,23 @@ fn repo_src_tree_is_clean() {
     assert!(
         r.findings.is_empty(),
         "mcma-audit found {} issue(s) in rust/src:\n{:#?}",
+        r.findings.len(),
+        r.findings
+    );
+    assert!(r.allows.iter().all(|a| !a.reason.trim().is_empty()));
+}
+
+/// The CI gate: the combined tree (library + the analyzer's own source
+/// + integration tests + benches) is clean, exactly what the default
+/// `cargo run -p xtask -- audit` invocation scans.
+#[test]
+fn repo_tree_is_clean() {
+    let rust_dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    let r = xtask::audit_tree(&rust_dir).expect("rust tree must scan");
+    assert!(r.files_scanned > 55, "suspiciously small tree: {}", r.files_scanned);
+    assert!(
+        r.findings.is_empty(),
+        "mcma-audit found {} issue(s) in the rust tree:\n{:#?}",
         r.findings.len(),
         r.findings
     );

@@ -6,3 +6,9 @@ const FLAG_KEYS: [&str; 2] = ["help", "ghost"];
 pub const USAGE: &str = "\
 usage: mcma train --bench B [--seed S] [--perf-json PATH]
 ";
+
+const POSITIONAL_KEYS: [&str; 2] = ["addr", "phantom"];
+
+pub const USAGE2: &str = "\
+usage: mcma stats ADDR [--seed S]
+";

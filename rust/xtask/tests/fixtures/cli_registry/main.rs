@@ -2,4 +2,6 @@
 pub fn run(args: &Args) {
     let _ = args.opt("perf-json");
     let _ = args.has_flag("help");
+    let _ = args.pos("addr");
+    let _ = args.pos("unregistered");
 }

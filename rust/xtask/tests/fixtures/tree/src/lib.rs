@@ -1,0 +1,2 @@
+// fixture: a clean library file — the src root must still be scanned.
+pub fn ok() {}

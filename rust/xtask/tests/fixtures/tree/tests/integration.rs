@@ -1,0 +1,2 @@
+// fixture: unsafe in an integration-test tree still needs a SAFETY note.
+pub fn peek(v: &[u8]) -> u8 { unsafe { *v.as_ptr() } }

@@ -1,0 +1,2 @@
+// fixture: Relaxed outside the counter allowlist must fire in xtask/src too.
+pub fn bump(c: &std::sync::atomic::AtomicU64) { c.fetch_add(1, std::sync::atomic::Ordering::Relaxed); }

@@ -1,0 +1,2 @@
+// fixture-of-a-fixture: would be a finding if fixture trees were scanned.
+pub fn f(v: &[u8]) -> u8 { unsafe { *v.as_ptr() } }

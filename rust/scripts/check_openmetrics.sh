@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# Validate an OpenMetrics/Prometheus text exposition dump (as served by
+# `mcma serve --metrics-listen` on GET /metrics) without any external
+# tooling — awk only, so the CI expo-smoke job and local runs share one
+# format gate.
+#
+# Checks:
+#   1. the document ends with the `# EOF` terminator;
+#   2. every sample line's metric name has a `# TYPE` header for its
+#      family (histogram `_bucket`/`_sum`/`_count` map to the family);
+#   3. every family declared `counter` only has samples ending in
+#      `_total` (modulo labels);
+#   4. within each histogram (family, label set), the `le` bucket values
+#      are cumulative (non-decreasing in file order) and the `+Inf`
+#      bucket equals the matching `_count` sample;
+#   5. every sample value parses as a number.
+#
+# Usage: check_openmetrics.sh METRICS.txt
+set -euo pipefail
+
+file="${1:?usage: check_openmetrics.sh METRICS.txt}"
+
+[ -s "$file" ] || { echo "FAIL: $file is empty or missing" >&2; exit 1; }
+
+tail -n 1 "$file" | grep -qx '# EOF' || {
+    echo "FAIL: missing '# EOF' terminator" >&2
+    exit 1
+}
+
+awk '
+function fail(msg) { print "FAIL: line " NR ": " msg > "/dev/stderr"; bad = 1 }
+# Family-plus-labels key shared by a histogram group: the series with
+# its `le` pair and the _bucket/_sum/_count suffix stripped.
+#   mcma_stage_queue_us_bucket{le="7"}              -> mcma_stage_queue_us
+#   mcma_route_execute_us_bucket{class="1",le="7"}  -> mcma_route_execute_us{class="1"}
+#   mcma_route_execute_us_count{class="1"}          -> mcma_route_execute_us{class="1"}
+function histkey(series) {
+    sub(/le="[^"]*",?/, "", series)
+    sub(/,}/, "}", series)
+    sub(/{}/, "", series)
+    sub(/_(bucket|sum|count)/, "", series)
+    return series
+}
+/^# TYPE / { type[$3] = $4; next }
+/^#/ { next }
+/^$/ { next }
+{
+    # series = everything before the LAST space; value = the rest
+    if (!match($0, / [^ ]+$/)) { fail("no value field"); next }
+    series = substr($0, 1, RSTART - 1)
+    value = substr($0, RSTART + 1)
+    if (value !~ /^[+-]?([0-9]*\.?[0-9]+([eE][+-]?[0-9]+)?|Inf|NaN)$/)
+        fail("unparseable value \"" value "\"")
+
+    name = series
+    sub(/{.*/, "", name)
+    fam = name
+    if (!(fam in type)) { sub(/_(bucket|sum|count)$/, "", fam) }
+    if (!(fam in type)) { fail("no # TYPE for " series); next }
+
+    if (type[fam] == "counter" && name !~ /_total$/)
+        fail("counter sample " name " does not end in _total")
+
+    if (type[fam] == "histogram") {
+        key = histkey(series)
+        if (name ~ /_bucket$/) {
+            if (series ~ /le="\+Inf"/) {
+                inf[key] = value
+            } else {
+                if ((key in cum) && value + 0 < cum[key] + 0)
+                    fail("bucket series " series " not cumulative")
+                cum[key] = value
+            }
+        }
+        if (name ~ /_count$/) count[key] = value
+    }
+    next
+}
+END {
+    for (k in inf) {
+        if (!(k in count)) { fail("no _count for histogram " k); continue }
+        if (inf[k] + 0 != count[k] + 0)
+            fail("+Inf bucket " inf[k] " != _count " count[k] " for " k)
+        if ((k in cum) && cum[k] + 0 > count[k] + 0)
+            fail("finite buckets exceed _count for " k)
+    }
+    for (k in count)
+        if (!(k in inf)) fail("histogram " k " has _count but no +Inf bucket")
+    exit bad
+}
+' "$file" || { echo "FAIL: $file violates the OpenMetrics contract" >&2; exit 1; }
+
+samples=$(grep -cv '^#' "$file" || true)
+echo "ok: $file ($samples samples) passes the OpenMetrics format checks" >&2

@@ -19,7 +19,7 @@ pub struct Args {
 }
 
 /// Option keys that take a value.
-const VALUE_KEYS: [&str; 42] = [
+const VALUE_KEYS: [&str; 46] = [
     // shared / eval / serve / npu-sim
     "bench", "method", "exec", "samples", "requests", "batch", "wait-us",
     "case", "n", "seed",
@@ -34,6 +34,9 @@ const VALUE_KEYS: [&str; 42] = [
     "addr", "rate", "closed-loop", "mix", "csv", "json",
     // observability (`serve` writers + `stats` scraper)
     "watch", "trace-json", "metrics-json", "metrics-interval-s",
+    // exposition + SLO monitor (`serve --metrics-listen`, `bench-load`
+    // cross-check, `trace` converter reuses trace-json/out above)
+    "metrics-listen", "slo-p99-us", "slo-error-budget", "metrics-addr",
 ];
 
 /// Positional argument names, in the order subcommands consume them via
@@ -160,11 +163,25 @@ SUBCOMMANDS:
                                      lines) to PATH at shutdown
          [--metrics-json PATH]       write the live metrics snapshot to
          [--metrics-interval-s N]    PATH every N seconds (default 5)
+         [--metrics-listen ADDR]     OpenMetrics text exposition over HTTP:
+                                     GET /metrics (Prometheus scrape) and
+                                     GET /healthz (200 ok / 503 on breach)
+         [--slo-p99-us N]            SLO burn-rate monitor: delivered-e2e
+         [--slo-error-budget F]      p99 target in µs and the error budget
+                                     fraction (default 0.001); a fast+slow
+                                     window breach flips /healthz to 503
   stats  ADDR | --addr HOST:PORT    scrape a running `serve --listen`
          [--watch SECS] [--json PATH] server in-band (STATS frame): stage
                                      waterfall percentiles, route/QoS
                                      counters; --watch re-scrapes every
-                                     SECS; --json dumps the raw snapshot
+                                     SECS and prints per-interval rates
+                                     (delta/s + interval percentiles);
+                                     --json dumps the raw snapshot
+  trace  --trace-json PATH          convert a drained span journal (JSON
+         [--out PATH]                lines, from `serve --trace-json`) to
+                                     Chrome/Perfetto trace-event JSON on
+                                     stdout or --out; open in
+                                     ui.perfetto.dev
   bench-load --addr HOST:PORT       seeded load generator against a live
          [--seed S] [--duration SEC] `mcma serve --listen` socket:
          [--rate R | --closed-loop N] open-loop Poisson at R req/s or
@@ -173,7 +190,10 @@ SUBCOMMANDS:
          [--bench B]                 of the held-out set); --requests caps
          [--qos-target T]            total sent (same seed + same cap =
          [--csv PATH] [--json PATH]  identical sequence).  Writes the
-                                     per-request CSV + BENCH_serve.json
+         [--metrics-addr ADDR]       per-request CSV + BENCH_serve.json;
+                                     --metrics-addr cross-checks the HTTP
+                                     /metrics exposition against the
+                                     in-band STATS snapshot after the run
   train  --bench B | --data F.csv co-train K approximators + multiclass
          [--d-out N] [--holdout H]   classifier natively (no Python) and
          [--k K] [--scheme S]        export MCMW/MCQW artifacts ModelBank
@@ -339,6 +359,23 @@ mod tests {
         assert_eq!(b.subcommand.as_deref(), Some("stats"));
         assert_eq!(b.opt("addr"), Some("127.0.0.1:7090"));
         assert_eq!(b.opt_usize("watch", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn exposition_and_slo_options_registered() {
+        let a = parse(
+            "serve --bench fft --listen 127.0.0.1:0 --metrics-listen 127.0.0.1:0 \
+             --slo-p99-us 20000 --slo-error-budget 0.01",
+        );
+        assert_eq!(a.opt("metrics-listen"), Some("127.0.0.1:0"));
+        assert_eq!(a.opt_usize("slo-p99-us", 0).unwrap(), 20_000);
+        assert!((a.opt_f64("slo-error-budget", 0.0).unwrap() - 0.01).abs() < 1e-12);
+        let b = parse("bench-load --addr 127.0.0.1:7090 --metrics-addr 127.0.0.1:9090");
+        assert_eq!(b.opt("metrics-addr"), Some("127.0.0.1:9090"));
+        let c = parse("trace --trace-json /tmp/t.jsonl --out /tmp/t.json");
+        assert_eq!(c.subcommand.as_deref(), Some("trace"));
+        assert_eq!(c.opt("trace-json"), Some("/tmp/t.jsonl"));
+        assert_eq!(c.opt("out"), Some("/tmp/t.json"));
     }
 
     #[test]

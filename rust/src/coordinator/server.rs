@@ -27,6 +27,9 @@
 
 // audit:connection-facing — network readers feed this pipeline; a
 // hostile request must never panic a worker or the batcher thread.
+// audit:lock-ordered — shared mutexes follow the fixed acquisition
+// order batch_rx -> registry -> reader_threads; mcma-audit reports any
+// out-of-order nesting in this file.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc;

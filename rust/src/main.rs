@@ -67,6 +67,7 @@ fn run(args: Args) -> mcma::Result<()> {
         Some("eval") => eval_cmd(&args),
         Some("serve") => serve_cmd(&args),
         Some("stats") => stats_cmd(&args),
+        Some("trace") => trace_cmd(&args),
         Some("bench-load") => bench_load_cmd(&args),
         Some("train") => train_cmd(&args),
         Some("npu-sim") => npu_sim_cmd(&args),
@@ -316,6 +317,62 @@ fn serve_cmd(args: &Args) -> mcma::Result<()> {
             })?;
     }
 
+    // `--slo-p99-us N` (+ `--slo-error-budget F`): multi-window SLO
+    // burn-rate monitor over the delivered-latency histogram.  A
+    // detached 1 s tick thread feeds it cumulative counts: `bad` =
+    // deliveries over the latency target plus breaker trips (the two
+    // budget-consuming events).  Transitions bump `slo_breaches_total`
+    // and journal an instant event, so the Perfetto export shows the
+    // breach window against the request tracks.
+    let slo = match args.opt("slo-p99-us") {
+        None => None,
+        Some(_) => {
+            let cfg = mcma::obs::SloConfig::new(
+                args.opt_usize("slo-p99-us", 0)? as u64,
+                args.opt_f64("slo-error-budget", 0.001)?,
+            );
+            cfg.validate()?;
+            let slo = Arc::new(mcma::obs::SloMonitor::new(cfg));
+            let obs = obs.clone();
+            let mon = Arc::clone(&slo);
+            std::thread::Builder::new()
+                .name("mcma-slo-tick".into())
+                .spawn(move || loop {
+                    std::thread::sleep(std::time::Duration::from_secs(1));
+                    let delivered = obs.metrics.e2e_delivered.snapshot();
+                    let bad = delivered.count_over(mon.config().p99_target_us)
+                        + obs.metrics.breaker_trips.get();
+                    let t = mon.tick(obs.journal.now_us(), delivered.count, bad);
+                    if t.changed {
+                        if t.breached {
+                            obs.metrics.slo_breaches.inc();
+                        }
+                        obs.journal.push(mcma::obs::Event::Slo {
+                            breached: t.breached,
+                            burn_short: t.burn_short,
+                            burn_long: t.burn_long,
+                            at_us: obs.journal.now_us(),
+                        });
+                    }
+                })?;
+            Some(slo)
+        }
+    };
+
+    // `--metrics-listen ADDR`: OpenMetrics text exposition over HTTP —
+    // `GET /metrics` for Prometheus-style scrapes, `GET /healthz` for
+    // load balancers (503 while the SLO monitor reports a breach).  The
+    // handle is held for the life of the serve so the accept loop stays
+    // up on every exit path below.
+    let _metrics_http = match args.opt("metrics-listen") {
+        None => None,
+        Some(addr) => {
+            let srv = mcma::net::MetricsServer::spawn(obs.clone(), slo.clone(), addr)?;
+            println!("metrics on http://{}/metrics", srv.local_addr());
+            Some(srv)
+        }
+    };
+
     // `--listen ADDR`: serve over TCP (length-prefixed binary frames)
     // instead of generating in-process demo traffic.  `--duration 0`
     // (the default) serves until the process is killed.
@@ -406,9 +463,17 @@ fn stats_cmd(args: &Args) -> mcma::Result<()> {
         .to_string();
     let watch = args.opt_usize("watch", 0)? as u64;
     let json_path = args.opt("json").map(std::path::PathBuf::from);
+    let mut prev: Option<(mcma::util::json::Value, Instant)> = None;
     loop {
         let snap = mcma::net::load::scrape_stats(&addr, 0)?;
+        let at = Instant::now();
         print_stats_snapshot(&snap);
+        // `--watch` interval view: everything above is cumulative since
+        // server start; this differences consecutive scrapes into
+        // per-second rates and interval-local percentiles.
+        if let Some((old, t0)) = &prev {
+            print_interval_rates(old, &snap, at.duration_since(*t0).as_secs_f64());
+        }
         if let Some(p) = &json_path {
             std::fs::write(p, mcma::util::json::write(&snap))
                 .map_err(|e| anyhow::anyhow!("writing {}: {e}", p.display()))?;
@@ -417,9 +482,103 @@ fn stats_cmd(args: &Args) -> mcma::Result<()> {
         if watch == 0 {
             return Ok(());
         }
+        prev = Some((snap, at));
         std::thread::sleep(std::time::Duration::from_secs(watch));
         println!();
     }
+}
+
+/// Rebuild a [`mcma::obs::HistSnapshot`] from the sparse
+/// `[bucket, count]` pairs a STATS snapshot carries for each stage, so
+/// two scrapes can be differenced bucketwise into an interval-local
+/// histogram with real percentiles (not deltas of percentiles, which
+/// are meaningless).
+fn hist_from_stats_json(h: &mcma::util::json::Value) -> mcma::obs::HistSnapshot {
+    let mut s = mcma::obs::HistSnapshot::default();
+    s.count = h.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    s.sum = h.get("sum_us").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+    for pair in h.get("buckets").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let Some(pair) = pair.as_arr() else { continue };
+        let (Some(i), Some(c)) = (
+            pair.first().and_then(|v| v.as_f64()),
+            pair.get(1).and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        let i = i as usize;
+        if let Some(slot) = s.buckets.get_mut(i) {
+            *slot = c as u64;
+        }
+    }
+    s
+}
+
+/// The `--watch` per-interval block: delta/sec for the headline
+/// counters plus interval p50/p99 for the hot stage histograms,
+/// computed by differencing the two scrapes' sparse log2 buckets.
+fn print_interval_rates(prev: &mcma::util::json::Value, cur: &mcma::util::json::Value, dt_s: f64) {
+    let dt = dt_s.max(1e-9);
+    let counter = |snap: &mcma::util::json::Value, key: &str| -> f64 {
+        snap.get("counters")
+            .and_then(|v| v.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or(0.0)
+    };
+    let rate = |key: &str| (counter(cur, key) - counter(prev, key)).max(0.0) / dt;
+    println!(
+        "interval ({dt_s:.1} s)   : {:.0} submitted/s, {:.0} delivered/s, {:.0} frames/s, {:.1} failures/s",
+        rate("submitted"),
+        rate("delivered"),
+        rate("frames_in"),
+        rate("delivery_failures"),
+    );
+    for stage in ["queue", "execute", "e2e_delivered"] {
+        let get = |snap: &mcma::util::json::Value| {
+            snap.get("stages").and_then(|v| v.get(stage)).map(hist_from_stats_json)
+        };
+        let (Some(a), Some(b)) = (get(prev), get(cur)) else { continue };
+        let mut d = mcma::obs::HistSnapshot::default();
+        for i in 0..d.buckets.len() {
+            d.buckets[i] = b.buckets[i].saturating_sub(a.buckets[i]);
+        }
+        d.count = b.count.saturating_sub(a.count);
+        d.sum = b.sum.saturating_sub(a.sum);
+        if d.count == 0 {
+            continue;
+        }
+        println!(
+            "interval {stage:<12}: {} samples, p50 {:.0} µs, p99 {:.0} µs",
+            d.count,
+            d.p50(),
+            d.p99(),
+        );
+    }
+}
+
+/// `mcma trace`: convert a drained span journal (the JSON-lines file
+/// `serve --trace-json PATH` appends) into Chrome trace-event JSON for
+/// ui.perfetto.dev / chrome://tracing.  Live drain story: point this at
+/// the same file a running serve keeps appending — the converter reads
+/// whatever has been flushed so far.  `--out PATH` writes the document;
+/// without it the JSON goes to stdout.
+fn trace_cmd(args: &Args) -> mcma::Result<()> {
+    let path = args.opt("trace-json").ok_or_else(|| {
+        anyhow::anyhow!("--trace-json PATH required (the journal drain from `serve --trace-json`)")
+    })?;
+    let jsonl = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let doc = mcma::obs::chrome::convert(&jsonl)?;
+    let rendered = mcma::util::json::write(&doc);
+    match args.opt("out") {
+        Some(p) => {
+            std::fs::write(p, &rendered)
+                .map_err(|e| anyhow::anyhow!("writing {p}: {e}"))?;
+            let events = doc.as_arr().map(|a| a.len()).unwrap_or(0);
+            println!("wrote {p} ({events} trace events)");
+        }
+        None => println!("{rendered}"),
+    }
+    Ok(())
 }
 
 /// Render one STATS snapshot: headline counters, the stage waterfall,
@@ -720,6 +879,56 @@ fn bench_load_cmd(args: &Args) -> mcma::Result<()> {
             p50("execute"),
             p50("pump"),
         );
+    }
+
+    // `--metrics-addr ADDR`: cross-check the HTTP OpenMetrics
+    // exposition against the in-band STATS snapshot once the run is
+    // done.  Request-plane counters are quiescent between the two
+    // scrapes (the load loop has drained), so they must agree exactly;
+    // connection-plane counters keep moving with our own scrapes, so
+    // the exposition may only run ahead of the earlier STATS read,
+    // never behind it.
+    if let Some(maddr) = args.opt("metrics-addr") {
+        let stats = mcma::net::load::scrape_stats(addr, 0)?;
+        let (status, body) = mcma::net::http_get(maddr, "/metrics")?;
+        anyhow::ensure!(status == 200, "GET /metrics on {maddr} returned {status}");
+        let parsed = mcma::obs::expo::parse_text(&body);
+        let expo = |series: &str| {
+            mcma::obs::expo::series_value(&parsed, series)
+                .ok_or_else(|| anyhow::anyhow!("/metrics is missing series {series}"))
+        };
+        let stat = |key: &str| {
+            stats
+                .get("counters")
+                .and_then(|v| v.get(key))
+                .and_then(|v| v.as_f64())
+                .unwrap_or(0.0)
+        };
+        for key in [
+            "submitted",
+            "dispatched",
+            "delivered",
+            "delivery_failures",
+            "route_invoked_rows",
+            "route_cpu_rows",
+            "malformed_frames",
+        ] {
+            let e = expo(&format!("mcma_{key}_total"))?;
+            let s = stat(key);
+            anyhow::ensure!(
+                e == s,
+                "exposition disagrees with STATS on {key}: /metrics {e} vs in-band {s}"
+            );
+        }
+        for key in ["accepted_conns", "frames_in", "stats_requests"] {
+            let e = expo(&format!("mcma_{key}_total"))?;
+            let s = stat(key);
+            anyhow::ensure!(
+                e >= s,
+                "exposition ran behind STATS on {key}: /metrics {e} vs in-band {s}"
+            );
+        }
+        println!("metrics check    : /metrics on {maddr} agrees with the in-band STATS snapshot");
     }
 
     let csv_path = match args.opt("csv") {

@@ -1,0 +1,303 @@
+//! Minimal HTTP/1.1 exposition responder (`serve --metrics-listen`).
+//!
+//! Serves exactly two routes:
+//!
+//! * `GET /metrics` — the OpenMetrics rendering of the live
+//!   [`crate::obs::Registry`] snapshot ([`crate::obs::expo::render`]);
+//! * `GET /healthz` — `200 ok` while the SLO burn-rate monitor is
+//!   within budget (or no monitor is configured), `503` during a
+//!   breach.
+//!
+//! Anything else — other paths, other methods — is a `404`.  A
+//! malformed request (no parseable request line, oversized head, read
+//! timeout) kills only its own connection, the same hardening contract
+//! as the frame protocol in [`super::listener`]: the responder never
+//! panics, never trusts peer bytes, and each connection is handled by a
+//! short-lived thread so a stuck peer cannot stall the accept loop.
+//!
+//! This is deliberately not a general HTTP server: no keep-alive, no
+//! chunked bodies, no header parsing beyond the request line — scrape
+//! clients (Prometheus, curl) speak this subset happily.
+
+// audit:connection-facing — a hostile peer must kill only its own
+// connection; mcma-audit bans panics and unchecked indexing here.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::obs::expo;
+use crate::obs::slo::SloMonitor;
+use crate::obs::Obs;
+
+/// Maximum request head we will buffer before declaring the peer
+/// hostile and dropping the connection.
+const MAX_HEAD: usize = 4096;
+
+/// Per-connection socket timeouts: a scrape either completes promptly
+/// or its connection dies without holding any shared state.
+const IO_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// Running exposition endpoint; `shutdown` stops the accept loop.
+pub struct MetricsServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`127.0.0.1:0` for an ephemeral test port) and serve
+    /// `/metrics` + `/healthz` from the shared observability handle.
+    /// `slo` wires `/healthz` (and the `mcma_slo_*` families) to the
+    /// burn-rate monitor when `serve` configured one.
+    pub fn spawn(
+        obs: Obs,
+        slo: Option<Arc<SloMonitor>>,
+        addr: &str,
+    ) -> crate::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("binding metrics endpoint {addr}: {e}"))?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            thread::Builder::new().name("mcma-metrics-accept".into()).spawn(move || {
+                while !stop.load(Ordering::Acquire) {
+                    let stream = match listener.accept() {
+                        Ok((s, _)) => s,
+                        Err(_) => {
+                            thread::sleep(Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    // Accepted sockets do not reliably inherit the
+                    // listener's flags; make them blocking with a bounded
+                    // timeout explicitly.
+                    if stream.set_nonblocking(false).is_err()
+                        || stream.set_read_timeout(Some(IO_TIMEOUT)).is_err()
+                        || stream.set_write_timeout(Some(IO_TIMEOUT)).is_err()
+                    {
+                        continue;
+                    }
+                    let obs = obs.clone();
+                    let slo = slo.clone();
+                    // Detached: each scrape connection is answered and
+                    // closed; a failed spawn drops only this connection.
+                    let _ = thread::Builder::new()
+                        .name("mcma-metrics-conn".into())
+                        .spawn(move || serve_connection(stream, &obs, slo.as_deref()));
+                }
+            })?
+        };
+
+        Ok(MetricsServer { local_addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting scrapes (in-flight connections finish on their
+    /// own short timeouts).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Read one request head, answer it, close.  Every failure path simply
+/// returns — the connection dies, the server does not.
+fn serve_connection(mut stream: TcpStream, obs: &Obs, slo: Option<&SloMonitor>) {
+    let mut head: Vec<u8> = Vec::new();
+    let mut buf = [0u8; 1024];
+    let complete = loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break false,
+            Ok(n) => {
+                head.extend_from_slice(buf.get(..n).unwrap_or(&[]));
+                if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                    break true;
+                }
+                if head.len() > MAX_HEAD {
+                    break false;
+                }
+            }
+            Err(_) => break false,
+        }
+    };
+    if !complete {
+        return; // malformed or hostile: kill only this connection
+    }
+    let Some((method, path)) = parse_request_line(&head) else {
+        return;
+    };
+    let (status, content_type, body) = route(method, path, obs, slo);
+    let header = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = stream.write_all(header.as_bytes());
+    let _ = stream.write_all(body.as_bytes());
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// `(method, path)` from the request line, or `None` for anything that
+/// is not `METHOD SP TARGET SP HTTP/1.x`.  The query string is dropped.
+fn parse_request_line(head: &[u8]) -> Option<(&str, &str)> {
+    let text = std::str::from_utf8(head).ok()?;
+    let line = text.lines().next()?;
+    let mut parts = line.split(' ');
+    let method = parts.next()?;
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if !version.starts_with("HTTP/1.") || parts.next().is_some() {
+        return None;
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    Some((method, path))
+}
+
+fn route(
+    method: &str,
+    path: &str,
+    obs: &Obs,
+    slo: Option<&SloMonitor>,
+) -> (&'static str, &'static str, String) {
+    const TEXT: &str = "text/plain; charset=utf-8";
+    match (method, path) {
+        ("GET", "/metrics") => ("200 OK", expo::CONTENT_TYPE, expo::render(obs, slo)),
+        ("GET", "/healthz") => {
+            if slo.map(SloMonitor::healthy).unwrap_or(true) {
+                ("200 OK", TEXT, "ok\n".to_string())
+            } else {
+                ("503 Service Unavailable", TEXT, "slo breach\n".to_string())
+            }
+        }
+        _ => ("404 Not Found", TEXT, "not found\n".to_string()),
+    }
+}
+
+/// Tiny scrape client for tests, `bench-load`'s cross-check and CI:
+/// one `GET`, returns `(status_code, body)`.
+pub fn http_get(addr: &str, path: &str) -> crate::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("connecting to metrics endpoint {addr}: {e}"))?;
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes())?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw)?;
+    let text = String::from_utf8(raw)
+        .map_err(|_| anyhow::anyhow!("metrics response is not UTF-8"))?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| anyhow::anyhow!("metrics response has no header/body split"))?;
+    let status_line = head
+        .lines()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty metrics response"))?;
+    let code = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    Ok((code, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::slo::SloConfig;
+
+    fn spawn_test_server(slo: Option<Arc<SloMonitor>>) -> (MetricsServer, Obs) {
+        let obs = Obs::new(1, 1.0);
+        obs.metrics.submitted.add(3);
+        let srv = MetricsServer::spawn(obs.clone(), slo, "127.0.0.1:0").expect("bind");
+        (srv, obs)
+    }
+
+    #[test]
+    fn serves_metrics_and_healthz() {
+        let (srv, _obs) = spawn_test_server(None);
+        let addr = srv.local_addr().to_string();
+        let (code, body) = http_get(&addr, "/metrics").expect("scrape");
+        assert_eq!(code, 200);
+        assert!(body.contains("mcma_submitted_total 3"), "{body}");
+        assert!(body.ends_with("# EOF\n"));
+        let (code, body) = http_get(&addr, "/healthz").expect("healthz");
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn unknown_paths_and_methods_get_404() {
+        let (srv, _obs) = spawn_test_server(None);
+        let addr = srv.local_addr().to_string();
+        let (code, _) = http_get(&addr, "/nope").expect("get");
+        assert_eq!(code, 404);
+        // Non-GET: raw request, expect 404 per the route contract.
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn malformed_request_kills_only_its_connection() {
+        let (srv, _obs) = spawn_test_server(None);
+        let addr = srv.local_addr().to_string();
+        {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            s.write_all(b"\xff\xfe garbage\r\n\r\n").unwrap();
+            let mut resp = Vec::new();
+            let _ = s.read_to_end(&mut resp);
+            assert!(resp.is_empty(), "malformed request must get no response");
+        }
+        // The endpoint still answers afterwards.
+        let (code, _) = http_get(&addr, "/metrics").expect("scrape after garbage");
+        assert_eq!(code, 200);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn healthz_flips_503_on_slo_breach_and_recovers() {
+        let cfg = SloConfig {
+            short_window_us: 10_000_000,
+            long_window_us: 60_000_000,
+            fast_burn: 10.0,
+            slow_burn: 2.0,
+            ..SloConfig::new(1_000, 0.01)
+        };
+        let slo = Arc::new(SloMonitor::new(cfg));
+        let (srv, _obs) = spawn_test_server(Some(Arc::clone(&slo)));
+        let addr = srv.local_addr().to_string();
+        let (code, _) = http_get(&addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        // 50% bad at a 1% budget: burn 50 on both windows -> breach.
+        let t = slo.tick(1_000_000, 1_000, 500);
+        assert!(t.breached);
+        let (code, body) = http_get(&addr, "/healthz").unwrap();
+        assert_eq!(code, 503);
+        assert_eq!(body, "slo breach\n");
+        let (_, metrics) = http_get(&addr, "/metrics").unwrap();
+        assert!(metrics.contains("mcma_slo_healthy 0"), "{metrics}");
+        // Clean windows drain the burn; healthz recovers.
+        let t = slo.tick(120_000_000, 101_000, 500);
+        assert!(!t.breached);
+        let (code, _) = http_get(&addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        srv.shutdown();
+    }
+}

@@ -33,6 +33,9 @@
 
 // audit:connection-facing — a hostile peer must kill only its own
 // connection; mcma-audit bans panics and unchecked indexing here.
+// audit:lock-ordered — shared mutexes follow the fixed acquisition
+// order batch_rx -> registry -> reader_threads; mcma-audit reports any
+// out-of-order nesting in this file.
 
 use std::collections::HashMap;
 use std::io::Write;

@@ -15,8 +15,13 @@
 //!   closed-loop request generation over the served workload's held-out
 //!   rows, with client-observed latency percentiles, per-route counts,
 //!   batch-size histogram and QoS violation scoring.
+//! * [`http`] — [`MetricsServer`]: the hand-rolled HTTP/1.1 exposition
+//!   endpoint (`serve --metrics-listen ADDR`) answering `GET /metrics`
+//!   (OpenMetrics text) and `GET /healthz` (SLO-gated), under the same
+//!   malformed-input-kills-only-its-connection contract as [`frame`].
 
 pub mod frame;
+pub mod http;
 pub mod listener;
 pub mod load;
 
@@ -24,5 +29,6 @@ pub use frame::{
     FrameError, FramePoll, FrameReader, FRAME_VERSION, KIND_STATS, MAX_STATS_BYTES,
     ROUTE_CPU,
 };
+pub use http::{http_get, MetricsServer};
 pub use listener::{NetReport, NetServer};
 pub use load::{scrape_stats, Arrival, LoadConfig, LoadReport};

@@ -1,0 +1,410 @@
+// audit:deterministic — the conversion is a pure function of the input
+// journal text: no clocks, no hash-ordered containers, so the exported
+// trace is byte-identical for a given drain.
+//! Chrome trace-event export (`mcma trace`): converts the span journal's
+//! JSON-lines drain (`serve --trace-json PATH`) into the trace-event
+//! array format that `ui.perfetto.dev` and `chrome://tracing` open
+//! directly.
+//!
+//! Mapping:
+//!
+//! * each sampled request span becomes three contiguous `ph:"X"`
+//!   duration events — `queue` → `batch` → `execute` — reconstructed
+//!   backwards from the dispatch timestamp (`at_us`) and the recorded
+//!   stage durations, on one track (`tid`) per client connection
+//!   (the high 32 bits of the request id, the `net/frame.rs` id split);
+//! * a `delivered` event adds the `pump` slice ending at delivery;
+//! * QoS control-plane events (margin moves, breaker transitions,
+//!   shadow drops) and SLO breach transitions become `ph:"i"` instant
+//!   events on the control track (`tid` 0), carrying their class in
+//!   `args` so Perfetto's query layer can facet on it;
+//! * `ph:"M"` metadata events name the process and every track.
+//!
+//! Timestamps are already microseconds since serve start — exactly the
+//! trace-event `ts` unit — so no rescaling happens.
+
+use std::collections::BTreeSet;
+
+use crate::util::json::{self, Value};
+
+/// Control-plane track id (QoS + SLO instants).
+const CONTROL_TID: u64 = 0;
+
+fn num(n: u64) -> Value {
+    Value::Num(n as f64)
+}
+
+/// One `ph:"X"` complete-duration event.
+fn duration(name: &str, ts: u64, dur: u64, tid: u64, args: Value) -> Value {
+    json::obj(vec![
+        ("name", Value::Str(name.to_string())),
+        ("cat", Value::Str("request".to_string())),
+        ("ph", Value::Str("X".to_string())),
+        ("ts", num(ts)),
+        ("dur", num(dur)),
+        ("pid", num(1)),
+        ("tid", num(tid)),
+        ("args", args),
+    ])
+}
+
+/// One `ph:"i"` instant event on the control track (global scope so the
+/// marker line spans every track in the viewer).
+fn instant(name: &str, ts: u64, args: Value) -> Value {
+    json::obj(vec![
+        ("name", Value::Str(name.to_string())),
+        ("cat", Value::Str("control".to_string())),
+        ("ph", Value::Str("i".to_string())),
+        ("s", Value::Str("g".to_string())),
+        ("ts", num(ts)),
+        ("pid", num(1)),
+        ("tid", num(CONTROL_TID)),
+        ("args", args),
+    ])
+}
+
+/// One `ph:"M"` metadata event.
+fn metadata(name: &str, tid: u64, label: &str) -> Value {
+    json::obj(vec![
+        ("name", Value::Str(name.to_string())),
+        ("ph", Value::Str("M".to_string())),
+        ("pid", num(1)),
+        ("tid", num(tid)),
+        (
+            "args",
+            json::obj(vec![("name", Value::Str(label.to_string()))]),
+        ),
+    ])
+}
+
+fn field_u64(v: &Value, key: &str) -> crate::Result<u64> {
+    let n = v
+        .req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a number"))?;
+    anyhow::ensure!(n >= 0.0, "field {key:?} is negative");
+    Ok(n as u64)
+}
+
+fn field_f64(v: &Value, key: &str) -> crate::Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("field {key:?} is not a number"))
+}
+
+/// Convert one journal drain (newline-delimited event JSON) into a
+/// Chrome trace-event array.  Unknown event types are skipped (forward
+/// compatibility); malformed lines fail with their line number.
+pub fn convert(jsonl: &str) -> crate::Result<Value> {
+    let mut events: Vec<Value> = Vec::new();
+    let mut conn_tids: BTreeSet<u64> = BTreeSet::new();
+    let mut control_events = 0usize;
+
+    for (i, line) in jsonl.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let v = json::parse(line)
+            .map_err(|e| anyhow::anyhow!("journal line {lineno}: {e}"))?;
+        let kind = v.get("type").and_then(Value::as_str).unwrap_or("");
+        let result = match kind {
+            "span" => span_events(&v, &mut events, &mut conn_tids),
+            "delivered" => delivered_event(&v, &mut events, &mut conn_tids),
+            "margin" => {
+                control_events += 1;
+                margin_event(&v, &mut events)
+            }
+            "breaker" => {
+                control_events += 1;
+                breaker_event(&v, &mut events)
+            }
+            "shadow_drop" => {
+                control_events += 1;
+                field_u64(&v, "at_us").map(|at| {
+                    events.push(instant("shadow-drop", at, json::obj(vec![])));
+                })
+            }
+            "slo" => {
+                control_events += 1;
+                slo_event(&v, &mut events)
+            }
+            // Unknown kinds from newer journals: skip, don't fail.
+            _ => Ok(()),
+        };
+        result.map_err(|e| anyhow::anyhow!("journal line {lineno}: {e}"))?;
+    }
+
+    let mut out: Vec<Value> = Vec::new();
+    out.push(metadata("process_name", CONTROL_TID, "mcma serve"));
+    if control_events > 0 {
+        out.push(metadata("thread_name", CONTROL_TID, "qos/slo control"));
+    }
+    for &tid in &conn_tids {
+        out.push(metadata("thread_name", tid, &format!("conn-{tid}")));
+    }
+    out.extend(events);
+    Ok(Value::Arr(out))
+}
+
+/// A span's stage stack, reconstructed backwards from dispatch:
+/// `execute` ends at `at_us`, `batch` ends where `execute` starts,
+/// `queue` ends where `batch` starts — contiguous by construction.
+fn span_events(
+    v: &Value,
+    events: &mut Vec<Value>,
+    conn_tids: &mut BTreeSet<u64>,
+) -> crate::Result<()> {
+    let id = field_u64(v, "id")?;
+    let route = field_f64(v, "route")?;
+    let queue_us = field_u64(v, "queue_us")?;
+    let batch_us = field_u64(v, "batch_us")?;
+    let exec_us = field_u64(v, "exec_us")?;
+    let at_us = field_u64(v, "at_us")?;
+    let tid = id >> 32;
+    conn_tids.insert(tid);
+
+    let exec_start = at_us.saturating_sub(exec_us);
+    let batch_start = exec_start.saturating_sub(batch_us);
+    let queue_start = batch_start.saturating_sub(queue_us);
+    let args = json::obj(vec![("id", num(id)), ("route", Value::Num(route))]);
+    events.push(duration("queue", queue_start, batch_start - queue_start, tid, args.clone()));
+    events.push(duration("batch", batch_start, exec_start - batch_start, tid, args.clone()));
+    events.push(duration("execute", exec_start, at_us - exec_start, tid, args));
+    Ok(())
+}
+
+fn delivered_event(
+    v: &Value,
+    events: &mut Vec<Value>,
+    conn_tids: &mut BTreeSet<u64>,
+) -> crate::Result<()> {
+    let id = field_u64(v, "id")?;
+    let pump_us = field_u64(v, "pump_us")?;
+    let e2e_us = field_u64(v, "e2e_us")?;
+    let at_us = field_u64(v, "at_us")?;
+    let tid = id >> 32;
+    conn_tids.insert(tid);
+    let start = at_us.saturating_sub(pump_us);
+    let args = json::obj(vec![("id", num(id)), ("e2e_us", num(e2e_us))]);
+    events.push(duration("pump", start, at_us - start, tid, args));
+    Ok(())
+}
+
+fn margin_event(v: &Value, events: &mut Vec<Value>) -> crate::Result<()> {
+    let class = field_u64(v, "class")?;
+    let from = field_f64(v, "from")?;
+    let to = field_f64(v, "to")?;
+    let at_us = field_u64(v, "at_us")?;
+    let args = json::obj(vec![
+        ("class", num(class)),
+        ("from", Value::Num(from)),
+        ("to", Value::Num(to)),
+    ]);
+    events.push(instant("margin-move", at_us, args));
+    Ok(())
+}
+
+fn breaker_event(v: &Value, events: &mut Vec<Value>) -> crate::Result<()> {
+    let class = field_u64(v, "class")?;
+    let open = v
+        .req("open")?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("field \"open\" is not a bool"))?;
+    let at_us = field_u64(v, "at_us")?;
+    let name = if open { "breaker-open" } else { "breaker-close" };
+    events.push(instant(name, at_us, json::obj(vec![("class", num(class))])));
+    Ok(())
+}
+
+fn slo_event(v: &Value, events: &mut Vec<Value>) -> crate::Result<()> {
+    let breached = v
+        .req("breached")?
+        .as_bool()
+        .ok_or_else(|| anyhow::anyhow!("field \"breached\" is not a bool"))?;
+    let burn_short = field_f64(v, "burn_short")?;
+    let burn_long = field_f64(v, "burn_long")?;
+    let at_us = field_u64(v, "at_us")?;
+    let name = if breached { "slo-breach" } else { "slo-recover" };
+    let args = json::obj(vec![
+        ("burn_short", Value::Num(burn_short)),
+        ("burn_long", Value::Num(burn_long)),
+    ]);
+    events.push(instant(name, at_us, args));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, Journal};
+
+    /// Journal drain with two connections' spans and every control kind.
+    fn sample_drain() -> String {
+        let j = Journal::new(1, 1.0, 64);
+        let id_a = (3u64 << 32) | 7; // conn 3
+        let id_b = (5u64 << 32) | 1; // conn 5
+        j.push(Event::Span {
+            id: id_a,
+            route: 2,
+            queue_us: 10,
+            batch_us: 20,
+            exec_us: 30,
+            e2e_us: 60,
+            at_us: 1_000,
+        });
+        j.push(Event::Delivered { id: id_a, pump_us: 5, e2e_us: 65, at_us: 1_005 });
+        j.push(Event::Span {
+            id: id_b,
+            route: -1,
+            queue_us: 1,
+            batch_us: 2,
+            exec_us: 3,
+            e2e_us: 6,
+            at_us: 2_000,
+        });
+        j.push(Event::MarginMove { class: 4, from: 0.0, to: 0.05, at_us: 1_500 });
+        j.push(Event::Breaker { class: 4, open: true, at_us: 1_600 });
+        j.push(Event::ShadowDrop { at_us: 1_700 });
+        j.push(Event::Slo { breached: true, burn_short: 20.0, burn_long: 3.0, at_us: 1_800 });
+        j.drain_json_lines()
+    }
+
+    fn events_of<'a>(arr: &'a [Value], ph: &str) -> Vec<&'a Value> {
+        arr.iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some(ph))
+            .collect()
+    }
+
+    #[test]
+    fn exports_a_valid_trace_event_array() {
+        let v = convert(&sample_drain()).expect("conversion succeeds");
+        // Roundtrips through the writer as a bare JSON array.
+        let reparsed = json::parse(&json::write(&v)).expect("valid JSON");
+        let arr = reparsed.as_arr().expect("top level is an array");
+        assert!(!arr.is_empty());
+        for e in arr {
+            let ph = e.get("ph").and_then(Value::as_str).expect("ph");
+            assert!(["X", "i", "M"].contains(&ph), "unexpected ph {ph}");
+            assert!(e.get("pid").and_then(Value::as_f64).is_some());
+            assert!(e.get("tid").and_then(Value::as_f64).is_some());
+            if ph != "M" {
+                assert!(e.get("ts").and_then(Value::as_f64).is_some());
+            }
+            if ph == "X" {
+                assert!(e.get("dur").and_then(Value::as_f64).is_some());
+            }
+        }
+        // Tracks got named: process + control + conns 3 and 5.
+        let meta = events_of(arr, "M");
+        let labels: Vec<&str> = meta
+            .iter()
+            .filter_map(|e| e.get("args")?.get("name")?.as_str())
+            .collect();
+        assert!(labels.contains(&"mcma serve"));
+        assert!(labels.contains(&"qos/slo control"));
+        assert!(labels.contains(&"conn-3"));
+        assert!(labels.contains(&"conn-5"));
+    }
+
+    /// Every sampled id yields a contiguous, non-overlapping
+    /// queue → batch → execute (→ pump) stack on its connection track.
+    #[test]
+    fn stage_stacks_are_contiguous_and_non_overlapping() {
+        let v = convert(&sample_drain()).unwrap();
+        let arr = v.as_arr().unwrap();
+        let ids: Vec<u64> = vec![(3u64 << 32) | 7, (5u64 << 32) | 1];
+        for id in ids {
+            let mut slices: Vec<(String, u64, u64)> = events_of(arr, "X")
+                .iter()
+                .filter(|e| {
+                    e.get("args")
+                        .and_then(|a| a.get("id"))
+                        .and_then(Value::as_f64)
+                        == Some(id as f64)
+                })
+                .map(|e| {
+                    let name = e.get("name").unwrap().as_str().unwrap().to_string();
+                    let ts = e.get("ts").unwrap().as_f64().unwrap() as u64;
+                    let dur = e.get("dur").unwrap().as_f64().unwrap() as u64;
+                    (name, ts, dur)
+                })
+                .collect();
+            slices.sort_by_key(|&(_, ts, _)| ts);
+            assert!(slices.len() >= 3, "span stack for id {id}");
+            for pair in slices.windows(2) {
+                let (_, ts0, dur0) = &pair[0];
+                let (_, ts1, _) = &pair[1];
+                assert!(ts0 + dur0 <= *ts1, "overlap in {slices:?}");
+            }
+            // The first three stages are exactly contiguous.
+            let names: Vec<&str> = slices.iter().take(3).map(|(n, _, _)| n.as_str()).collect();
+            assert_eq!(names, ["queue", "batch", "execute"]);
+            for pair in slices.windows(2).take(2) {
+                assert_eq!(pair[0].1 + pair[0].2, pair[1].1, "gap in {slices:?}");
+            }
+            // The stack ends at the recorded dispatch timestamp.
+            let (_, ts, dur) = &slices[2];
+            assert!(*ts + *dur == 1_000 || *ts + *dur == 2_000);
+        }
+        // Tracks are per-connection.
+        let tids: BTreeSet<u64> = events_of(arr, "X")
+            .iter()
+            .map(|e| e.get("tid").unwrap().as_f64().unwrap() as u64)
+            .collect();
+        assert_eq!(tids, BTreeSet::from([3, 5]));
+    }
+
+    #[test]
+    fn instants_carry_the_class_label() {
+        let v = convert(&sample_drain()).unwrap();
+        let arr = v.as_arr().unwrap();
+        let instants = events_of(arr, "i");
+        assert_eq!(instants.len(), 4);
+        for e in &instants {
+            assert_eq!(e.get("s").and_then(Value::as_str), Some("g"));
+            assert_eq!(e.get("tid").and_then(Value::as_f64), Some(0.0));
+        }
+        let by_name = |n: &str| {
+            instants
+                .iter()
+                .find(|e| e.get("name").and_then(Value::as_str) == Some(n))
+                .unwrap_or_else(|| panic!("missing instant {n}"))
+        };
+        let margin = by_name("margin-move");
+        assert_eq!(margin.get("args").unwrap().get("class").unwrap().as_f64(), Some(4.0));
+        let breaker = by_name("breaker-open");
+        assert_eq!(breaker.get("args").unwrap().get("class").unwrap().as_f64(), Some(4.0));
+        let slo = by_name("slo-breach");
+        assert_eq!(slo.get("args").unwrap().get("burn_short").unwrap().as_f64(), Some(20.0));
+        by_name("shadow-drop");
+    }
+
+    #[test]
+    fn malformed_lines_fail_with_their_line_number() {
+        let bad = "{\"type\":\"shadow_drop\",\"at_us\":1}\nnot json\n";
+        let err = convert(bad).unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        // Missing fields also name the line.
+        let missing = "{\"type\":\"span\",\"id\":1}";
+        let err = convert(missing).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_skipped() {
+        let mixed = "{\"type\":\"future_kind\",\"x\":1}\n{\"type\":\"shadow_drop\",\"at_us\":9}\n";
+        let v = convert(mixed).unwrap();
+        let arr = v.as_arr().unwrap();
+        assert_eq!(events_of(arr, "i").len(), 1);
+    }
+
+    #[test]
+    fn empty_drain_still_yields_a_valid_array() {
+        let v = convert("").unwrap();
+        let arr = v.as_arr().unwrap();
+        // Just the process metadata.
+        assert_eq!(arr.len(), 1);
+    }
+}

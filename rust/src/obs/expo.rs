@@ -1,0 +1,611 @@
+//! OpenMetrics / Prometheus text exposition of the [`Registry`]
+//! snapshot — the body behind `GET /metrics` on
+//! `serve --metrics-listen ADDR` (`net/http.rs`).
+//!
+//! Rendering rules (Prometheus text format 0.0.4, OpenMetrics-
+//! compatible):
+//!
+//! * counters get the `_total` suffix (`mcma_submitted_total`);
+//! * gauges are bare (`mcma_inflight`);
+//! * every [`Hist64`] renders as a cumulative-`le` histogram family:
+//!   one `_bucket{le="..."}` series per populated log2 bucket with the
+//!   bucket's inclusive upper bound as the `le` value, a final
+//!   `le="+Inf"` bucket equal to `_count`, plus `_sum`/`_count`;
+//! * per-route / per-class / per-tag series carry label sets
+//!   (`mcma_route_execute_us_bucket{class="1",le="127"}`);
+//! * label values escape `\`, `"` and newline per the spec.
+//!
+//! The exposition is rendered from the same atomics as the in-band
+//! `KIND_STATS` JSON snapshot, so every counter shared between the two
+//! agrees up to scrape-interleaving (pinned by the `tests/net_serve.rs`
+//! consistency e2e and the `bench-load` cross-check).
+
+use super::metrics::{Hist64, HistSnapshot, Registry, OBS_ROUTE_CLASSES};
+use super::slo::SloMonitor;
+use super::Obs;
+
+/// Content-Type header value for the exposition body.
+pub const CONTENT_TYPE: &str = "text/plain; version=0.0.4; charset=utf-8";
+
+/// Escape a label value: `\` -> `\\`, `"` -> `\"`, newline -> `\n`.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Exposition value formatting: integers print without a decimal point
+/// (the JSON writer's convention), everything else as shortest-roundtrip.
+fn fmt_value(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// `# HELP` + `# TYPE` header for one metric family.
+fn head(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// One sample line.  `labels` is either empty or a rendered
+/// `key="value"` list WITHOUT braces (`class="1"`).
+fn sample(out: &mut String, name: &str, labels: &str, v: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        out.push_str(labels);
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&fmt_value(v));
+    out.push('\n');
+}
+
+/// Header + sample for a label-less single-series family.
+fn scalar(out: &mut String, name: &str, kind: &str, help: &str, v: f64) {
+    head(out, name, kind, help);
+    sample(out, name, "", v);
+}
+
+/// Cumulative-`le` histogram series for one (family, label) pair.  The
+/// header is the caller's job so multi-label families (route classes)
+/// emit it once.
+fn hist_series(out: &mut String, name: &str, label: &str, s: &HistSnapshot) {
+    let bucket_name = format!("{name}_bucket");
+    let mut cum = 0u64;
+    for (i, &c) in s.buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        cum += c;
+        let le = Hist64::bucket_hi(i);
+        let labels = if label.is_empty() {
+            format!("le=\"{le}\"")
+        } else {
+            format!("{label},le=\"{le}\"")
+        };
+        sample(out, &bucket_name, &labels, cum as f64);
+    }
+    let inf = if label.is_empty() {
+        "le=\"+Inf\"".to_string()
+    } else {
+        format!("{label},le=\"+Inf\"")
+    };
+    sample(out, &bucket_name, &inf, s.count as f64);
+    sample(out, &format!("{name}_sum"), label, s.sum as f64);
+    sample(out, &format!("{name}_count"), label, s.count as f64);
+}
+
+/// Header + series for a label-less histogram family.
+fn hist(out: &mut String, name: &str, help: &str, s: &HistSnapshot) {
+    head(out, name, "histogram", help);
+    hist_series(out, name, "", s);
+}
+
+/// Render the full exposition.  `slo` adds the burn-rate families when
+/// the monitor is configured.
+pub fn render(obs: &Obs, slo: Option<&SloMonitor>) -> String {
+    let r: &Registry = &obs.metrics;
+    let mut out = String::with_capacity(8192);
+
+    scalar(
+        &mut out,
+        "mcma_uptime_seconds",
+        "gauge",
+        "Seconds since serve start.",
+        r.uptime_s(),
+    );
+    head(
+        &mut out,
+        "mcma_exec_mode_info",
+        "gauge",
+        "Execution engine serving approximator GEMMs (constant 1).",
+    );
+    sample(
+        &mut out,
+        "mcma_exec_mode_info",
+        &format!("mode=\"{}\"", escape_label(&r.exec_mode())),
+        1.0,
+    );
+
+    // Counter plane: one `_total` family per registry counter, same
+    // names as the KIND_STATS `counters` object.
+    let counters: [(&str, u64, &str); 16] = [
+        ("accepted_conns", r.accepted_conns.get(), "TCP connections accepted."),
+        ("closed_conns", r.closed_conns.get(), "TCP connections closed."),
+        ("frames_in", r.frames_in.get(), "Well-formed request frames decoded."),
+        ("malformed_frames", r.malformed_frames.get(), "Connections killed for protocol violations."),
+        ("stats_requests", r.stats_requests.get(), "In-band STATS scrapes answered."),
+        ("submitted", r.submitted.get(), "Requests entering the pipeline."),
+        ("dispatched", r.dispatched.get(), "Responses dispatched by workers."),
+        ("delivered", r.delivered.get(), "Responses written to client sockets."),
+        ("delivery_failures", r.delivery_failures.get(), "Responses owed to dead clients."),
+        ("route_invoked_rows", r.route_invoked_rows.get(), "Rows served by approximators."),
+        ("route_cpu_rows", r.route_cpu_rows.get(), "Rows served by the precise path."),
+        ("margin_moves", r.margin_moves.get(), "QoS margin adjustments."),
+        ("breaker_trips", r.breaker_trips.get(), "QoS circuit-breaker opens."),
+        ("breaker_resets", r.breaker_resets.get(), "QoS circuit-breaker closes."),
+        ("shadow_drops", r.shadow_drops.get(), "Shadow observations lost to backpressure."),
+        ("slo_breaches", r.slo_breaches.get(), "Healthy -> breached SLO transitions."),
+    ];
+    for (name, v, help) in counters {
+        scalar(&mut out, &format!("mcma_{name}_total"), "counter", help, v as f64);
+    }
+
+    // Gauge plane.
+    let gauges: [(&str, f64, &str); 4] = [
+        ("inflight", r.inflight.get() as f64, "Requests submitted but not yet dispatched."),
+        ("batch_queue_depth", r.batch_queue_depth.get() as f64, "Rows waiting in the batcher."),
+        ("open_breakers", r.open_breakers.get() as f64, "QoS breakers currently open."),
+        ("qos_enabled", r.qos_enabled.get() as f64, "1 when the QoS controller is active."),
+    ];
+    for (name, v, help) in gauges {
+        scalar(&mut out, &format!("mcma_{name}"), "gauge", help, v);
+    }
+
+    // Per-class QoS margins.
+    head(
+        &mut out,
+        "mcma_qos_margin",
+        "gauge",
+        "Per-class routing confidence margin.",
+    );
+    for (k, g) in r.qos_margins.iter().enumerate() {
+        sample(&mut out, "mcma_qos_margin", &format!("class=\"{k}\""), g.get() as f64);
+    }
+
+    // Per-tag request counts + overflow.
+    head(
+        &mut out,
+        "mcma_tag_requests_total",
+        "counter",
+        "Frames per tenant tag (fixed-slot table).",
+    );
+    for (tag, count) in r.tags.snapshot() {
+        sample(
+            &mut out,
+            "mcma_tag_requests_total",
+            &format!("tag=\"{tag}\""),
+            count as f64,
+        );
+    }
+    scalar(
+        &mut out,
+        "mcma_tag_overflow_total",
+        "counter",
+        "Frames whose tag found no free slot.",
+        r.tags.overflow() as f64,
+    );
+
+    // Trace journal health.
+    scalar(
+        &mut out,
+        "mcma_trace_buffered",
+        "gauge",
+        "Span-journal events awaiting drain.",
+        obs.journal.len() as f64,
+    );
+    scalar(
+        &mut out,
+        "mcma_trace_dropped_total",
+        "counter",
+        "Span-journal events evicted by the bounded ring.",
+        obs.journal.dropped() as f64,
+    );
+
+    // Stage waterfall histograms (µs; log2 buckets — the `le` bounds
+    // are each bucket's inclusive upper bound).
+    let stages: [(&str, HistSnapshot, &str); 9] = [
+        ("stage_decode_us", r.stage_decode.snapshot(), "Frame decode + submit."),
+        ("stage_queue_us", r.stage_queue.snapshot(), "Submit -> batcher enqueue."),
+        ("stage_batch_us", r.stage_batch.snapshot(), "Batcher enqueue -> worker receipt."),
+        ("stage_execute_us", r.stage_execute.snapshot(), "Whole-batch classify/route/execute."),
+        ("stage_fallback_us", r.stage_fallback.snapshot(), "Precise/lookup CPU path per batch."),
+        ("stage_shadow_us", r.stage_shadow.snapshot(), "QoS shadow verification per observation."),
+        ("stage_pump_us", r.stage_pump.snapshot(), "Worker dispatch -> client socket write."),
+        ("e2e_dispatch_us", r.e2e_dispatch.snapshot(), "Submit -> response dispatched."),
+        ("e2e_delivered_us", r.e2e_delivered.snapshot(), "Submit -> bytes on the client socket."),
+    ];
+    for (name, s, help) in &stages {
+        hist(&mut out, &format!("mcma_{name}"), help, s);
+    }
+
+    // Per-route-class execute latency (only classes that ran).
+    head(
+        &mut out,
+        "mcma_route_execute_us",
+        "histogram",
+        "Per-route-class GEMM execute latency.",
+    );
+    for k in 0..OBS_ROUTE_CLASSES {
+        let s = r.route_execute_snapshot(k);
+        if s.count == 0 {
+            continue;
+        }
+        hist_series(&mut out, "mcma_route_execute_us", &format!("class=\"{k}\""), &s);
+    }
+
+    // SLO plane (present only when `--slo-p99-us` configured a monitor).
+    if let Some(m) = slo {
+        let (burn_short, burn_long) = m.burns();
+        scalar(
+            &mut out,
+            "mcma_slo_healthy",
+            "gauge",
+            "1 while within budget; 0 during a breach (healthz mirrors this).",
+            if m.healthy() { 1.0 } else { 0.0 },
+        );
+        head(
+            &mut out,
+            "mcma_slo_burn_rate",
+            "gauge",
+            "Windowed error-budget spend rate (1 = sustainable).",
+        );
+        sample(&mut out, "mcma_slo_burn_rate", "window=\"short\"", burn_short);
+        sample(&mut out, "mcma_slo_burn_rate", "window=\"long\"", burn_long);
+        scalar(
+            &mut out,
+            "mcma_slo_p99_target_us",
+            "gauge",
+            "Delivered-latency target.",
+            m.config().p99_target_us as f64,
+        );
+        scalar(
+            &mut out,
+            "mcma_slo_error_budget",
+            "gauge",
+            "Fraction of requests allowed over target.",
+            m.config().error_budget,
+        );
+    }
+
+    out.push_str("# EOF\n");
+    out
+}
+
+/// Parse exposition text back into `(series, value)` pairs, where
+/// `series` is the metric name with its rendered label set
+/// (`mcma_submitted_total`, `mcma_qos_margin{class="1"}`).  Used by the
+/// format tests and the `bench-load` `/metrics`-vs-STATS cross-check.
+pub fn parse_text(text: &str) -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((series, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.push((series.to_string(), v));
+            }
+        }
+    }
+    out
+}
+
+/// Value of one series in parsed exposition output, if present.
+pub fn series_value(parsed: &[(String, f64)], series: &str) -> Option<f64> {
+    parsed.iter().find(|(n, _)| n == series).map(|(_, v)| *v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, Obs};
+
+    /// Obs handle with a deterministic, fully-known population.
+    fn seeded_obs() -> Obs {
+        let obs = Obs::new(1, 1.0);
+        let r = &obs.metrics;
+        r.set_exec_mode("native");
+        r.submitted.add(5);
+        r.dispatched.add(5);
+        r.delivered.add(4);
+        r.delivery_failures.inc();
+        for v in [0u64, 1, 1, 5, 1000] {
+            r.stage_queue.record(v);
+        }
+        r.record_route_execute(1, 90);
+        r.qos_margins[1].set(0.25);
+        r.tags.record(3);
+        r.tags.record(3);
+        obs.journal.push(Event::ShadowDrop { at_us: 1 });
+        obs
+    }
+
+    /// The golden exposition for [`seeded_obs`] (uptime line excluded —
+    /// it is the one wall-clock-dependent sample).  Every format claim
+    /// in the module docs is pinned here: `_total` suffixes, cumulative
+    /// `le` bounds at the log2 buckets' inclusive upper bounds, label
+    /// sets, `+Inf` = `_count`, and the trailing `# EOF`.
+    const GOLDEN: &str = "\
+# HELP mcma_exec_mode_info Execution engine serving approximator GEMMs (constant 1).
+# TYPE mcma_exec_mode_info gauge
+mcma_exec_mode_info{mode=\"native\"} 1
+# HELP mcma_accepted_conns_total TCP connections accepted.
+# TYPE mcma_accepted_conns_total counter
+mcma_accepted_conns_total 0
+# HELP mcma_closed_conns_total TCP connections closed.
+# TYPE mcma_closed_conns_total counter
+mcma_closed_conns_total 0
+# HELP mcma_frames_in_total Well-formed request frames decoded.
+# TYPE mcma_frames_in_total counter
+mcma_frames_in_total 0
+# HELP mcma_malformed_frames_total Connections killed for protocol violations.
+# TYPE mcma_malformed_frames_total counter
+mcma_malformed_frames_total 0
+# HELP mcma_stats_requests_total In-band STATS scrapes answered.
+# TYPE mcma_stats_requests_total counter
+mcma_stats_requests_total 0
+# HELP mcma_submitted_total Requests entering the pipeline.
+# TYPE mcma_submitted_total counter
+mcma_submitted_total 5
+# HELP mcma_dispatched_total Responses dispatched by workers.
+# TYPE mcma_dispatched_total counter
+mcma_dispatched_total 5
+# HELP mcma_delivered_total Responses written to client sockets.
+# TYPE mcma_delivered_total counter
+mcma_delivered_total 4
+# HELP mcma_delivery_failures_total Responses owed to dead clients.
+# TYPE mcma_delivery_failures_total counter
+mcma_delivery_failures_total 1
+# HELP mcma_route_invoked_rows_total Rows served by approximators.
+# TYPE mcma_route_invoked_rows_total counter
+mcma_route_invoked_rows_total 0
+# HELP mcma_route_cpu_rows_total Rows served by the precise path.
+# TYPE mcma_route_cpu_rows_total counter
+mcma_route_cpu_rows_total 0
+# HELP mcma_margin_moves_total QoS margin adjustments.
+# TYPE mcma_margin_moves_total counter
+mcma_margin_moves_total 0
+# HELP mcma_breaker_trips_total QoS circuit-breaker opens.
+# TYPE mcma_breaker_trips_total counter
+mcma_breaker_trips_total 0
+# HELP mcma_breaker_resets_total QoS circuit-breaker closes.
+# TYPE mcma_breaker_resets_total counter
+mcma_breaker_resets_total 0
+# HELP mcma_shadow_drops_total Shadow observations lost to backpressure.
+# TYPE mcma_shadow_drops_total counter
+mcma_shadow_drops_total 0
+# HELP mcma_slo_breaches_total Healthy -> breached SLO transitions.
+# TYPE mcma_slo_breaches_total counter
+mcma_slo_breaches_total 0
+# HELP mcma_inflight Requests submitted but not yet dispatched.
+# TYPE mcma_inflight gauge
+mcma_inflight 0
+# HELP mcma_batch_queue_depth Rows waiting in the batcher.
+# TYPE mcma_batch_queue_depth gauge
+mcma_batch_queue_depth 0
+# HELP mcma_open_breakers QoS breakers currently open.
+# TYPE mcma_open_breakers gauge
+mcma_open_breakers 0
+# HELP mcma_qos_enabled 1 when the QoS controller is active.
+# TYPE mcma_qos_enabled gauge
+mcma_qos_enabled 0
+# HELP mcma_qos_margin Per-class routing confidence margin.
+# TYPE mcma_qos_margin gauge
+mcma_qos_margin{class=\"0\"} 0
+mcma_qos_margin{class=\"1\"} 0.25
+mcma_qos_margin{class=\"2\"} 0
+mcma_qos_margin{class=\"3\"} 0
+mcma_qos_margin{class=\"4\"} 0
+mcma_qos_margin{class=\"5\"} 0
+mcma_qos_margin{class=\"6\"} 0
+mcma_qos_margin{class=\"7\"} 0
+# HELP mcma_tag_requests_total Frames per tenant tag (fixed-slot table).
+# TYPE mcma_tag_requests_total counter
+mcma_tag_requests_total{tag=\"3\"} 2
+# HELP mcma_tag_overflow_total Frames whose tag found no free slot.
+# TYPE mcma_tag_overflow_total counter
+mcma_tag_overflow_total 0
+# HELP mcma_trace_buffered Span-journal events awaiting drain.
+# TYPE mcma_trace_buffered gauge
+mcma_trace_buffered 1
+# HELP mcma_trace_dropped_total Span-journal events evicted by the bounded ring.
+# TYPE mcma_trace_dropped_total counter
+mcma_trace_dropped_total 0
+# HELP mcma_stage_decode_us Frame decode + submit.
+# TYPE mcma_stage_decode_us histogram
+mcma_stage_decode_us_bucket{le=\"+Inf\"} 0
+mcma_stage_decode_us_sum 0
+mcma_stage_decode_us_count 0
+# HELP mcma_stage_queue_us Submit -> batcher enqueue.
+# TYPE mcma_stage_queue_us histogram
+mcma_stage_queue_us_bucket{le=\"0\"} 1
+mcma_stage_queue_us_bucket{le=\"1\"} 3
+mcma_stage_queue_us_bucket{le=\"7\"} 4
+mcma_stage_queue_us_bucket{le=\"1023\"} 5
+mcma_stage_queue_us_bucket{le=\"+Inf\"} 5
+mcma_stage_queue_us_sum 1007
+mcma_stage_queue_us_count 5
+# HELP mcma_stage_batch_us Batcher enqueue -> worker receipt.
+# TYPE mcma_stage_batch_us histogram
+mcma_stage_batch_us_bucket{le=\"+Inf\"} 0
+mcma_stage_batch_us_sum 0
+mcma_stage_batch_us_count 0
+# HELP mcma_stage_execute_us Whole-batch classify/route/execute.
+# TYPE mcma_stage_execute_us histogram
+mcma_stage_execute_us_bucket{le=\"+Inf\"} 0
+mcma_stage_execute_us_sum 0
+mcma_stage_execute_us_count 0
+# HELP mcma_stage_fallback_us Precise/lookup CPU path per batch.
+# TYPE mcma_stage_fallback_us histogram
+mcma_stage_fallback_us_bucket{le=\"+Inf\"} 0
+mcma_stage_fallback_us_sum 0
+mcma_stage_fallback_us_count 0
+# HELP mcma_stage_shadow_us QoS shadow verification per observation.
+# TYPE mcma_stage_shadow_us histogram
+mcma_stage_shadow_us_bucket{le=\"+Inf\"} 0
+mcma_stage_shadow_us_sum 0
+mcma_stage_shadow_us_count 0
+# HELP mcma_stage_pump_us Worker dispatch -> client socket write.
+# TYPE mcma_stage_pump_us histogram
+mcma_stage_pump_us_bucket{le=\"+Inf\"} 0
+mcma_stage_pump_us_sum 0
+mcma_stage_pump_us_count 0
+# HELP mcma_e2e_dispatch_us Submit -> response dispatched.
+# TYPE mcma_e2e_dispatch_us histogram
+mcma_e2e_dispatch_us_bucket{le=\"+Inf\"} 0
+mcma_e2e_dispatch_us_sum 0
+mcma_e2e_dispatch_us_count 0
+# HELP mcma_e2e_delivered_us Submit -> bytes on the client socket.
+# TYPE mcma_e2e_delivered_us histogram
+mcma_e2e_delivered_us_bucket{le=\"+Inf\"} 0
+mcma_e2e_delivered_us_sum 0
+mcma_e2e_delivered_us_count 0
+# HELP mcma_route_execute_us Per-route-class GEMM execute latency.
+# TYPE mcma_route_execute_us histogram
+mcma_route_execute_us_bucket{class=\"1\",le=\"127\"} 1
+mcma_route_execute_us_bucket{class=\"1\",le=\"+Inf\"} 1
+mcma_route_execute_us_sum{class=\"1\"} 90
+mcma_route_execute_us_count{class=\"1\"} 1
+# EOF
+";
+
+    #[test]
+    fn golden_exposition() {
+        let obs = seeded_obs();
+        let text = render(&obs, None);
+        // Drop the one wall-clock-dependent family (uptime: HELP, TYPE
+        // and sample are the first three lines).
+        let got: Vec<&str> = text
+            .lines()
+            .filter(|l| !l.contains("mcma_uptime_seconds"))
+            .collect();
+        let want: Vec<&str> = GOLDEN.lines().collect();
+        for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+            assert_eq!(g, w, "exposition line {i} diverged");
+        }
+        assert_eq!(got.len(), want.len(), "exposition length diverged");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let obs = Obs::new(1, 1.0);
+        obs.metrics.set_exec_mode("na\"ti\\ve\nx");
+        let text = render(&obs, None);
+        assert!(
+            text.contains("mcma_exec_mode_info{mode=\"na\\\"ti\\\\ve\\nx\"} 1"),
+            "{text}"
+        );
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\\b\"c\nd"), "a\\\\b\\\"c\\nd");
+    }
+
+    /// `le` buckets must be cumulative and monotone, the `+Inf` bucket
+    /// must equal `_count`, and the per-bucket deltas must sum to it.
+    #[test]
+    fn histogram_buckets_are_cumulative_and_sum_to_count() {
+        let obs = Obs::new(1, 1.0);
+        let mut rng = crate::util::rng::Rng::new(0xBEEF);
+        for _ in 0..5_000 {
+            obs.metrics.e2e_delivered.record(rng.below(1 << 22));
+        }
+        let text = render(&obs, None);
+        let mut prev_le = -1.0f64;
+        let mut prev_cum = 0.0f64;
+        let mut inf = None;
+        for (series, v) in parse_text(&text) {
+            let Some(rest) = series.strip_prefix("mcma_e2e_delivered_us_bucket{le=\"") else {
+                continue;
+            };
+            let le = rest.trim_end_matches("\"}");
+            if le == "+Inf" {
+                inf = Some(v);
+                continue;
+            }
+            let le: f64 = le.parse().expect("numeric le bound");
+            assert!(le > prev_le, "le bounds must increase: {le} after {prev_le}");
+            assert!(v >= prev_cum, "bucket series must be cumulative");
+            prev_le = le;
+            prev_cum = v;
+        }
+        let parsed = parse_text(&text);
+        let count = series_value(&parsed, "mcma_e2e_delivered_us_count").unwrap();
+        assert_eq!(count, 5000.0);
+        assert_eq!(inf, Some(count), "+Inf bucket must equal _count");
+        assert_eq!(prev_cum, count, "last finite bucket holds every sample here");
+    }
+
+    #[test]
+    fn slo_families_render_when_configured() {
+        use crate::obs::slo::{SloConfig, SloMonitor};
+        let obs = Obs::new(1, 1.0);
+        let slo = SloMonitor::new(SloConfig::new(1_000, 0.01));
+        slo.tick(1_000_000, 100, 0);
+        let text = render(&obs, Some(&slo));
+        let parsed = parse_text(&text);
+        assert_eq!(series_value(&parsed, "mcma_slo_healthy"), Some(1.0));
+        assert_eq!(series_value(&parsed, "mcma_slo_p99_target_us"), Some(1000.0));
+        assert_eq!(series_value(&parsed, "mcma_slo_error_budget"), Some(0.01));
+        assert_eq!(
+            series_value(&parsed, "mcma_slo_burn_rate{window=\"short\"}"),
+            Some(0.0)
+        );
+        // Absent without a monitor.
+        assert!(!render(&obs, None).contains("mcma_slo_healthy"));
+    }
+
+    #[test]
+    fn every_family_has_a_type_line_and_counters_end_in_total() {
+        let text = render(&seeded_obs(), None);
+        let mut typed: Vec<(String, String)> = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                if let Some((name, kind)) = rest.split_once(' ') {
+                    typed.push((name.to_string(), kind.to_string()));
+                }
+            }
+        }
+        for (series, _) in parse_text(&text) {
+            let name = series.split('{').next().unwrap_or(&series);
+            let family = typed.iter().find(|(n, k)| {
+                name == *n
+                    || (k == "histogram"
+                        && (name == format!("{n}_bucket")
+                            || name == format!("{n}_sum")
+                            || name == format!("{n}_count")))
+            });
+            let (_, kind) = family.unwrap_or_else(|| panic!("no # TYPE for {series}"));
+            if kind == "counter" {
+                assert!(name.ends_with("_total"), "counter {name} must end in _total");
+            }
+        }
+    }
+}

@@ -221,6 +221,29 @@ impl HistSnapshot {
         self.percentile(99.9)
     }
 
+    /// Samples strictly above `v`, linearly interpolated inside the
+    /// bucket that straddles it — the same bucket-bounded contract as
+    /// [`Self::percentile`].  Feeds the SLO monitor's "bad event" count
+    /// (delivered requests over the latency target).
+    pub fn count_over(&self, v: u64) -> u64 {
+        let mut over = 0.0f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let lo = Hist64::bucket_lo(i);
+            let hi = Hist64::bucket_hi(i);
+            if lo > v {
+                over += c as f64;
+            } else if hi > v {
+                // `v` splits this bucket; assume uniform occupancy.
+                let width = (hi - lo) as f64 + 1.0;
+                over += ((hi - v) as f64 / width) * c as f64;
+            }
+        }
+        over.round().min(self.count as f64) as u64
+    }
+
     /// Upper bound of the highest populated bucket.
     pub fn max_bound(&self) -> u64 {
         self.buckets
@@ -392,6 +415,10 @@ pub struct Registry {
     pub breaker_resets: Counter,
     pub shadow_drops: Counter,
 
+    // SLO plane (incremented by the serve-side burn-rate glue on each
+    // healthy -> breached transition; see `obs/slo.rs`).
+    pub slo_breaches: Counter,
+
     pub inflight: Gauge,
     pub batch_queue_depth: Gauge,
     pub open_breakers: Gauge,
@@ -438,6 +465,7 @@ impl Registry {
             breaker_trips: Counter::default(),
             breaker_resets: Counter::default(),
             shadow_drops: Counter::default(),
+            slo_breaches: Counter::default(),
             inflight: Gauge::default(),
             batch_queue_depth: Gauge::default(),
             open_breakers: Gauge::default(),
@@ -468,6 +496,11 @@ impl Registry {
         if let Ok(mut g) = self.exec_mode.lock() {
             *g = mode.to_string();
         }
+    }
+
+    /// Current execution-engine label (empty until [`Self::set_exec_mode`]).
+    pub fn exec_mode(&self) -> String {
+        self.exec_mode.lock().map(|g| g.clone()).unwrap_or_default()
     }
 
     /// One per-route-class GEMM execute sample (class folds into the
@@ -507,6 +540,7 @@ impl Registry {
             ("breaker_trips", num(self.breaker_trips.get())),
             ("breaker_resets", num(self.breaker_resets.get())),
             ("shadow_drops", num(self.shadow_drops.get())),
+            ("slo_breaches", num(self.slo_breaches.get())),
         ]);
         let gauges = json::obj(vec![
             ("inflight", Value::Num(self.inflight.get() as f64)),
@@ -686,6 +720,26 @@ mod tests {
         assert_eq!(got.count, 40_000);
         assert_eq!(got.buckets, want.buckets);
         assert_eq!(got.sum, want.sum);
+    }
+
+    #[test]
+    fn count_over_is_bucket_bounded() {
+        let h = Hist64::new();
+        for v in [0u64, 1, 10, 100, 1000, 10_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        // Above the top sample: nothing. Below the bottom: everything.
+        assert_eq!(s.count_over(1 << 20), 0);
+        assert_eq!(s.count_over(0), 5); // strict: the zero itself is not over
+        // A threshold above a whole bucket counts everything beyond it;
+        // 511 sits above buckets 0..=9, so only 1000 and 10000 remain.
+        assert_eq!(s.count_over(511), 2);
+        // Never exceeds the total, and interpolation stays within count.
+        for t in [0u64, 1, 5, 99, 512, 9999, u64::MAX] {
+            assert!(s.count_over(t) <= s.count);
+        }
+        assert_eq!(HistSnapshot::default().count_over(0), 0);
     }
 
     #[test]

@@ -13,17 +13,32 @@
 //!   response pump answers it with [`Obs::snapshot_json`], and
 //!   `mcma stats --addr HOST:PORT` pretty-prints it live.
 //!
+//! The consumption ring on top (same dependency-free discipline):
+//!
+//! * [`expo`] — OpenMetrics text rendering of the registry snapshot,
+//!   served over `GET /metrics` by `net/http.rs`
+//!   (`serve --metrics-listen ADDR`);
+//! * [`chrome`] — `mcma trace`: journal drain → Chrome trace-event
+//!   JSON for `ui.perfetto.dev`;
+//! * [`slo`] — tick-driven multi-window SLO burn-rate monitor
+//!   (`serve --slo-p99-us N --slo-error-budget F`) feeding `/healthz`,
+//!   `slo_breaches_total` and journal instant events.
+//!
 //! The registry is shared by reference everywhere (readers, batcher,
 //! dispatch workers, the QoS thread, the response pump); recording is
 //! wait-free so the hot path never queues behind an observer.
 
+pub mod chrome;
+pub mod expo;
 pub mod metrics;
+pub mod slo;
 pub mod trace;
 
 pub use metrics::{
     Counter, Gauge, GaugeF32, Hist64, HistSnapshot, Registry, TagTable,
     OBS_ROUTE_CLASSES, TAG_SLOTS,
 };
+pub use slo::{SloConfig, SloMonitor, SloTick};
 pub use trace::{Event, Journal, TraceSampler, DEFAULT_CAP};
 
 use std::sync::Arc;

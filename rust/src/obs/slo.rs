@@ -1,0 +1,332 @@
+// audit:deterministic — every tick is a pure function of the injected
+// clock and the cumulative counts it is handed; the module never reads
+// a wall clock, so breach trajectories replay bit-identically in tests.
+//! Multi-window SLO burn-rate monitor (`serve --slo-p99-us N
+//! --slo-error-budget F`).
+//!
+//! The classic burn-rate formulation: the operator grants an **error
+//! budget** — a fraction `F` of requests allowed to be *bad* (delivered
+//! over the latency target, or hit by a quality-loss event).  The
+//! **burn rate** over a window is `(bad / total) / F`: 1.0 means the
+//! budget is being spent exactly at the sustainable rate, 14 means the
+//! whole budget would be gone in 1/14th of the SLO period.  A breach
+//! requires BOTH windows to burn hot — the short window (5 m) proves
+//! the problem is happening *now*, the long window (1 h) proves it is
+//! sustained rather than a blip — the standard multi-window guard
+//! against paging on a single slow batch.
+//!
+//! The monitor is tick-driven: the serve glue (or a test) feeds it
+//! `(now_us, total, bad)` cumulative observations; the monitor keeps a
+//! bounded ring of samples and differences them at the window edges.
+//! Breaches flip `/healthz` to 503 (via [`SloMonitor::healthy`]),
+//! increment `slo_breaches_total`, and journal an
+//! [`crate::obs::Event::Slo`] instant event — all three driven by the
+//! [`SloTick`] transition report so this module stays free of registry
+//! and clock dependencies.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::util::lock_unpoisoned;
+
+/// SLO targets and window geometry.  `new` applies the standard 5 m /
+/// 1 h multi-window, fast-burn 14 / slow-burn 2 defaults.
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Delivered-latency target: a request counts against the budget
+    /// when its submit -> delivered latency exceeds this.
+    pub p99_target_us: u64,
+    /// Fraction of requests allowed to be bad (> 0).
+    pub error_budget: f64,
+    /// Short ("is it happening now") window, microseconds.
+    pub short_window_us: u64,
+    /// Long ("is it sustained") window, microseconds.
+    pub long_window_us: u64,
+    /// Burn threshold the short window must exceed.
+    pub fast_burn: f64,
+    /// Burn threshold the long window must exceed.
+    pub slow_burn: f64,
+}
+
+impl SloConfig {
+    pub fn new(p99_target_us: u64, error_budget: f64) -> Self {
+        SloConfig {
+            p99_target_us,
+            error_budget,
+            short_window_us: 5 * 60 * 1_000_000,
+            long_window_us: 3_600 * 1_000_000,
+            fast_burn: 14.0,
+            slow_burn: 2.0,
+        }
+    }
+
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.p99_target_us > 0, "--slo-p99-us must be positive");
+        anyhow::ensure!(
+            self.error_budget > 0.0 && self.error_budget <= 1.0,
+            "--slo-error-budget must be in (0, 1], got {}",
+            self.error_budget
+        );
+        anyhow::ensure!(
+            self.short_window_us > 0 && self.short_window_us <= self.long_window_us,
+            "SLO windows must satisfy 0 < short <= long"
+        );
+        Ok(())
+    }
+}
+
+/// What one tick decided — the caller acts on `changed` (journal event,
+/// breach counter) and serves `breached` from `/healthz`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloTick {
+    pub breached: bool,
+    /// True when this tick transitioned healthy <-> breached.
+    pub changed: bool,
+    pub burn_short: f64,
+    pub burn_long: f64,
+}
+
+/// One cumulative observation: counts as of `at_us`.
+#[derive(Clone, Copy, Debug)]
+struct Sample {
+    at_us: u64,
+    total: u64,
+    bad: u64,
+}
+
+struct Inner {
+    samples: VecDeque<Sample>,
+    breached: bool,
+    last_burn_short: f64,
+    last_burn_long: f64,
+}
+
+/// Tick-driven multi-window burn-rate evaluator.  Shared behind `Arc`
+/// by the serve tick thread and the `/healthz`//metrics responders.
+pub struct SloMonitor {
+    cfg: SloConfig,
+    inner: Mutex<Inner>,
+}
+
+impl SloMonitor {
+    pub fn new(cfg: SloConfig) -> Self {
+        SloMonitor {
+            cfg,
+            inner: Mutex::new(Inner {
+                samples: VecDeque::new(),
+                breached: false,
+                last_burn_short: 0.0,
+                last_burn_long: 0.0,
+            }),
+        }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// `/healthz` state: true until a breach, true again after recovery.
+    pub fn healthy(&self) -> bool {
+        !lock_unpoisoned(&self.inner).breached
+    }
+
+    /// `(burn_short, burn_long)` as of the latest tick (for exposition).
+    pub fn burns(&self) -> (f64, f64) {
+        let g = lock_unpoisoned(&self.inner);
+        (g.last_burn_short, g.last_burn_long)
+    }
+
+    /// Feed one cumulative observation: `total` requests delivered and
+    /// `bad` budget-consuming events as of the injected clock `now_us`.
+    /// Both counts are cumulative (monotone); the monitor differences
+    /// them at the window edges itself.
+    pub fn tick(&self, now_us: u64, total: u64, bad: u64) -> SloTick {
+        let mut g = lock_unpoisoned(&self.inner);
+        g.samples.push_back(Sample { at_us: now_us, total, bad });
+        // Retain one sample at or before the long-window edge as the
+        // baseline; everything older carries no extra information.
+        let edge = now_us.saturating_sub(self.cfg.long_window_us);
+        while g.samples.len() > 2 {
+            let second = match g.samples.get(1) {
+                Some(s) => *s,
+                None => break,
+            };
+            if second.at_us > edge {
+                break;
+            }
+            g.samples.pop_front();
+        }
+        let now = Sample { at_us: now_us, total, bad };
+        let burn_short = self.window_burn(&g.samples, now, self.cfg.short_window_us);
+        let burn_long = self.window_burn(&g.samples, now, self.cfg.long_window_us);
+        let breached = burn_short >= self.cfg.fast_burn && burn_long >= self.cfg.slow_burn;
+        let changed = breached != g.breached;
+        g.breached = breached;
+        g.last_burn_short = burn_short;
+        g.last_burn_long = burn_long;
+        SloTick { breached, changed, burn_short, burn_long }
+    }
+
+    /// Burn over the trailing `window_us`: the bad-fraction of the
+    /// requests delivered inside the window, divided by the budget.
+    /// The baseline is the newest sample at or before the window edge;
+    /// with a short history the whole history is the window (standard
+    /// warm-up behaviour: no special-casing, just a smaller window).
+    fn window_burn(&self, samples: &VecDeque<Sample>, now: Sample, window_us: u64) -> f64 {
+        let edge = now.at_us.saturating_sub(window_us);
+        let mut base = Sample { at_us: 0, total: 0, bad: 0 };
+        for s in samples {
+            if s.at_us <= edge {
+                base = *s;
+            } else {
+                break;
+            }
+        }
+        let d_total = now.total.saturating_sub(base.total);
+        let d_bad = now.bad.saturating_sub(base.bad);
+        if d_total == 0 {
+            return 0.0;
+        }
+        (d_bad as f64 / d_total as f64) / self.cfg.error_budget.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const S: u64 = 1_000_000; // one second in µs
+
+    fn fast_cfg() -> SloConfig {
+        SloConfig {
+            short_window_us: 10 * S,
+            long_window_us: 60 * S,
+            fast_burn: 10.0,
+            slow_burn: 2.0,
+            ..SloConfig::new(1_000, 0.01)
+        }
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SloConfig::new(1_000, 0.001).validate().is_ok());
+        assert!(SloConfig::new(0, 0.001).validate().is_err());
+        assert!(SloConfig::new(1_000, 0.0).validate().is_err());
+        assert!(SloConfig::new(1_000, 1.5).validate().is_err());
+        let mut bad = SloConfig::new(1_000, 0.01);
+        bad.short_window_us = bad.long_window_us + 1;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn healthy_traffic_never_breaches() {
+        let m = SloMonitor::new(fast_cfg());
+        // 1% budget, 0.1% observed bad rate -> burn 0.1 on both windows.
+        for i in 1..=120u64 {
+            let t = m.tick(i * S, i * 1000, i);
+            assert!(!t.breached, "tick {i}: {t:?}");
+            assert!(!t.changed);
+        }
+        assert!(m.healthy());
+    }
+
+    #[test]
+    fn sustained_badness_breaches_then_recovers() {
+        let m = SloMonitor::new(fast_cfg());
+        // Warm up healthy: 1k req/s, ~0 bad.
+        let mut total = 0u64;
+        let mut bad = 0u64;
+        let mut now = 0u64;
+        for _ in 0..30 {
+            now += S;
+            total += 1000;
+            let t = m.tick(now, total, bad);
+            assert!(!t.breached);
+        }
+        // 50% of requests go bad: burn = 0.5 / 0.01 = 50 on the short
+        // window immediately; the long window (which still includes the
+        // clean warm-up) catches up within a few ticks.
+        let mut breach_tick = None;
+        for i in 0..20 {
+            now += S;
+            total += 1000;
+            bad += 500;
+            let t = m.tick(now, total, bad);
+            if t.breached && breach_tick.is_none() {
+                breach_tick = Some(i);
+                assert!(t.changed);
+                assert!(t.burn_short >= 10.0, "{t:?}");
+                assert!(t.burn_long >= 2.0, "{t:?}");
+            }
+        }
+        assert!(breach_tick.is_some(), "sustained 50x burn must breach");
+        assert!(!m.healthy());
+        let (bs, bl) = m.burns();
+        assert!(bs > 10.0 && bl > 2.0);
+        // Traffic turns clean again: the short window drains within its
+        // 10 s span and the breach clears (changed fires exactly once).
+        let mut cleared = 0;
+        for _ in 0..30 {
+            now += S;
+            total += 1000;
+            let t = m.tick(now, total, bad);
+            if t.changed {
+                cleared += 1;
+                assert!(!t.breached);
+            }
+        }
+        assert_eq!(cleared, 1);
+        assert!(m.healthy());
+    }
+
+    #[test]
+    fn short_blip_does_not_breach_the_long_window() {
+        let cfg = SloConfig {
+            short_window_us: 5 * S,
+            long_window_us: 300 * S,
+            fast_burn: 10.0,
+            slow_burn: 5.0,
+            ..SloConfig::new(1_000, 0.01)
+        };
+        let m = SloMonitor::new(cfg);
+        let mut total = 0u64;
+        let mut bad = 0u64;
+        let mut now = 0u64;
+        // 100 s of clean traffic, then a single 2 s spike of 100% bad.
+        for _ in 0..100 {
+            now += S;
+            total += 1000;
+            m.tick(now, total, bad);
+        }
+        for _ in 0..2 {
+            now += S;
+            total += 1000;
+            bad += 1000;
+            let t = m.tick(now, total, bad);
+            // Short window burns at 100 (>10) but the long window has
+            // 100 s of clean history diluting the spike below 5.
+            assert!(t.burn_short >= 10.0);
+            assert!(t.burn_long < 5.0, "{t:?}");
+            assert!(!t.breached);
+        }
+        assert!(m.healthy());
+    }
+
+    #[test]
+    fn no_traffic_means_zero_burn() {
+        let m = SloMonitor::new(fast_cfg());
+        let t = m.tick(S, 0, 0);
+        assert_eq!(t, SloTick { breached: false, changed: false, burn_short: 0.0, burn_long: 0.0 });
+    }
+
+    #[test]
+    fn sample_ring_stays_bounded() {
+        let m = SloMonitor::new(fast_cfg());
+        for i in 1..=10_000u64 {
+            m.tick(i * S, i, 0);
+        }
+        // 60 s long window at 1 tick/s -> ~62 samples retained.
+        let g = lock_unpoisoned(&m.inner);
+        assert!(g.samples.len() < 70, "{}", g.samples.len());
+    }
+}

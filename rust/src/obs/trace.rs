@@ -80,6 +80,10 @@ pub enum Event {
     Breaker { class: usize, open: bool, at_us: u64 },
     /// A shadow observation was lost to queue backpressure.
     ShadowDrop { at_us: u64 },
+    /// The SLO burn-rate monitor entered (`breached = true`) or left a
+    /// breach (see `obs/slo.rs`); burns are the windowed budget-spend
+    /// rates at the transition tick.
+    Slo { breached: bool, burn_short: f64, burn_long: f64, at_us: u64 },
 }
 
 impl Event {
@@ -123,6 +127,13 @@ impl Event {
             ]),
             Event::ShadowDrop { at_us } => json::obj(vec![
                 ("type", Value::Str("shadow_drop".into())),
+                ("at_us", num(*at_us)),
+            ]),
+            Event::Slo { breached, burn_short, burn_long, at_us } => json::obj(vec![
+                ("type", Value::Str("slo".into())),
+                ("breached", Value::Bool(*breached)),
+                ("burn_short", Value::Num(*burn_short)),
+                ("burn_long", Value::Num(*burn_long)),
                 ("at_us", num(*at_us)),
             ]),
         }
@@ -283,6 +294,7 @@ mod tests {
             Event::MarginMove { class: 1, from: 0.0, to: 0.05, at_us: 101 },
             Event::Breaker { class: 1, open: true, at_us: 102 },
             Event::ShadowDrop { at_us: 103 },
+            Event::Slo { breached: true, burn_short: 20.0, burn_long: 3.5, at_us: 104 },
         ];
         let types: Vec<String> = evs
             .iter()
@@ -291,7 +303,7 @@ mod tests {
                 v.get("type").unwrap().as_str().unwrap().to_string()
             })
             .collect();
-        assert_eq!(types, ["span", "delivered", "margin", "breaker", "shadow_drop"]);
+        assert_eq!(types, ["span", "delivered", "margin", "breaker", "shadow_drop", "slo"]);
         let span = json::parse(&json::write(&evs[0].to_json())).unwrap();
         assert_eq!(span.get("route").unwrap().as_f64(), Some(-1.0));
         assert_eq!(span.get("e2e_us").unwrap().as_f64(), Some(6.0));

@@ -21,7 +21,8 @@ use mcma::coordinator::{Route, Server, ServerConfig};
 use mcma::formats::{BenchManifest, Dataset, Manifest};
 use mcma::net::frame::{decode_response, encode_request, FramePoll, FrameReader};
 use mcma::net::load::{run_load, scrape_stats};
-use mcma::net::{Arrival, LoadConfig, NetServer};
+use mcma::net::{http_get, Arrival, LoadConfig, MetricsServer, NetServer};
+use mcma::obs::{expo, SloConfig, SloMonitor};
 use mcma::qos::QosConfig;
 use mcma::train::{train_bench, TrainOptions};
 
@@ -447,6 +448,149 @@ fn malformed_stats_frame_kills_only_its_connection() {
     let report = net.shutdown().unwrap();
     assert!(report.malformed >= 1, "violation not counted");
     assert_eq!(report.server.served, 8);
+}
+
+/// Tentpole consistency e2e: the HTTP OpenMetrics exposition and the
+/// in-band KIND_STATS scrape are two read paths over the same registry
+/// atomics.  After real socket traffic has fully drained, the
+/// request-plane counters must agree exactly between the two; the
+/// connection-plane counters (which our own scrapes keep moving) may
+/// only run ahead in the later HTTP view, never behind.  The exposition
+/// itself must be well-formed: `# EOF` terminator, `+Inf` bucket equal
+/// to `_count` per stage family.
+#[test]
+fn http_metrics_agree_with_inband_stats() {
+    let (_, bench, ds) = artifacts();
+    let server = spawn_server(BatchPolicy { max_batch: 32, max_wait_us: 2_000 }, None);
+    let obs = server.obs();
+    let net = NetServer::spawn(server, "127.0.0.1:0", 0, bench.n_in).unwrap();
+    let http = MetricsServer::spawn(obs, None, "127.0.0.1:0").unwrap();
+
+    let n = 48usize;
+    let served = roundtrip_rows(net.local_addr(), &ds, n);
+    assert_eq!(served.len(), n);
+
+    // STATS first, then HTTP: the only traffic between the two scrapes
+    // is the scrapes themselves (connection-plane counters only).
+    let snap = scrape_stats(&net.local_addr().to_string(), 0).expect("live scrape failed");
+    let (status, body) =
+        http_get(&http.local_addr().to_string(), "/metrics").expect("HTTP scrape failed");
+    assert_eq!(status, 200);
+    assert!(body.ends_with("# EOF\n"), "missing OpenMetrics terminator");
+
+    let parsed = expo::parse_text(&body);
+    let exp = |series: &str| {
+        expo::series_value(&parsed, series)
+            .unwrap_or_else(|| panic!("/metrics missing series {series}\n{body}"))
+    };
+    let stat = |key: &str| {
+        snap.get("counters")
+            .and_then(|v| v.get(key))
+            .and_then(|v| v.as_f64())
+            .unwrap_or_else(|| panic!("STATS snapshot missing counter {key}"))
+    };
+    for key in [
+        "submitted",
+        "dispatched",
+        "delivered",
+        "delivery_failures",
+        "route_invoked_rows",
+        "route_cpu_rows",
+        "malformed_frames",
+    ] {
+        assert_eq!(
+            exp(&format!("mcma_{key}_total")),
+            stat(key),
+            "/metrics and KIND_STATS disagree on {key}"
+        );
+    }
+    assert_eq!(exp("mcma_submitted_total"), n as f64);
+    // Stage histogram family: `+Inf` bucket and `_count` both equal the
+    // in-band stage count.
+    let stage_n = snap
+        .get("stages")
+        .and_then(|s| s.get("execute"))
+        .and_then(|h| h.get("count"))
+        .and_then(|v| v.as_f64())
+        .expect("STATS execute stage");
+    assert!(stage_n > 0.0);
+    assert_eq!(exp("mcma_stage_execute_us_bucket{le=\"+Inf\"}"), stage_n);
+    assert_eq!(exp("mcma_stage_execute_us_count"), stage_n);
+    // Connection plane: the HTTP view is the later read.
+    assert!(exp("mcma_accepted_conns_total") >= stat("accepted_conns"));
+    assert!(exp("mcma_frames_in_total") >= stat("frames_in"));
+    assert!(exp("mcma_stats_requests_total") >= 1.0);
+
+    http.shutdown();
+    net.shutdown().unwrap();
+}
+
+/// Acceptance e2e: an induced SLO breach flips `/healthz` from 200 to
+/// 503 on the live exposition endpoint (and back after the windows
+/// drain), with the breach visible in the `mcma_slo_*` families — the
+/// full serve wiring minus the wall-clock tick thread, which the test
+/// replaces with injected-clock ticks fed from the real delivered
+/// histogram.
+#[test]
+fn slo_breach_flips_healthz_on_live_endpoint() {
+    let (_, bench, ds) = artifacts();
+    let server = spawn_server(BatchPolicy { max_batch: 32, max_wait_us: 2_000 }, None);
+    let obs = server.obs();
+    let net = NetServer::spawn(server, "127.0.0.1:0", 0, bench.n_in).unwrap();
+    let slo = Arc::new(SloMonitor::new(SloConfig {
+        short_window_us: 10_000_000,
+        long_window_us: 60_000_000,
+        // 1 µs target: every TCP roundtrip is over budget by design.
+        ..SloConfig::new(1, 0.01)
+    }));
+    let http = MetricsServer::spawn(obs.clone(), Some(Arc::clone(&slo)), "127.0.0.1:0").unwrap();
+    let addr = http.local_addr().to_string();
+
+    let (code, _) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "healthy before any tick");
+
+    // Real traffic, then one tick off the real delivered histogram: at
+    // a 1 µs target effectively every delivery is bad, so the warm-up
+    // window burns at ~100x the 1% budget and breaches immediately.
+    let n = 32usize;
+    let served = roundtrip_rows(net.local_addr(), &ds, n);
+    assert_eq!(served.len(), n);
+    // The pump may record a delivery just after the client reads the
+    // bytes; poll briefly rather than racing it.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let delivered = loop {
+        let s = obs.metrics.e2e_delivered.snapshot();
+        if s.count >= n as u64 || Instant::now() > deadline {
+            break s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(delivered.count, n as u64);
+    let bad = delivered.count_over(slo.config().p99_target_us);
+    let tick = slo.tick(1_000_000, delivered.count, bad);
+    assert!(tick.breached, "all-bad traffic must breach: {tick:?}");
+
+    let (code, body) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 503, "breach must flip /healthz");
+    assert_eq!(body, "slo breach\n");
+    let (_, metrics) = http_get(&addr, "/metrics").unwrap();
+    let parsed = expo::parse_text(&metrics);
+    assert_eq!(expo::series_value(&parsed, "mcma_slo_healthy"), Some(0.0));
+    assert!(
+        expo::series_value(&parsed, "mcma_slo_burn_rate{window=\"short\"}").unwrap_or(0.0)
+            >= 14.0,
+        "{metrics}"
+    );
+
+    // Two clean minutes later both windows difference against the
+    // breach sample itself: zero new bad, the breach clears.
+    let tick = slo.tick(121_000_000, delivered.count + 1_000, bad);
+    assert!(!tick.breached);
+    let (code, _) = http_get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200, "clean windows must recover /healthz");
+
+    http.shutdown();
+    net.shutdown().unwrap();
 }
 
 /// The QoS controller runs unchanged under socket traffic: the report

@@ -26,6 +26,9 @@ RULES:
   safety-comments  every `unsafe` carries a // SAFETY: rationale
   atomics          every Ordering::Relaxed outside the counter module is
                    individually justified
+  lock-ordering    audit:lock-ordered files take the Server/NetServer
+                   mutexes in the fixed order batch_rx -> registry ->
+                   reader_threads
 
 Suppress a finding with `// audit:allow(<rule>) — <reason>` on the same
 or the preceding line; allows without a reason or without a matching

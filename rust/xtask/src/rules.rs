@@ -1,4 +1,4 @@
-//! The five mcma-audit rules plus the `audit:allow` annotation grammar.
+//! The six mcma-audit rules plus the `audit:allow` annotation grammar.
 //!
 //! Every rule is grounded in a bug class this repo has actually hit or
 //! a promise the README actually makes:
@@ -16,11 +16,17 @@
 //! | `safety-comments` | every `unsafe` carries a `// SAFETY:` rationale        |
 //! | `atomics`         | every `Ordering::Relaxed` outside the counter module   |
 //! |                   | is individually justified                              |
+//! | `lock-ordering`   | files marked `audit:lock-ordered` acquire the shared   |
+//! |                   | `Server`/`NetServer` mutexes in one fixed order        |
+//! |                   | (batch_rx, then registry, then reader_threads), so a   |
+//! |                   | new nested acquisition cannot introduce an ABBA        |
+//! |                   | deadlock                                               |
 //!
-//! Scope markers (`// audit:connection-facing`, `// audit:deterministic`)
-//! opt a file into rules 2 and 3.  The REQUIRED_* path lists below pin the
-//! files that must carry each marker, so removing a marker from a core
-//! file is itself a finding — markers cannot silently rot.
+//! Scope markers (`// audit:connection-facing`, `// audit:deterministic`,
+//! `// audit:lock-ordered`) opt a file into rules 2, 3 and 6.  The
+//! REQUIRED_* path lists below pin the files that must carry each marker,
+//! so removing a marker from a core file is itself a finding — markers
+//! cannot silently rot.
 //!
 //! Suppression grammar: `// audit:allow(<rule>) — <reason>` (also `-` or
 //! `--` as the separator).  An allow covers its own line and the next
@@ -30,19 +36,21 @@
 
 use crate::lex::{LexedFile, Line};
 
-/// The five enforceable rule identifiers (valid targets for
+/// The six enforceable rule identifiers (valid targets for
 /// `audit:allow(...)`).
-pub const RULE_IDS: [&str; 5] = [
+pub const RULE_IDS: [&str; 6] = [
     "cli-registry",
     "panic-free-net",
     "determinism",
     "safety-comments",
     "atomics",
+    "lock-ordering",
 ];
 
 /// Files that MUST declare `// audit:connection-facing`.
-pub const REQUIRED_CONNECTION_FACING: [&str; 3] = [
+pub const REQUIRED_CONNECTION_FACING: [&str; 4] = [
     "net/frame.rs",
+    "net/http.rs",
     "net/listener.rs",
     "coordinator/server.rs",
 ];
@@ -64,8 +72,19 @@ pub const REQUIRED_DETERMINISTIC: [&str; 7] = [
 pub const ATOMICS_COUNTER_MODULES: [&str; 2] =
     ["coordinator/metrics.rs", "obs/metrics.rs"];
 
+/// The fixed acquisition order for the `Server`/`NetServer` shared
+/// mutexes.  In files marked `// audit:lock-ordered`, taking a lock
+/// while holding one at the same or a later position in this list is a
+/// finding (the ABBA deadlock shape).
+pub const LOCK_ORDER: [&str; 3] = ["batch_rx", "registry", "reader_threads"];
+
+/// Files that MUST declare `// audit:lock-ordered`.
+pub const REQUIRED_LOCK_ORDERED: [&str; 2] =
+    ["net/listener.rs", "coordinator/server.rs"];
+
 const MARKER_CONNECTION_FACING: &str = "audit:connection-facing";
 const MARKER_DETERMINISTIC: &str = "audit:deterministic";
+const MARKER_LOCK_ORDERED: &str = "audit:lock-ordered";
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Finding {
@@ -104,6 +123,9 @@ pub fn audit(files: &[LexedFile]) -> (Vec<Finding>, Vec<Allow>) {
         }
         if det {
             determinism(f, &mut findings);
+        }
+        if has_marker(f, MARKER_LOCK_ORDERED) {
+            lock_ordering(f, &mut findings);
         }
         safety_comments(f, &mut findings);
         atomics(f, &mut findings);
@@ -315,6 +337,17 @@ fn required_markers(files: &[LexedFile], findings: &mut Vec<Finding>) {
                 "file must declare `// audit:deterministic` (required scope)".to_string(),
             );
         }
+        if REQUIRED_LOCK_ORDERED.contains(&f.rel.as_str())
+            && !has_marker(f, MARKER_LOCK_ORDERED)
+        {
+            push(
+                findings,
+                "lock-ordering",
+                &f.rel,
+                0,
+                "file must declare `// audit:lock-ordered` (required scope)".to_string(),
+            );
+        }
     }
 }
 
@@ -508,6 +541,154 @@ fn atomics(f: &LexedFile, findings: &mut Vec<Finding>) {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// rule: lock-ordering
+
+/// How long an acquired guard lives, judged from the call site's
+/// surrounding text on the same line.
+#[derive(Clone, Copy)]
+enum GuardLife {
+    /// `let g = <acquire>;` — held to the end of the enclosing block.
+    Scope,
+    /// `<acquire> {` — an `if let` / `while let` / `match` guard, held
+    /// for the block that opens right after the call.
+    Block,
+    /// Anything else (chained call, argument position, spans lines) —
+    /// a statement temporary, released within its own statement.
+    Temp,
+}
+
+struct LockSite {
+    /// Byte offset on the line (start of the lock name, or of
+    /// `lock_unpoisoned` for helper acquisitions).
+    at: usize,
+    /// Index into [`LOCK_ORDER`].
+    idx: usize,
+    life: GuardLife,
+}
+
+/// Track brace depth and held guards across the file; report any
+/// acquisition of a lock at the same or an earlier [`LOCK_ORDER`]
+/// position than one currently held.  Test regions are skipped whole
+/// (they are brace-balanced, so the depth stays consistent).
+fn lock_ordering(f: &LexedFile, findings: &mut Vec<Finding>) {
+    // (lock index, brace depth at which the guard is held)
+    let mut held: Vec<(usize, i32)> = Vec::new();
+    let mut depth: i32 = 0;
+    for (i, line) in f.lines.iter().enumerate() {
+        if f.is_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+        let sites = lock_sites(code);
+        let mut next = 0usize;
+        for (pos, &c) in code.as_bytes().iter().enumerate() {
+            while next < sites.len() && sites[next].at == pos {
+                let s = &sites[next];
+                next += 1;
+                for &(h, _) in &held {
+                    if s.idx <= h {
+                        push(
+                            findings,
+                            "lock-ordering",
+                            &f.rel,
+                            i,
+                            format!(
+                                "`{}` acquired while `{}` is held — the fixed acquisition order is {}",
+                                LOCK_ORDER[s.idx],
+                                LOCK_ORDER[h],
+                                LOCK_ORDER.join(" -> ")
+                            ),
+                        );
+                    }
+                }
+                match s.life {
+                    GuardLife::Scope => held.push((s.idx, depth)),
+                    GuardLife::Block => held.push((s.idx, depth + 1)),
+                    GuardLife::Temp => {}
+                }
+            }
+            match c {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    held.retain(|&(_, d)| d <= depth);
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// Acquisition sites of registered locks on one line: direct
+/// `NAME.lock(` calls and `lock_unpoisoned(...)` calls whose argument
+/// names a registered lock.  Sorted by position.
+fn lock_sites(code: &str) -> Vec<LockSite> {
+    let b = code.as_bytes();
+    let mut out: Vec<LockSite> = Vec::new();
+    for (idx, name) in LOCK_ORDER.iter().enumerate() {
+        for p in word_positions(code, name) {
+            let after = p + name.len();
+            if code[after..].starts_with(".lock(") {
+                let open = after + ".lock(".len() - 1;
+                out.push(LockSite { at: p, idx, life: guard_life(code, b, p, open) });
+            }
+        }
+    }
+    for p in word_positions(code, "lock_unpoisoned") {
+        let open = p + "lock_unpoisoned".len();
+        if b.get(open) != Some(&b'(') {
+            continue;
+        }
+        let arg_end = matching_close(b, open).unwrap_or(b.len());
+        let arg = &code[open + 1..arg_end];
+        for (idx, name) in LOCK_ORDER.iter().enumerate() {
+            if has_word(arg, name) {
+                out.push(LockSite { at: p, idx, life: guard_life(code, b, p, open) });
+            }
+        }
+    }
+    out.sort_by_key(|s| s.at);
+    out
+}
+
+/// Classify the guard's lifetime from what follows the call's closing
+/// paren (`?` and whitespace are transparent): `;` after a `let` binds
+/// a scope guard, `{` opens a guarded block, anything else is a
+/// statement temporary.
+fn guard_life(code: &str, b: &[u8], at: usize, open: usize) -> GuardLife {
+    let Some(close) = matching_close(b, open) else {
+        return GuardLife::Temp;
+    };
+    let mut j = close + 1;
+    while j < b.len() && (b[j] == b'?' || b[j].is_ascii_whitespace()) {
+        j += 1;
+    }
+    match b.get(j) {
+        Some(b';') if has_word(&code[..at], "let") => GuardLife::Scope,
+        Some(b'{') => GuardLife::Block,
+        _ => GuardLife::Temp,
+    }
+}
+
+/// Matching `)` for the `(` at `open`, on this line only.
+fn matching_close(b: &[u8], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (j, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
 }
 
 // ---------------------------------------------------------------------------
@@ -873,6 +1054,71 @@ mod tests {
         assert!(findings
             .iter()
             .any(|f| f.rule == "panic-free-net" && f.line == 1));
+        // Lock-ordered files are pinned the same way.
+        let (findings, _) = run_one("net/listener.rs", "fn f() {}\n");
+        assert!(findings
+            .iter()
+            .any(|f| f.rule == "lock-ordering" && f.line == 1));
+    }
+
+    #[test]
+    fn lock_ordering_flags_out_of_order_nesting() {
+        let src = "// audit:lock-ordered\n\
+                   fn in_order() {\n\
+                   let q = lock_unpoisoned(&batch_rx);\n\
+                   let mut reg = lock_unpoisoned(&registry);\n\
+                   }\n\
+                   fn out_of_order() {\n\
+                   let mut reg = lock_unpoisoned(&registry);\n\
+                   let q = lock_unpoisoned(&batch_rx);\n\
+                   }\n";
+        let (findings, _) = run_one("x.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:#?}");
+        assert_eq!(findings[0].rule, "lock-ordering");
+        assert_eq!(findings[0].line, 8);
+        assert!(findings[0].message.contains("batch_rx"));
+        assert!(findings[0].message.contains("registry"));
+    }
+
+    #[test]
+    fn lock_ordering_releases_guards_at_scope_close() {
+        let src = "// audit:lock-ordered\n\
+                   fn f() {\n\
+                   {\n\
+                   let mut reg = lock_unpoisoned(&registry);\n\
+                   }\n\
+                   let q = lock_unpoisoned(&batch_rx);\n\
+                   }\n";
+        let (findings, _) = run_one("x.rs", src);
+        assert!(findings.is_empty(), "{findings:#?}");
+    }
+
+    #[test]
+    fn lock_ordering_tracks_direct_lock_calls_and_block_guards() {
+        let src = "// audit:lock-ordered\n\
+                   fn f() {\n\
+                   if let Ok(g) = reader_threads.lock() {\n\
+                   let r = lock_unpoisoned(&registry);\n\
+                   }\n\
+                   let r2 = lock_unpoisoned(&registry);\n\
+                   }\n";
+        let (findings, _) = run_one("x.rs", src);
+        assert_eq!(findings.len(), 1, "{findings:#?}");
+        assert_eq!(findings[0].line, 4);
+        assert!(findings[0].message.contains("reader_threads"));
+    }
+
+    #[test]
+    fn lock_ordering_ignores_statement_temporaries() {
+        // A chained call releases the guard within its own statement, so
+        // back-to-back temporaries in any order are fine.
+        let src = "// audit:lock-ordered\n\
+                   fn f() {\n\
+                   lock_unpoisoned(&registry).insert(1, c);\n\
+                   let msg = { lock_unpoisoned(&batch_rx).recv() };\n\
+                   }\n";
+        let (findings, _) = run_one("x.rs", src);
+        assert!(findings.is_empty(), "{findings:#?}");
     }
 
     #[test]

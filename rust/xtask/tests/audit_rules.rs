@@ -91,6 +91,21 @@ fn atomics_fires_unless_allowed() {
 }
 
 #[test]
+fn lock_ordering_fires_on_out_of_order_acquisition() {
+    let r = audit("lock_ordering");
+    assert_eq!(
+        hits(&r, "lock-ordering"),
+        vec![
+            ("bad.rs".to_string(), 10), // batch_rx while registry held
+            ("bad.rs".to_string(), 25), // registry while reader_threads held
+        ]
+    );
+    assert_eq!(r.findings.len(), 2, "{:#?}", r.findings);
+    assert_json_has(&r, "lock-ordering", "bad.rs", 10);
+    assert_json_has(&r, "lock-ordering", "bad.rs", 25);
+}
+
+#[test]
 fn cli_registry_catches_the_perf_json_class() {
     let r = audit("cli_registry");
     // Dead registry entries (`ghost` flag, `phantom` positional),

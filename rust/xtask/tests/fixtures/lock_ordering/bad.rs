@@ -1,0 +1,33 @@
+// audit:lock-ordered — fixture tree: out-of-order acquisitions seeded on purpose
+fn ok_in_order() {
+    let q = lock_unpoisoned(&batch_rx);
+    let mut reg = lock_unpoisoned(&registry);
+    reg.push(q);
+}
+
+fn bad_out_of_order() {
+    let mut reg = lock_unpoisoned(&registry);
+    let q = lock_unpoisoned(&batch_rx);
+    reg.push(q);
+}
+
+fn ok_scope_closed() {
+    {
+        let mut reg = lock_unpoisoned(&registry);
+        reg.clear();
+    }
+    let q = lock_unpoisoned(&batch_rx);
+    q.recv();
+}
+
+fn bad_under_block_guard() {
+    if let Ok(g) = reader_threads.lock() {
+        let r = lock_unpoisoned(&registry);
+        g.push(r);
+    }
+}
+
+fn ok_temporaries() {
+    lock_unpoisoned(&registry).insert(1, 2);
+    lock_unpoisoned(&batch_rx).recv();
+}
